@@ -1,0 +1,96 @@
+//! Cross-datacenter AllReduce — the paper's CDC384 scenario (§5.3).
+//!
+//! Two DCs (256 + 128 servers) joined by one slow, high-latency WAN link.
+//! GenTree's data rearrangement bounds the number of WAN flows, dodging
+//! the PFC-style incast penalty; this example reproduces the Table 7
+//! CDC384 rows and the "rearrangement saves 54–60%" observation.
+//!
+//! Run: `cargo run --release --example cross_dc`
+
+use genmodel::bench::workloads::PAPER_SIZES;
+use genmodel::gentree::{generate, generate_with, GenTreeConfig};
+use genmodel::model::params::Environment;
+use genmodel::plan::{cps, ring};
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::cross_dc;
+
+fn main() {
+    let topo = cross_dc(&[32; 8], &[16; 8]); // CDC384
+    let env = Environment::paper();
+    let cfg = SimConfig::new(&topo);
+    let n = topo.n_servers();
+    println!("topology: {} ({n} servers, WAN α=30ms β=6.4e-9 ε=6e-11)\n", topo.name);
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>10}",
+        "algorithm", "1e7", "3.2e7", "1e8"
+    );
+    let mut gen_times = Vec::new();
+    for &s in &PAPER_SIZES {
+        let out = generate(&topo, &env, s);
+        gen_times.push(simulate_plan(&out.plan, s, &topo, &env, &cfg).total);
+    }
+    print_row("GenTree", &gen_times);
+
+    let mut star_times = Vec::new();
+    for &s in &PAPER_SIZES {
+        let out = generate_with(
+            &topo,
+            &env,
+            s,
+            &GenTreeConfig {
+                allow_rearrangement: false,
+                ..Default::default()
+            },
+        );
+        star_times.push(simulate_plan(&out.plan, s, &topo, &env, &cfg).total);
+    }
+    print_row("GenTree* (no rearr.)", &star_times);
+
+    let ring_times: Vec<f64> = PAPER_SIZES
+        .iter()
+        .map(|&s| simulate_plan(&ring::allreduce(n), s, &topo, &env, &cfg).total)
+        .collect();
+    print_row("Ring Allreduce", &ring_times);
+
+    let cps_times: Vec<f64> = PAPER_SIZES
+        .iter()
+        .map(|&s| simulate_plan(&cps::allreduce(n), s, &topo, &env, &cfg).total)
+        .collect();
+    print_row("Co-located PS", &cps_times);
+
+    println!("\nrearrangement saving at each size:");
+    for (i, &s) in PAPER_SIZES.iter().enumerate() {
+        println!(
+            "  S={s:>9.1e}: {:.1}%  (GenTree {:.3}s vs GenTree* {:.3}s)",
+            (1.0 - gen_times[i] / star_times[i]) * 100.0,
+            gen_times[i],
+            star_times[i]
+        );
+    }
+    println!("\nspeedup over baselines at S=1e8:");
+    println!("  vs Ring          : {:.2}x", ring_times[2] / gen_times[2]);
+    println!("  vs Co-located PS : {:.2}x", cps_times[2] / gen_times[2]);
+
+    // The per-switch choices (Table 6's CDC384 rows).
+    println!("\nGenTree selections at S=1e8:");
+    let out = generate(&topo, &env, 1e8);
+    for sel in &out.selections {
+        if sel.depth <= 1 {
+            println!(
+                "  depth {} {:<6} -> {}{}",
+                sel.depth,
+                sel.switch_name,
+                sel.choice,
+                if sel.rearranged { " (rearranged)" } else { "" }
+            );
+        }
+    }
+}
+
+fn print_row(name: &str, times: &[f64]) {
+    println!(
+        "{:<22} {:>9.3}s {:>9.3}s {:>9.3}s",
+        name, times[0], times[1], times[2]
+    );
+}

@@ -1,0 +1,101 @@
+//! The §3.4 benchmarking-toolkit flow: benchmark CPS on your cluster at
+//! 2..=N communicators, fit GenModel, and let the fitted model pick the
+//! best AllReduce algorithm — reproducing the paper's claim that GenModel
+//! predicts the winner while the (α,β,γ) model does not.
+//!
+//! Run: `cargo run --release --example fit_cluster`
+
+use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::expressions::{genmodel, PlanType};
+use genmodel::model::fit::{fit, BenchRow};
+use genmodel::model::params::{Environment, ModelParams};
+use genmodel::plan::{cps, hcps, ring};
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::single_switch;
+
+fn main() -> anyhow::Result<()> {
+    let env = Environment::paper();
+
+    // --- 1. "measure" the cluster (flow-level simulator = our testbed) ---
+    println!("benchmarking Co-located PS at n = 2..=15 …");
+    let mut rows = Vec::new();
+    for n in 2..=15usize {
+        for s in [2e7, 1e8] {
+            let topo = single_switch(n);
+            let t = simulate_plan(&cps::allreduce(n), s, &topo, &env, &SimConfig::new(&topo)).total;
+            rows.push(BenchRow { n, s, time: t });
+        }
+    }
+
+    // --- 2. fit GenModel ---------------------------------------------------
+    let f = fit(&rows)?;
+    let truth = ModelParams::cpu_testbed();
+    println!("\nfitted parameters (vs ground truth):");
+    println!("  alpha   {:.3e}  (true {:.3e})", f.alpha, truth.alpha);
+    println!(
+        "  2β+γ    {:.3e}  (true {:.3e})",
+        f.two_beta_plus_gamma,
+        truth.two_beta_plus_gamma()
+    );
+    println!("  delta   {:.3e}  (true {:.3e})", f.delta, truth.delta);
+    println!("  epsilon {:.3e}  (true {:.3e})", f.epsilon, truth.epsilon);
+    println!("  w_t     {}        (true {})", f.w_t, truth.w_t);
+
+    // --- 3. use the fitted model to rank algorithms at N=15 ----------------
+    let n = 15;
+    let s = 1e8;
+    let fitted = ModelParams {
+        alpha: f.alpha,
+        beta: (f.two_beta_plus_gamma - truth.gamma) / 2.0, // split with known γ
+        gamma: truth.gamma,
+        delta: f.delta,
+        epsilon: f.epsilon,
+        w_t: f.w_t,
+    };
+    println!("\nranking algorithms at N={n}, S=1e8 with the fitted model:");
+    let mut scored: Vec<(String, f64)> = vec![
+        ("CPS".into(), genmodel(&PlanType::ColocatedPs, n, s, &fitted).total()),
+        ("Ring".into(), genmodel(&PlanType::Ring, n, s, &fitted).total()),
+        ("RHD".into(), genmodel(&PlanType::Rhd, n, s, &fitted).total()),
+        (
+            "HCPS 5x3".into(),
+            genmodel(&PlanType::HierarchicalPs(vec![5, 3]), n, s, &fitted).total(),
+        ),
+        (
+            "HCPS 3x5".into(),
+            genmodel(&PlanType::HierarchicalPs(vec![3, 5]), n, s, &fitted).total(),
+        ),
+    ];
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (name, t) in &scored {
+        println!("  {name:<10} {t:.4} s");
+    }
+
+    // --- 4. confirm against the simulator ---------------------------------
+    let topo = single_switch(n);
+    let plans = [
+        cps::allreduce(n),
+        ring::allreduce(n),
+        hcps::allreduce(&[5, 3]),
+        hcps::allreduce(&[3, 5]),
+    ];
+    let best_sim = plans
+        .iter()
+        .min_by(|a, b| {
+            let ta = simulate_plan(a, s, &topo, &env, &SimConfig::new(&topo)).total;
+            let tb = simulate_plan(b, s, &topo, &env, &SimConfig::new(&topo)).total;
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .unwrap();
+    println!("\nsimulator's actual winner: {}", best_sim.name);
+    println!("fitted-GenModel's winner : {}", scored[0].0);
+    let classic_pick = plans
+        .iter()
+        .min_by(|a, b| {
+            let cm = CostModel::new(&topo, &env, ModelKind::Classic);
+            cm.plan_total(a, s).partial_cmp(&cm.plan_total(b, s)).unwrap()
+        })
+        .unwrap();
+    println!("(α,β,γ) model's winner   : {} ← misprediction", classic_pick.name);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the 60-second tour of the library.
+//!
+//! 1. Build a topology; 2. let GenTree generate an AllReduce plan;
+//! 3. price it with GenModel vs the classic model; 4. simulate it;
+//! 5. execute it on real data through the PJRT runtime and verify.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use genmodel::exec;
+use genmodel::gentree;
+use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::params::Environment;
+use genmodel::plan::{cps, ring};
+use genmodel::runtime::ReducerSpec;
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A 12-server 10 Gbps rack — the paper's CPU testbed shape.
+    let topo = single_switch(12);
+    let env = Environment::paper();
+    let s_model = 1e8; // plan for 100M floats
+
+    // --- 1. GenTree generates the plan -----------------------------------
+    let out = gentree::generate(&topo, &env, s_model);
+    println!("GenTree chose: {}", out.selections[0].choice);
+    println!(
+        "plan: {} phases, {} transfers",
+        out.plan.phases.len(),
+        out.plan.n_transfers()
+    );
+
+    // --- 2. price it against the baselines --------------------------------
+    let cm = CostModel::new(&topo, &env, ModelKind::GenModel);
+    let classic = CostModel::new(&topo, &env, ModelKind::Classic);
+    println!("\nGenModel vs (α,β,γ) predictions at S=1e8 floats:");
+    for plan in [out.plan.clone(), cps::allreduce(12), ring::allreduce(12)] {
+        let actual = simulate_plan(&plan, s_model, &topo, &env, &SimConfig::new(&topo)).total;
+        println!(
+            "  {:<14} sim {:.3}s   GenModel {:.3}s   classic {:.3}s",
+            plan.name,
+            actual,
+            cm.plan_total(&plan, s_model),
+            classic.plan_total(&plan, s_model),
+        );
+    }
+
+    // --- 3. run it for real ------------------------------------------------
+    let s_exec = 300_000usize; // keep the demo light: 300k floats/worker
+    let reducer = ReducerSpec::Auto.build()?;
+    println!(
+        "\nexecuting on real data ({} reducer), {} workers × {} floats…",
+        if reducer.is_pjrt() { "PJRT" } else { "scalar" },
+        12,
+        s_exec
+    );
+    let mut rng = Rng::new(2024);
+    let inputs: Vec<Vec<f32>> = (0..12).map(|_| rng.f32_vec(s_exec)).collect();
+    let t0 = std::time::Instant::now();
+    let outcome = exec::execute_plan(&out.plan, &inputs, &reducer)?;
+    exec::verify(&outcome, &inputs, 1e-4)?;
+    println!(
+        "  verified ✓  ({} reduce calls, max fan-in {}, {:.1} ms wall)",
+        outcome.reduce_calls,
+        outcome.max_fanin,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! End-to-end driver: data-parallel training with gradient AllReduce
+//! through the full stack (coordinator → GenTree plan → real executor →
+//! PJRT fused-reduce artifacts), proving all layers compose.
+//!
+//! Workload: an MLP regression model (1 hidden layer, ~270k parameters)
+//! trained on a synthetic teacher function, sharded over 8 workers. Each
+//! step every worker computes gradients on its own shard (manual
+//! backprop, implemented here), the coordinator AllReduces the gradient
+//! tensors (bucketed/fused exactly as a DDP-style framework would), and
+//! every worker applies the same averaged update. The loss curve and
+//! AllReduce service metrics are the run's evidence (EXPERIMENTS.md §E2E).
+//!
+//! Run: `cargo run --release --example train_dml`
+
+use genmodel::coordinator::{AllReduceService, ServiceConfig};
+use genmodel::model::params::Environment;
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+const WORKERS: usize = 8;
+const D_IN: usize = 32;
+const D_H: usize = 256;
+const SHARD: usize = 256; // samples per worker
+const STEPS: usize = 300;
+const LR: f32 = 0.2;
+
+/// One worker's copy of the model (all workers stay bit-identical because
+/// they apply identical averaged gradients).
+#[derive(Clone)]
+struct Mlp {
+    w1: Vec<f32>, // D_H × D_IN
+    b1: Vec<f32>, // D_H
+    w2: Vec<f32>, // D_H
+    b2: f32,
+}
+
+impl Mlp {
+    fn init(rng: &mut Rng) -> Mlp {
+        let scale1 = (2.0 / D_IN as f32).sqrt();
+        let scale2 = (2.0 / D_H as f32).sqrt();
+        Mlp {
+            w1: (0..D_H * D_IN)
+                .map(|_| rng.next_f32_signed() * scale1)
+                .collect(),
+            b1: vec![0.0; D_H],
+            w2: (0..D_H).map(|_| rng.next_f32_signed() * scale2).collect(),
+            b2: 0.0,
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + 1
+    }
+
+    /// Forward + backward over a shard; returns (mse, gradients flattened
+    /// in [w1, b1, w2, b2] order).
+    fn grad(&self, xs: &[Vec<f32>], ys: &[f32]) -> (f32, Vec<f32>) {
+        let m = xs.len() as f32;
+        let mut g_w1 = vec![0f32; D_H * D_IN];
+        let mut g_b1 = vec![0f32; D_H];
+        let mut g_w2 = vec![0f32; D_H];
+        let mut g_b2 = 0f32;
+        let mut loss = 0f32;
+        let mut h = vec![0f32; D_H];
+        for (x, &y) in xs.iter().zip(ys) {
+            // forward: h = relu(W1 x + b1); pred = w2·h + b2
+            for j in 0..D_H {
+                let row = &self.w1[j * D_IN..(j + 1) * D_IN];
+                let mut a = self.b1[j];
+                for (w, xi) in row.iter().zip(x) {
+                    a += w * xi;
+                }
+                h[j] = a.max(0.0);
+            }
+            let mut pred = self.b2;
+            for (w, hj) in self.w2.iter().zip(&h) {
+                pred += w * hj;
+            }
+            let err = pred - y;
+            loss += err * err;
+            // backward
+            let dpred = 2.0 * err / m;
+            g_b2 += dpred;
+            for j in 0..D_H {
+                g_w2[j] += dpred * h[j];
+                if h[j] > 0.0 {
+                    let dh = dpred * self.w2[j];
+                    g_b1[j] += dh;
+                    let row = &mut g_w1[j * D_IN..(j + 1) * D_IN];
+                    for (gw, xi) in row.iter_mut().zip(x) {
+                        *gw += dh * xi;
+                    }
+                }
+            }
+        }
+        let mut flat = g_w1;
+        flat.extend(g_b1);
+        flat.extend(g_w2);
+        flat.push(g_b2);
+        (loss / m, flat)
+    }
+
+    fn apply(&mut self, g: &[f32], lr: f32) {
+        let mut it = g.iter();
+        for w in self.w1.iter_mut().chain(self.b1.iter_mut()).chain(self.w2.iter_mut()) {
+            *w -= lr * it.next().unwrap();
+        }
+        self.b2 -= lr * it.next().unwrap();
+        assert!(it.next().is_none());
+    }
+}
+
+/// Synthetic teacher: a smooth nonlinear function of a few inputs —
+/// learnable by a 1-hidden-layer MLP within a few hundred SGD steps.
+fn teacher(x: &[f32]) -> f32 {
+    (x[0] + 0.5 * x[1]).tanh() + 0.3 * x[2] * x[3] + 0.5 * x[4] - 0.2 * x[5]
+}
+
+fn main() -> anyhow::Result<()> {
+    // Per-worker data shards (disjoint seeds).
+    let mut shards: Vec<(Vec<Vec<f32>>, Vec<f32>)> = Vec::new();
+    for w in 0..WORKERS {
+        let mut rng = Rng::new(1000 + w as u64);
+        let xs: Vec<Vec<f32>> = (0..SHARD).map(|_| rng.f32_vec(D_IN)).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| teacher(x)).collect();
+        shards.push((xs, ys));
+    }
+    // Identical initial model everywhere.
+    let mut init_rng = Rng::new(7);
+    let model0 = Mlp::init(&mut init_rng);
+    let mut models: Vec<Mlp> = (0..WORKERS).map(|_| model0.clone()).collect();
+    println!(
+        "training MLP ({} params) on {WORKERS} workers × {SHARD} samples, {STEPS} steps",
+        model0.n_params()
+    );
+
+    // The coordinator: GenTree plans on an 8-server rack, PJRT reduction.
+    let svc = AllReduceService::start(
+        single_switch(WORKERS),
+        Environment::paper(),
+        ReducerSpec::Auto,
+        ServiceConfig::default(),
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut first_loss = 0f32;
+    let mut last_loss = 0f32;
+    for step in 0..STEPS {
+        // Every worker computes its shard gradient.
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(WORKERS);
+        let mut losses = Vec::with_capacity(WORKERS);
+        for (m, (xs, ys)) in models.iter().zip(&shards) {
+            let (l, g) = m.grad(xs, ys);
+            losses.push(l);
+            grads.push(g);
+        }
+        let mean_loss: f32 = losses.iter().sum::<f32>() / WORKERS as f32;
+        if step == 0 {
+            first_loss = mean_loss;
+        }
+        last_loss = mean_loss;
+        // AllReduce the gradients through the coordinator.
+        let reduced = svc
+            .allreduce(grads)
+            .map_err(|e| anyhow::anyhow!("allreduce: {e}"))?;
+        let avg: Vec<f32> = reduced
+            .reduced
+            .iter()
+            .map(|g| g / WORKERS as f32)
+            .collect();
+        // Identical update on every worker.
+        for m in models.iter_mut() {
+            m.apply(&avg, LR);
+        }
+        if step % 25 == 0 || step == STEPS - 1 {
+            println!("  step {step:>4}  loss {mean_loss:.5}");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Workers must remain bit-identical (same averaged updates).
+    for m in &models[1..] {
+        assert_eq!(m.w1, models[0].w1);
+        assert_eq!(m.b2, models[0].b2);
+    }
+    let metrics = svc.metrics.snapshot();
+    println!("\nresults:");
+    println!("  loss: {first_loss:.4} → {last_loss:.4} ({}x lower)", (first_loss / last_loss) as u32);
+    println!("  wall time          : {wall:.2} s ({:.1} ms/step)", wall / STEPS as f64 * 1e3);
+    println!("  allreduce jobs     : {}", metrics.jobs_completed);
+    println!("  floats reduced     : {}", metrics.floats_reduced);
+    println!("  reduce calls (PJRT): {}", metrics.reduce_calls);
+    println!("  leader busy        : {:.2} s", metrics.busy_secs);
+    assert!(
+        last_loss < first_loss * 0.2,
+        "training failed to converge: {first_loss} -> {last_loss}"
+    );
+    println!("  convergence check ✓ (loss dropped >5x)");
+    Ok(())
+}

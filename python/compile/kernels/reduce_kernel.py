@@ -1,0 +1,115 @@
+"""L1 — Pallas fan-in-k fused segment-sum kernel.
+
+This kernel is the paper's delta-term (memory access) insight expressed as a
+kernel: reducing ``k`` blocks *at once* costs ``(k+1)*n`` memory operations
+(k reads + 1 write per element), while the chained pairwise pattern used by
+Ring/RHD costs ``3*(k-1)*n`` (two reads + one write per add).  GenModel's
+Theorem 1 lower bound — ``(N+1)S/N * delta`` — is achieved exactly by this
+fused single-pass computation.
+
+Hardware adaptation (paper targets CPU AVX / CUDA; we target TPU semantics
+via Pallas, executed with ``interpret=True`` on the CPU PJRT plugin):
+
+* The ``n`` axis is tiled into VMEM-resident blocks of ``TILE`` floats via
+  ``BlockSpec((k, TILE))`` — the accumulator lives in registers/VMEM across
+  the k-way read, which is the TPU analogue of the paper's "compute once"
+  pattern (one HBM->VMEM stream per input row instead of k-1 round trips).
+* VMEM footprint is ``(k + 1) * TILE * 4`` bytes per grid step; with the
+  default TILE=65536 and k<=16 that is ~4.25 MiB, comfortably inside the
+  16 MiB VMEM budget of a TPUv4 core.  The delta-vs-epsilon trade-off of
+  the paper becomes a VMEM-footprint vs HBM-traffic trade-off here.
+
+Only ``interpret=True`` is used in this repo: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT client cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the reduced vector. 65536 f32 = 256 KiB per row.
+DEFAULT_TILE = 65536
+
+
+def _reduce_tile_kernel(x_ref, o_ref):
+    """Sum the k rows of one (k, tile) block into a (tile,) output block.
+
+    Single pass: every input element is read exactly once and the result is
+    written exactly once => (k+1) memory ops per output element.
+    """
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+def _chained_tile_kernel(x_ref, o_ref):
+    """Deliberately chained pairwise sum (the Ring-like pattern).
+
+    Kept as a measurable *anti-pattern* for the Fig. 4 memory-access
+    experiments: semantically identical, but structured as k-1 dependent
+    adds the way a step-by-step algorithm would issue them.
+    """
+    k = x_ref.shape[0]
+    acc = x_ref[0, :]
+    for i in range(1, k):
+        acc = acc + x_ref[i, :]
+    o_ref[...] = acc
+
+
+def _pallas_reduce(x, *, tile: int, kernel) -> jax.Array:
+    k, n = x.shape
+    if n % tile != 0:
+        # Pad up to a tile boundary; zeros are the identity for sum.
+        pad = tile - n % tile
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        return _pallas_reduce(x, tile=tile, kernel=kernel)[:n]
+    grid = (n // tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def reduce_fanin(x: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Fused fan-in-k segment sum: f32[k, n] -> f32[n] in one pass."""
+    if x.ndim != 2:
+        raise ValueError(f"reduce_fanin expects rank-2 input, got {x.shape}")
+    k, n = x.shape
+    if k == 1:
+        return x[0]
+    t = min(tile, n) if n > 0 else tile
+    return _pallas_reduce(x, tile=t, kernel=_reduce_tile_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def reduce_fanin_chained(x: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Chained pairwise variant (3(k-1)n memory-op pattern) for Fig. 4."""
+    if x.ndim != 2:
+        raise ValueError(f"reduce_fanin_chained expects rank-2 input, got {x.shape}")
+    k, n = x.shape
+    if k == 1:
+        return x[0]
+    t = min(tile, n) if n > 0 else tile
+    return _pallas_reduce(x, tile=t, kernel=_chained_tile_kernel)
+
+
+def memory_ops_fused(k: int, n: int) -> int:
+    """Model: memory operations of the fused kernel ((k+1)*n)."""
+    return (k + 1) * n
+
+
+def memory_ops_chained(k: int, n: int) -> int:
+    """Model: memory operations of the chained pattern (3*(k-1)*n)."""
+    return 3 * (k - 1) * n
+
+
+def vmem_bytes(k: int, tile: int = DEFAULT_TILE) -> int:
+    """VMEM footprint of one grid step of the fused kernel."""
+    return (k + 1) * tile * 4

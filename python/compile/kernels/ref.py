@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the L1 kernels (correctness references).
+
+Everything the Pallas kernels and the L2 graph compute must match these
+references (pytest enforces it; hypothesis sweeps shapes/dtypes in
+python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reduce_fanin_ref(x: jax.Array) -> jax.Array:
+    """Reference fan-in-k sum: f32[k, n] -> f32[n]."""
+    return jnp.sum(x, axis=0)
+
+
+def reduce_fanin_pairwise_ref(x: jax.Array) -> jax.Array:
+    """Reference chained pairwise sum (same value, Ring-like association)."""
+    acc = x[0]
+    for i in range(1, x.shape[0]):
+        acc = acc + x[i]
+    return acc
+
+
+def sgd_update_ref(w: jax.Array, g: jax.Array, lr) -> jax.Array:
+    """Reference fused SGD step used after AllReduce: w - lr * g."""
+    return w - lr * g

@@ -1,0 +1,79 @@
+"""L2 — JAX compute graphs lowered to AOT artifacts for the rust runtime.
+
+The paper's hot compute is the *reduce* of an AllReduce: summing k partial
+blocks into one.  The graphs here call the L1 Pallas kernel
+(`kernels.reduce_kernel.reduce_fanin`) so kernel and graph lower into the
+same HLO module; `aot.py` emits one artifact per (k, n) variant plus the
+fused SGD step used by the training example.
+
+All graphs return 1-tuples: the AOT bridge lowers with return_tuple=True
+and the rust side unwraps with `to_tuple1()` (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import reduce_kernel
+
+
+def reduce_fanin(x: jax.Array) -> tuple[jax.Array]:
+    """Fused fan-in-k reduce, f32[k, n] -> (f32[n],), via the Pallas kernel."""
+    return (reduce_kernel.reduce_fanin(x),)
+
+
+def reduce_fanin_single_tile(x: jax.Array) -> tuple[jax.Array]:
+    """Fused reduce with tile = n (grid of 1).
+
+    Under ``interpret=True`` a multi-step grid executes as a traced loop
+    whose per-step overhead dwarfs the math (§Perf L1 measurement:
+    grid=16 at n=2^20 ran ~5x slower than 16 separate grid=1 dispatches).
+    On a real TPU the gridded form is the right one (keeps VMEM at
+    (k+1)·TILE·4B); this form is its semantically identical collapse.
+    """
+    return (reduce_kernel.reduce_fanin(x, tile=x.shape[1]),)
+
+
+def reduce_fanin_bulk(x: jax.Array) -> tuple[jax.Array]:
+    """Bulk-chunk reduce lowered as a plain XLA reduction.
+
+    Even at grid=1, ``interpret=True`` wraps the Pallas kernel in a
+    while-loop + dynamic-slice harness that the CPU backend executes with
+    several full-tensor copies (§Perf: ~90 ms per 32 MB dispatch, ~7x the
+    memory-bandwidth cost). The CPU-PJRT interpret path is a *correctness*
+    vehicle — real-TPU efficiency is argued from the BlockSpec/VMEM
+    analysis in DESIGN.md — so the bulk artifacts lower the same math
+    through jnp directly and XLA emits a single fused loop. The Pallas
+    kernel remains the semantic core: pytest asserts bit-compatibility of
+    the two paths, and the standard (k, 65536) variants keep exercising it
+    end-to-end from rust.
+    """
+    return (jnp.sum(x, axis=0),)
+
+
+def reduce_fanin_chained(x: jax.Array) -> tuple[jax.Array]:
+    """Chained pairwise reduce (Ring-like memory pattern), for Fig. 4 benches."""
+    return (reduce_kernel.reduce_fanin_chained(x),)
+
+
+def sgd_update(w: jax.Array, g: jax.Array, lr: jax.Array) -> tuple[jax.Array]:
+    """Fused optimizer step applied after gradient AllReduce: w <- w - lr*g.
+
+    `lr` is a scalar f32 so one artifact serves every step size.  The
+    subtraction fuses with the scale in one XLA elementwise op — no
+    intermediate materialization (checked by test_aot.py on the HLO text).
+    """
+    return (w - lr * g,)
+
+
+def reduce_and_update(w: jax.Array, grads: jax.Array, lr: jax.Array) -> tuple[jax.Array]:
+    """Fused (reduce k gradient shards) + (SGD apply) in a single module.
+
+    grads: f32[k, n] partial gradients; w: f32[n]; returns (w - lr * mean_g,).
+    Used by the training example's fast path: one PJRT dispatch per step
+    instead of two.
+    """
+    k = grads.shape[0]
+    g = reduce_kernel.reduce_fanin(grads) / jnp.float32(k)
+    return (w - lr * g,)

@@ -1,0 +1,87 @@
+"""AOT bridge tests: HLO text is parseable, fused, and manifest-consistent.
+
+These run the actual lowering path (slow-ish) on a couple of small variants
+rather than the full artifact set.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_hlo_text_roundtrippable_format():
+    """Text must look like an HLO module (the rust parser's input)."""
+    text = aot.lower_reduce(2, 256)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    assert "f32[2,256]" in text
+    # reduce variants lower untupled (rust raw-copy IO path)
+    assert "(f32[256]{0}) tuple" not in text
+    # sgd keeps the tupled root (generic literal path)
+    assert "tuple" in aot.lower_sgd(128)
+
+
+def test_sgd_is_fused_elementwise():
+    """DESIGN §Perf L2: sgd artifact must not materialize lr*g separately —
+    a fused module has no intermediate tuple/copy beyond multiply+subtract."""
+    text = aot.lower_sgd(128)
+    assert text.startswith("HloModule")
+    assert "multiply" in text
+    assert "subtract" in text
+    # no convolution/dot/while — it is a flat elementwise module
+    for op in ("convolution", " dot(", "while"):
+        assert op not in text
+
+
+def test_reduce_update_contains_reduce_and_apply():
+    text = aot.lower_reduce_and_update(4, 256)
+    assert "f32[4,256]" in text
+    assert "subtract" in text
+
+
+def test_build_all_manifest(tmp_path):
+    # Monkeypatch the variant set down so the test stays fast.
+    orig_ks, orig_chunk, orig_tail = aot.REDUCE_KS, aot.CHUNK_N, aot.TAIL_N
+    aot.REDUCE_KS, aot.CHUNK_N, aot.TAIL_N = (2, 3), 512, 128
+    try:
+        manifest = aot.build_all(str(tmp_path))
+    finally:
+        aot.REDUCE_KS, aot.CHUNK_N, aot.TAIL_N = orig_ks, orig_chunk, orig_tail
+
+    with open(tmp_path / "manifest.json") as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["format"] == "hlo-text"
+    kinds = {e["kind"] for e in on_disk["entries"]}
+    assert kinds == {"reduce", "reduce_chained", "sgd", "reduce_update"}
+    for e in on_disk["entries"]:
+        p = tmp_path / e["file"]
+        assert p.exists(), e["file"]
+        text = p.read_text()
+        assert text.startswith("HloModule")
+        import hashlib
+
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_integrity():
+    """If `make artifacts` ran, every manifest entry must exist and hash-match."""
+    import hashlib
+
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["chunk_n"] == aot.CHUNK_N
+    assert manifest["reduce_ks"] == list(aot.REDUCE_KS)
+    for e in manifest["entries"]:
+        path = os.path.join(root, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            assert hashlib.sha256(f.read().encode()).hexdigest() == e["sha256"]

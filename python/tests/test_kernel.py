@@ -1,0 +1,124 @@
+"""L1 kernel correctness: Pallas fan-in-k reduce vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (k, n) and value distributions; fixed-seed numpy
+cases cover the chunk/tail boundaries the rust runtime dispatches on.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, reduce_kernel
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _rand(k, n, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((k, n)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- fused ---
+
+
+@hypothesis.given(
+    k=st.integers(min_value=2, max_value=16),
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_fused_matches_ref(k, n, seed):
+    x = _rand(k, n, seed)
+    got = reduce_kernel.reduce_fanin(jnp.asarray(x), tile=1024)
+    want = ref.reduce_fanin_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    k=st.integers(min_value=2, max_value=12),
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_chained_matches_ref(k, n, seed):
+    x = _rand(k, n, seed)
+    got = reduce_kernel.reduce_fanin_chained(jnp.asarray(x), tile=512)
+    want = ref.reduce_fanin_pairwise_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [2, 3, 4, 6, 8, 12, 16])
+@pytest.mark.parametrize("n", [4096, 65536])
+def test_artifact_shapes_exact(k, n):
+    """The exact (k, n) variants that aot.py compiles must be exact-sum."""
+    x = _rand(k, n, seed=k * 1000 + 1)
+    got = np.asarray(reduce_kernel.reduce_fanin(jnp.asarray(x)))
+    want = x.sum(axis=0, dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n", [1, 2, 1023, 1024, 1025, 4095, 4096, 4097, 65535, 65536, 65537]
+)
+def test_tile_boundaries(n):
+    """Padding path across tile boundaries (n not multiple of tile)."""
+    x = _rand(4, n, seed=n)
+    got = np.asarray(reduce_kernel.reduce_fanin(jnp.asarray(x), tile=1024))
+    assert got.shape == (n,)
+    np.testing.assert_allclose(got, x.sum(axis=0), rtol=1e-5, atol=1e-5)
+
+
+def test_k1_identity():
+    x = _rand(1, 100, seed=0)
+    got = np.asarray(reduce_kernel.reduce_fanin(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, x[0])
+
+
+def test_rank_check():
+    with pytest.raises(ValueError):
+        reduce_kernel.reduce_fanin(jnp.zeros((2, 3, 4)))
+    with pytest.raises(ValueError):
+        reduce_kernel.reduce_fanin_chained(jnp.zeros((8,)))
+
+
+def test_large_values_no_overflow_reorder():
+    """Fused and chained differ only by association; both near-exact here."""
+    x = _rand(8, 2048, seed=7, scale=1e3)
+    fused = np.asarray(reduce_kernel.reduce_fanin(jnp.asarray(x), tile=256))
+    chained = np.asarray(reduce_kernel.reduce_fanin_chained(jnp.asarray(x), tile=256))
+    np.testing.assert_allclose(fused, chained, rtol=1e-4, atol=1e-2)
+
+
+def test_zeros_and_identity():
+    x = np.zeros((5, 333), np.float32)
+    got = np.asarray(reduce_kernel.reduce_fanin(jnp.asarray(x), tile=64))
+    np.testing.assert_array_equal(got, np.zeros(333, np.float32))
+
+
+# ------------------------------------------------------ memory-op model ---
+
+
+def test_memory_op_model_crossover():
+    """(k+1)n fused < 3(k-1)n chained for every k >= 3; equal at k=2."""
+    n = 1000
+    assert reduce_kernel.memory_ops_fused(2, n) == 3 * n
+    assert reduce_kernel.memory_ops_chained(2, n) == 3 * n
+    for k in range(3, 64):
+        assert reduce_kernel.memory_ops_fused(k, n) < reduce_kernel.memory_ops_chained(
+            k, n
+        )
+    # Paper Section 3.1: savings approach 66.7% as k grows.
+    k = 1000
+    ratio = reduce_kernel.memory_ops_fused(k, n) / reduce_kernel.memory_ops_chained(k, n)
+    assert abs(ratio - 1 / 3) < 0.01
+
+
+def test_vmem_budget():
+    """All compiled variants fit a 16 MiB VMEM budget (DESIGN.md §Perf L1)."""
+    for k in (2, 3, 4, 6, 8, 12, 16):
+        assert reduce_kernel.vmem_bytes(k) <= 16 * 2**20

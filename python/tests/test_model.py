@@ -1,0 +1,63 @@
+"""L2 graph correctness: model.py functions vs oracles; shape contracts."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@hypothesis.given(
+    k=st.integers(min_value=2, max_value=12),
+    n=st.integers(min_value=1, max_value=2000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_reduce_fanin_tuple(k, n, seed):
+    x = jnp.asarray(_rand((k, n), seed))
+    (got,) = model.reduce_fanin(x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.reduce_fanin_ref(x)), rtol=1e-5, atol=1e-5
+    )
+
+
+@hypothesis.given(
+    n=st.integers(min_value=1, max_value=4000),
+    lr=st.floats(min_value=1e-4, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_sgd_update(n, lr, seed):
+    w = jnp.asarray(_rand((n,), seed))
+    g = jnp.asarray(_rand((n,), seed + 1))
+    (got,) = model.sgd_update(w, g, jnp.float32(lr))
+    want = ref.sgd_update_ref(w, g, jnp.float32(lr))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_reduce_and_update_means_gradient(k):
+    n = 1024
+    w = jnp.asarray(_rand((n,), 3))
+    grads = jnp.asarray(_rand((k, n), 4))
+    lr = jnp.float32(0.1)
+    (got,) = model.reduce_and_update(w, grads, lr)
+    want = np.asarray(w) - 0.1 * np.asarray(grads).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_chained_same_value_as_fused():
+    x = jnp.asarray(_rand((6, 512), 9))
+    (a,) = model.reduce_fanin(x)
+    (b,) = model.reduce_fanin_chained(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)

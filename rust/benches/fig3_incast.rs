@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 3 (x-to-1 incast series) and time the
+//! underlying incast-aware simulation.
+
+use genmodel::bench::fig3_incast;
+use genmodel::util::microbench::{bench, group};
+
+fn main() {
+    group("fig3: x-to-1 incast series");
+    let mut last = None;
+    bench("fig3_incast_series (x=2..=15, S=2e7)", || {
+        last = Some(fig3_incast());
+    });
+    println!("\n{}", last.unwrap().render());
+}

@@ -1,0 +1,44 @@
+//! Bench: Fig. 4 — the real memory-access measurement. Times the fused
+//! (PS-like, (k+1)n memory ops) vs chained (Ring-like, 3(k−1)n) reduction
+//! at several fan-ins, through both the scalar hot path and (if artifacts
+//! are built) the PJRT kernels.
+
+use genmodel::bench::fig4_memaccess;
+use genmodel::runtime::reducer::{scalar_reduce, scalar_reduce_chained};
+use genmodel::runtime::Reducer;
+use genmodel::util::microbench::{bench, group};
+use genmodel::util::rng::Rng;
+
+fn rows(k: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(k as u64);
+    (0..k).map(|_| rng.f32_vec(n)).collect()
+}
+
+fn main() {
+    let n = 4_000_000;
+    group(&format!("fig4: fused vs chained reduce ({n} floats)"));
+    for k in [2usize, 4, 8, 16] {
+        let data = rows(k, n);
+        let refs: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+        bench(&format!("scalar_fused_k{k}"), || {
+            std::hint::black_box(scalar_reduce(&refs));
+        });
+        bench(&format!("scalar_chained_k{k}"), || {
+            std::hint::black_box(scalar_reduce_chained(&refs));
+        });
+    }
+    let r = Reducer::auto();
+    if r.is_pjrt() {
+        group("fig4: PJRT fused kernel");
+        for k in [2usize, 8, 16] {
+            let data = rows(k, 1 << 20);
+            let refs: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+            bench(&format!("pjrt_fused_k{k} (1M floats)"), || {
+                std::hint::black_box(r.reduce(&refs).unwrap());
+            });
+        }
+    } else {
+        println!("(artifacts not built — skipping PJRT benches)");
+    }
+    println!("\n{}", fig4_memaccess(2_000_000).render());
+}

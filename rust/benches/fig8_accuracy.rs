@@ -1,0 +1,27 @@
+//! Bench: Fig. 8/9/10 — prediction accuracy + breakdowns; times model
+//! evaluation vs flow simulation on the 12/15-node plan set.
+
+use genmodel::bench::{fig10_terms, fig8_accuracy, fig9_breakdown};
+use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::params::Environment;
+use genmodel::plan::cps;
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::single_switch;
+use genmodel::util::microbench::{bench, group};
+
+fn main() {
+    let env = Environment::paper();
+    let topo = single_switch(15);
+    let plan = cps::allreduce(15);
+    group("fig8: predictor vs simulator cost");
+    bench("genmodel_cost_eval (CPS n=15)", || {
+        let cm = CostModel::new(&topo, &env, ModelKind::GenModel);
+        std::hint::black_box(cm.plan_total(&plan, 1e8));
+    });
+    bench("flow_simulation (CPS n=15)", || {
+        std::hint::black_box(simulate_plan(&plan, 1e8, &topo, &env, &SimConfig::new(&topo)).total);
+    });
+    println!("\n{}", fig8_accuracy().render());
+    println!("{}", fig9_breakdown().render());
+    println!("{}", fig10_terms().render());
+}

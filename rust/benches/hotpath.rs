@@ -1,0 +1,96 @@
+//! Bench: the L3 hot paths themselves (§Perf deliverable) — reducer
+//! throughput vs the memory-bandwidth roofline, executor overhead,
+//! coordinator overhead over raw execution, simulator event rate.
+
+use std::time::Duration;
+
+use genmodel::coordinator::{batcher::BatchPolicy, AllReduceService, ServiceConfig};
+use genmodel::exec::execute_plan;
+use genmodel::model::params::Environment;
+use genmodel::plan::cps;
+use genmodel::runtime::reducer::scalar_reduce;
+use genmodel::runtime::{Reducer, ReducerSpec};
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::single_switch;
+use genmodel::util::microbench::{bench, group};
+use genmodel::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // ---- reducer throughput -------------------------------------------
+    group("reducer: fan-in-8 sum of 8 × 4M floats (128 MiB read)");
+    let k = 8;
+    let n = 4_000_000;
+    let data: Vec<Vec<f32>> = (0..k).map(|_| rng.f32_vec(n)).collect();
+    let refs: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+    let res = bench("scalar_reduce_k8_4M", || {
+        std::hint::black_box(scalar_reduce(&refs));
+    });
+    let bytes = ((k + 1) * n * 4) as f64;
+    println!(
+        "  -> scalar effective memory traffic: {:.2} GB/s",
+        bytes / res.median / 1e9
+    );
+    let pjrt = Reducer::auto();
+    if pjrt.is_pjrt() {
+        let res = bench("pjrt_reduce_k8_4M", || {
+            std::hint::black_box(pjrt.reduce(&refs).unwrap());
+        });
+        println!(
+            "  -> PJRT effective memory traffic: {:.2} GB/s",
+            bytes / res.median / 1e9
+        );
+    }
+
+    // ---- executor ------------------------------------------------------
+    group("executor: CPS n=8, 1M floats/worker");
+    let inputs: Vec<Vec<f32>> = (0..8).map(|_| rng.f32_vec(1_000_000)).collect();
+    let plan = cps::allreduce(8);
+    bench("execute_cps8_1M_scalar", || {
+        std::hint::black_box(execute_plan(&plan, &inputs, &Reducer::Scalar).unwrap());
+    });
+    if pjrt.is_pjrt() {
+        bench("execute_cps8_1M_pjrt", || {
+            std::hint::black_box(execute_plan(&plan, &inputs, &pjrt).unwrap());
+        });
+    }
+
+    // ---- coordinator overhead vs raw executor ---------------------------
+    group("coordinator: 64 × 4k-float jobs vs one raw fused execution");
+    let svc = AllReduceService::start(
+        single_switch(8),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig {
+            policy: BatchPolicy {
+                bucket_floats: 1 << 20,
+            },
+            flush_after: Duration::from_micros(200),
+        },
+    );
+    let jobs: Vec<Vec<Vec<f32>>> = (0..64)
+        .map(|_| (0..8).map(|_| rng.f32_vec(4096)).collect())
+        .collect();
+    bench("service_64x4k_jobs", || {
+        let handles: Vec<_> = jobs.iter().map(|t| svc.submit(t.clone())).collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+    });
+    let fused: Vec<Vec<f32>> = (0..8).map(|_| rng.f32_vec(4096 * 64)).collect();
+    let raw_plan = cps::allreduce(8);
+    bench("raw_fused_execution_equal_volume", || {
+        std::hint::black_box(execute_plan(&raw_plan, &fused, &Reducer::Scalar).unwrap());
+    });
+
+    // ---- simulator event rate -------------------------------------------
+    group("simulator: CPS n=64 (4032 flows), single phase pair");
+    let topo = single_switch(64);
+    let env = Environment::paper();
+    let plan64 = cps::allreduce(64);
+    let cfg = SimConfig::new(&topo);
+    bench("simulate_cps64", || {
+        std::hint::black_box(simulate_plan(&plan64, 1e7, &topo, &env, &cfg).total);
+    });
+}

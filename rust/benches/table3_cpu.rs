@@ -1,0 +1,33 @@
+//! Bench: Table 3 (CPU testbed) — also times real execution of the same
+//! plan set on the PJRT data plane at a scaled payload.
+
+use genmodel::bench::table3_cpu;
+use genmodel::exec::execute_plan;
+use genmodel::gentree;
+use genmodel::model::params::Environment;
+use genmodel::plan::{cps, ring};
+use genmodel::runtime::Reducer;
+use genmodel::topo::builders::single_switch;
+use genmodel::util::microbench::{bench, group};
+use genmodel::util::rng::Rng;
+
+fn main() {
+    let env = Environment::paper();
+    group("table3: real execution at n=12, 1M floats/worker");
+    let n = 12;
+    let s = 1_000_000;
+    let mut rng = Rng::new(33);
+    let inputs: Vec<Vec<f32>> = (0..n).map(|_| rng.f32_vec(s)).collect();
+    let reducer = Reducer::auto();
+    println!(
+        "reducer: {}",
+        if reducer.is_pjrt() { "PJRT" } else { "scalar" }
+    );
+    let gentree_plan = gentree::generate(&single_switch(n), &env, s as f64).plan;
+    for plan in [gentree_plan, cps::allreduce(n), ring::allreduce(n)] {
+        bench(&format!("execute_{}", plan.name), || {
+            std::hint::black_box(execute_plan(&plan, &inputs, &reducer).unwrap());
+        });
+    }
+    println!("\n{}", table3_cpu().render());
+}

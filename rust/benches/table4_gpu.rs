@@ -1,0 +1,20 @@
+//! Bench: Table 4 (GPU testbed shape) — times GenTree generation on the
+//! GPU pods and prints the table.
+
+use genmodel::bench::table4_gpu;
+use genmodel::gentree;
+use genmodel::model::params::Environment;
+use genmodel::topo::builders::gpu_pod;
+use genmodel::util::microbench::{bench, group};
+
+fn main() {
+    let env = Environment::gpu();
+    group("table4: GenTree generation on GPU pods");
+    for machines in [2usize, 4, 8] {
+        let topo = gpu_pod(machines, 8);
+        bench(&format!("gentree_generate_gpu{}x8", machines), || {
+            std::hint::black_box(gentree::generate(&topo, &env, 1e8));
+        });
+    }
+    println!("\n{}", table4_gpu().render());
+}

@@ -1,0 +1,43 @@
+//! Bench: Table 7 (large-scale simulation) — times plan generation and
+//! simulation at the paper's 384/512-server scale, then prints the table.
+
+use genmodel::bench::table7_sim;
+use genmodel::bench::workloads::paper_topology;
+use genmodel::gentree;
+use genmodel::model::params::Environment;
+use genmodel::plan::{cps, ring};
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::util::microbench::{bench_with, group, BenchConfig};
+
+fn quick() -> BenchConfig {
+    BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 10,
+        min_total: std::time::Duration::from_millis(200),
+    }
+}
+
+fn main() {
+    let env = Environment::paper();
+    group("table7: 384/512-server plan generation + simulation");
+    for name in ["sym384", "sym512", "cdc384"] {
+        let topo = paper_topology(name).unwrap();
+        let cfg = SimConfig::new(&topo);
+        bench_with(&format!("gentree_generate_{name}"), quick(), || {
+            std::hint::black_box(gentree::generate(&topo, &env, 1e8));
+        });
+        let plan = gentree::generate(&topo, &env, 1e8).plan;
+        bench_with(&format!("simulate_gentree_{name}"), quick(), || {
+            std::hint::black_box(simulate_plan(&plan, 1e8, &topo, &env, &cfg).total);
+        });
+        let n = topo.n_servers();
+        bench_with(&format!("simulate_cps_{name}"), quick(), || {
+            std::hint::black_box(simulate_plan(&cps::allreduce(n), 1e8, &topo, &env, &cfg).total);
+        });
+        bench_with(&format!("simulate_ring_{name}"), quick(), || {
+            std::hint::black_box(simulate_plan(&ring::allreduce(n), 1e8, &topo, &env, &cfg).total);
+        });
+    }
+    println!("\n{}", table7_sim().render());
+}

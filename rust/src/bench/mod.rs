@@ -1,0 +1,11 @@
+//! Harness regenerating every table and figure of the paper's evaluation
+//! (§5). Each function returns a [`crate::util::table::Table`] whose rows
+//! mirror the paper's layout; the CLI (`repro reproduce`) prints them and
+//! `rust/benches/*` time the underlying computations.
+
+pub mod figures;
+pub mod tables;
+pub mod workloads;
+
+pub use figures::{fig10_terms, fig3_incast, fig4_memaccess, fig8_accuracy, fig9_breakdown};
+pub use tables::{table3_cpu, table4_gpu, table5_fit, table6_selections, table7_sim};

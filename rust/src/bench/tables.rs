@@ -1,0 +1,422 @@
+//! Table regeneration (Tables 3, 4, 5-fit, 6, 7).
+
+use crate::gentree::{generate, generate_with};
+use crate::model::expressions::{genmodel, PlanType};
+use crate::model::fit::{fit, BenchRow};
+use crate::model::params::{Environment, ModelParams};
+use crate::sim::{simulate_plan, SimConfig};
+use crate::topo::builders::{gpu_pod, single_switch};
+use crate::topo::Topology;
+use crate::util::table::{millis, secs, speedup, Table};
+
+use super::workloads::{baselines, paper_env, paper_topology, PAPER_SIZES};
+
+fn sim_total(plan: &crate::plan::Plan, s: f64, topo: &Topology, env: &Environment) -> f64 {
+    simulate_plan(plan, s, topo, env, &SimConfig::new(topo)).total
+}
+
+/// Table 3: CPU testbed — GenTree vs Co-located PS / Ring / RHD at
+/// N = 8, 12, 15, S = 1e8 floats (simulated on Table 5 parameters).
+pub fn table3_cpu() -> Table {
+    let env = paper_env();
+    let s = 1e8;
+    let mut t = Table::new(
+        "Table 3 — CPU testbed (simulated): time (s) at S=1e8 floats",
+        &["algorithm", "8", "12", "15"],
+    );
+    let ns = [8usize, 12, 15];
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    // GenTree first (its own selection per N).
+    let mut gt = Vec::new();
+    for &n in &ns {
+        let topo = single_switch(n);
+        let out = generate(&topo, &env, s);
+        gt.push(sim_total(&out.plan, s, &topo, &env));
+    }
+    rows.push(("GenTree".into(), gt));
+    for (name, mk) in [
+        ("Co-located PS", PlanType::ColocatedPs),
+        ("Ring Allreduce", PlanType::Ring),
+        ("RHD", PlanType::Rhd),
+    ] {
+        let mut vals = Vec::new();
+        for &n in &ns {
+            let topo = single_switch(n);
+            let plan = match mk {
+                PlanType::ColocatedPs => crate::plan::cps::allreduce(n),
+                PlanType::Ring => crate::plan::ring::allreduce(n),
+                PlanType::Rhd => crate::plan::rhd::allreduce(n),
+                _ => unreachable!(),
+            };
+            vals.push(sim_total(&plan, s, &topo, &env));
+        }
+        rows.push((name.to_string(), vals));
+    }
+    for (name, vals) in rows {
+        t.row(
+            std::iter::once(name)
+                .chain(vals.iter().map(|v| secs(*v)))
+                .collect(),
+        );
+    }
+    t
+}
+
+/// Table 4: GPU testbed — GenTree vs NCCL(≈Ring over all GPUs) at 16, 32,
+/// 64 GPUs and four data sizes, simulated with GPU-grade parameters.
+pub fn table4_gpu() -> Table {
+    let env = Environment::gpu();
+    let sizes = [1e7, 3.2e7, 1e8, 3.2e8];
+    let mut t = Table::new(
+        "Table 4 — GPU testbed (simulated): time (ms) per data size (floats)",
+        &["#GPUs", "algorithm", "1e7", "3.2e7", "1e8", "3.2e8", "speedup@3.2e8"],
+    );
+    for machines in [2usize, 4, 8] {
+        let topo = gpu_pod(machines, 8);
+        let n = topo.n_servers();
+        let cfg = SimConfig::new(&topo);
+        let gen_times: Vec<f64> = sizes
+            .iter()
+            .map(|&s| {
+                let out = generate(&topo, &env, s);
+                simulate_plan(&out.plan, s, &topo, &env, &cfg).total
+            })
+            .collect();
+        let nccl_times: Vec<f64> = sizes
+            .iter()
+            .map(|&s| {
+                let ring = crate::plan::ring::allreduce(n);
+                simulate_plan(&ring, s, &topo, &env, &cfg).total
+            })
+            .collect();
+        t.row(
+            std::iter::once(n.to_string())
+                .chain(std::iter::once("GenTree".to_string()))
+                .chain(gen_times.iter().map(|v| millis(*v)))
+                .chain(std::iter::once(speedup(
+                    nccl_times[3],
+                    gen_times[3],
+                )))
+                .collect(),
+        );
+        t.row(
+            std::iter::once(n.to_string())
+                .chain(std::iter::once("NCCL (Ring)".to_string()))
+                .chain(nccl_times.iter().map(|v| millis(*v)))
+                .chain(std::iter::once("1.00x".to_string()))
+                .collect(),
+        );
+    }
+    t
+}
+
+/// Table 5: fit the GenModel parameters back from simulated CPS benches
+/// (the §3.4 toolkit flow) and compare with the ground-truth inputs.
+pub fn table5_fit() -> Table {
+    let env = paper_env();
+    let truth = ModelParams::cpu_testbed();
+    let mut rows = Vec::new();
+    for n in 2..=15usize {
+        for s in [2e7, 1e8] {
+            let topo = single_switch(n);
+            let plan = crate::plan::cps::allreduce(n);
+            rows.push(BenchRow {
+                n,
+                s,
+                time: sim_total(&plan, s, &topo, &env),
+            });
+        }
+    }
+    let f = fit(&rows).expect("fit");
+    let mut t = Table::new(
+        "Table 5 — parameters recovered by the fitting toolkit (from simulated CPS benches)",
+        &["parameter", "ground truth", "fitted", "rel err %"],
+    );
+    let rel = |a: f64, b: f64| ((a - b).abs() / b.abs().max(1e-30) * 100.0).min(999.0);
+    t.row(vec![
+        "alpha".into(),
+        format!("{:.3e}", truth.alpha),
+        format!("{:.3e}", f.alpha),
+        format!("{:.2}", rel(f.alpha, truth.alpha)),
+    ]);
+    t.row(vec![
+        "2*beta+gamma".into(),
+        format!("{:.3e}", truth.two_beta_plus_gamma()),
+        format!("{:.3e}", f.two_beta_plus_gamma),
+        format!("{:.2}", rel(f.two_beta_plus_gamma, truth.two_beta_plus_gamma())),
+    ]);
+    t.row(vec![
+        "delta".into(),
+        format!("{:.3e}", truth.delta),
+        format!("{:.3e}", f.delta),
+        format!("{:.2}", rel(f.delta, truth.delta)),
+    ]);
+    t.row(vec![
+        "epsilon".into(),
+        format!("{:.3e}", truth.epsilon),
+        format!("{:.3e}", f.epsilon),
+        format!("{:.2}", rel(f.epsilon, truth.epsilon)),
+    ]);
+    t.row(vec![
+        "w_t".into(),
+        truth.w_t.to_string(),
+        f.w_t.to_string(),
+        if f.w_t == truth.w_t { "0.00".into() } else { "—".into() },
+    ]);
+    t
+}
+
+/// Table 6: the plan GenTree selects per switch level, per topology and
+/// data size.
+pub fn table6_selections() -> Table {
+    let env = paper_env();
+    let mut t = Table::new(
+        "Table 6 — AllReduce plans selected by GenTree",
+        &["network", "switch level", "1e7", "3.2e7", "1e8"],
+    );
+    for name in ["ss24", "ss32", "sym384", "sym512", "asy384", "cdc384"] {
+        let topo = paper_topology(name).unwrap();
+        // Collect per-(depth, choice-at-that-depth) across sizes. Group
+        // switches by (depth, subtree size) like the paper's rows.
+        let mut level_choices: std::collections::BTreeMap<String, Vec<String>> =
+            Default::default();
+        for &s in &PAPER_SIZES {
+            let out = generate(&topo, &env, s);
+            let mut per_level: std::collections::BTreeMap<String, String> = Default::default();
+            for sel in &out.selections {
+                let label = match (sel.depth, topo.node(sel.switch).children.len()) {
+                    (0, _) => "Root SW".to_string(),
+                    (d, _) => format!("L{d} SW ({})", sel.switch_name),
+                };
+                let entry = per_level.entry(level_key(&topo, sel)).or_insert_with(|| {
+                    let _ = label;
+                    sel.choice.clone()
+                });
+                // If switches at the same level pick different plans
+                // (asymmetric networks), note both.
+                if *entry != sel.choice && !entry.contains(&sel.choice) {
+                    entry.push('/');
+                    entry.push_str(&sel.choice);
+                }
+            }
+            for (level, choice) in per_level {
+                level_choices.entry(level).or_default().push(choice);
+            }
+        }
+        for (level, choices) in level_choices {
+            // choices has one entry per size.
+            let mut row = vec![name.to_uppercase(), level];
+            row.extend(choices);
+            while row.len() < 5 {
+                row.push("—".into());
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+fn level_key(topo: &Topology, sel: &crate::gentree::Selection) -> String {
+    if sel.depth == 0 {
+        "Root SW".to_string()
+    } else {
+        let n = topo.servers_under(sel.switch).len();
+        format!("L{} SW (n={})", sel.depth, n)
+    }
+}
+
+/// Table 7: large-scale simulation — GenTree (and GenTree* without
+/// rearrangement on CDC) vs the baselines on all six topologies.
+pub fn table7_sim() -> Table {
+    let env = paper_env();
+    let mut t = Table::new(
+        "Table 7 — large-scale simulation: time (s) per data size (floats)",
+        &["topo", "algorithm", "1e7", "3.2e7", "1e8", "speedup@1e8"],
+    );
+    for name in ["ss24", "ss32", "sym384", "sym512", "asy384", "cdc384"] {
+        let topo = paper_topology(name).unwrap();
+        let n = topo.n_servers();
+        let cfg = SimConfig::new(&topo);
+        let gen_times: Vec<f64> = PAPER_SIZES
+            .iter()
+            .map(|&s| {
+                let out = generate(&topo, &env, s);
+                simulate_plan(&out.plan, s, &topo, &env, &cfg).total
+            })
+            .collect();
+        t.row(vec![
+            name.to_uppercase(),
+            "GenTree".into(),
+            secs(gen_times[0]),
+            secs(gen_times[1]),
+            secs(gen_times[2]),
+            "—".into(),
+        ]);
+        if name == "cdc384" {
+            let star: Vec<f64> = PAPER_SIZES
+                .iter()
+                .map(|&s| {
+                    let out = generate_with(
+                        &topo,
+                        &env,
+                        s,
+                        &crate::gentree::generate::GenTreeConfig {
+                            allow_rearrangement: false,
+                            ..Default::default()
+                        },
+                    );
+                    simulate_plan(&out.plan, s, &topo, &env, &cfg).total
+                })
+                .collect();
+            t.row(vec![
+                name.to_uppercase(),
+                "GenTree*".into(),
+                secs(star[0]),
+                secs(star[1]),
+                secs(star[2]),
+                speedup(star[2], gen_times[2]),
+            ]);
+        }
+        for base in baselines(n) {
+            let times: Vec<f64> = PAPER_SIZES
+                .iter()
+                .map(|&s| simulate_plan(&base, s, &topo, &env, &cfg).total)
+                .collect();
+            let label = if base.name.starts_with("Ring") {
+                "Ring Allreduce"
+            } else if base.name.starts_with("CPS") {
+                "Co-located PS"
+            } else {
+                "RHD"
+            };
+            t.row(vec![
+                name.to_uppercase(),
+                label.into(),
+                secs(times[0]),
+                secs(times[1]),
+                secs(times[2]),
+                speedup(times[2], gen_times[2]),
+            ]);
+        }
+    }
+    t
+}
+
+/// Closed-form sanity table (Tables 1–2 as numbers) — extra diagnostic.
+pub fn expressions_table(n: usize, s: f64) -> Table {
+    let p = ModelParams::cpu_testbed();
+    let mut t = Table::new(
+        &format!("Tables 1–2 — closed-form costs at N={n}, S={s:.0e}"),
+        &["plan", "classic total (s)", "GenModel total (s)"],
+    );
+    let mut plans = vec![
+        PlanType::ReduceBroadcast,
+        PlanType::ColocatedPs,
+        PlanType::Ring,
+        PlanType::Rhd,
+    ];
+    for fs in crate::gentree::template::ordered_factorizations(n, 8) {
+        if fs.len() == 2 {
+            plans.push(PlanType::HierarchicalPs(fs));
+        }
+    }
+    for plan in plans {
+        let g = genmodel(&plan, n, s, &p);
+        t.row(vec![
+            format!("{plan}"),
+            secs(g.classic_total()),
+            secs(g.total()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_gentree_wins_or_ties() {
+        let t = table3_cpu();
+        let get = |algo: &str, col: usize| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == algo)
+                .unwrap()[col]
+                .parse()
+                .unwrap()
+        };
+        for col in 1..=3 {
+            let g = get("GenTree", col);
+            for algo in ["Co-located PS", "Ring Allreduce", "RHD"] {
+                assert!(
+                    g <= get(algo, col) * 1.001,
+                    "col {col}: GenTree {g} vs {algo} {}",
+                    get(algo, col)
+                );
+            }
+        }
+        // Paper shape: RHD at 12/15 (non-power-of-two) much worse than at 8.
+        assert!(get("RHD", 2) > get("RHD", 1) * 1.5);
+    }
+
+    #[test]
+    fn table5_fit_recovers() {
+        let t = table5_fit();
+        // w_t row recovered exactly.
+        let wt = t.rows.iter().find(|r| r[0] == "w_t").unwrap();
+        assert_eq!(wt[1], wt[2]);
+        // Compound within 10% (simulator vs closed-form differences).
+        let bg = t.rows.iter().find(|r| r[0] == "2*beta+gamma").unwrap();
+        let err: f64 = bg[3].parse().unwrap();
+        assert!(err < 10.0, "2b+g err {err}%");
+    }
+
+    #[test]
+    fn table6_shapes() {
+        let t = table6_selections();
+        // SS32 root at 1e8 must be hierarchical 8x4 (paper Table 6).
+        let ss32 = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "SS32" && r[1] == "Root SW")
+            .unwrap();
+        assert_eq!(ss32[4], "8x4", "{ss32:?}");
+        // CDC384 root must use rearrangement (the +R suffix on ACPS/CPS).
+        let cdc_root = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "CDC384" && r[1] == "Root SW")
+            .unwrap();
+        assert!(
+            cdc_root[4].contains("+R"),
+            "CDC root at 1e8 should rearrange: {cdc_root:?}"
+        );
+    }
+
+    #[test]
+    fn table7_gentree_dominates() {
+        let t = table7_sim();
+        // For every topology and size, GenTree ≤ every baseline.
+        for name in ["SS24", "SS32", "SYM384", "SYM512", "ASY384", "CDC384"] {
+            let gen: Vec<f64> = {
+                let r = t
+                    .rows
+                    .iter()
+                    .find(|r| r[0] == name && r[1] == "GenTree")
+                    .unwrap();
+                (2..5).map(|i| r[i].parse().unwrap()).collect()
+            };
+            for row in t.rows.iter().filter(|r| r[0] == name && r[1] != "GenTree") {
+                for (i, g) in gen.iter().enumerate() {
+                    let v: f64 = row[i + 2].parse().unwrap();
+                    assert!(
+                        *g <= v * 1.02,
+                        "{name} {}: GenTree {g} vs {v}",
+                        row[1]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Shared workload definitions for the evaluation harness: the paper's
+//! topology instances (§5.3) and baseline plan sets.
+
+use crate::model::params::Environment;
+use crate::plan::{cps, rhd, ring, Plan};
+use crate::topo::{builders, Topology};
+
+/// The six evaluation topologies of Fig. 11 / Table 7, by paper name.
+pub fn paper_topology(name: &str) -> Option<Topology> {
+    match name.to_ascii_lowercase().as_str() {
+        "ss24" => Some(builders::single_switch(24)),
+        "ss32" => Some(builders::single_switch(32)),
+        "sym384" => Some(builders::symmetric(16, 24)),
+        "sym512" => Some(builders::symmetric(16, 32)),
+        "asy384" => Some(builders::asymmetric(&[32; 8], &[16; 8])),
+        "cdc384" => Some(builders::cross_dc(&[32; 8], &[16; 8])),
+        _ => None,
+    }
+}
+
+/// Parse extended topology specs: paper names plus `single:N`, `sym:M,K`,
+/// `gpu:M,G`, `asy:a+b+…/c+d+…`, `cdc:a+b/c+d`.
+pub fn parse_topology(spec: &str) -> Option<Topology> {
+    if let Some(t) = paper_topology(spec) {
+        return Some(t);
+    }
+    let (kind, rest) = spec.split_once(':')?;
+    let nums = |s: &str| -> Option<Vec<usize>> {
+        s.split(&['+', ','][..])
+            .map(|x| x.trim().parse::<usize>().ok())
+            .collect()
+    };
+    match kind {
+        "single" => Some(builders::single_switch(rest.parse().ok()?)),
+        "sym" => {
+            let v = nums(rest)?;
+            (v.len() == 2).then(|| builders::symmetric(v[0], v[1]))
+        }
+        "gpu" => {
+            let v = nums(rest)?;
+            (v.len() == 2).then(|| builders::gpu_pod(v[0], v[1]))
+        }
+        "asy" => {
+            let (a, b) = rest.split_once('/')?;
+            Some(builders::asymmetric(&nums(a)?, &nums(b)?))
+        }
+        "cdc" => {
+            let (a, b) = rest.split_once('/')?;
+            Some(builders::cross_dc(&nums(a)?, &nums(b)?))
+        }
+        _ => None,
+    }
+}
+
+/// The three data sizes of the large-scale evaluation (floats).
+pub const PAPER_SIZES: [f64; 3] = [1e7, 3.2e7, 1e8];
+
+/// Baseline plans for `n` servers, named as in Table 7 (RHD only for
+/// power-of-two n, as in the paper).
+pub fn baselines(n: usize) -> Vec<Plan> {
+    let mut out = vec![ring::allreduce(n), cps::allreduce(n)];
+    if n.is_power_of_two() {
+        out.insert(0, rhd::allreduce(n));
+    }
+    out
+}
+
+/// The environment used for the CPU-cluster simulations (Table 5 values).
+pub fn paper_env() -> Environment {
+    Environment::paper()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_names_resolve() {
+        for (name, n) in [
+            ("ss24", 24usize),
+            ("SS32", 32),
+            ("sym384", 384),
+            ("SYM512", 512),
+            ("asy384", 384),
+            ("cdc384", 384),
+        ] {
+            assert_eq!(paper_topology(name).unwrap().n_servers(), n);
+        }
+        assert!(paper_topology("nope").is_none());
+    }
+
+    #[test]
+    fn extended_specs() {
+        assert_eq!(parse_topology("single:9").unwrap().n_servers(), 9);
+        assert_eq!(parse_topology("sym:4,6").unwrap().n_servers(), 24);
+        assert_eq!(parse_topology("gpu:2,8").unwrap().n_servers(), 16);
+        assert_eq!(parse_topology("asy:4+4/2").unwrap().n_servers(), 10);
+        assert_eq!(parse_topology("cdc:4/2+2").unwrap().n_servers(), 8);
+        assert!(parse_topology("bogus:1").is_none());
+    }
+
+    #[test]
+    fn baselines_respect_rhd_rule() {
+        assert_eq!(baselines(24).len(), 2); // no RHD
+        assert_eq!(baselines(32).len(), 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! Gradient bucketing: decide which pending jobs fuse into one round.
+//!
+//! Pure logic (no threads) so it is directly testable: jobs are taken in
+//! FIFO order; a batch closes when adding the next job would exceed
+//! `bucket_floats`, or when the queue is drained. A single oversized job
+//! always forms its own batch (it cannot be split across rounds — the
+//! plan's block partition already parallelizes it).
+
+/// One pending job's metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PendingJob {
+    pub id: u64,
+    /// Per-worker tensor length in floats.
+    pub floats: usize,
+}
+
+/// Batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Target fused payload size (floats). Mirrors DDP's bucket_cap.
+    pub bucket_floats: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 25 MB of f32 — the ubiquitous DDP default bucket.
+        BatchPolicy {
+            bucket_floats: 25 * (1 << 20) / 4,
+        }
+    }
+}
+
+/// Split the FIFO queue into batches under the policy.
+pub fn plan_batches(queue: &[PendingJob], policy: &BatchPolicy) -> Vec<Vec<PendingJob>> {
+    let mut out = Vec::new();
+    let mut cur: Vec<PendingJob> = Vec::new();
+    let mut cur_floats = 0usize;
+    for &j in queue {
+        if !cur.is_empty() && cur_floats + j.floats > policy.bucket_floats {
+            out.push(std::mem::take(&mut cur));
+            cur_floats = 0;
+        }
+        cur_floats += j.floats;
+        cur.push(j);
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Offsets of each job inside the fused buffer of a batch.
+pub fn fuse_offsets(batch: &[PendingJob]) -> Vec<(u64, usize, usize)> {
+    let mut out = Vec::with_capacity(batch.len());
+    let mut off = 0usize;
+    for j in batch {
+        out.push((j.id, off, j.floats));
+        off += j.floats;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs(sizes: &[usize]) -> Vec<PendingJob> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| PendingJob {
+                id: i as u64,
+                floats: s,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_jobs_fuse() {
+        let q = jobs(&[100, 200, 300]);
+        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 3);
+    }
+
+    #[test]
+    fn bucket_boundary_splits() {
+        let q = jobs(&[600, 600, 600]);
+        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        assert_eq!(batches.len(), 3); // 600+600 > 1000 each time
+    }
+
+    #[test]
+    fn oversized_job_alone() {
+        let q = jobs(&[5000, 10]);
+        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0][0].floats, 5000);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = jobs(&[10, 990, 10]);
+        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        let ids: Vec<u64> = batches.concat().iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn offsets_contiguous() {
+        let b = jobs(&[5, 7, 3]);
+        let offs = fuse_offsets(&b);
+        assert_eq!(offs, vec![(0, 0, 5), (1, 5, 7), (2, 12, 3)]);
+    }
+
+    #[test]
+    fn empty_queue_no_batches() {
+        assert!(plan_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+}

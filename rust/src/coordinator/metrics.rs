@@ -1,0 +1,76 @@
+//! Service metrics: lock-free counters + snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub floats_reduced: AtomicU64,
+    pub reduce_calls: AtomicU64,
+    /// Nanoseconds spent executing plans.
+    pub busy_nanos: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub batches_flushed: u64,
+    pub floats_reduced: u64,
+    pub reduce_calls: u64,
+    pub busy_secs: f64,
+}
+
+impl Metrics {
+    pub fn add(&self, field: &AtomicU64, v: u64) {
+        field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
+            floats_reduced: self.floats_reduced.load(Ordering::Relaxed),
+            reduce_calls: self.reduce_calls.load(Ordering::Relaxed),
+            busy_secs: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Average fused batch size in jobs (batching effectiveness).
+    pub fn jobs_per_batch(&self) -> f64 {
+        if self.batches_flushed == 0 {
+            0.0
+        } else {
+            self.jobs_completed as f64 / self.batches_flushed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add(&m.jobs_submitted, 3);
+        m.add(&m.jobs_completed, 3);
+        m.add(&m.batches_flushed, 1);
+        m.add(&m.busy_nanos, 2_000_000_000);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 3);
+        assert_eq!(s.jobs_per_batch(), 3.0);
+        assert!((s.busy_secs - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.jobs_per_batch(), 0.0);
+    }
+}

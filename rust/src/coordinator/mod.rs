@@ -1,0 +1,25 @@
+//! L3 coordinator — the serving layer around the executor.
+//!
+//! A deployment-shaped AllReduce service in the spirit of what DDP/
+//! Horovod-style frameworks wrap around a collective library:
+//!
+//! * [`service`] — leader thread owning the job queue; clients submit
+//!   per-worker tensors and receive results over channels;
+//! * [`batcher`] — gradient bucketing: small tensors from concurrent jobs
+//!   fuse into one AllReduce round (amortizing the α term — exactly the
+//!   trade GenModel prices), flushed on size or time;
+//! * [`router`] — plan cache: picks and caches the GenTree plan per
+//!   payload-size bucket for the configured topology;
+//! * [`metrics`] — atomic counters exposed for the CLI and benches.
+//!
+//! Threads + channels stand in for an async runtime (tokio is not in the
+//! vendored dependency closure; the control flow is identical).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::PlanRouter;
+pub use service::{AllReduceService, JobResult, ServiceConfig};

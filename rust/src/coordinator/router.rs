@@ -1,0 +1,106 @@
+//! Plan routing: pick (and cache) the right GenTree plan per payload size.
+//!
+//! GenTree's choice depends on S (Table 6: CPS at 1e7, hierarchical at
+//! 1e8), so plans are cached per power-of-two size bucket; a fused batch
+//! of size s uses the plan generated for its bucket's representative size.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::gentree::{generate, GenTreeOutput};
+use crate::model::params::Environment;
+use crate::plan::Plan;
+use crate::topo::Topology;
+
+pub struct PlanRouter {
+    topo: Topology,
+    env: Environment,
+    cache: Mutex<HashMap<u32, GenTreeOutput>>,
+}
+
+impl PlanRouter {
+    pub fn new(topo: Topology, env: Environment) -> Self {
+        PlanRouter {
+            topo,
+            env,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Bucket index: ⌈log2(s)⌉ clamped below at 2^10.
+    pub fn bucket(s: usize) -> u32 {
+        (s.max(1024).next_power_of_two()).trailing_zeros()
+    }
+
+    /// Representative size the plan is generated for.
+    pub fn bucket_size(bucket: u32) -> f64 {
+        (1u64 << bucket) as f64
+    }
+
+    /// Plan for a payload of `s` floats (cached per bucket).
+    pub fn plan_for(&self, s: usize) -> Plan {
+        let b = Self::bucket(s);
+        let mut cache = self.cache.lock().unwrap();
+        cache
+            .entry(b)
+            .or_insert_with(|| generate(&self.topo, &self.env, Self::bucket_size(b)))
+            .plan
+            .clone()
+    }
+
+    /// Selections behind the plan for `s` (Table 6 reporting).
+    pub fn selections_for(&self, s: usize) -> Vec<crate::gentree::Selection> {
+        let b = Self::bucket(s);
+        let mut cache = self.cache.lock().unwrap();
+        cache
+            .entry(b)
+            .or_insert_with(|| generate(&self.topo, &self.env, Self::bucket_size(b)))
+            .selections
+            .clone()
+    }
+
+    pub fn cached_buckets(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::single_switch;
+
+    #[test]
+    fn buckets() {
+        assert_eq!(PlanRouter::bucket(1), 10);
+        assert_eq!(PlanRouter::bucket(1024), 10);
+        assert_eq!(PlanRouter::bucket(1025), 11);
+        assert_eq!(PlanRouter::bucket(1 << 20), 20);
+        assert_eq!(PlanRouter::bucket_size(10), 1024.0);
+    }
+
+    #[test]
+    fn caches_per_bucket() {
+        let r = PlanRouter::new(single_switch(8), Environment::paper());
+        let a = r.plan_for(2000);
+        let b = r.plan_for(2047); // same bucket
+        assert_eq!(a, b);
+        assert_eq!(r.cached_buckets(), 1);
+        let _ = r.plan_for(100_000);
+        assert_eq!(r.cached_buckets(), 2);
+    }
+
+    #[test]
+    fn plans_are_valid() {
+        use crate::plan::validate::{validate, Goal};
+        let r = PlanRouter::new(single_switch(12), Environment::paper());
+        for s in [1_000usize, 100_000, 10_000_000] {
+            let p = r.plan_for(s);
+            validate(&p, Goal::AllReduce).unwrap();
+            assert_eq!(p.n_servers, 12);
+        }
+    }
+}

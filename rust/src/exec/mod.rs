@@ -1,0 +1,12 @@
+//! Real data-plane execution of AllReduce plans.
+//!
+//! N in-process workers hold real f32 buffers; plan phases move actual
+//! data between them and reduce through the PJRT runtime — the same IR
+//! the cost model and simulator consume, now with numbers instead of
+//! bitsets. `verify` checks every worker ends with the exact global sum.
+
+pub mod executor;
+pub mod worker;
+
+pub use executor::{execute_plan, oracle_sum, verify, ExecOutcome};
+pub use worker::WorkerState;

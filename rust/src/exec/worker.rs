@@ -1,0 +1,65 @@
+//! Per-worker state: block-indexed partial buffers.
+
+use std::collections::HashMap;
+
+use crate::plan::{BlockId, Plan};
+
+/// One worker's view of the payload during plan execution.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerState {
+    /// Current partial (or final) value per block.
+    pub partials: HashMap<BlockId, Vec<f32>>,
+}
+
+impl WorkerState {
+    /// Initialize from this worker's full input vector: every block is a
+    /// partial consisting of the worker's own data slice.
+    pub fn from_input(plan: &Plan, input: &[f32]) -> WorkerState {
+        let s = input.len();
+        let mut partials = HashMap::new();
+        for b in 0..plan.n_blocks {
+            let off = plan.block_offset(b, s);
+            let len = plan.block_len(b, s);
+            partials.insert(b, input[off..off + len].to_vec());
+        }
+        WorkerState { partials }
+    }
+
+    /// Reassemble the full vector after AllReduce (every block final).
+    pub fn assemble(&self, plan: &Plan, s: usize) -> Option<Vec<f32>> {
+        let mut out = vec![0f32; s];
+        for b in 0..plan.n_blocks {
+            let part = self.partials.get(&b)?;
+            let off = plan.block_offset(b, s);
+            let len = plan.block_len(b, s);
+            if part.len() != len {
+                return None;
+            }
+            out[off..off + len].copy_from_slice(part);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_blocks() {
+        let plan = Plan::new("t", 3, 3);
+        let input: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let w = WorkerState::from_input(&plan, &input);
+        assert_eq!(w.partials.len(), 3);
+        assert_eq!(w.partials[&0].len(), 4); // 10 = 4 + 3 + 3
+        assert_eq!(w.assemble(&plan, 10).unwrap(), input);
+    }
+
+    #[test]
+    fn assemble_fails_on_missing_block() {
+        let plan = Plan::new("t", 2, 2);
+        let mut w = WorkerState::from_input(&plan, &[1.0, 2.0]);
+        w.partials.remove(&1);
+        assert!(w.assemble(&plan, 2).is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! GenTree — the paper's AllReduce plan-generation heuristic for tree
+//! topologies (§4), built from three pieces:
+//!
+//! * [`placement`] — Algorithm 1: the *basic sub-plan*, i.e. the final
+//!   block placement at every switch, computed bottom-up so each server
+//!   keeps blocks it already holds wherever possible;
+//! * [`template`] — participant-level ReduceScatter templates (Direct/
+//!   ACPS, Hierarchical CPS, Ring, RHD) and their expansion onto concrete
+//!   holder maps — one machinery serves leaf switches (participants =
+//!   servers) and inner switches (participants = child subtrees);
+//! * [`generate`] — Algorithm 2: per switch-local sub-tree, generate
+//!   candidate final sub-plans (including the data-rearrangement variant
+//!   for slow uplinks), price each with GenModel, keep the cheapest, and
+//!   merge same-depth sub-plans into concurrent phases. The AllGather is
+//!   the mirrored ReduceScatter (§4.2).
+
+pub mod generate;
+pub mod placement;
+pub mod template;
+
+pub use generate::{generate, generate_with, GenTreeConfig, GenTreeOutput, Selection};
+pub use placement::{basic_placement, Placement};

@@ -1,0 +1,220 @@
+//! Algorithm 1: `generate_basic_plan` — final block placement per node.
+//!
+//! Bottom-up over the tree: a server's placement is "all blocks"; a
+//! switch's placement distributes the `N` blocks over the `n` servers of
+//! its subtree (⌈N/n⌉ or ⌊N/n⌋ each), preferring to leave each block with
+//! a server that already holds it after the children's ReduceScatter —
+//! that is what makes the *basic* sub-plan cheap. A final repair pass
+//! assigns any block the greedy loop left unplaced (the paper's pseudo
+//! code has the same greedy structure and implicitly assumes it covers;
+//! repair preserves quota balance).
+
+use std::collections::HashMap;
+
+use crate::topo::{NodeId, Topology};
+
+/// Final placement for every node of the tree.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// `owner[node][block]` = the server (NodeId) owning `block` after the
+    /// subtree of `node` finishes its ReduceScatter. Defined for every
+    /// node; for a server node every block maps to itself.
+    owner: HashMap<NodeId, Vec<NodeId>>,
+    pub n_blocks: usize,
+}
+
+impl Placement {
+    /// Owner of `block` within `node`'s subtree.
+    pub fn owner_under(&self, node: NodeId, block: usize) -> NodeId {
+        self.owner[&node][block]
+    }
+
+    /// All blocks owned by `server` within `node`'s subtree.
+    pub fn blocks_of(&self, node: NodeId, server: NodeId) -> Vec<usize> {
+        self.owner[&node]
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o == server)
+            .map(|(b, _)| b)
+            .collect()
+    }
+
+    pub fn has(&self, node: NodeId) -> bool {
+        self.owner.contains_key(&node)
+    }
+}
+
+/// Run Algorithm 1 over the whole topology. `n_blocks` = number of
+/// servers (the paper splits data into N blocks).
+pub fn basic_placement(topo: &Topology) -> Placement {
+    let n_blocks = topo.n_servers();
+    let mut owner: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+
+    // Servers: hold everything.
+    for &s in topo.servers() {
+        owner.insert(s, vec![s; n_blocks]);
+    }
+
+    // Switches bottom-up.
+    for sw in topo.switches_bottom_up() {
+        let servers = topo.servers_under(sw);
+        let n = servers.len();
+        let base = n_blocks / n;
+        let rem = n_blocks % n;
+        let mut taken = vec![false; n_blocks];
+        let mut assign: Vec<Option<NodeId>> = vec![None; n_blocks];
+        // Quota per server, in iteration order (first `rem` get one extra,
+        // mirroring Algorithm 1's remain handling).
+        let mut quota: HashMap<NodeId, usize> = HashMap::new();
+        let mut handed = 0usize;
+        // Iterate children in order; within a child, its placement's
+        // servers in id order (deterministic).
+        for &child in &topo.node(sw).children {
+            let child_servers = topo.servers_under(child);
+            for &srv in &child_servers {
+                let mut q = base;
+                if handed < rem {
+                    q += 1;
+                    handed += 1;
+                }
+                quota.insert(srv, q);
+                // Blocks this server holds after the child's RS.
+                let held: Vec<usize> = owner[&child]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &o)| o == srv)
+                    .map(|(b, _)| b)
+                    .collect();
+                let mut left = q;
+                for b in held {
+                    if left == 0 {
+                        break;
+                    }
+                    if !taken[b] {
+                        taken[b] = true;
+                        assign[b] = Some(srv);
+                        left -= 1;
+                    }
+                }
+                *quota.get_mut(&srv).unwrap() = left;
+            }
+        }
+        // Repair: place leftovers with servers that still have quota.
+        let mut spare: Vec<NodeId> = servers
+            .iter()
+            .copied()
+            .filter(|s| quota.get(s).copied().unwrap_or(0) > 0)
+            .collect();
+        for b in 0..n_blocks {
+            if assign[b].is_none() {
+                let srv = *spare.last().expect("quota exhausted with blocks unplaced");
+                assign[b] = Some(srv);
+                let q = quota.get_mut(&srv).unwrap();
+                *q -= 1;
+                if *q == 0 {
+                    spare.pop();
+                }
+            }
+        }
+        owner.insert(sw, assign.into_iter().map(Option::unwrap).collect());
+    }
+
+    Placement { owner, n_blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::*;
+
+    fn check_balanced(topo: &Topology, p: &Placement) {
+        let n_blocks = p.n_blocks;
+        for sw in topo.switches_bottom_up() {
+            let servers = topo.servers_under(sw);
+            let n = servers.len();
+            let mut count: HashMap<NodeId, usize> = HashMap::new();
+            for b in 0..n_blocks {
+                let o = p.owner_under(sw, b);
+                assert!(servers.contains(&o), "owner outside subtree");
+                *count.entry(o).or_insert(0) += 1;
+            }
+            // Every server owns ⌊N/n⌋ or ⌈N/n⌉ blocks.
+            for &s in &servers {
+                let c = count.get(&s).copied().unwrap_or(0);
+                assert!(
+                    c == n_blocks / n || c == n_blocks.div_ceil(n),
+                    "server {s} owns {c} of {n_blocks} (n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_switch_identity_like() {
+        let topo = single_switch(8);
+        let p = basic_placement(&topo);
+        check_balanced(&topo, &p);
+        // 8 blocks over 8 servers: exactly one each, and it keeps the
+        // block the server already held — any bijection works, greedy
+        // yields block b at server index b.
+        let root = topo.root();
+        for b in 0..8 {
+            assert_eq!(p.owner_under(root, b), topo.servers()[b]);
+        }
+    }
+
+    #[test]
+    fn symmetric_hierarchy_placement_nested() {
+        let topo = symmetric(3, 4); // 12 servers
+        let p = basic_placement(&topo);
+        check_balanced(&topo, &p);
+        // Nesting: the root owner of block b must also be the mid-switch
+        // owner of b within its own rack (blocks stay put).
+        let root = topo.root();
+        for b in 0..12 {
+            let o = p.owner_under(root, b);
+            let rack = topo.node(o).parent.unwrap();
+            assert_eq!(p.owner_under(rack, b), o, "block {b} moved inside rack");
+        }
+    }
+
+    #[test]
+    fn asymmetric_quota() {
+        let topo = asymmetric(&[4], &[2]); // 6 servers
+        let p = basic_placement(&topo);
+        check_balanced(&topo, &p);
+    }
+
+    #[test]
+    fn cross_dc_covers_all() {
+        let topo = cross_dc(&[4, 4], &[2, 2]);
+        let p = basic_placement(&topo);
+        check_balanced(&topo, &p);
+    }
+
+    #[test]
+    fn paper_scale_topologies() {
+        for topo in [
+            single_switch(24),
+            single_switch(32),
+            symmetric(16, 24),
+            asymmetric(&[32; 8], &[16; 8]),
+            cross_dc(&[32; 8], &[16; 8]),
+        ] {
+            let p = basic_placement(&topo);
+            check_balanced(&topo, &p);
+        }
+    }
+
+    #[test]
+    fn blocks_of_inverse_of_owner() {
+        let topo = symmetric(2, 3);
+        let p = basic_placement(&topo);
+        let root = topo.root();
+        for &s in topo.servers() {
+            for b in p.blocks_of(root, s) {
+                assert_eq!(p.owner_under(root, b), s);
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! GenModel / GenTree — reproduction of *Revisiting the Time Cost Model of
+//! AllReduce* (CS.DC 2024).
+//!
+//! Crate layout (three-layer architecture; python/JAX/Pallas only in the
+//! compile path, never at runtime):
+//!
+//! * [`model`] — GenModel: the `(α, β, γ, δ, ε, w_t)` time-cost model,
+//!   closed-form expressions (paper Tables 1–2), cost evaluation of
+//!   arbitrary plans, and the parameter-fitting toolkit (§3.4).
+//! * [`topo`] — tree-like physical topologies (single-switch, symmetric /
+//!   asymmetric hierarchical, cross-DC, fat-tree reduction).
+//! * [`plan`] — the AllReduce plan IR plus every baseline plan builder:
+//!   Reduce-Broadcast, Co-located PS, Ring, RHD, Hierarchical CPS,
+//!   Asymmetric CPS.
+//! * [`gentree`] — the paper's plan-generation heuristic (Algorithms 1–2).
+//! * [`sim`] — incast-aware event-driven flow-level network simulator (§5.3).
+//! * [`runtime`] — PJRT runtime: loads the AOT HLO artifacts and exposes a
+//!   fan-in-k reducer to the data plane.
+//! * [`exec`] — real data-plane executor: in-process workers with real
+//!   buffers; numerics verified against an exact oracle.
+//! * [`coordinator`] — the L3 service: job queue, size-bucketing batcher,
+//!   plan cache/router, metrics.
+//! * [`bench`] — the harness that regenerates every paper table and figure.
+//! * [`util`] — substrates built in-repo because the build is offline:
+//!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
+
+pub mod bench;
+pub mod coordinator;
+pub mod exec;
+pub mod gentree;
+pub mod model;
+pub mod plan;
+pub mod runtime;
+pub mod sim;
+pub mod topo;
+pub mod util;

@@ -1,0 +1,365 @@
+//! `repro` — the GenModel/GenTree command-line toolkit.
+//!
+//! Subcommands:
+//!
+//! * `fit`       — the §3.4 benchmarking toolkit: run (simulated) CPS
+//!                 benches and fit the GenModel parameters.
+//! * `predict`   — price a plan on a topology with GenModel, the classic
+//!                 model, and the flow simulator.
+//! * `plan`      — show the plan GenTree generates (Table 6 style).
+//! * `simulate`  — flow-level simulation of one algorithm on a topology.
+//! * `run`       — execute a plan on real data through the PJRT runtime
+//!                 and verify against the exact oracle.
+//! * `serve`     — start the coordinator and push a synthetic job stream,
+//!                 reporting service metrics.
+//! * `reproduce` — regenerate the paper's tables and figures.
+
+use std::time::Instant;
+
+use genmodel::bench::{self, workloads};
+use genmodel::coordinator::{AllReduceService, ServiceConfig};
+use genmodel::exec;
+use genmodel::gentree;
+use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::fit::{fit, BenchRow};
+use genmodel::model::params::Environment;
+use genmodel::plan::{cps, rhd, ring, Plan};
+use genmodel::runtime::ReducerSpec;
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::Topology;
+use genmodel::util::cli::Args;
+use genmodel::util::rng::Rng;
+
+const USAGE: &str = "\
+repro — GenModel/GenTree toolkit ('Revisiting the Time Cost Model of AllReduce')
+
+USAGE: repro <subcommand> [options]
+
+  fit        [--max-n 15] [--sizes 2e7,1e8]
+  predict    --topo <spec> --algo <algo> [--size 1e8]
+  plan       --topo <spec> [--size 1e8] [--no-rearrange]
+  simulate   --topo <spec> --algo <algo> [--size 1e8]
+  run        [--servers 8] [--size 100000] [--algo gentree] [--scalar]
+  serve      [--servers 8] [--jobs 64] [--tensor 4096] [--scalar]
+  reproduce  [--table 3|4|5|6|7] [--fig 3|4|8|9|10] [--all]
+
+  <spec>: ss24 ss32 sym384 sym512 asy384 cdc384 | single:N sym:M,K gpu:M,G
+          asy:a+b/c+d cdc:a+b/c+d
+  <algo>: gentree gentree-star cps ring rhd hcps:AxB[xC]
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => match args.check_unused() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                2
+            }
+        },
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn topo_arg(args: &Args) -> anyhow::Result<Topology> {
+    let spec = args
+        .opt("topo")
+        .ok_or_else(|| anyhow::anyhow!("--topo required (e.g. --topo ss24)"))?;
+    workloads::parse_topology(spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown topology spec {spec:?}"))
+}
+
+fn size_arg(args: &Args) -> anyhow::Result<f64> {
+    Ok(args
+        .opt("size")
+        .map(|s| s.parse::<f64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--size: {e}"))?
+        .unwrap_or(1e8))
+}
+
+fn algo_plan(spec: &str, topo: &Topology, env: &Environment, s: f64) -> anyhow::Result<Plan> {
+    let n = topo.n_servers();
+    Ok(match spec.to_ascii_lowercase().as_str() {
+        "gentree" => gentree::generate(topo, env, s).plan,
+        "gentree-star" => {
+            gentree::generate_with(
+                topo,
+                env,
+                s,
+                &gentree::GenTreeConfig {
+                    allow_rearrangement: false,
+                    ..Default::default()
+                },
+            )
+            .plan
+        }
+        "cps" => cps::allreduce(n),
+        "ring" => ring::allreduce(n),
+        "rhd" => rhd::allreduce(n),
+        other => {
+            if let Some(fs) = other.strip_prefix("hcps:") {
+                let factors: Vec<usize> = fs
+                    .split('x')
+                    .map(|x| x.parse())
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad hcps factors: {e}"))?;
+                anyhow::ensure!(
+                    factors.iter().product::<usize>() == n,
+                    "hcps factors must multiply to {n}"
+                );
+                genmodel::plan::hcps::allreduce(&factors)
+            } else {
+                anyhow::bail!("unknown algorithm {spec:?}")
+            }
+        }
+    })
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("fit") => cmd_fit(args),
+        Some("predict") => cmd_predict(args),
+        Some("plan") => cmd_plan(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
+        Some("reproduce") => cmd_reproduce(args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_fit(args: &Args) -> anyhow::Result<()> {
+    let max_n: usize = args.opt_parse_or("max-n", 15)?;
+    let sizes: Vec<f64> = args
+        .opt_or("sizes", "2e7,1e8")
+        .split(',')
+        .map(|s| s.parse::<f64>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("--sizes: {e}"))?;
+    let env = Environment::paper();
+    let mut rows = Vec::new();
+    for n in 2..=max_n {
+        for &s in &sizes {
+            let topo = genmodel::topo::builders::single_switch(n);
+            let t = simulate_plan(&cps::allreduce(n), s, &topo, &env, &SimConfig::new(&topo)).total;
+            rows.push(BenchRow { n, s, time: t });
+            println!("bench: n={n:<3} S={s:.1e}  t={t:.4}s");
+        }
+    }
+    let f = fit(&rows)?;
+    println!("\nfitted GenModel parameters:");
+    println!("  alpha        = {:.4e} s/round", f.alpha);
+    println!("  2*beta+gamma = {:.4e} s/float", f.two_beta_plus_gamma);
+    println!("  delta        = {:.4e} s/float", f.delta);
+    println!("  epsilon      = {:.4e} s/float/excess", f.epsilon);
+    println!("  w_t          = {}", f.w_t);
+    println!("  rms residual = {:.3e}", f.rms_rel_residual);
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_arg(args)?;
+    let s = size_arg(args)?;
+    let env = Environment::paper();
+    let algo = args.opt_or("algo", "gentree").to_string();
+    let plan = algo_plan(&algo, &topo, &env, s)?;
+    let gen = CostModel::new(&topo, &env, ModelKind::GenModel).plan_cost(&plan, s);
+    let classic = CostModel::new(&topo, &env, ModelKind::Classic).plan_total(&plan, s);
+    let actual = simulate_plan(&plan, s, &topo, &env, &SimConfig::new(&topo)).total;
+    println!("plan {} on {} (S = {s:.3e} floats)", plan.name, topo.name);
+    println!("  phases            : {}", plan.phases.len());
+    println!("  simulator (actual): {actual:.4} s");
+    println!(
+        "  GenModel          : {:.4} s  (err {:+.1}%)",
+        gen.total(),
+        (gen.total() - actual) / actual * 100.0
+    );
+    println!(
+        "  (α,β,γ) model     : {classic:.4} s  (err {:+.1}%)",
+        (classic - actual) / actual * 100.0
+    );
+    println!(
+        "  terms: α={:.4} β={:.4} γ={:.4} δ={:.4} ε={:.4}",
+        gen.alpha, gen.beta, gen.gamma, gen.delta, gen.epsilon
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_arg(args)?;
+    let s = size_arg(args)?;
+    let env = Environment::paper();
+    let cfg = gentree::GenTreeConfig {
+        allow_rearrangement: !args.flag("no-rearrange"),
+        ..Default::default()
+    };
+    let out = gentree::generate_with(&topo, &env, s, &cfg);
+    println!(
+        "GenTree plan for {} at S = {s:.3e}: {} phases, {} transfers",
+        topo.name,
+        out.plan.phases.len(),
+        out.plan.n_transfers()
+    );
+    println!("\nper-switch selections (Table 6 style):");
+    for sel in &out.selections {
+        println!(
+            "  depth {} {:<8} -> {:<10} (cost {:.4}s{})",
+            sel.depth,
+            sel.switch_name,
+            sel.choice,
+            sel.cost,
+            if sel.rearranged { ", rearranged" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_arg(args)?;
+    let s = size_arg(args)?;
+    let env = Environment::paper();
+    let algo = args.opt_or("algo", "gentree").to_string();
+    let plan = algo_plan(&algo, &topo, &env, s)?;
+    let t0 = Instant::now();
+    let r = simulate_plan(&plan, s, &topo, &env, &SimConfig::new(&topo));
+    println!("simulated {} on {} (S = {s:.3e})", plan.name, topo.name);
+    println!("  modelled time : {:.4} s", r.total);
+    println!("  communication : {:.4} s", r.communication);
+    println!("  calculation   : {:.4} s", r.calculation);
+    println!("  pause units   : {:.4}", r.pause_units);
+    println!("  events        : {}", r.events);
+    println!("  wall clock    : {:.3} s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let servers: usize = args.opt_parse_or("servers", 8)?;
+    let s: usize = args.opt_parse_or("size", 100_000)?;
+    let algo = args.opt_or("algo", "gentree").to_string();
+    let env = Environment::paper();
+    let topo = genmodel::topo::builders::single_switch(servers);
+    let plan = algo_plan(&algo, &topo, &env, s as f64)?;
+    let reducer = if args.flag("scalar") {
+        ReducerSpec::Scalar.build()?
+    } else {
+        ReducerSpec::Auto.build()?
+    };
+    println!(
+        "executing {} over {servers} workers × {s} floats (reducer: {})",
+        plan.name,
+        if reducer.is_pjrt() { "PJRT" } else { "scalar" }
+    );
+    let mut rng = Rng::new(0xC0FFEE);
+    let inputs: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(s)).collect();
+    let t0 = Instant::now();
+    let out = exec::execute_plan(&plan, &inputs, &reducer)?;
+    let wall = t0.elapsed().as_secs_f64();
+    exec::verify(&out, &inputs, 1e-4).map_err(|e| anyhow::anyhow!("VERIFY FAILED: {e}"))?;
+    println!("  verified against exact oracle ✓");
+    println!("  wall time    : {wall:.4} s");
+    println!("  reduce calls : {}", out.reduce_calls);
+    println!("  floats reduced: {}", out.reduced_floats);
+    println!("  max fan-in   : {}", out.max_fanin);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let servers: usize = args.opt_parse_or("servers", 8)?;
+    let jobs: usize = args.opt_parse_or("jobs", 64)?;
+    let tensor: usize = args.opt_parse_or("tensor", 4096)?;
+    let spec = if args.flag("scalar") {
+        ReducerSpec::Scalar
+    } else {
+        ReducerSpec::Auto
+    };
+    let topo = genmodel::topo::builders::single_switch(servers);
+    let svc = AllReduceService::start(topo, Environment::paper(), spec, ServiceConfig::default());
+    println!("coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats");
+    let t0 = Instant::now();
+    let mut rng = Rng::new(7);
+    let handles: Vec<_> = (0..jobs)
+        .map(|_| {
+            let tensors: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(tensor)).collect();
+            svc.submit(tensors)
+        })
+        .collect();
+    for h in handles {
+        h.recv().expect("leader alive").map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics.snapshot();
+    println!("  wall time        : {wall:.4} s");
+    println!("  jobs completed   : {}", m.jobs_completed);
+    println!("  batches flushed  : {}", m.batches_flushed);
+    println!("  jobs per batch   : {:.2}", m.jobs_per_batch());
+    println!("  floats reduced   : {}", m.floats_reduced);
+    println!("  reduce calls     : {}", m.reduce_calls);
+    println!("  leader busy      : {:.4} s", m.busy_secs);
+    println!(
+        "  throughput       : {:.2} Mfloat/s reduced",
+        m.floats_reduced as f64 / wall / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
+    let all = args.flag("all");
+    let table: Option<usize> = args.opt_parse("table")?;
+    let fig: Option<usize> = args.opt_parse("fig")?;
+    if !all && table.is_none() && fig.is_none() {
+        anyhow::bail!("pass --all, --table N, or --fig N");
+    }
+    let want_t = |n: usize| all || table == Some(n);
+    let want_f = |n: usize| all || fig == Some(n);
+    if want_f(3) {
+        println!("{}", bench::fig3_incast().render());
+    }
+    if want_f(4) {
+        println!("{}", bench::fig4_memaccess(2_000_000).render());
+    }
+    if want_f(8) {
+        println!("{}", bench::fig8_accuracy().render());
+    }
+    if want_f(9) {
+        println!("{}", bench::fig9_breakdown().render());
+    }
+    if want_f(10) {
+        println!("{}", bench::fig10_terms().render());
+    }
+    if want_t(1) || want_t(2) {
+        println!("{}", bench::tables::expressions_table(12, 1e8).render());
+    }
+    if want_t(3) {
+        println!("{}", bench::table3_cpu().render());
+    }
+    if want_t(4) {
+        println!("{}", bench::table4_gpu().render());
+    }
+    if want_t(5) {
+        println!("{}", bench::table5_fit().render());
+    }
+    if want_t(6) {
+        println!("{}", bench::table6_selections().render());
+    }
+    if want_t(7) {
+        println!("{}", bench::table7_sim().render());
+    }
+    Ok(())
+}

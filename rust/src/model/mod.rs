@@ -1,0 +1,19 @@
+//! GenModel — the `(α, β, γ, δ, ε, w_t)` time-cost model of AllReduce
+//! (paper §3), plus the classic `(α, β, γ)` model it extends.
+//!
+//! * [`params`] — parameter structs and the paper's Table 5 values.
+//! * [`expressions`] — closed-form costs per plan type (Tables 1–2).
+//! * [`cost`] — GenModel evaluation of an arbitrary [`crate::plan::Plan`]
+//!   on an arbitrary [`crate::topo::Topology`].
+//! * [`fit`] — the parameter-fitting toolkit (§3.4).
+//! * [`optimality`] — δ/ε lower bounds and the impossibility theorem
+//!   (Theorems 1–2) as executable checks.
+
+pub mod cost;
+pub mod expressions;
+pub mod fit;
+pub mod optimality;
+pub mod params;
+
+pub use cost::{CostBreakdown, CostModel};
+pub use params::{LinkClass, LinkParams, ModelParams, ServerParams};

@@ -1,0 +1,122 @@
+//! The paper's two new optimalities as executable checks (§3.3):
+//! Theorem 1 (δ lower bound), Definition 1/2 (ε-/δ-optimal), and
+//! Theorem 2 (the impossibility result), checked on concrete plans via
+//! the validator's [`PlanStats`].
+
+use crate::plan::validate::PlanStats;
+use crate::plan::Plan;
+
+/// Theorem 1: the memory-access lower bound `(N+1)·S/N·δ` (seconds).
+pub fn delta_lower_bound(n: usize, s: f64, delta: f64) -> f64 {
+    (n as f64 + 1.0) * s / n as f64 * delta
+}
+
+/// A plan is δ-optimal iff every block is reduced **exactly once**
+/// (h = 1 in the paper's proof): one fan-in-N reduce per block, giving
+/// the (N+1)·S/N bound.
+pub fn is_delta_optimal(plan: &Plan, stats: &PlanStats) -> bool {
+    let mut per_block = vec![0usize; plan.n_blocks];
+    for (_, _, b, f) in &stats.reduces {
+        per_block[*b] += 1;
+        if *f != plan.n_servers {
+            return false;
+        }
+    }
+    per_block.iter().all(|&c| c == 1)
+}
+
+/// A plan is ε-optimal iff no phase drives any receiver's communication
+/// fan-in degree `w = senders + 1` above `w_t` — zero incast overhead.
+pub fn is_epsilon_optimal(plan: &Plan, w_t: usize) -> bool {
+    plan.phases.iter().all(|ph| {
+        (0..plan.n_servers).all(|s| ph.comm_fanin(s) + 1 <= w_t)
+    })
+}
+
+/// Theorem 2 (impossibility): when `N > w_t` no plan can be both. This
+/// helper asserts the theorem on a concrete plan — used by property tests
+/// to grind arbitrary generated plans against the theorem.
+pub fn check_impossibility(plan: &Plan, stats: &PlanStats, w_t: usize) -> Result<(), String> {
+    if plan.n_servers <= w_t {
+        return Ok(()); // theorem precondition not met
+    }
+    let d = is_delta_optimal(plan, stats);
+    let e = is_epsilon_optimal(plan, w_t);
+    if d && e {
+        return Err(format!(
+            "plan '{}' with N={} > w_t={} is both δ-optimal and ε-optimal — Theorem 2 violated",
+            plan.name, plan.n_servers, w_t
+        ));
+    }
+    Ok(())
+}
+
+/// Eq. 15 of the proof: the δ cost as a function of the number of
+/// intermediate steps `h` — used to show cost grows with h.
+pub fn delta_cost_for_steps(n: usize, s: f64, delta: f64, h: usize) -> f64 {
+    (n as f64 - 1.0 + 2.0 * h as f64) * s / n as f64 * delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+    use crate::plan::{cps, hcps, reduce_broadcast, ring};
+
+    #[test]
+    fn cps_is_delta_optimal_not_epsilon_optimal() {
+        let n = 12;
+        let plan = cps::allreduce(n);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert!(is_delta_optimal(&plan, &stats));
+        assert!(!is_epsilon_optimal(&plan, 9)); // w = 12 > 9
+        check_impossibility(&plan, &stats, 9).unwrap();
+    }
+
+    #[test]
+    fn ring_is_epsilon_optimal_not_delta_optimal() {
+        let n = 12;
+        let plan = ring::allreduce(n);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert!(is_epsilon_optimal(&plan, 9));
+        assert!(!is_delta_optimal(&plan, &stats));
+        check_impossibility(&plan, &stats, 9).unwrap();
+    }
+
+    #[test]
+    fn hcps_is_neither_but_feasible() {
+        let plan = hcps::allreduce(&[6, 2]);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert!(!is_delta_optimal(&plan, &stats)); // h = 2
+        assert!(is_epsilon_optimal(&plan, 9)); // fan-ins 6, 2 < 9
+        check_impossibility(&plan, &stats, 9).unwrap();
+    }
+
+    #[test]
+    fn small_n_can_be_both() {
+        // N = 4 ≤ w_t = 9: CPS is both — the theorem's precondition matters.
+        let plan = cps::allreduce(4);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert!(is_delta_optimal(&plan, &stats));
+        assert!(is_epsilon_optimal(&plan, 9));
+        check_impossibility(&plan, &stats, 9).unwrap(); // ok: precondition
+    }
+
+    #[test]
+    fn reduce_broadcast_delta_pattern_optimal() {
+        // One fan-in-N reduce — δ-optimal in *pattern* (n_blocks = 1).
+        let n = 10;
+        let plan = reduce_broadcast::allreduce(n);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert!(is_delta_optimal(&plan, &stats));
+    }
+
+    #[test]
+    fn lower_bound_monotone_in_h() {
+        let (n, s, d) = (16, 1e8, 1.87e-10);
+        assert!((delta_cost_for_steps(n, s, d, 1) - delta_lower_bound(n, s, d)).abs() < 1e-15);
+        for h in 2..6 {
+            assert!(delta_cost_for_steps(n, s, d, h) > delta_cost_for_steps(n, s, d, h - 1));
+        }
+    }
+}

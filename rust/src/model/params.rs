@@ -1,0 +1,305 @@
+//! GenModel parameters.
+//!
+//! Units: the paper measures data in 4-byte floats, so all per-unit costs
+//! here are **seconds per float** (β, ε) or **seconds per float-op**
+//! (γ, δ); α is seconds per communication round. Table 5 of the paper is
+//! reproduced verbatim in [`paper_table5`].
+
+/// Class of a directed link / node level — the row index into Table 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkClass {
+    /// Server NIC / intra-rack link (terminates at a ToR/middle switch).
+    Server,
+    /// Link between a middle-layer switch and servers' traffic aggregated
+    /// toward it (the paper's "Middle SW" row).
+    MiddleSw,
+    /// Link reaching the root switch ("Root SW" row).
+    RootSw,
+    /// The inter-datacenter WAN link ("Cross DC" row).
+    CrossDc,
+}
+
+/// Saturation for the incast excess `max(w − w_t, 0)`: the linear pause-
+/// frame model (Eq. 7) is fitted near `w_t` (Fig. 3 measures x ≤ 15);
+/// extrapolating it to tens of thousands of concurrent flows would
+/// overstate the collapse — real PFC throttling saturates once every
+/// upstream is paused most of the time. 256 keeps the penalty within the
+/// ~2–3× range the paper's own CDC CPS numbers imply.
+pub const EXCESS_CAP: usize = 256;
+
+/// Per-link communication parameters (α, β, ε, w_t).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// Fixed per-round start-up latency contribution of this link (s).
+    pub alpha: f64,
+    /// Inverse bandwidth (s / float).
+    pub beta: f64,
+    /// Incast slope: extra s/float per unit of fan-in beyond `w_t`.
+    pub epsilon: f64,
+    /// Incast threshold: concurrent inbound flows tolerated penalty-free.
+    pub w_t: usize,
+}
+
+/// Per-server computation parameters (γ, δ).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerParams {
+    /// Per-op reduce cost (s / float-add).
+    pub gamma: f64,
+    /// Per-unit memory read/write cost (s / float touched).
+    pub delta: f64,
+    /// NIC-level incast threshold (Table 5 "Server" row: 7).
+    pub w_t: usize,
+}
+
+/// Flat single-switch GenModel parameter set — what the closed-form
+/// expressions of Tables 1–2 take, and what `fit` recovers from benches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelParams {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+    pub epsilon: f64,
+    pub w_t: usize,
+}
+
+impl ModelParams {
+    /// The CPU testbed of §3 (15 servers, 10 Gbps RoCE, w_t = 9), assembled
+    /// from Table 5's Middle-SW link + Server rows. β = 6.4e-9 s/float
+    /// ⇒ 4 B / 6.4e-9 s = 5 Gbps effective per-direction stream — the
+    /// paper's 10 Gbps full-duplex NIC.
+    pub fn cpu_testbed() -> Self {
+        ModelParams {
+            alpha: 6.58e-3,
+            beta: 6.4e-9,
+            gamma: 6.0e-10,
+            delta: 1.87e-10,
+            epsilon: 1.22e-10,
+            w_t: 9,
+        }
+    }
+
+    /// 100 Gbps variant used by Fig. 9's right panel: β and ε scale with
+    /// bandwidth (×10 link speed ⇒ β/10); compute terms unchanged.
+    pub fn cpu_testbed_100g() -> Self {
+        let p = Self::cpu_testbed();
+        ModelParams {
+            beta: p.beta / 10.0,
+            epsilon: p.epsilon / 10.0,
+            ..p
+        }
+    }
+
+    /// GPU pod of §5.2: 200 Gbps NICs, GPU reduce (memory-bandwidth-bound,
+    /// ~20× the CPU's effective reduce throughput), NVLink intra-machine.
+    pub fn gpu_testbed() -> Self {
+        ModelParams {
+            alpha: 2.0e-5,
+            beta: 6.4e-9 / 20.0,
+            gamma: 3.0e-11,
+            delta: 9.0e-12,
+            epsilon: 6.1e-12,
+            w_t: 9,
+        }
+    }
+
+    /// The `2β + γ` compound the fit can always observe (§3.4 notes the
+    /// β:γ coefficient ratio is fixed at 2 in every plan type).
+    pub fn two_beta_plus_gamma(&self) -> f64 {
+        2.0 * self.beta + self.gamma
+    }
+}
+
+/// Table 5 of the paper: per-class link parameters and the server row.
+/// `/` cells in the paper (parameters that don't apply at that level) are
+/// represented by the fields not present in the respective struct.
+pub fn paper_table5(class: LinkClass) -> LinkParams {
+    match class {
+        LinkClass::CrossDc => LinkParams {
+            alpha: 3.00e-2,
+            beta: 6.40e-9,
+            epsilon: 6.00e-11,
+            w_t: 9,
+        },
+        LinkClass::RootSw => LinkParams {
+            alpha: 6.58e-3,
+            beta: 6.40e-10,
+            epsilon: 6.00e-12,
+            w_t: 9,
+        },
+        LinkClass::MiddleSw => LinkParams {
+            alpha: 6.58e-3,
+            beta: 6.40e-9,
+            epsilon: 1.22e-10,
+            w_t: 9,
+        },
+        // Server uplink: NIC-attached, same rack-level link parameters as
+        // the Middle-SW row. Table 5's *server row* reports w_t = 7 for
+        // the NIC micro-benchmark, but the paper's own plan selections
+        // (8×3, 8×4 ⇒ fan-in degree 8 treated as incast-free) and its §3.2
+        // statement that incast emerges beyond x = 9 imply the switch
+        // threshold 9 governs end-to-end flows; we use 9 uniformly for
+        // links and keep the 7 verbatim in [`ServerParams`].
+        LinkClass::Server => LinkParams {
+            alpha: 6.58e-3,
+            beta: 6.40e-9,
+            epsilon: 1.22e-10,
+            w_t: 9,
+        },
+    }
+}
+
+/// Table 5 "Server" computation row.
+pub fn paper_server_params() -> ServerParams {
+    ServerParams {
+        gamma: 6.00e-10,
+        delta: 1.87e-10,
+        w_t: 7,
+    }
+}
+
+/// GPU-grade server row for the §5.2 GPU testbed simulations: A100 HBM2e
+/// memory bandwidth ≈ 2 TB/s vs the CPU testbed's DDR4 ≈ 100 GB/s ⇒ δ and
+/// γ shrink ~20×.
+pub fn gpu_server_params() -> ServerParams {
+    ServerParams {
+        gamma: 3.0e-11,
+        delta: 9.0e-12,
+        w_t: 9,
+    }
+}
+
+/// Full parameter environment for tree topologies: Table 5 rows + server row.
+#[derive(Debug, Clone)]
+pub struct Environment {
+    pub link: fn(LinkClass) -> LinkParams,
+    pub server: ServerParams,
+}
+
+impl Environment {
+    pub fn paper() -> Self {
+        Environment {
+            link: paper_table5,
+            server: paper_server_params(),
+        }
+    }
+
+    pub fn gpu() -> Self {
+        fn gpu_links(class: LinkClass) -> LinkParams {
+            match class {
+                // 200 Gbps NIC-to-ToR fabric, 1:1 convergence.
+                LinkClass::RootSw | LinkClass::MiddleSw => LinkParams {
+                    alpha: 2.0e-5,
+                    beta: 6.4e-9 / 20.0,
+                    epsilon: 6.1e-12,
+                    w_t: 9,
+                },
+                // NVLink-class intra-machine: ~600 GB/s aggregate.
+                LinkClass::Server => LinkParams {
+                    alpha: 2.0e-6,
+                    beta: 6.4e-9 / 240.0,
+                    epsilon: 2.0e-13,
+                    w_t: 9,
+                },
+                LinkClass::CrossDc => paper_table5(LinkClass::CrossDc),
+            }
+        }
+        Environment {
+            link: gpu_links,
+            server: gpu_server_params(),
+        }
+    }
+
+    /// 100 Gbps variant of the paper environment (Fig. 9 right panel):
+    /// β and ε scale down 10×, compute terms unchanged.
+    pub fn paper_100g() -> Self {
+        fn links_100g(class: LinkClass) -> LinkParams {
+            let p = paper_table5(class);
+            LinkParams {
+                beta: p.beta / 10.0,
+                epsilon: p.epsilon / 10.0,
+                ..p
+            }
+        }
+        Environment {
+            link: links_100g,
+            server: paper_server_params(),
+        }
+    }
+
+    pub fn link_params(&self, class: LinkClass) -> LinkParams {
+        (self.link)(class)
+    }
+
+    /// Flat single-switch view (for the closed-form expressions) built
+    /// from the class every server uplink carries in this environment.
+    /// The link-level threshold governs (see [`paper_table5`] on w_t).
+    pub fn flat(&self, class: LinkClass) -> ModelParams {
+        let l = self.link_params(class);
+        ModelParams {
+            alpha: l.alpha,
+            beta: l.beta,
+            gamma: self.server.gamma,
+            delta: self.server.delta,
+            epsilon: l.epsilon,
+            w_t: l.w_t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_values_match_paper() {
+        let cdc = paper_table5(LinkClass::CrossDc);
+        assert_eq!(cdc.alpha, 3.00e-2);
+        assert_eq!(cdc.beta, 6.40e-9);
+        assert_eq!(cdc.epsilon, 6.00e-11);
+        assert_eq!(cdc.w_t, 9);
+        let root = paper_table5(LinkClass::RootSw);
+        assert_eq!(root.beta, 6.40e-10);
+        let mid = paper_table5(LinkClass::MiddleSw);
+        assert_eq!(mid.epsilon, 1.22e-10);
+        let srv = paper_server_params();
+        assert_eq!(srv.gamma, 6.00e-10);
+        assert_eq!(srv.delta, 1.87e-10);
+        assert_eq!(srv.w_t, 7);
+    }
+
+    #[test]
+    fn cpu_testbed_consistent_with_table5() {
+        let p = ModelParams::cpu_testbed();
+        let mid = paper_table5(LinkClass::MiddleSw);
+        assert_eq!(p.beta, mid.beta);
+        assert_eq!(p.epsilon, mid.epsilon);
+        assert_eq!(p.gamma, paper_server_params().gamma);
+        assert_eq!(p.delta, paper_server_params().delta);
+    }
+
+    #[test]
+    fn hundred_gig_scales_comm_only() {
+        let p10 = ModelParams::cpu_testbed();
+        let p100 = ModelParams::cpu_testbed_100g();
+        assert!((p100.beta - p10.beta / 10.0).abs() < 1e-20);
+        assert_eq!(p100.gamma, p10.gamma);
+        assert_eq!(p100.delta, p10.delta);
+    }
+
+    #[test]
+    fn gpu_compute_much_faster_than_cpu() {
+        let g = gpu_server_params();
+        let c = paper_server_params();
+        assert!(g.delta < c.delta / 10.0);
+        assert!(g.gamma < c.gamma / 10.0);
+    }
+
+    #[test]
+    fn environment_flat_view() {
+        let env = Environment::paper();
+        let flat = env.flat(LinkClass::MiddleSw);
+        assert_eq!(flat.beta, 6.4e-9);
+        assert_eq!(flat.w_t, 9); // link-level threshold governs
+    }
+}

@@ -1,0 +1,120 @@
+//! Asymmetric Co-located PS (paper §4.2, footnote 2): the direct-placement
+//! ReduceScatter used when participants hold *unequal* numbers of blocks —
+//! every block moves straight from wherever its partials live to its final
+//! owner in one phase. With the identity placement this degenerates to
+//! standard CPS; with skewed placements the per-pair exchange volumes are
+//! unequal, hence "asymmetric".
+
+use std::collections::HashMap;
+
+use super::ir::{Mode, Plan};
+
+/// Build the direct ReduceScatter for an explicit placement.
+///
+/// * `n` — number of participants;
+/// * `holders[b]` — the servers currently holding a partial of block `b`;
+/// * `owners[b]` — the server that must end up with block `b` reduced.
+///
+/// Each holder that is not the owner moves its partial directly; the owner
+/// reduces once with fan-in = #holders (δ-optimal per block).
+pub fn reduce_scatter_direct(n: usize, holders: &[Vec<usize>], owners: &[usize]) -> Plan {
+    assert_eq!(holders.len(), owners.len());
+    let nb = owners.len();
+    let mut plan = Plan::new(format!("ACPS(n={n},b={nb})"), n, nb);
+    let ph = plan.phase();
+    for (b, hs) in holders.iter().enumerate() {
+        let owner = owners[b];
+        assert!(owner < n);
+        for &h in hs {
+            assert!(h < n);
+            if h != owner {
+                ph.push(h, owner, b, Mode::Move);
+            }
+        }
+    }
+    plan
+}
+
+/// Classic case: every server holds every block; block `b` owned by
+/// `owners[b]`. Owners may repeat (skewed load) — that is the asymmetry.
+pub fn allreduce_with_owners(n: usize, owners: &[usize]) -> Plan {
+    let holders: Vec<Vec<usize>> = (0..owners.len()).map(|_| (0..n).collect()).collect();
+    reduce_scatter_direct(n, &holders, owners).into_allreduce()
+}
+
+/// Per-server communication fan-in degrees `w` implied by an ownership map
+/// — what GenModel's ε term sees. Server `s`'s fan-in is the number of
+/// distinct senders routed at it.
+pub fn fanin_degrees(n: usize, owners: &[usize]) -> HashMap<usize, usize> {
+    let mut out = HashMap::new();
+    for s in 0..n {
+        let owns_any = owners.iter().any(|&o| o == s);
+        if owns_any {
+            out.insert(s, n - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn identity_owners_is_cps() {
+        let owners: Vec<usize> = (0..6).collect();
+        let a = allreduce_with_owners(6, &owners);
+        let c = crate::plan::cps::allreduce(6);
+        // Same transfer sets per phase (intra-phase order is irrelevant).
+        assert_eq!(a.phases.len(), c.phases.len());
+        for (pa, pc) in a.phases.iter().zip(&c.phases) {
+            let mut ta = pa.transfers.clone();
+            let mut tc = pc.transfers.clone();
+            let key = |t: &crate::plan::ir::Transfer| (t.src, t.dst, t.block);
+            ta.sort_by_key(key);
+            tc.sort_by_key(key);
+            assert_eq!(ta, tc);
+        }
+    }
+
+    #[test]
+    fn skewed_owners_valid() {
+        // 5 servers, 7 blocks, server 0 owns three of them.
+        let owners = vec![0, 0, 0, 1, 2, 3, 4];
+        let plan = allreduce_with_owners(5, &owners);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert_eq!(stats.phases, 2);
+        // Server 0 receives 3 blocks from each of 4 peers.
+        assert_eq!(stats.recv_blocks[0], 3 * 4 + 4); // RS in + AG in
+    }
+
+    #[test]
+    fn subset_owners_valid() {
+        // Only servers {0,1} own blocks (rearrangement target pattern).
+        let owners = vec![0, 1, 0, 1];
+        let plan = allreduce_with_owners(4, &owners);
+        validate(&plan, Goal::AllReduce).unwrap();
+    }
+
+    #[test]
+    fn partial_holders() {
+        // Block 0 partials only at {0,1}; block 1 at {2,3}.
+        let holders = vec![vec![0, 1], vec![2, 3]];
+        let owners = vec![0, 2];
+        let rs = reduce_scatter_direct(4, &holders, &owners);
+        // Not a full RS over 4 servers (blocks only carry 2 contributors),
+        // so validate the transfer structure directly.
+        assert_eq!(rs.n_transfers(), 2);
+        assert_eq!(rs.phases.len(), 1);
+    }
+
+    #[test]
+    fn fanin_degrees_reported() {
+        let owners = vec![0, 0, 1];
+        let d = fanin_degrees(4, &owners);
+        assert_eq!(d.get(&0), Some(&3));
+        assert_eq!(d.get(&1), Some(&3));
+        assert_eq!(d.get(&2), None);
+    }
+}

@@ -1,0 +1,72 @@
+//! Co-located PS (paper Fig. 1b): every processor is the parameter server
+//! for one block; single ReduceScatter phase (full mesh) + mirrored
+//! AllGather. Latency-optimal and bandwidth-optimal, but communication
+//! fan-in is N−1 ⇒ incast once N exceeds `w_t`, and reduce fan-in N ⇒
+//! memory-access optimal (Theorem 1's bound).
+
+use super::ir::{Mode, Plan};
+
+/// Full AllReduce plan.
+pub fn allreduce(n: usize) -> Plan {
+    reduce_scatter(n).into_allreduce()
+}
+
+/// The ReduceScatter half: block `b` is collected and reduced by server `b`.
+pub fn reduce_scatter(n: usize) -> Plan {
+    assert!(n >= 2);
+    let mut plan = Plan::new(format!("CPS(n={n})"), n, n);
+    let ph = plan.phase();
+    for src in 0..n {
+        for b in 0..n {
+            if src != b {
+                ph.push(src, b, b, Mode::Move);
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn valid_for_range_of_n() {
+        for n in 2..=17 {
+            let rs = reduce_scatter(n);
+            let stats = validate(&rs, Goal::ReduceScatter).unwrap();
+            assert_eq!(stats.phases, 1);
+            // Reduce fan-in at every owner is N.
+            for (_, _, _, f) in &stats.reduces {
+                assert_eq!(*f, n);
+            }
+            let ar = allreduce(n);
+            let stats = validate(&ar, Goal::AllReduce).unwrap();
+            assert_eq!(stats.phases, 2);
+            assert_eq!(stats.max_comm_fanin, n - 1);
+        }
+    }
+
+    #[test]
+    fn bandwidth_optimal() {
+        // Each server sends and receives exactly 2(N−1) blocks of size S/N
+        // across RS+AG — the Patarasuk–Yuan lower bound.
+        let n = 8;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        for s in 0..n {
+            assert_eq!(stats.sent_blocks[s], 2 * (n - 1));
+            assert_eq!(stats.recv_blocks[s], 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn memory_access_optimal() {
+        // Theorem 1: (N+1)·S/N·δ — i.e. (N+1) block-units of memory ops
+        // per owner, one reduce per block.
+        let n = 10;
+        let stats = validate(&reduce_scatter(n), Goal::ReduceScatter).unwrap();
+        assert_eq!(stats.total_mem_ops(), n * (n + 1));
+        assert_eq!(stats.reduces.len(), n);
+    }
+}

@@ -1,0 +1,229 @@
+//! The plan intermediate representation.
+
+/// Index of a participant (a server/processor) within a plan: `0..n_servers`.
+/// The mapping to physical topology nodes is provided separately when a
+/// plan is priced or executed.
+pub type ServerIdx = usize;
+
+/// Index of a data block: the S floats are split into `n_blocks` blocks of
+/// (nearly) equal size.
+pub type BlockId = usize;
+
+/// Transfer semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// ReduceScatter-style: the sender relinquishes its partial of the
+    /// block; the receiver merges (reduces) it into its own.
+    Move,
+    /// AllGather-style: the sender keeps the (final) value; the receiver
+    /// stores a copy.
+    Copy,
+}
+
+/// One point-to-point block transfer within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: ServerIdx,
+    pub dst: ServerIdx,
+    pub block: BlockId,
+    pub mode: Mode,
+}
+
+/// A phase: transfers that are in flight concurrently; a barrier follows.
+/// Receivers reduce everything that arrived (plus their own partial) at
+/// the end of the phase — the reduce fan-in is *derived*, not stored.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Phase {
+    pub transfers: Vec<Transfer>,
+}
+
+impl Phase {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, src: ServerIdx, dst: ServerIdx, block: BlockId, mode: Mode) {
+        debug_assert_ne!(src, dst, "self-transfer");
+        self.transfers.push(Transfer {
+            src,
+            dst,
+            block,
+            mode,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transfers.is_empty()
+    }
+
+    /// Number of distinct sources sending to `dst` in this phase — the
+    /// communication fan-in degree `w` of GenModel's incast term.
+    pub fn comm_fanin(&self, dst: ServerIdx) -> usize {
+        let mut srcs: Vec<ServerIdx> = self
+            .transfers
+            .iter()
+            .filter(|t| t.dst == dst)
+            .map(|t| t.src)
+            .collect();
+        srcs.sort_unstable();
+        srcs.dedup();
+        srcs.len()
+    }
+}
+
+/// A complete plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub name: String,
+    pub n_servers: usize,
+    pub n_blocks: usize,
+    pub phases: Vec<Phase>,
+}
+
+impl Plan {
+    pub fn new(name: impl Into<String>, n_servers: usize, n_blocks: usize) -> Self {
+        assert!(n_servers >= 1);
+        assert!(n_blocks >= 1);
+        Plan {
+            name: name.into(),
+            n_servers,
+            n_blocks,
+            phases: Vec::new(),
+        }
+    }
+
+    pub fn phase(&mut self) -> &mut Phase {
+        self.phases.push(Phase::new());
+        self.phases.last_mut().unwrap()
+    }
+
+    pub fn push_phase(&mut self, phase: Phase) {
+        if !phase.is_empty() {
+            self.phases.push(phase);
+        }
+    }
+
+    /// Exact size in floats of block `b` when the payload is `s` floats:
+    /// blocks differ by at most one float.
+    pub fn block_len(&self, b: BlockId, s: usize) -> usize {
+        let base = s / self.n_blocks;
+        let rem = s % self.n_blocks;
+        base + usize::from(b < rem)
+    }
+
+    /// Start offset of block `b` in the payload.
+    pub fn block_offset(&self, b: BlockId, s: usize) -> usize {
+        let base = s / self.n_blocks;
+        let rem = s % self.n_blocks;
+        b * base + b.min(rem)
+    }
+
+    /// Continuous block size used by the analytical cost model (floats).
+    pub fn block_size_f(&self, s: f64) -> f64 {
+        s / self.n_blocks as f64
+    }
+
+    /// Mirror a valid ReduceScatter plan into its AllGather: phases in
+    /// reverse order, every transfer reversed and turned into a `Copy`
+    /// (the standard "AllGather is ReduceScatter backwards" symmetry the
+    /// paper leverages in §4.2).
+    pub fn mirror_allgather(&self) -> Plan {
+        let mut out = Plan::new(
+            format!("{}+allgather", self.name),
+            self.n_servers,
+            self.n_blocks,
+        );
+        for phase in self.phases.iter().rev() {
+            let mut p = Phase::new();
+            for t in &phase.transfers {
+                p.push(t.dst, t.src, t.block, Mode::Copy);
+            }
+            out.push_phase(p);
+        }
+        out
+    }
+
+    /// ReduceScatter plan -> full AllReduce plan (RS then mirrored AG).
+    pub fn into_allreduce(self) -> Plan {
+        let ag = self.mirror_allgather();
+        let mut out = Plan::new(self.name.clone(), self.n_servers, self.n_blocks);
+        out.phases = self.phases;
+        out.phases.extend(ag.phases);
+        out
+    }
+
+    /// Concatenate another plan's phases (participant indices must agree).
+    pub fn append(&mut self, other: Plan) {
+        assert_eq!(self.n_servers, other.n_servers);
+        assert_eq!(self.n_blocks, other.n_blocks);
+        self.phases.extend(other.phases);
+    }
+
+    pub fn n_transfers(&self) -> usize {
+        self.phases.iter().map(|p| p.transfers.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_partition_covers_payload() {
+        let plan = Plan::new("t", 4, 5);
+        let s = 13;
+        let mut total = 0;
+        for b in 0..5 {
+            assert_eq!(plan.block_offset(b, s), total);
+            total += plan.block_len(b, s);
+        }
+        assert_eq!(total, s);
+        // Sizes differ by at most one.
+        let lens: Vec<usize> = (0..5).map(|b| plan.block_len(b, s)).collect();
+        assert_eq!(lens, vec![3, 3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn mirror_reverses_and_copies() {
+        let mut rs = Plan::new("x", 2, 2);
+        rs.phase().push(0, 1, 0, Mode::Move);
+        rs.phase().push(1, 0, 1, Mode::Move);
+        let ag = rs.mirror_allgather();
+        assert_eq!(ag.phases.len(), 2);
+        assert_eq!(
+            ag.phases[0].transfers[0],
+            Transfer {
+                src: 0,
+                dst: 1,
+                block: 1,
+                mode: Mode::Copy
+            }
+        );
+        assert_eq!(
+            ag.phases[1].transfers[0],
+            Transfer {
+                src: 1,
+                dst: 0,
+                block: 0,
+                mode: Mode::Copy
+            }
+        );
+    }
+
+    #[test]
+    fn comm_fanin_counts_distinct_sources() {
+        let mut p = Phase::new();
+        p.push(1, 0, 0, Mode::Move);
+        p.push(2, 0, 1, Mode::Move);
+        p.push(2, 0, 2, Mode::Move);
+        assert_eq!(p.comm_fanin(0), 2);
+        assert_eq!(p.comm_fanin(1), 0);
+    }
+
+    #[test]
+    fn empty_phases_dropped() {
+        let mut plan = Plan::new("t", 2, 1);
+        plan.push_phase(Phase::new());
+        assert!(plan.phases.is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! AllReduce plan IR and every baseline plan builder (paper §2.1, Fig. 1).
+//!
+//! A *plan* is an ordered sequence of phases; each phase is a set of
+//! point-to-point block transfers executed concurrently, followed by the
+//! implied reduce at each receiver. One IR feeds four consumers:
+//!
+//! * [`validate`] proves a plan is a correct AllReduce (contributor
+//!   bitsets: disjoint merges, full coverage at the end);
+//! * `model::cost` prices a plan with GenModel on a topology;
+//! * `sim` replays a plan on the flow-level network simulator;
+//! * `exec` runs a plan on real `f32` buffers through the PJRT reducer.
+
+pub mod acps;
+pub mod cps;
+pub mod hcps;
+pub mod ir;
+pub mod reduce_broadcast;
+pub mod rhd;
+pub mod ring;
+pub mod validate;
+
+pub use ir::{BlockId, Mode, Phase, Plan, ServerIdx, Transfer};
+pub use validate::{validate, PlanStats, ValidateError};

@@ -1,0 +1,77 @@
+//! Naïve PS Reduce-Broadcast (paper Fig. 1a): everyone sends everything to
+//! one root, the root reduces once (fan-in N) and broadcasts the result.
+//! δ-optimal in pattern but catastrophically non-bandwidth-optimal: the
+//! root's link carries (N−1)·S in each direction.
+
+use super::ir::{Mode, Plan};
+
+/// Full AllReduce with server `root` as the parameter server.
+pub fn allreduce_at(n: usize, root: usize) -> Plan {
+    assert!(n >= 2);
+    assert!(root < n);
+    // A single block: the whole payload moves as one unit.
+    let mut plan = Plan::new(format!("Reduce-Broadcast(n={n})"), n, 1);
+    {
+        let ph = plan.phase();
+        for s in 0..n {
+            if s != root {
+                ph.push(s, root, 0, Mode::Move);
+            }
+        }
+    }
+    {
+        let ph = plan.phase();
+        for s in 0..n {
+            if s != root {
+                ph.push(root, s, 0, Mode::Copy);
+            }
+        }
+    }
+    plan
+}
+
+pub fn allreduce(n: usize) -> Plan {
+    allreduce_at(n, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn valid_for_range_of_n() {
+        for n in 2..=16 {
+            let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+            assert_eq!(stats.phases, 2);
+            assert_eq!(stats.max_comm_fanin, n - 1);
+        }
+    }
+
+    #[test]
+    fn single_fanin_n_reduce() {
+        let n = 9;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        assert_eq!(stats.reduces, vec![(0, 0, 0, n)]);
+        // Root's memory ops: N+1 block-units — the δ-optimal pattern.
+        assert_eq!(stats.mem_ops_blocks[0], n + 1);
+    }
+
+    #[test]
+    fn root_link_is_bottleneck() {
+        let n = 7;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        assert_eq!(stats.recv_blocks[0], n - 1);
+        assert_eq!(stats.sent_blocks[0], n - 1);
+        for s in 1..n {
+            assert_eq!(stats.sent_blocks[s], 1);
+            assert_eq!(stats.recv_blocks[s], 1);
+        }
+    }
+
+    #[test]
+    fn arbitrary_root() {
+        let stats = validate(&allreduce_at(5, 3), Goal::AllReduce).unwrap();
+        assert_eq!(stats.reduces[0].1, 3);
+    }
+}

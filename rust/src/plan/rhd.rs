@@ -1,0 +1,132 @@
+//! Recursive Halving and Doubling (paper Fig. 1d): processors pair up at
+//! doubling distances, exchanging half of the remaining data per step;
+//! 2·⌈log₂N⌉ steps. For non-power-of-two N the standard patch folds the
+//! extra ranks onto partners first (and unfolds at the end), costing the
+//! χ(N)·(2Sβ + Sγ + 3Sδ) penalty of Table 2.
+
+use super::ir::{Mode, Plan};
+
+pub fn allreduce(n: usize) -> Plan {
+    reduce_scatter(n).into_allreduce()
+}
+
+/// ReduceScatter half over `p2 = 2^⌊log₂N⌋` blocks.
+///
+/// Power-of-two part: in step `j`, server `i` exchanges with partner
+/// `i XOR 2^j`, moving every still-held block whose bit `j` equals the
+/// partner's bit `j`. Invariant: after steps `0..=j`, server `i` holds
+/// exactly the blocks agreeing with `i` on bits `0..=j`; after log₂N
+/// steps it owns block `i` alone.
+pub fn reduce_scatter(n: usize) -> Plan {
+    assert!(n >= 2);
+    let p2 = if n.is_power_of_two() {
+        n
+    } else {
+        n.next_power_of_two() / 2
+    };
+    let extras = n - p2; // servers p2..n fold onto servers 0..extras
+    let mut plan = Plan::new(format!("RHD(n={n})"), n, p2);
+
+    if extras > 0 {
+        let ph = plan.phase();
+        for t in 0..extras {
+            let e = p2 + t;
+            for b in 0..p2 {
+                ph.push(e, t, b, Mode::Move);
+            }
+        }
+    }
+
+    let steps = p2.trailing_zeros() as usize;
+    for j in 0..steps {
+        let ph = plan.phase();
+        for i in 0..p2 {
+            let partner = i ^ (1 << j);
+            for b in 0..p2 {
+                // still held by i: bits 0..j of b match i
+                let mask = (1usize << j) - 1;
+                if b & mask == i & mask && (b >> j) & 1 == (partner >> j) & 1 {
+                    ph.push(i, partner, b, Mode::Move);
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn power_of_two_valid() {
+        for n in [2usize, 4, 8, 16, 32] {
+            let rs = reduce_scatter(n);
+            let stats = validate(&rs, Goal::ReduceScatter).unwrap();
+            assert_eq!(stats.phases, n.trailing_zeros() as usize);
+            let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+            assert_eq!(stats.phases, 2 * n.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_valid_with_fold() {
+        for n in [3usize, 5, 6, 7, 9, 12, 15, 24] {
+            let rs = reduce_scatter(n);
+            validate(&rs, Goal::ReduceScatter).unwrap();
+            let ar = allreduce(n);
+            let stats = validate(&ar, Goal::AllReduce).unwrap();
+            // 2(⌊log⌋ steps + fold) phases.
+            let p2 = n.next_power_of_two() / 2;
+            assert_eq!(stats.phases, 2 * (p2.trailing_zeros() as usize + 1));
+        }
+    }
+
+    #[test]
+    fn pairwise_reduces_power_of_two() {
+        let stats = validate(&reduce_scatter(16), Goal::ReduceScatter).unwrap();
+        for (_, _, _, f) in &stats.reduces {
+            assert_eq!(*f, 2);
+        }
+    }
+
+    #[test]
+    fn bandwidth_optimal_when_power_of_two() {
+        let n = 8;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        // Each server sends 2·(p2−1) blocks of size S/p2 = the bound.
+        for s in 0..n {
+            assert_eq!(stats.sent_blocks[s], 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn fold_penalty_traffic() {
+        // N = 12 → p2 = 8, extras = 4. Folded servers send all 8 blocks
+        // (their entire S) up front and receive them at the end: the
+        // χ(N)·2Sβ penalty.
+        let n = 12;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        let p2 = 8;
+        for e in p2..n {
+            assert_eq!(stats.sent_blocks[e], p2);
+            assert_eq!(stats.recv_blocks[e], p2);
+        }
+    }
+
+    #[test]
+    fn owner_is_own_index() {
+        let n = 8;
+        let stats = validate(&reduce_scatter(n), Goal::ReduceScatter).unwrap();
+        for b in 0..n {
+            let last = stats
+                .reduces
+                .iter()
+                .filter(|(_, _, blk, _)| *blk == b)
+                .max_by_key(|(ph, _, _, _)| *ph)
+                .unwrap();
+            assert_eq!(last.1, b, "block {b} must end at server {b}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Ring AllReduce (paper Fig. 1c): processors on a logical ring exchange
+//! one block per step with their neighbours; 2(N−1) steps total.
+//! ε-optimal (no competing flows: every link carries exactly one flow) but
+//! far from δ-optimal (every reduce has fan-in 2 ⇒ 3(N−1)·S/N·δ) and has
+//! the worst latency term (2(N−1)·α).
+
+use super::ir::{Mode, Plan};
+
+pub fn allreduce(n: usize) -> Plan {
+    reduce_scatter(n).into_allreduce()
+}
+
+/// ReduceScatter half: in phase `j`, server `i` moves its running partial
+/// of block `(i − j) mod N` to its right neighbour `(i+1) mod N`. After
+/// N−1 phases server `i` owns block `(i+1) mod N`.
+pub fn reduce_scatter(n: usize) -> Plan {
+    assert!(n >= 2);
+    let mut plan = Plan::new(format!("Ring(n={n})"), n, n);
+    for j in 0..(n - 1) {
+        let ph = plan.phase();
+        for i in 0..n {
+            let block = (i + n - j % n) % n;
+            ph.push(i, (i + 1) % n, block, Mode::Move);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn valid_for_range_of_n() {
+        for n in 2..=17 {
+            let stats = validate(&reduce_scatter(n), Goal::ReduceScatter).unwrap();
+            assert_eq!(stats.phases, n - 1);
+            let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+            assert_eq!(stats.phases, 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn epsilon_optimal_fanin_one() {
+        // Communication fan-in is 1 at every server in every phase.
+        let stats = validate(&allreduce(12), Goal::AllReduce).unwrap();
+        assert_eq!(stats.max_comm_fanin, 1);
+    }
+
+    #[test]
+    fn all_reduces_are_pairwise() {
+        let stats = validate(&reduce_scatter(9), Goal::ReduceScatter).unwrap();
+        for (_, _, _, f) in &stats.reduces {
+            assert_eq!(*f, 2);
+        }
+        // 3(N−1) block-units of memory traffic per... total across servers:
+        // (N−1) reduces of fan-in 2, each (2+1) units, N blocks? Each block
+        // is reduced N−1 times pairwise: total mem ops = N·(N−1)·3.
+        let n = 9;
+        assert_eq!(stats.total_mem_ops(), n * (n - 1) * 3);
+    }
+
+    #[test]
+    fn bandwidth_optimal() {
+        let n = 7;
+        let stats = validate(&allreduce(n), Goal::AllReduce).unwrap();
+        for s in 0..n {
+            assert_eq!(stats.sent_blocks[s], 2 * (n - 1));
+            assert_eq!(stats.recv_blocks[s], 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn owner_is_right_neighbour() {
+        // After RS, server i owns block (i+1) mod N: check via stats —
+        // final reduce of block b happens at server (b − 1 + n) mod n.
+        let n = 6;
+        let stats = validate(&reduce_scatter(n), Goal::ReduceScatter).unwrap();
+        for b in 0..n {
+            let last = stats
+                .reduces
+                .iter()
+                .filter(|(_, _, blk, _)| *blk == b)
+                .max_by_key(|(ph, _, _, _)| *ph)
+                .unwrap();
+            assert_eq!(last.1, (b + n - 1) % n);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Artifact loading: manifest.json + HLO text → compiled PJRT executables.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub chunk_n: usize,
+    pub tail_n: usize,
+    pub reduce_ks: Vec<usize>,
+    /// (kind, k, n) -> file name. k = 0 for kinds without fan-in.
+    pub entries: HashMap<(String, usize, usize), String>,
+    /// Variants lowered with an *untupled* root (raw-copy IO eligible).
+    pub raw: std::collections::HashSet<(String, usize, usize)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest.json parse")?;
+        let chunk_n = v
+            .get("chunk_n")
+            .and_then(Json::as_usize)
+            .context("chunk_n")?;
+        let tail_n = v.get("tail_n").and_then(Json::as_usize).context("tail_n")?;
+        let reduce_ks = v
+            .get("reduce_ks")
+            .and_then(Json::as_arr)
+            .context("reduce_ks")?
+            .iter()
+            .map(|x| x.as_usize().context("reduce_ks entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = HashMap::new();
+        let mut raw = std::collections::HashSet::new();
+        for e in v.get("entries").and_then(Json::as_arr).context("entries")? {
+            let kind = e.get("kind").and_then(Json::as_str).context("kind")?;
+            let file = e.get("file").and_then(Json::as_str).context("file")?;
+            let k = e.get("k").and_then(Json::as_usize).unwrap_or(0);
+            let n = e.get("n").and_then(Json::as_usize).context("n")?;
+            entries.insert((kind.to_string(), k, n), file.to_string());
+            if e.get("raw") == Some(&Json::Bool(true)) {
+                raw.insert((kind.to_string(), k, n));
+            }
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest {
+            chunk_n,
+            tail_n,
+            reduce_ks,
+            entries,
+            raw,
+        })
+    }
+}
+
+/// Compiled executables on a PJRT CPU client.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    /// (kind, k, n) -> compiled executable, loaded lazily.
+    cache: std::sync::Mutex<HashMap<(String, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Artifacts {
+    /// Default artifact directory: $REPRO_ARTIFACTS or ./artifacts
+    /// relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("REPRO_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let here = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        here.join("artifacts")
+    }
+
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Artifacts {
+            manifest,
+            dir: dir.to_path_buf(),
+            client,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling on first use) the executable for (kind, k, n).
+    pub fn executable(
+        &self,
+        kind: &str,
+        k: usize,
+        n: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (kind.to_string(), k, n);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&key) {
+                return Ok(e.clone());
+            }
+        }
+        let file = self
+            .manifest
+            .entries
+            .get(&key)
+            .with_context(|| format!("no artifact for kind={kind} k={k} n={n}"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled reduce variant on a (k, n) f32 input (row-major
+    /// flat slice of length k·n), writing the n-length sum into `out`.
+    ///
+    /// Variants flagged `raw` in the manifest (untupled root) take the
+    /// §Perf fast path: host slice → device buffer (`buffer_from_host
+    /// _buffer`), `execute_b`, and a raw device→host copy — skipping the
+    /// Literal reshape/tuple/vec round-trips entirely (~3 extra full-size
+    /// copies on 32 MB dispatches).
+    pub fn reduce_into(
+        &self,
+        kind: &str,
+        k: usize,
+        n: usize,
+        flat: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        assert_eq!(flat.len(), k * n);
+        assert_eq!(out.len(), n);
+        let exe = self.executable(kind, k, n)?;
+        if self.manifest.raw.contains(&(kind.to_string(), k, n)) {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(flat, &[k, n], None)
+                .map_err(|e| anyhow::anyhow!("buffer_from_host: {e}"))?;
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&[buf])
+                .map_err(|e| anyhow::anyhow!("execute_b: {e}"))?;
+            // `copy_raw_to_host_sync` is unimplemented on the TFRT CPU
+            // client; untupled literal + `copy_raw_to` is the next-best IO
+            // (skips the input vec1+reshape literals and tuple unwrap).
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+            lit.copy_raw_to(out)
+                .map_err(|e| anyhow::anyhow!("copy_raw_to: {e}"))?;
+            return Ok(());
+        }
+        let x = xla::Literal::vec1(flat)
+            .reshape(&[k as i64, n as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let res = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e}"))?;
+        let v = res
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
+    /// Compatibility wrapper returning a fresh Vec.
+    pub fn run_reduce(&self, kind: &str, k: usize, n: usize, flat: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; n];
+        self.reduce_into(kind, k, n, flat, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute the fused sgd_update artifact: w − lr·g over n floats.
+    pub fn run_sgd(&self, n: usize, w: &[f32], g: &[f32], lr: f32) -> Result<Vec<f32>> {
+        assert_eq!(w.len(), n);
+        assert_eq!(g.len(), n);
+        let exe = self.executable("sgd", 0, n)?;
+        let lw = xla::Literal::vec1(w)
+            .reshape(&[n as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+        let lg = xla::Literal::vec1(g)
+            .reshape(&[n as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+        let llr = xla::Literal::scalar(lr);
+        let result = exe
+            .execute::<xla::Literal>(&[lw, lg, llr])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{"format":"hlo-text","chunk_n":65536,"tail_n":4096,
+                "reduce_ks":[2,3],
+                "entries":[
+                  {"file":"reduce_k2_n65536.hlo.txt","kind":"reduce","k":2,"n":65536,"sha256":"x"},
+                  {"file":"sgd_n65536.hlo.txt","kind":"sgd","n":65536,"sha256":"y"}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.chunk_n, 65536);
+        assert_eq!(m.reduce_ks, vec![2, 3]);
+        assert_eq!(
+            m.entries[&("reduce".to_string(), 2, 65536)],
+            "reduce_k2_n65536.hlo.txt"
+        );
+        assert_eq!(m.entries[&("sgd".to_string(), 0, 65536)], "sgd_n65536.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_empty() {
+        assert!(Manifest::parse(r#"{"chunk_n":1,"tail_n":1,"reduce_ks":[],"entries":[]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts (built once by
+//! `make artifacts`; python never runs at request time) and exposes the
+//! fan-in-k reducer to the data plane.
+//!
+//! * [`artifacts`] — manifest parsing, HLO-text loading, compilation on
+//!   the PJRT CPU client (see /opt/xla-example/load_hlo for the pattern).
+//! * [`reducer`] — the k-ary segment-sum entry point: decomposes an
+//!   arbitrary fan-in/length onto the compiled (k, n) variants with
+//!   zero-padding, with a pure-rust scalar path as fallback and oracle.
+
+pub mod artifacts;
+pub mod reducer;
+
+pub use artifacts::{Artifacts, Manifest};
+pub use reducer::{Reducer, ReducerSpec};

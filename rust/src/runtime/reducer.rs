@@ -1,0 +1,288 @@
+//! The data-plane k-ary reducer.
+//!
+//! Decomposes an arbitrary (fan-in, length) segment sum onto the AOT
+//! (k, n) variants:
+//!
+//! * fan-in: padded up with zero rows to the smallest compiled k ≥ fan-in;
+//!   fan-ins above the largest compiled k reduce in a tree of max-k
+//!   passes (rare in practice — GenTree keeps fan-ins near `w_t`);
+//! * length: full `chunk_n` blocks through the big variant, the remainder
+//!   through `tail_n` blocks (zero-padded at the very end).
+//!
+//! `Reducer::Scalar` is the pure-rust path: the correctness oracle, the
+//! fallback when artifacts are absent, and the baseline the §Perf pass
+//! compares the PJRT path against.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifacts::Artifacts;
+
+/// Thread-safe recipe for building a [`Reducer`]. The PJRT client is
+/// `Rc`-based (not `Send`), so threads that need a reducer receive a spec
+/// and build their own client-local instance — PJRT client-per-thread is
+/// the standard affinity model anyway.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReducerSpec {
+    Scalar,
+    /// PJRT from the default artifact dir, scalar fallback if missing.
+    Auto,
+    /// PJRT from an explicit artifact dir (hard error if missing).
+    PjrtDir(std::path::PathBuf),
+}
+
+impl ReducerSpec {
+    pub fn build(&self) -> Result<Reducer> {
+        match self {
+            ReducerSpec::Scalar => Ok(Reducer::Scalar),
+            ReducerSpec::Auto => Ok(Reducer::auto()),
+            ReducerSpec::PjrtDir(d) => Ok(Reducer::Pjrt(Arc::new(Artifacts::load(d)?))),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub enum Reducer {
+    /// PJRT-compiled fused kernels (the production path).
+    Pjrt(Arc<Artifacts>),
+    /// Pure-rust scalar loops (oracle / fallback).
+    Scalar,
+}
+
+impl Reducer {
+    /// Load the PJRT reducer from the default artifact dir, falling back
+    /// to scalar when artifacts are missing (e.g. unit tests).
+    pub fn auto() -> Reducer {
+        match Artifacts::load_default() {
+            Ok(a) => Reducer::Pjrt(Arc::new(a)),
+            Err(_) => Reducer::Scalar,
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, Reducer::Pjrt(_))
+    }
+
+    /// Sum `k` equal-length buffers element-wise.
+    pub fn reduce(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        assert!(!inputs.is_empty());
+        let len = inputs[0].len();
+        for x in inputs {
+            assert_eq!(x.len(), len, "ragged reduce inputs");
+        }
+        if inputs.len() == 1 {
+            return Ok(inputs[0].to_vec());
+        }
+        match self {
+            Reducer::Scalar => Ok(scalar_reduce(inputs)),
+            Reducer::Pjrt(arts) => pjrt_reduce(arts, inputs),
+        }
+    }
+
+    /// Fused optimizer step: w − lr·g (PJRT sgd artifact; scalar fallback).
+    pub fn sgd_update(&self, w: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        assert_eq!(w.len(), g.len());
+        match self {
+            Reducer::Scalar => {
+                for (wi, gi) in w.iter_mut().zip(g) {
+                    *wi -= lr * gi;
+                }
+                Ok(())
+            }
+            Reducer::Pjrt(arts) => {
+                let n = arts.manifest.chunk_n;
+                let len = w.len();
+                let mut off = 0;
+                while off + n <= len {
+                    let out = arts.run_sgd(n, &w[off..off + n], &g[off..off + n], lr)?;
+                    w[off..off + n].copy_from_slice(&out);
+                    off += n;
+                }
+                // Scalar tail (cheap relative to a padded dispatch).
+                for i in off..len {
+                    w[i] -= lr * g[i];
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Pure-rust fused k-ary sum (single pass over inputs, like the kernel).
+pub fn scalar_reduce(inputs: &[&[f32]]) -> Vec<f32> {
+    let len = inputs[0].len();
+    let mut out = inputs[0].to_vec();
+    for x in &inputs[1..] {
+        for (o, v) in out.iter_mut().zip(x.iter()) {
+            *o += v;
+        }
+    }
+    let _ = len;
+    out
+}
+
+/// Chained pairwise variant (the Ring-like 3(k−1)n memory pattern) — used
+/// by the Fig. 4 bench to measure the δ effect on real hardware.
+pub fn scalar_reduce_chained(inputs: &[&[f32]]) -> Vec<f32> {
+    let mut acc = inputs[0].to_vec();
+    for x in &inputs[1..] {
+        // Deliberately materialize a fresh vector per step: read acc,
+        // read x, write new — 3 memory streams per add, as a step-by-step
+        // algorithm with separate receive buffers would do.
+        let next: Vec<f32> = acc.iter().zip(x.iter()).map(|(a, b)| a + b).collect();
+        acc = next;
+    }
+    acc
+}
+
+fn pjrt_reduce(arts: &Artifacts, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    // Available (k, n) reduce variants, derived from the manifest.
+    let mut ns: Vec<usize> = arts
+        .manifest
+        .entries
+        .keys()
+        .filter(|(kind, _, _)| kind == "reduce")
+        .map(|&(_, _, n)| n)
+        .collect();
+    ns.sort_unstable();
+    ns.dedup();
+    let ks_for = |n: usize| -> Vec<usize> {
+        let mut ks: Vec<usize> = arts
+            .manifest
+            .entries
+            .keys()
+            .filter(|(kind, _, kn)| kind == "reduce" && *kn == n)
+            .map(|&(_, k, _)| k)
+            .collect();
+        ks.sort_unstable();
+        ks
+    };
+    let max_k = *arts.manifest.reduce_ks.iter().max().unwrap();
+    let k = inputs.len();
+    if k > max_k {
+        // Tree pass: fold groups of max_k, then recurse.
+        let mut partials: Vec<Vec<f32>> = Vec::new();
+        for group in inputs.chunks(max_k) {
+            partials.push(if group.len() == 1 {
+                group[0].to_vec()
+            } else {
+                pjrt_reduce(arts, group)?
+            });
+        }
+        let refs: Vec<&[f32]> = partials.iter().map(|v| v.as_slice()).collect();
+        return pjrt_reduce(arts, &refs);
+    }
+    let len = inputs[0].len();
+    let mut out = vec![0f32; len];
+    let mut flat: Vec<f32> = Vec::new();
+
+    let min_n = ns[0];
+    let mut off = 0usize;
+    while off < len {
+        let remaining = len - off;
+        // Largest variant that fits; the tail pads up to the smallest.
+        let n = ns
+            .iter()
+            .rev()
+            .find(|&&n| n <= remaining)
+            .copied()
+            .unwrap_or(min_n);
+        // Smallest compiled fan-in ≥ k at this n (zero rows pad the rest).
+        let ks = ks_for(n);
+        let k_pad = ks
+            .iter()
+            .find(|&&x| x >= k)
+            .copied()
+            .unwrap_or_else(|| *ks.last().unwrap());
+        let take = n.min(remaining);
+        // Pack rows (zero rows for fan-in padding, zero tail for length).
+        // The buffer is reused across chunks; only dirty regions are
+        // re-zeroed (a full memset per 64 MB chunk is measurable).
+        let needed = k_pad * n;
+        if flat.len() < needed {
+            flat.resize(needed, 0.0);
+        }
+        for (r, input) in inputs.iter().enumerate() {
+            let row = &mut flat[r * n..(r + 1) * n];
+            row[..take].copy_from_slice(&input[off..off + take]);
+            row[take..].fill(0.0);
+        }
+        for r in k..k_pad {
+            flat[r * n..(r + 1) * n].fill(0.0);
+        }
+        if take == n {
+            // Write straight into the output slice (raw path: zero-copy
+            // on the result side).
+            let (_, out_tail) = out.split_at_mut(off);
+            arts.reduce_into("reduce", k_pad, n, &flat[..k_pad * n], &mut out_tail[..n])?;
+        } else {
+            let res = arts.run_reduce("reduce", k_pad, n, &flat[..k_pad * n])?;
+            out[off..off + take].copy_from_slice(&res[..take]);
+        }
+        off += take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..k).map(|_| rng.f32_vec(n)).collect()
+    }
+
+    fn oracle(rows: &[Vec<f32>]) -> Vec<f32> {
+        let n = rows[0].len();
+        let mut out = vec![0f64; n];
+        for r in rows {
+            for (o, v) in out.iter_mut().zip(r) {
+                *o += *v as f64;
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn scalar_matches_oracle() {
+        for (k, n) in [(2usize, 10usize), (5, 1000), (16, 7)] {
+            let rows = rand_rows(k, n, 42 + k as u64);
+            let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            close(&Reducer::Scalar.reduce(&refs).unwrap(), &oracle(&rows));
+        }
+    }
+
+    #[test]
+    fn chained_matches_fused() {
+        let rows = rand_rows(6, 513, 7);
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        close(&scalar_reduce(&refs), &scalar_reduce_chained(&refs));
+    }
+
+    #[test]
+    fn single_input_identity() {
+        let rows = rand_rows(1, 64, 1);
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(Reducer::Scalar.reduce(&refs).unwrap(), rows[0]);
+    }
+
+    #[test]
+    fn scalar_sgd() {
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        Reducer::Scalar.sgd_update(&mut w, &[1.0, 1.0, 1.0], 0.5).unwrap();
+        assert_eq!(w, vec![0.5, 1.5, 2.5]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs (they
+    // need `make artifacts` to have run).
+}

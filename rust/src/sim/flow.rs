@@ -1,0 +1,236 @@
+//! Max-min fair rate allocation with incast-degraded link capacity.
+
+use std::collections::HashMap;
+
+use crate::topo::LinkId;
+
+/// One flow: `volume` floats remaining, traversing `path` directed links.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    pub volume: f64,
+    pub path: Vec<LinkId>,
+}
+
+/// Per-link capacity description for the allocator.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkCap {
+    /// Inverse bandwidth (s / float).
+    pub beta: f64,
+    /// Incast slope (s / float per excess flow).
+    pub epsilon: f64,
+    /// Incast threshold (fan-in degree, counting the receiver: flows + 1).
+    pub w_t: usize,
+}
+
+impl LinkCap {
+    /// Effective capacity in floats/s when `n_flows` flows share the link
+    /// (Eq. 10: β′ = β + max(w − w_t, 0)·ε with w = n_flows + 1, excess
+    /// saturated at [`crate::model::params::EXCESS_CAP`]).
+    pub fn capacity(&self, n_flows: usize) -> f64 {
+        let w = n_flows + 1;
+        let excess = w
+            .saturating_sub(self.w_t)
+            .min(crate::model::params::EXCESS_CAP);
+        let beta_eff = self.beta + excess as f64 * self.epsilon;
+        1.0 / beta_eff
+    }
+}
+
+/// Progressive-filling max-min fair allocation.
+///
+/// Returns the rate (floats/s) of each active flow (`active[i]` indexes
+/// into `flows`). Links not in `caps` are treated as infinite.
+pub fn max_min_rates(
+    flows: &[Flow],
+    active: &[usize],
+    caps: &HashMap<LinkId, LinkCap>,
+) -> Vec<f64> {
+    // Link occupancy among active flows.
+    let mut link_flows: HashMap<LinkId, Vec<usize>> = HashMap::new();
+    for (ai, &fi) in active.iter().enumerate() {
+        for l in &flows[fi].path {
+            link_flows.entry(*l).or_default().push(ai);
+        }
+    }
+    // Remaining capacity per link (incast penalty from the *initial*
+    // concurrent flow count of this allocation round — w is the fan-in
+    // degree of the congestion event, not of the residual set).
+    let mut remaining: HashMap<LinkId, f64> = HashMap::new();
+    for (l, fs) in &link_flows {
+        let cap = caps.get(l).map(|c| c.capacity(fs.len())).unwrap_or(f64::INFINITY);
+        remaining.insert(*l, cap);
+    }
+    let mut unfrozen: HashMap<LinkId, usize> =
+        link_flows.iter().map(|(l, fs)| (*l, fs.len())).collect();
+
+    let mut rate = vec![0.0f64; active.len()];
+    let mut frozen = vec![false; active.len()];
+    let mut n_frozen = 0;
+    while n_frozen < active.len() {
+        // Bottleneck share: minimal fair share among links with unfrozen
+        // flows. Freezing *every* link tied at (or within a hair of) the
+        // minimum in one round keeps symmetric topologies O(1) rounds
+        // instead of O(#links).
+        let mut min_share = f64::INFINITY;
+        for (l, &cnt) in &unfrozen {
+            if cnt == 0 {
+                continue;
+            }
+            let share = remaining[l] / cnt as f64;
+            if share < min_share {
+                min_share = share;
+            }
+        }
+        if !min_share.is_finite() {
+            // No constrained links left: unconstrained flows get ∞-ish.
+            for (ai, r) in rate.iter_mut().enumerate() {
+                if !frozen[ai] {
+                    *r = f64::INFINITY;
+                }
+            }
+            break;
+        }
+        let cutoff = min_share * (1.0 + 1e-12);
+        let tied: Vec<LinkId> = unfrozen
+            .iter()
+            .filter(|(l, &cnt)| cnt > 0 && remaining[l] / cnt as f64 <= cutoff)
+            .map(|(l, _)| *l)
+            .collect();
+        for bl in tied {
+            // Freeze every still-unfrozen flow on this bottleneck.
+            let members: Vec<usize> = link_flows[&bl]
+                .iter()
+                .copied()
+                .filter(|&ai| !frozen[ai])
+                .collect();
+            for ai in members {
+                rate[ai] = min_share;
+                frozen[ai] = true;
+                n_frozen += 1;
+                // Withdraw its rate from every link it crosses.
+                for l in &flows[active[ai]].path {
+                    *remaining.get_mut(l).unwrap() -= min_share;
+                    *unfrozen.get_mut(l).unwrap() -= 1;
+                }
+            }
+        }
+        // Numeric guard.
+        for v in remaining.values_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::{Dir, LinkId};
+
+    fn link(n: usize) -> LinkId {
+        LinkId {
+            node: n,
+            dir: Dir::Up,
+        }
+    }
+
+    fn caps_of(pairs: &[(LinkId, f64)]) -> HashMap<LinkId, LinkCap> {
+        pairs
+            .iter()
+            .map(|&(l, beta)| {
+                (
+                    l,
+                    LinkCap {
+                        beta,
+                        epsilon: 0.0,
+                        w_t: 1000,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_flow_full_rate() {
+        let flows = vec![Flow {
+            src: 0,
+            dst: 1,
+            volume: 100.0,
+            path: vec![link(0)],
+        }];
+        let caps = caps_of(&[(link(0), 0.5)]); // 2 floats/s
+        let r = max_min_rates(&flows, &[0], &caps);
+        assert!((r[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fair_split_on_shared_link() {
+        let f = |_i| Flow {
+            src: 0,
+            dst: 1,
+            volume: 1.0,
+            path: vec![link(0)],
+        };
+        let flows = vec![f(0), f(1), f(2), f(3)];
+        let caps = caps_of(&[(link(0), 0.25)]); // 4 floats/s
+        let r = max_min_rates(&flows, &[0, 1, 2, 3], &caps);
+        for x in r {
+            assert!((x - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_min_not_proportional() {
+        // Flow A crosses links 0 and 1; flow B only link 0; flow C only
+        // link 1. cap(link0) = 2, cap(link1) = 10.
+        let flows = vec![
+            Flow { src: 0, dst: 1, volume: 1.0, path: vec![link(0), link(1)] },
+            Flow { src: 0, dst: 1, volume: 1.0, path: vec![link(0)] },
+            Flow { src: 0, dst: 1, volume: 1.0, path: vec![link(1)] },
+        ];
+        let caps = caps_of(&[(link(0), 0.5), (link(1), 0.1)]);
+        let r = max_min_rates(&flows, &[0, 1, 2], &caps);
+        // link0 is the bottleneck: A and B get 1 each; C gets 10 − 1 = 9.
+        assert!((r[0] - 1.0).abs() < 1e-9, "{r:?}");
+        assert!((r[1] - 1.0).abs() < 1e-9);
+        assert!((r[2] - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incast_degrades_capacity() {
+        let cap = LinkCap {
+            beta: 1e-9,
+            epsilon: 1e-10,
+            w_t: 9,
+        };
+        // 8 flows → w = 9 ≤ 9: full rate.
+        assert!((cap.capacity(8) - 1e9).abs() / 1e9 < 1e-12);
+        // 12 flows → w = 13, excess 4: β′ = 1e-9 + 4e-10.
+        let c = cap.capacity(12);
+        assert!((c - 1.0 / 1.4e-9).abs() / c < 1e-12);
+    }
+
+    #[test]
+    fn unconstrained_flow_infinite() {
+        let flows = vec![Flow {
+            src: 0,
+            dst: 1,
+            volume: 1.0,
+            path: vec![],
+        }];
+        let caps = HashMap::new();
+        let r = max_min_rates(&flows, &[0], &caps);
+        assert!(r[0].is_infinite());
+    }
+
+    #[test]
+    fn empty_active_ok() {
+        let caps = HashMap::new();
+        let r = max_min_rates(&[], &[], &caps);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! Incast-aware event-driven flow-level network simulator (paper §5.3).
+//!
+//! The paper's large-scale evaluation uses "a custom-made flow-level
+//! network simulator which is aware of the incast problem" instead of a
+//! packet-level simulator (ns-3 is too slow at 384–512 servers and the
+//! packet-level detail is unnecessary). This module is that simulator:
+//!
+//! * [`flow`] — max-min fair rate allocation (progressive filling) over
+//!   directed links, with the PFC-style incast penalty: a link carrying
+//!   `w − 1` concurrent flows serves at inverse-bandwidth
+//!   `β′ = β + max(w − w_t, 0)·ε` (Eq. 10), re-evaluated as flows finish;
+//! * [`engine`] — event-driven completion loop per plan phase plus the
+//!   (γ, δ) computation time of each phase, producing the "actual" time
+//!   the paper's Fig. 8 compares predictors against;
+//! * [`report`] — per-phase and per-component (communication vs
+//!   calculation) breakdowns for Fig. 9.
+
+pub mod engine;
+pub mod flow;
+pub mod report;
+
+pub use engine::{simulate_plan, SimConfig, SimResult};
+pub use flow::{max_min_rates, Flow};

@@ -1,0 +1,117 @@
+//! Reporting helpers over simulator/model results — the series behind
+//! Fig. 8 (accuracy), Fig. 9 (comm/calc breakdown) and Fig. 10 (per-term
+//! breakdown by GenModel).
+
+use crate::model::cost::{CostBreakdown, CostModel, ModelKind};
+use crate::model::params::Environment;
+use crate::plan::Plan;
+use crate::topo::Topology;
+
+use super::engine::{simulate_plan, SimConfig, SimResult};
+
+/// One algorithm's row in Fig. 8: actual (sim) vs both predictors.
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub plan_name: String,
+    pub actual: f64,
+    pub genmodel: f64,
+    pub classic: f64,
+}
+
+impl AccuracyRow {
+    pub fn genmodel_err(&self) -> f64 {
+        (self.genmodel - self.actual).abs() / self.actual
+    }
+
+    pub fn classic_err(&self) -> f64 {
+        (self.classic - self.actual).abs() / self.actual
+    }
+}
+
+/// Compute a Fig. 8 row for one plan.
+pub fn accuracy_row(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> AccuracyRow {
+    let cfg = SimConfig::new(topo);
+    let actual = simulate_plan(plan, s, topo, env, &cfg).total;
+    let genmodel = CostModel::new(topo, env, ModelKind::GenModel).plan_total(plan, s);
+    let classic = CostModel::new(topo, env, ModelKind::Classic).plan_total(plan, s);
+    AccuracyRow {
+        plan_name: plan.name.clone(),
+        actual,
+        genmodel,
+        classic,
+    }
+}
+
+/// Fig. 9 row: the simulator's communication/calculation split.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub plan_name: String,
+    pub communication: f64,
+    pub calculation: f64,
+    pub total: f64,
+}
+
+pub fn breakdown_row(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> BreakdownRow {
+    let cfg = SimConfig::new(topo);
+    let r: SimResult = simulate_plan(plan, s, topo, env, &cfg);
+    BreakdownRow {
+        plan_name: plan.name.clone(),
+        communication: r.communication,
+        calculation: r.calculation,
+        total: r.total,
+    }
+}
+
+/// Fig. 10 row: GenModel's five-term decomposition.
+pub fn term_breakdown(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> CostBreakdown {
+    CostModel::new(topo, env, ModelKind::GenModel).plan_cost(plan, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Environment;
+    use crate::plan::{cps, hcps, ring};
+    use crate::topo::builders::single_switch;
+
+    #[test]
+    fn fig8_genmodel_beats_classic_at_12_and_15() {
+        let env = Environment::paper();
+        for n in [12usize, 15] {
+            let topo = single_switch(n);
+            let plans = vec![
+                cps::allreduce(n),
+                ring::allreduce(n),
+                hcps::allreduce(&if n == 12 { vec![6, 2] } else { vec![5, 3] }),
+            ];
+            for p in &plans {
+                let row = accuracy_row(p, 1e8, &topo, &env);
+                assert!(
+                    row.genmodel_err() <= row.classic_err() + 1e-12,
+                    "{}: gen {} vs classic {}",
+                    row.plan_name,
+                    row.genmodel_err(),
+                    row.classic_err()
+                );
+                assert!(row.genmodel_err() < 0.05, "{}", row.plan_name);
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_breakdown_sums() {
+        let env = Environment::paper();
+        let topo = single_switch(12);
+        let row = breakdown_row(&cps::allreduce(12), 1e8, &topo, &env);
+        assert!((row.communication + row.calculation - row.total).abs() < 1e-9 * row.total);
+    }
+
+    #[test]
+    fn fig10_terms_sum_to_total() {
+        let env = Environment::paper();
+        let topo = single_switch(12);
+        let t = term_breakdown(&hcps::allreduce(&[6, 2]), 1e8, &topo, &env);
+        let sum = t.alpha + t.beta + t.epsilon + t.gamma + t.delta;
+        assert!((sum - t.total()).abs() < 1e-12);
+    }
+}

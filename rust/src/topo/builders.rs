@@ -1,0 +1,146 @@
+//! Constructors for the paper's evaluation topologies (Figures 6 & 11).
+
+use super::{NodeId, NodeKind, Topology};
+use crate::model::params::LinkClass;
+
+/// SS-n: n servers under one switch (Fig. 11 "Single-switch").
+pub fn single_switch(n_servers: usize) -> Topology {
+    assert!(n_servers >= 2);
+    let mut parents = vec![None]; // 0 = switch
+    let mut kinds = vec![NodeKind::Switch];
+    let mut classes = vec![LinkClass::RootSw];
+    for _ in 0..n_servers {
+        parents.push(Some(0));
+        kinds.push(NodeKind::Server);
+        classes.push(LinkClass::Server);
+    }
+    Topology::from_parents(&format!("SS{n_servers}"), parents, kinds, classes)
+}
+
+/// SYM-(m·k): root switch, `m` middle switches, `k` servers per middle
+/// switch (Fig. 11 "Symmetric hierarchical").
+pub fn symmetric(mid_switches: usize, servers_per: usize) -> Topology {
+    asymmetric_named(
+        &format!("SYM{}", mid_switches * servers_per),
+        &vec![servers_per; mid_switches],
+    )
+}
+
+/// ASY: root switch with middle switches of two different sizes
+/// (Fig. 11 "Asymmetric hierarchical"). `big`/`small` give the per-switch
+/// server counts; concatenated in order.
+pub fn asymmetric(big: &[usize], small: &[usize]) -> Topology {
+    let mut sizes: Vec<usize> = big.to_vec();
+    sizes.extend_from_slice(small);
+    let total: usize = sizes.iter().sum();
+    asymmetric_named(&format!("ASY{total}"), &sizes)
+}
+
+fn asymmetric_named(name: &str, sizes: &[usize]) -> Topology {
+    assert!(!sizes.is_empty());
+    let mut parents = vec![None];
+    let mut kinds = vec![NodeKind::Switch];
+    let mut classes = vec![LinkClass::RootSw];
+    for &k in sizes {
+        let mid: NodeId = parents.len();
+        parents.push(Some(0));
+        kinds.push(NodeKind::Switch);
+        classes.push(LinkClass::RootSw); // mid's uplink reaches the root switch
+        for _ in 0..k {
+            parents.push(Some(mid));
+            kinds.push(NodeKind::Server);
+            classes.push(LinkClass::MiddleSw); // server uplink terminates at a middle switch
+        }
+    }
+    Topology::from_parents(name, parents, kinds, classes)
+}
+
+/// CDC: two data centers joined by one low-bandwidth high-latency link
+/// (Fig. 11 "Cross-DC"). Each slice gives servers-per-middle-switch within
+/// that DC. The two DC root switches hang off a virtual top node whose
+/// links carry `LinkClass::CrossDc`.
+pub fn cross_dc(dc0: &[usize], dc1: &[usize]) -> Topology {
+    let total: usize = dc0.iter().chain(dc1).sum();
+    let mut parents = vec![None]; // 0 = virtual top (WAN midpoint)
+    let mut kinds = vec![NodeKind::Switch];
+    let mut classes = vec![LinkClass::CrossDc];
+    for sizes in [dc0, dc1] {
+        let dc_root: NodeId = parents.len();
+        parents.push(Some(0));
+        kinds.push(NodeKind::Switch);
+        classes.push(LinkClass::CrossDc); // dc-root uplink crosses the WAN
+        for &k in sizes {
+            let mid: NodeId = parents.len();
+            parents.push(Some(dc_root));
+            kinds.push(NodeKind::Switch);
+            classes.push(LinkClass::RootSw);
+            for _ in 0..k {
+                parents.push(Some(mid));
+                kinds.push(NodeKind::Server);
+                classes.push(LinkClass::MiddleSw);
+            }
+        }
+    }
+    Topology::from_parents(&format!("CDC{total}"), parents, kinds, classes)
+}
+
+/// One pod of a fat-tree, reduced to a tree: a random aggregation switch as
+/// root, `edges` edge switches, `servers_per` servers per edge switch. The
+/// paper ignores the other aggregation/core switches because only
+/// server-to-server data movement matters for plan generation.
+pub fn fat_tree_pod(edges: usize, servers_per: usize) -> Topology {
+    asymmetric_named(
+        &format!("FT{}x{}", edges, servers_per),
+        &vec![servers_per; edges],
+    )
+}
+
+/// The GPU testbed shape of paper §5.2: `n` DGX servers under one switch,
+/// each with 8 GPUs behind an NVLink-class "intra-machine switch" — modeled
+/// as a two-level tree where GPU uplinks are `LinkClass::Server` (fast,
+/// local) and machine uplinks are `LinkClass::MiddleSw`.
+pub fn gpu_pod(n_machines: usize, gpus_per: usize) -> Topology {
+    let mut parents = vec![None];
+    let mut kinds = vec![NodeKind::Switch];
+    let mut classes = vec![LinkClass::RootSw];
+    for _ in 0..n_machines {
+        let m: NodeId = parents.len();
+        parents.push(Some(0));
+        kinds.push(NodeKind::Switch);
+        classes.push(LinkClass::MiddleSw);
+        for _ in 0..gpus_per {
+            parents.push(Some(m));
+            kinds.push(NodeKind::Server);
+            classes.push(LinkClass::Server);
+        }
+    }
+    Topology::from_parents(
+        &format!("GPU{}x{}", n_machines, gpus_per),
+        parents,
+        kinds,
+        classes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topology_sizes() {
+        assert_eq!(single_switch(24).n_servers(), 24); // SS24
+        assert_eq!(single_switch(32).n_servers(), 32); // SS32
+        assert_eq!(symmetric(16, 24).n_servers(), 384); // SYM384
+        assert_eq!(symmetric(16, 32).n_servers(), 512); // SYM512
+        assert_eq!(asymmetric(&[32; 8], &[16; 8]).n_servers(), 384); // ASY384
+        assert_eq!(cross_dc(&[32; 8], &[16; 8]).n_servers(), 384); // CDC384
+        assert_eq!(gpu_pod(8, 8).n_servers(), 64); // GPU testbed
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(single_switch(24).name, "SS24");
+        assert_eq!(symmetric(16, 32).name, "SYM512");
+        assert_eq!(cross_dc(&[32; 8], &[16; 8]).name, "CDC384");
+    }
+}

@@ -1,0 +1,366 @@
+//! Tree-like physical topologies (paper §4.2, Figures 6 & 11).
+//!
+//! Every topology is a rooted tree: leaves are servers, inner nodes are
+//! switches, and each non-root node has one full-duplex link to its parent.
+//! Fat-tree / leaf-spine fabrics reduce to this by picking one top-level
+//! switch as root (the paper does the same — the choice does not affect
+//! GenTree's output because only server-to-server paths matter).
+
+pub mod builders;
+
+use crate::model::params::LinkClass;
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Server,
+    Switch,
+}
+
+/// Direction of a directed channel of a full-duplex parent link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dir {
+    /// child -> parent
+    Up,
+    /// parent -> child
+    Down,
+}
+
+/// A directed link: the `dir` channel of `node`'s uplink to its parent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId {
+    pub node: NodeId,
+    pub dir: Dir,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: NodeKind,
+    pub parent: Option<NodeId>,
+    pub children: Vec<NodeId>,
+    /// Class of this node's uplink (root: class of the node itself).
+    pub class: LinkClass,
+    pub name: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    nodes: Vec<Node>,
+    root: NodeId,
+    servers: Vec<NodeId>,
+    depth_cache: Vec<usize>,
+}
+
+impl Topology {
+    /// Build from a parent table. `parents[i]` is the parent of node `i`
+    /// (the root has `None`). Node 0 need not be the root.
+    pub fn from_parents(
+        name: &str,
+        parents: Vec<Option<NodeId>>,
+        kinds: Vec<NodeKind>,
+        classes: Vec<LinkClass>,
+    ) -> Self {
+        let n = parents.len();
+        assert_eq!(kinds.len(), n);
+        assert_eq!(classes.len(), n);
+        let mut nodes: Vec<Node> = (0..n)
+            .map(|i| Node {
+                id: i,
+                kind: kinds[i],
+                parent: parents[i],
+                children: Vec::new(),
+                class: classes[i],
+                name: String::new(),
+            })
+            .collect();
+        let mut root = None;
+        for i in 0..n {
+            match parents[i] {
+                Some(p) => {
+                    assert!(p < n, "parent out of range");
+                    nodes[p].children.push(i);
+                }
+                None => {
+                    assert!(root.is_none(), "multiple roots");
+                    root = Some(i);
+                }
+            }
+        }
+        let root = root.expect("no root");
+        for node in nodes.iter_mut() {
+            node.name = match node.kind {
+                NodeKind::Server => format!("server{}", node.id),
+                NodeKind::Switch => format!("sw{}", node.id),
+            };
+        }
+        let servers: Vec<NodeId> = (0..n).filter(|&i| kinds[i] == NodeKind::Server).collect();
+        assert!(!servers.is_empty(), "topology has no servers");
+        for &s in &servers {
+            assert!(
+                nodes[s].children.is_empty(),
+                "server {s} must be a leaf"
+            );
+        }
+        // Depth cache for LCA.
+        let mut depth = vec![0usize; n];
+        // parents form a tree; compute iteratively (nodes may be in any order).
+        fn depth_of(i: usize, parents: &[Option<usize>], depth: &mut [usize], seen: &mut [u8]) -> usize {
+            match seen[i] {
+                2 => return depth[i],
+                1 => panic!("cycle in topology at node {i}"),
+                _ => {}
+            }
+            seen[i] = 1;
+            let d = match parents[i] {
+                None => 0,
+                Some(p) => 1 + depth_of(p, parents, depth, seen),
+            };
+            depth[i] = d;
+            seen[i] = 2;
+            d
+        }
+        let mut seen = vec![0u8; n];
+        for i in 0..n {
+            depth_of(i, &parents, &mut depth, &mut seen);
+        }
+        Topology {
+            name: name.to_string(),
+            nodes,
+            root,
+            servers,
+            depth_cache: depth,
+        }
+    }
+
+    pub fn root(&self) -> NodeId {
+        self.root
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// All servers (leaves), in id order. Plan "server index" k refers to
+    /// `servers()[k]`.
+    pub fn servers(&self) -> &[NodeId] {
+        &self.servers
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Plan-level server index of a server node id.
+    pub fn server_index(&self, id: NodeId) -> Option<usize> {
+        self.servers.binary_search(&id).ok()
+    }
+
+    pub fn depth(&self, id: NodeId) -> usize {
+        self.depth_cache[id]
+    }
+
+    /// Lowest common ancestor.
+    pub fn lca(&self, mut a: NodeId, mut b: NodeId) -> NodeId {
+        while self.depth(a) > self.depth(b) {
+            a = self.nodes[a].parent.unwrap();
+        }
+        while self.depth(b) > self.depth(a) {
+            b = self.nodes[b].parent.unwrap();
+        }
+        while a != b {
+            a = self.nodes[a].parent.unwrap();
+            b = self.nodes[b].parent.unwrap();
+        }
+        a
+    }
+
+    /// Directed links traversed by a message from server `a` to server `b`:
+    /// up-links from `a` to the LCA, then down-links to `b`.
+    pub fn path_links(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        if a == b {
+            return Vec::new();
+        }
+        let l = self.lca(a, b);
+        let mut out = Vec::new();
+        let mut x = a;
+        while x != l {
+            out.push(LinkId { node: x, dir: Dir::Up });
+            x = self.nodes[x].parent.unwrap();
+        }
+        let mut down = Vec::new();
+        let mut y = b;
+        while y != l {
+            down.push(LinkId { node: y, dir: Dir::Down });
+            y = self.nodes[y].parent.unwrap();
+        }
+        down.reverse();
+        out.extend(down);
+        out
+    }
+
+    /// Servers in the subtree rooted at `id`, in id order.
+    pub fn servers_under(&self, id: NodeId) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(x) = stack.pop() {
+            if self.nodes[x].kind == NodeKind::Server {
+                out.push(x);
+            }
+            stack.extend(&self.nodes[x].children);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Switches in bottom-up order (children before parents) — the order
+    /// GenTree's recursion resolves sub-plans in.
+    pub fn switches_bottom_up(&self) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].kind == NodeKind::Switch)
+            .collect();
+        out.sort_by(|&a, &b| self.depth(b).cmp(&self.depth(a)).then(a.cmp(&b)));
+        out
+    }
+
+    /// The class of every directed link (both channels share the class).
+    pub fn link_class(&self, link: LinkId) -> LinkClass {
+        self.nodes[link.node].class
+    }
+
+    /// All directed links in the topology.
+    pub fn all_links(&self) -> Vec<LinkId> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if n.parent.is_some() {
+                out.push(LinkId { node: n.id, dir: Dir::Up });
+                out.push(LinkId { node: n.id, dir: Dir::Down });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builders::*;
+    use super::*;
+
+    #[test]
+    fn single_switch_shape() {
+        let t = single_switch(15);
+        assert_eq!(t.n_servers(), 15);
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.node(t.root()).kind, NodeKind::Switch);
+        for &s in t.servers() {
+            assert_eq!(t.node(s).parent, Some(t.root()));
+        }
+    }
+
+    #[test]
+    fn path_through_single_switch() {
+        let t = single_switch(4);
+        let s = t.servers();
+        let p = t.path_links(s[0], s[3]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0], LinkId { node: s[0], dir: Dir::Up });
+        assert_eq!(p[1], LinkId { node: s[3], dir: Dir::Down });
+        assert!(t.path_links(s[2], s[2]).is_empty());
+    }
+
+    #[test]
+    fn symmetric_hierarchy() {
+        let t = symmetric(16, 24); // SYM384
+        assert_eq!(t.n_servers(), 384);
+        let s = t.servers();
+        // Same-rack path: 2 hops; cross-rack: 4 hops.
+        assert_eq!(t.path_links(s[0], s[1]).len(), 2);
+        assert_eq!(t.path_links(s[0], s[24]).len(), 4);
+    }
+
+    #[test]
+    fn asymmetric_hierarchy() {
+        let t = asymmetric(&[32; 8], &[16; 8]); // ASY384
+        assert_eq!(t.n_servers(), 384);
+        let sw = t.switches_bottom_up();
+        // 16 middle + 1 root
+        assert_eq!(sw.len(), 17);
+        assert_eq!(*sw.last().unwrap(), t.root());
+    }
+
+    #[test]
+    fn cross_dc_shape() {
+        let t = cross_dc(&[32; 8], &[16; 8]); // CDC384
+        assert_eq!(t.n_servers(), 384);
+        let s = t.servers();
+        // Paths between DCs traverse 6 links (srv-mid, mid-dcroot, dcroot-top, then down).
+        let far = t.path_links(s[0], s[383]);
+        assert_eq!(far.len(), 6);
+        // The top-of-tree links must be CrossDc class.
+        assert!(far.iter().any(|l| t.link_class(*l) == LinkClass::CrossDc));
+    }
+
+    #[test]
+    fn lca_and_depth() {
+        let t = symmetric(2, 3);
+        let s = t.servers();
+        assert_eq!(t.lca(s[0], s[1]), t.node(s[0]).parent.unwrap());
+        assert_eq!(t.lca(s[0], s[3]), t.root());
+        assert_eq!(t.depth(t.root()), 0);
+        assert_eq!(t.depth(s[0]), 2);
+    }
+
+    #[test]
+    fn servers_under_subtrees() {
+        let t = asymmetric(&[3, 2], &[]);
+        let root = t.root();
+        let mids = &t.node(root).children;
+        assert_eq!(t.servers_under(mids[0]).len(), 3);
+        assert_eq!(t.servers_under(mids[1]).len(), 2);
+        assert_eq!(t.servers_under(root).len(), 5);
+    }
+
+    #[test]
+    fn bottom_up_order_resolves_children_first() {
+        let t = cross_dc(&[4, 4], &[4]);
+        let order = t.switches_bottom_up();
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for &sw in &order {
+            for &c in &t.node(sw).children {
+                if t.node(c).kind == NodeKind::Switch {
+                    assert!(pos[&c] < pos[&sw], "child {c} after parent {sw}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_reduces_to_tree() {
+        let t = fat_tree_pod(4, 8); // 4 edge switches, 8 servers each
+        assert_eq!(t.n_servers(), 32);
+        assert_eq!(t.node(t.root()).children.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "server")]
+    fn server_with_children_rejected() {
+        // server node (id 1) with a child (id 2) must panic.
+        Topology::from_parents(
+            "bad",
+            vec![None, Some(0), Some(1)],
+            vec![NodeKind::Switch, NodeKind::Server, NodeKind::Server],
+            vec![LinkClass::RootSw, LinkClass::Server, LinkClass::Server],
+        );
+    }
+}

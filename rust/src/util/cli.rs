@@ -1,0 +1,185 @@
+//! Flag/option argument parsing for the `repro` binary (clap not vendored).
+//!
+//! Grammar: `repro <subcommand> [--key value | --key=value | --flag] ...`
+//! Unknown options are errors; every option access records the key so the
+//! parser can report unused/misspelled options after dispatch.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    used: std::cell::RefCell<BTreeSet<String>>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue {
+        key: String,
+        value: String,
+        why: String,
+    },
+    #[error("unknown options: {0}")]
+    UnknownOptions(String),
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args, CliError> {
+        let mut it = raw.iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with('-') => Some(it.next().unwrap().clone()),
+            _ => None,
+        };
+        let mut opts = BTreeMap::new();
+        let mut flags = BTreeSet::new();
+        let mut positional = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` iff the next token isn't another option.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            opts.insert(body.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => {
+                            flags.insert(body.to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        Ok(Args {
+            subcommand,
+            opts,
+            flags,
+            used: std::cell::RefCell::new(BTreeSet::new()),
+            positional,
+        })
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.used.borrow_mut().insert(key.to_string());
+        self.flags.contains(key)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.used.borrow_mut().insert(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// After dispatch: error if the user passed options nobody consumed.
+    pub fn check_unused(&self) -> Result<(), CliError> {
+        let used = self.used.borrow();
+        let unused: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !used.contains(k.as_str()))
+            .collect();
+        if unused.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::UnknownOptions(
+                unused
+                    .iter()
+                    .map(|s| format!("--{s}"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--topo", "ss24", "--size=1e8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("topo"), Some("ss24"));
+        assert_eq!(a.opt("size"), Some("1e8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = parse(&["x", "--n", "15", "--s", "2.5"]);
+        assert_eq!(a.opt_parse::<usize>("n").unwrap(), Some(15));
+        assert_eq!(a.opt_parse_or::<f64>("s", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_parse_or::<u32>("missing", 7).unwrap(), 7);
+        assert!(a.opt_parse::<usize>("s").is_err());
+    }
+
+    #[test]
+    fn unused_options_detected() {
+        let a = parse(&["x", "--typo", "1"]);
+        assert!(a.check_unused().is_err());
+        let _ = a.opt("typo");
+        assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--dry-run", "--n", "3"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.opt("n"), Some("3"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["fit", "bench.json", "--out", "params.json"]);
+        assert_eq!(a.positional, vec!["bench.json"]);
+        assert_eq!(a.opt("out"), Some("params.json"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Wall-clock micro-benchmark harness (criterion is not vendored).
+//!
+//! Used by every `rust/benches/*.rs` binary (`harness = false`). Protocol:
+//! warm up, then run timed iterations until both a minimum iteration count
+//! and a minimum total time are reached; report mean/median/p95/stddev.
+//! `std::hint::black_box` prevents the optimizer from deleting work.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            min_total: Duration::from_millis(300),
+        }
+    }
+}
+
+/// One benchmark's summary statistics (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub stddev: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>6}",
+            self.name,
+            fmt_si(self.mean),
+            fmt_si(self.median),
+            fmt_si(self.p95),
+            fmt_si(self.stddev),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12} {:>6}",
+        "benchmark", "mean", "median", "p95", "stddev", "iters"
+    )
+}
+
+fn fmt_si(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Run `f` under the default config and print a report line.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with(name, BenchConfig::default(), f)
+}
+
+pub fn bench_with<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.min_total)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: stats::mean(&samples),
+        median: stats::median(&samples),
+        p95: stats::percentile(&samples, 95.0),
+        stddev: stats::stddev(&samples),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{}", res.report_line());
+    res
+}
+
+/// Group banner for bench binaries.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{}", header());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            min_total: Duration::from_millis(0),
+        };
+        let mut count = 0usize;
+        let res = bench_with("noop", cfg, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(res.iters, 5);
+        assert_eq!(count, 5 + 1); // warmup + timed
+        assert!(res.mean >= 0.0 && res.median >= 0.0);
+        assert!(res.min <= res.median && res.median <= res.p95);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert!(fmt_si(2.0).ends_with(" s"));
+        assert!(fmt_si(2e-3).ends_with(" ms"));
+        assert!(fmt_si(2e-6).ends_with(" µs"));
+        assert!(fmt_si(2e-9).ends_with(" ns"));
+    }
+}

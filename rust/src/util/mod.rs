@@ -1,0 +1,22 @@
+//! In-repo substrates.
+//!
+//! The build is fully offline and only the `xla` crate's dependency closure
+//! is vendored, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rand) are unavailable. Everything in this module replaces one
+//! of them with a small, tested, purpose-built implementation:
+//!
+//! * [`json`] — JSON parser/serializer (manifest.json, result dumps).
+//! * [`rng`] — SplitMix64/Xoshiro256** deterministic PRNG.
+//! * [`stats`] — mean/stddev/percentile + least-squares solver.
+//! * [`microbench`] — wall-clock bench harness (used by `cargo bench`).
+//! * [`prop`] — property-testing loop with seed reporting.
+//! * [`cli`] — flag/option argument parsing for the `repro` binary.
+//! * [`table`] — aligned ASCII table rendering for paper tables.
+
+pub mod cli;
+pub mod json;
+pub mod microbench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,100 @@
+//! Tiny property-testing loop (proptest is not vendored).
+//!
+//! `run` draws `cases` seeds from a deterministic master RNG, calls the
+//! property with a per-case RNG, and on failure re-raises with the failing
+//! case's seed so `PROP_SEED=<seed>` reproduces it exactly.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop(case_rng)` for `cases` random cases. Panics with the failing
+/// seed embedded in the message if the property panics or returns Err.
+pub fn run<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Honour PROP_SEED for single-case reproduction.
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed under PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    let mut master = Rng::new(0x9E3779B97F4A7C15 ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed at case {case} (reproduce: PROP_SEED={seed}): {msg}"
+            ),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{name}' panicked at case {case} (reproduce: PROP_SEED={seed}): {msg}"
+                )
+            }
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run("always-true", 10, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "PROP_SEED")]
+    fn failing_property_reports_seed() {
+        run("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked at case")]
+    fn panicking_property_reports_seed() {
+        run("panics", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_name() {
+        let mut seq1 = Vec::new();
+        run("det", 5, |r| {
+            seq1.push(r.next_u64());
+            Ok(())
+        });
+        let mut seq2 = Vec::new();
+        run("det", 5, |r| {
+            seq2.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(seq1, seq2);
+    }
+}

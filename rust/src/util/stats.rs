@@ -1,0 +1,224 @@
+//! Statistics + linear least squares (the fitting toolkit's math core).
+
+/// Arithmetic mean. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile by linear interpolation; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Solve the linear least-squares problem `min ||A x - b||_2` via normal
+/// equations + Gaussian elimination with partial pivoting.
+///
+/// `a` is row-major with `cols` columns. Returns `x` (len = cols).
+/// Used by `model::fit` to recover GenModel parameters from benchmark rows.
+pub fn lstsq(a: &[f64], cols: usize, b: &[f64]) -> Option<Vec<f64>> {
+    let rows = b.len();
+    assert_eq!(a.len(), rows * cols, "lstsq: shape mismatch");
+    if rows < cols {
+        return None;
+    }
+    // Normal matrix AtA (cols x cols) and Atb (cols).
+    let mut ata = vec![0.0; cols * cols];
+    let mut atb = vec![0.0; cols];
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            atb[i] += row[i] * b[r];
+            for j in 0..cols {
+                ata[i * cols + j] += row[i] * row[j];
+            }
+        }
+    }
+    solve_dense(&mut ata, &mut atb, cols)
+}
+
+/// In-place Gaussian elimination with partial pivoting on an n×n system.
+fn solve_dense(m: &mut [f64], rhs: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-12 {
+            return None; // singular / underdetermined
+        }
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        // Eliminate below.
+        for r in (col + 1)..n {
+            let f = m[r * n + col] / m[col * n + col];
+            for c in col..n {
+                m[r * n + c] -= f * m[col * n + c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = rhs[col];
+        for c in (col + 1)..n {
+            s -= m[col * n + c] * x[c];
+        }
+        x[col] = s / m[col * n + col];
+    }
+    Some(x)
+}
+
+/// Non-negative least squares by iterated clamping (projected solve):
+/// solve, clamp negatives to zero and remove those columns, re-solve.
+/// GenModel parameters are physically non-negative; this keeps fits sane
+/// when a term is absent from the data.
+pub fn nnls(a: &[f64], cols: usize, b: &[f64]) -> Option<Vec<f64>> {
+    let rows = b.len();
+    let mut active: Vec<usize> = (0..cols).collect();
+    loop {
+        // Build reduced matrix with only active columns.
+        let mut ra = Vec::with_capacity(rows * active.len());
+        for r in 0..rows {
+            for &c in &active {
+                ra.push(a[r * cols + c]);
+            }
+        }
+        let x = lstsq(&ra, active.len(), b)?;
+        if let Some(worst) = x
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v < -1e-15)
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+        {
+            active.remove(worst);
+            if active.is_empty() {
+                return Some(vec![0.0; cols]);
+            }
+            continue;
+        }
+        let mut full = vec![0.0; cols];
+        for (i, &c) in active.iter().enumerate() {
+            full[c] = x[i].max(0.0);
+        }
+        return Some(full);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} !~ {b}");
+    }
+
+    #[test]
+    fn mean_stddev_median() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_close(mean(&xs), 5.0, 1e-12);
+        assert_close(stddev(&xs), 2.138, 1e-3);
+        assert_close(median(&xs), 4.5, 1e-12);
+        assert_close(percentile(&xs, 0.0), 2.0, 1e-12);
+        assert_close(percentile(&xs, 100.0), 9.0, 1e-12);
+    }
+
+    #[test]
+    fn lstsq_exact_line() {
+        // y = 3 + 2x sampled exactly.
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for &x in &xs {
+            a.extend([1.0, x]);
+            b.push(3.0 + 2.0 * x);
+        }
+        let sol = lstsq(&a, 2, &b).unwrap();
+        assert_close(sol[0], 3.0, 1e-9);
+        assert_close(sol[1], 2.0, 1e-9);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noisy() {
+        // y = 1 + 0.5x with symmetric noise; LSQ must average it out.
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..100 {
+            let x = i as f64;
+            let noise = if i % 2 == 0 { 0.1 } else { -0.1 };
+            a.extend([1.0, x]);
+            b.push(1.0 + 0.5 * x + noise);
+        }
+        let sol = lstsq(&a, 2, &b).unwrap();
+        assert_close(sol[0], 1.0, 0.05);
+        assert_close(sol[1], 0.5, 0.01);
+    }
+
+    #[test]
+    fn lstsq_singular_none() {
+        // Two identical columns -> singular normal matrix.
+        let a = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let b = [1.0, 2.0, 3.0];
+        assert!(lstsq(&a, 2, &b).is_none());
+    }
+
+    #[test]
+    fn nnls_clamps_negative_component() {
+        // b = 2*c0 with a useless negatively-correlated c1.
+        let a = [
+            1.0, -1.0, //
+            2.0, -2.0, //
+            3.0, -3.0, //
+            4.0, -3.9,
+        ];
+        let b = [2.0, 4.0, 6.0, 8.1];
+        let sol = nnls(&a, 2, &b).unwrap();
+        assert!(sol.iter().all(|&x| x >= 0.0), "{sol:?}");
+    }
+
+    #[test]
+    fn nnls_matches_lstsq_when_all_positive() {
+        let a = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = [1.0, 2.0, 3.0];
+        let x1 = lstsq(&a, 2, &b).unwrap();
+        let x2 = nnls(&a, 2, &b).unwrap();
+        for (p, q) in x1.iter().zip(&x2) {
+            assert_close(*p, *q, 1e-9);
+        }
+    }
+}

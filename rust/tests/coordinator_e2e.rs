@@ -1,0 +1,129 @@
+//! Coordinator end-to-end: the service over the real PJRT data plane.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use genmodel::coordinator::{batcher::BatchPolicy, AllReduceService, ServiceConfig};
+use genmodel::exec;
+use genmodel::model::params::Environment;
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::{asymmetric, single_switch};
+use genmodel::util::rng::Rng;
+
+fn cfg(bucket: usize) -> ServiceConfig {
+    ServiceConfig {
+        policy: BatchPolicy {
+            bucket_floats: bucket,
+        },
+        flush_after: Duration::from_millis(1),
+    }
+}
+
+fn tensors(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32_vec(len)).collect()
+}
+
+fn check(result: &[f32], inputs: &[Vec<f32>]) {
+    let want = exec::oracle_sum(&inputs.to_vec());
+    assert_eq!(result.len(), want.len());
+    for (a, b) in result.iter().zip(&want) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_service_correct_results() {
+    let svc = AllReduceService::start(
+        single_switch(8),
+        Environment::paper(),
+        ReducerSpec::Auto, // PJRT when artifacts built, scalar otherwise
+        cfg(1 << 22),
+    );
+    for seed in 0..4 {
+        let ts = tensors(8, 70_000, seed); // spans chunk + tail kernels
+        let want = ts.clone();
+        let res = svc.allreduce(ts).unwrap();
+        check(&res.reduced, &want);
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.jobs_completed, 4);
+}
+
+#[test]
+fn burst_of_concurrent_clients() {
+    let svc = Arc::new(AllReduceService::start(
+        single_switch(6),
+        Environment::paper(),
+        ReducerSpec::Auto,
+        cfg(1 << 22),
+    ));
+    let mut handles = Vec::new();
+    for seed in 0..16u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let ts = tensors(6, 2000 + (seed as usize) * 13, seed);
+            let want = ts.clone();
+            let res = svc.allreduce(ts).unwrap();
+            check(&res.reduced, &want);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.jobs_completed, 16);
+    // Bucketing must have fused at least some of the burst.
+    assert!(
+        m.batches_flushed < 16,
+        "no fusion happened: {} batches",
+        m.batches_flushed
+    );
+}
+
+#[test]
+fn hierarchical_topology_service() {
+    let svc = AllReduceService::start(
+        asymmetric(&[3, 3], &[2]),
+        Environment::paper(),
+        ReducerSpec::Auto,
+        cfg(1 << 20),
+    );
+    let ts = tensors(8, 10_000, 42);
+    let want = ts.clone();
+    let res = svc.allreduce(ts).unwrap();
+    check(&res.reduced, &want);
+    assert!(res.plan_name.contains("GenTree"));
+}
+
+#[test]
+fn training_like_loop_through_service() {
+    // 50 "steps" of gradient sync; deterministic convergence of a toy
+    // quadratic: every worker pulls a shared parameter toward zero.
+    let n = 4;
+    let svc = AllReduceService::start(
+        single_switch(n),
+        Environment::paper(),
+        ReducerSpec::Auto,
+        ServiceConfig::default(),
+    );
+    let dim = 512;
+    let mut rng = Rng::new(5);
+    let mut w: Vec<f32> = rng.f32_vec(dim);
+    for _ in 0..50 {
+        // grad_i = (w + noise_i); averaged grad ≈ w.
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                w.iter()
+                    .map(|x| x + rng.next_f32_signed() * 0.01)
+                    .collect()
+            })
+            .collect();
+        let sum = svc.allreduce(grads).unwrap().reduced;
+        for (wi, g) in w.iter_mut().zip(&sum) {
+            *wi -= 0.1 * (g / n as f32);
+        }
+    }
+    let norm: f32 = w.iter().map(|x| x * x).sum::<f32>() / dim as f32;
+    assert!(norm < 1e-3, "did not converge: {norm}");
+}

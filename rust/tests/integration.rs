@@ -1,0 +1,193 @@
+//! Cross-module integration tests: the paper's headline claims checked
+//! end-to-end across model + plans + gentree + sim (+ executor).
+
+use genmodel::bench;
+use genmodel::exec;
+use genmodel::gentree;
+use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::fit::{fit, BenchRow};
+use genmodel::model::params::{Environment, ModelParams};
+use genmodel::plan::validate::{validate, Goal};
+use genmodel::plan::{cps, hcps, rhd, ring};
+use genmodel::runtime::Reducer;
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::builders::*;
+use genmodel::util::rng::Rng;
+
+/// Headline accuracy claim (§5.1): GenModel within a few % of "actual"
+/// (flow sim), classic model errs >10% somewhere, and GenModel's error is
+/// never worse.
+#[test]
+fn genmodel_accuracy_claim() {
+    let env = Environment::paper();
+    let mut worst_gen: f64 = 0.0;
+    let mut worst_classic: f64 = 0.0;
+    for n in [12usize, 15] {
+        let topo = single_switch(n);
+        let mut plans = vec![cps::allreduce(n), ring::allreduce(n)];
+        for fs in gentree::template::ordered_factorizations(n, 8) {
+            if fs.len() == 2 {
+                plans.push(hcps::allreduce(&fs));
+            }
+        }
+        for p in &plans {
+            let actual = simulate_plan(p, 1e8, &topo, &env, &SimConfig::new(&topo)).total;
+            let g = CostModel::new(&topo, &env, ModelKind::GenModel).plan_total(p, 1e8);
+            let c = CostModel::new(&topo, &env, ModelKind::Classic).plan_total(p, 1e8);
+            worst_gen = worst_gen.max((g - actual).abs() / actual);
+            worst_classic = worst_classic.max((c - actual).abs() / actual);
+        }
+    }
+    assert!(worst_gen < 0.05, "GenModel worst error {worst_gen:.3}");
+    assert!(worst_classic > 0.10, "classic worst error {worst_classic:.3}");
+}
+
+/// Theorem 2 across the whole plan zoo: nothing is both δ- and ε-optimal
+/// once N > w_t.
+#[test]
+fn impossibility_theorem_over_plan_zoo() {
+    use genmodel::model::optimality::check_impossibility;
+    for n in 10..=16usize {
+        let mut plans = vec![
+            cps::allreduce(n),
+            ring::allreduce(n),
+            rhd::allreduce(n),
+            genmodel::plan::reduce_broadcast::allreduce(n),
+        ];
+        for fs in gentree::template::ordered_factorizations(n, 16) {
+            plans.push(hcps::allreduce(&fs));
+        }
+        for p in plans {
+            let stats = validate(&p, Goal::AllReduce).unwrap();
+            check_impossibility(&p, &stats, 9).unwrap();
+        }
+    }
+}
+
+/// GenTree beats every baseline in simulation on every paper topology at
+/// every paper size (Table 7's qualitative content, small-to-mid scale).
+#[test]
+fn gentree_dominates_baselines() {
+    let env = Environment::paper();
+    for topo in [
+        single_switch(24),
+        single_switch(32),
+        symmetric(4, 24),
+        asymmetric(&[32, 32], &[16, 16]),
+        cross_dc(&[32, 32], &[16, 16]),
+    ] {
+        let cfg = SimConfig::new(&topo);
+        let n = topo.n_servers();
+        for s in [1e7, 1e8] {
+            let ours = {
+                let out = gentree::generate(&topo, &env, s);
+                validate(&out.plan, Goal::AllReduce).unwrap();
+                simulate_plan(&out.plan, s, &topo, &env, &cfg).total
+            };
+            for base in bench::workloads::baselines(n) {
+                let theirs = simulate_plan(&base, s, &topo, &env, &cfg).total;
+                assert!(
+                    ours <= theirs * 1.02,
+                    "{} S={s:.0e}: GenTree {ours:.3} vs {} {theirs:.3}",
+                    topo.name,
+                    base.name
+                );
+            }
+        }
+    }
+}
+
+/// Fit toolkit round-trip: simulate benches → fit → predictions match.
+#[test]
+fn fit_roundtrip_through_simulator() {
+    let env = Environment::paper();
+    let mut rows = Vec::new();
+    for n in 2..=15usize {
+        for s in [2e7, 1e8] {
+            let topo = single_switch(n);
+            let t = simulate_plan(&cps::allreduce(n), s, &topo, &env, &SimConfig::new(&topo)).total;
+            rows.push(BenchRow { n, s, time: t });
+        }
+    }
+    let f = fit(&rows).unwrap();
+    assert_eq!(f.w_t, ModelParams::cpu_testbed().w_t);
+    // Predictions reproduce the simulated benches within 5%.
+    for r in &rows {
+        let pred = f.predict_cps(r.n, r.s);
+        assert!(
+            (pred - r.time).abs() / r.time < 0.05,
+            "n={} S={:.0e}: pred {pred} vs sim {}",
+            r.n,
+            r.s,
+            r.time
+        );
+    }
+}
+
+/// The full pipeline: GenTree plan → validator → simulator → real
+/// execution with numeric verification, on a hierarchical topology.
+#[test]
+fn full_pipeline_hierarchical() {
+    let env = Environment::paper();
+    let topo = asymmetric(&[4, 4], &[3]);
+    let out = gentree::generate(&topo, &env, 1e6);
+    validate(&out.plan, Goal::AllReduce).unwrap();
+    let sim = simulate_plan(&out.plan, 1e6, &topo, &env, &SimConfig::new(&topo));
+    assert!(sim.total > 0.0);
+    let mut rng = Rng::new(99);
+    let inputs: Vec<Vec<f32>> = (0..topo.n_servers()).map(|_| rng.f32_vec(50_000)).collect();
+    let outc = exec::execute_plan(&out.plan, &inputs, &Reducer::Scalar).unwrap();
+    exec::verify(&outc, &inputs, 1e-4).unwrap();
+}
+
+/// Mirror symmetry: for every baseline, RS validates as ReduceScatter and
+/// RS + mirror validates as AllReduce (the §4.2 symmetry GenTree relies on).
+#[test]
+fn reduce_scatter_mirror_symmetry() {
+    for n in [4usize, 7, 8, 12] {
+        for rs in [
+            cps::reduce_scatter(n),
+            ring::reduce_scatter(n),
+            rhd::reduce_scatter(n),
+        ] {
+            validate(&rs, Goal::ReduceScatter).unwrap();
+            validate(&rs.into_allreduce(), Goal::AllReduce).unwrap();
+        }
+    }
+    for fs in [vec![2usize, 2], vec![4, 3], vec![2, 3, 2]] {
+        let rs = hcps::reduce_scatter(&fs);
+        validate(&rs, Goal::ReduceScatter).unwrap();
+        validate(&rs.into_allreduce(), Goal::AllReduce).unwrap();
+    }
+}
+
+/// GPU-pod scenario (Table 4's shape): GenTree beats flat Ring, and the
+/// gap narrows as machines increase (inter-machine traffic share grows).
+#[test]
+fn gpu_pod_speedup_shrinks_with_scale() {
+    let env = Environment::gpu();
+    let mut speedups = Vec::new();
+    for machines in [2usize, 4, 8] {
+        let topo = gpu_pod(machines, 8);
+        let cfg = SimConfig::new(&topo);
+        let s = 3.2e8;
+        let gen = {
+            let out = gentree::generate(&topo, &env, s);
+            simulate_plan(&out.plan, s, &topo, &env, &cfg).total
+        };
+        let nccl = simulate_plan(
+            &ring::allreduce(topo.n_servers()),
+            s,
+            &topo,
+            &env,
+            &cfg,
+        )
+        .total;
+        assert!(gen < nccl, "machines={machines}: {gen} !< {nccl}");
+        speedups.push(nccl / gen);
+    }
+    assert!(
+        speedups[0] > speedups[2],
+        "speedup should shrink with scale: {speedups:?}"
+    );
+}

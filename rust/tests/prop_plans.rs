@@ -1,0 +1,219 @@
+//! Property-based tests (in-repo `util::prop` harness, seeds reported on
+//! failure and reproducible via PROP_SEED=<seed>).
+
+use genmodel::exec;
+use genmodel::gentree;
+use genmodel::model::optimality::check_impossibility;
+use genmodel::model::params::Environment;
+use genmodel::plan::validate::{validate, Goal};
+use genmodel::plan::{acps, cps, hcps, rhd, ring};
+use genmodel::runtime::Reducer;
+use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::topo::{builders, Topology};
+use genmodel::util::prop;
+use genmodel::util::rng::Rng;
+
+/// Random tree topology: 1–3 levels, arbitrary child counts.
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.gen_range(0, 3) {
+        0 => builders::single_switch(rng.gen_range(2, 24)),
+        1 => {
+            let mids = rng.gen_range(2, 5);
+            let sizes: Vec<usize> = (0..mids).map(|_| rng.gen_range(1, 8)).collect();
+            if sizes.iter().sum::<usize>() < 2 {
+                builders::single_switch(4)
+            } else {
+                builders::asymmetric(&sizes, &[])
+            }
+        }
+        _ => {
+            let a: Vec<usize> = (0..rng.gen_range(1, 3)).map(|_| rng.gen_range(1, 6)).collect();
+            let b: Vec<usize> = (0..rng.gen_range(1, 3)).map(|_| rng.gen_range(1, 6)).collect();
+            if a.iter().chain(&b).sum::<usize>() < 2 {
+                builders::single_switch(3)
+            } else {
+                builders::cross_dc(&a, &b)
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gentree_valid_on_random_topologies() {
+    let env = Environment::paper();
+    prop::run("gentree-valid", 48, |rng| {
+        let topo = random_topology(rng);
+        let s = 10f64.powf(rng.gen_range(4, 9) as f64);
+        let out = gentree::generate(&topo, &env, s);
+        validate(&out.plan, Goal::AllReduce)
+            .map(|_| ())
+            .map_err(|e| format!("{}: {e}", topo.name))
+    });
+}
+
+#[test]
+fn prop_gentree_never_loses_to_baselines_by_much() {
+    let env = Environment::paper();
+    prop::run("gentree-competitive", 16, |rng| {
+        let topo = random_topology(rng);
+        if topo.n_servers() < 2 {
+            return Ok(());
+        }
+        let s = 1e7;
+        let cfg = SimConfig::new(&topo);
+        let ours = simulate_plan(
+            &gentree::generate(&topo, &env, s).plan,
+            s,
+            &topo,
+            &env,
+            &cfg,
+        )
+        .total;
+        let ring = simulate_plan(&ring::allreduce(topo.n_servers()), s, &topo, &env, &cfg).total;
+        if ours > ring * 1.05 {
+            return Err(format!("{}: GenTree {ours} vs Ring {ring}", topo.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_plans_valid_and_theorem2_holds() {
+    prop::run("baselines-valid", 64, |rng| {
+        let n = rng.gen_range(2, 33);
+        let w_t = rng.gen_range(2, 12);
+        let plans = vec![
+            cps::allreduce(n),
+            ring::allreduce(n),
+            rhd::allreduce(n),
+            genmodel::plan::reduce_broadcast::allreduce(n),
+        ];
+        for p in plans {
+            let stats =
+                validate(&p, Goal::AllReduce).map_err(|e| format!("{}: {e}", p.name))?;
+            check_impossibility(&p, &stats, w_t)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hcps_any_factorization_valid() {
+    prop::run("hcps-valid", 48, |rng| {
+        // Random factor list with product ≤ 64.
+        let mut factors = Vec::new();
+        let mut prod = 1usize;
+        loop {
+            let f = rng.gen_range(2, 6);
+            if prod * f > 64 || (factors.len() >= 2 && rng.gen_range(0, 2) == 0) {
+                break;
+            }
+            prod *= f;
+            factors.push(f);
+        }
+        if factors.len() < 2 {
+            factors = vec![2, rng.gen_range(2, 6)];
+        }
+        let p = hcps::allreduce(&factors);
+        validate(&p, Goal::AllReduce)
+            .map(|_| ())
+            .map_err(|e| format!("{factors:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_acps_random_owner_maps_valid() {
+    prop::run("acps-valid", 64, |rng| {
+        let n = rng.gen_range(2, 12);
+        let nb = rng.gen_range(1, 20);
+        let owners: Vec<usize> = (0..nb).map(|_| rng.gen_range(0, n - 1)).collect();
+        let p = acps::allreduce_with_owners(n, &owners);
+        validate(&p, Goal::AllReduce)
+            .map(|_| ())
+            .map_err(|e| format!("n={n} owners={owners:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_executor_matches_oracle_on_random_plans() {
+    prop::run("exec-oracle", 24, |rng| {
+        let n = rng.gen_range(2, 10);
+        let s = rng.gen_range(1, 5000);
+        let plan = match rng.gen_range(0, 4) {
+            0 => cps::allreduce(n),
+            1 => ring::allreduce(n),
+            2 => rhd::allreduce(n),
+            _ => genmodel::plan::reduce_broadcast::allreduce(n),
+        };
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| rng.f32_vec(s)).collect();
+        let out = exec::execute_plan(&plan, &inputs, &Reducer::Scalar)
+            .map_err(|e| format!("{e}"))?;
+        exec::verify(&out, &inputs, 1e-3).map_err(|e| format!("{}: {e}", plan.name))
+    });
+}
+
+#[test]
+fn prop_mirror_of_random_valid_rs_is_valid_allgather() {
+    prop::run("mirror-valid", 48, |rng| {
+        let n = rng.gen_range(2, 16);
+        let rs = match rng.gen_range(0, 3) {
+            0 => cps::reduce_scatter(n),
+            1 => ring::reduce_scatter(n),
+            _ => rhd::reduce_scatter(n),
+        };
+        validate(&rs, Goal::ReduceScatter).map_err(|e| format!("{e}"))?;
+        validate(&rs.into_allreduce(), Goal::AllReduce)
+            .map(|_| ())
+            .map_err(|e| format!("{e}"))
+    });
+}
+
+#[test]
+fn prop_simulator_sane_on_random_inputs() {
+    let env = Environment::paper();
+    prop::run("sim-sane", 24, |rng| {
+        let topo = random_topology(rng);
+        let n = topo.n_servers();
+        if n < 2 {
+            return Ok(());
+        }
+        let plan = if rng.gen_range(0, 2) == 0 {
+            cps::allreduce(n)
+        } else {
+            ring::allreduce(n)
+        };
+        let s = 10f64.powf(rng.gen_range(3, 8) as f64);
+        let r = simulate_plan(&plan, s, &topo, &env, &SimConfig::new(&topo));
+        if !(r.total.is_finite() && r.total > 0.0) {
+            return Err(format!("{}: total {}", topo.name, r.total));
+        }
+        if r.communication < 0.0 || r.calculation < 0.0 {
+            return Err("negative component".into());
+        }
+        let sum: f64 = r.per_phase.iter().sum();
+        if (sum - r.total).abs() > 1e-9 * r.total {
+            return Err(format!("phase sum {sum} != total {}", r.total));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_stats_bandwidth_conservation() {
+    // Σ sent = Σ received for every plan (transfers conserve blocks).
+    prop::run("bandwidth-conservation", 48, |rng| {
+        let n = rng.gen_range(2, 20);
+        let p = match rng.gen_range(0, 3) {
+            0 => cps::allreduce(n),
+            1 => ring::allreduce(n),
+            _ => rhd::allreduce(n),
+        };
+        let stats = validate(&p, Goal::AllReduce).map_err(|e| format!("{e}"))?;
+        let sent: usize = stats.sent_blocks.iter().sum();
+        let recv: usize = stats.recv_blocks.iter().sum();
+        if sent != recv {
+            return Err(format!("sent {sent} != recv {recv}"));
+        }
+        Ok(())
+    });
+}

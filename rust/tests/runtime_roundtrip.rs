@@ -1,0 +1,74 @@
+//! PJRT round-trip tests: the AOT artifacts loaded and executed from rust
+//! must match the scalar oracle bit-for-bit tolerances aside.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use genmodel::runtime::{Artifacts, Reducer};
+use genmodel::util::rng::Rng;
+
+fn arts() -> Option<std::sync::Arc<Artifacts>> {
+    Artifacts::load_default().ok().map(std::sync::Arc::new)
+}
+
+fn rand_rows(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k).map(|_| rng.f32_vec(n)).collect()
+}
+
+fn close(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= 1e-3 * x.abs().max(1.0), "at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_reduce_matches_scalar_exact_variants() {
+    let Some(a) = arts() else { eprintln!("skipping: no artifacts"); return };
+    let r = Reducer::Pjrt(a);
+    for k in [2usize, 3, 4, 6, 8, 12, 16] {
+        for n in [4096usize, 65536] {
+            let rows = rand_rows(k, n, (k * n) as u64);
+            let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            let got = r.reduce(&refs).unwrap();
+            let want = Reducer::Scalar.reduce(&refs).unwrap();
+            close(&got, &want);
+        }
+    }
+}
+
+#[test]
+fn pjrt_reduce_odd_shapes() {
+    let Some(a) = arts() else { eprintln!("skipping: no artifacts"); return };
+    let r = Reducer::Pjrt(a);
+    // Fan-ins needing padding (5 -> 6, 9 -> 12) and lengths with tails.
+    for (k, n) in [(5usize, 1000usize), (9, 70000), (7, 65536 + 4096 + 17), (2, 1), (17, 8192), (33, 5000)] {
+        let rows = rand_rows(k, n, (k + n) as u64);
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let got = r.reduce(&refs).unwrap();
+        let want = Reducer::Scalar.reduce(&refs).unwrap();
+        close(&got, &want);
+    }
+}
+
+#[test]
+fn pjrt_sgd_matches_scalar() {
+    let Some(a) = arts() else { eprintln!("skipping: no artifacts"); return };
+    let r = Reducer::Pjrt(a);
+    let n = 65536 + 123;
+    let mut rng = Rng::new(3);
+    let w0 = rng.f32_vec(n);
+    let g = rng.f32_vec(n);
+    let mut w_pjrt = w0.clone();
+    r.sgd_update(&mut w_pjrt, &g, 0.01).unwrap();
+    let mut w_scalar = w0;
+    Reducer::Scalar.sgd_update(&mut w_scalar, &g, 0.01).unwrap();
+    close(&w_pjrt, &w_scalar);
+}
+
+#[test]
+fn manifest_integrity() {
+    let Some(a) = arts() else { eprintln!("skipping: no artifacts"); return };
+    assert_eq!(a.manifest.chunk_n, 65536);
+    assert!(a.manifest.reduce_ks.contains(&2));
+    assert!(a.manifest.reduce_ks.contains(&16));
+}
