@@ -1,0 +1,61 @@
+//! Engine quickstart: the unified API in ~40 lines.
+//!
+//! One registry of algorithms, three evaluation backends, one report
+//! shape — `predict`, `simulate`, and `run` are the same call with a
+//! different [`Backend`].
+//!
+//! Run: `cargo run --release --example engine`
+
+use genmodel::api::{ApiError, Backend, Engine};
+use genmodel::model::params::Environment;
+use genmodel::topo::builders::single_switch;
+
+fn main() -> anyhow::Result<()> {
+    // A 12-server 10 Gbps rack — the paper's CPU testbed shape.
+    let engine = Engine::new(single_switch(12), Environment::paper());
+
+    // 1. What can run here? (RHD is absent: 12 is not a power of two.)
+    println!("algorithms applicable on {}:", engine.topo().name);
+    for algo in engine.algorithms() {
+        println!("  {algo}");
+    }
+
+    // 2. Cross-backend evaluation is one loop: the analytic GenModel
+    //    prediction, the flow-level simulation, and a real verified
+    //    execution (100k floats) of the same algorithm spec.
+    let algo = engine.parse_algo("gentree")?;
+    println!("\n{algo} across backends:");
+    for backend in Backend::ALL {
+        let s = if backend == Backend::Executed { 1e5 } else { 1e8 };
+        let ev = engine.evaluate(&algo, s, backend)?;
+        println!(
+            "  {:<5} S={s:.0e}: {:.4}s  ({} phases, {} transfers)",
+            backend.name(),
+            ev.seconds,
+            ev.stats.phases,
+            ev.transfers
+        );
+    }
+
+    // 3. Fig. 8-style accuracy check for every applicable algorithm:
+    //    |GenModel − simulator| / simulator.
+    println!("\nGenModel vs simulator at S=1e8 (Fig. 8 style):");
+    for algo in engine.algorithms() {
+        let evs = engine.compare(&algo, 1e8, &[Backend::Analytic, Backend::Simulated])?;
+        let (model, sim) = (evs[0].seconds, evs[1].seconds);
+        println!(
+            "  {:<14} model {model:.4}s  sim {sim:.4}s  err {:+.1}%",
+            algo.to_string(),
+            (model - sim) / sim * 100.0
+        );
+    }
+
+    // 4. Errors are typed, not panics.
+    match engine.parse_algo("rhd") {
+        Err(ApiError::AlgoTopoMismatch { reason, .. }) => {
+            println!("\nrhd on 12 servers is rejected: {reason}");
+        }
+        other => anyhow::bail!("expected AlgoTopoMismatch, got {other:?}"),
+    }
+    Ok(())
+}

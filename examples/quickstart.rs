@@ -6,24 +6,23 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use genmodel::exec;
+use genmodel::api::{AlgoSpec, Backend, Engine};
 use genmodel::gentree;
-use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::cost::ModelKind;
 use genmodel::model::params::Environment;
-use genmodel::plan::{cps, ring};
 use genmodel::runtime::ReducerSpec;
-use genmodel::sim::{simulate_plan, SimConfig};
-use genmodel::topo::builders::single_switch;
-use genmodel::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     // A 12-server 10 Gbps rack — the paper's CPU testbed shape.
-    let topo = single_switch(12);
-    let env = Environment::paper();
+    let engine = Engine::new(
+        genmodel::topo::builders::single_switch(12),
+        Environment::paper(),
+    )
+    .with_reducer(ReducerSpec::Auto);
     let s_model = 1e8; // plan for 100M floats
 
     // --- 1. GenTree generates the plan -----------------------------------
-    let out = gentree::generate(&topo, &env, s_model);
+    let out = gentree::generate(engine.topo(), engine.env(), s_model);
     println!("GenTree chose: {}", out.selections[0].choice);
     println!(
         "plan: {} phases, {} transfers",
@@ -32,39 +31,42 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- 2. price it against the baselines --------------------------------
-    let cm = CostModel::new(&topo, &env, ModelKind::GenModel);
-    let classic = CostModel::new(&topo, &env, ModelKind::Classic);
+    let classic = engine.clone().with_model(ModelKind::Classic);
     println!("\nGenModel vs (α,β,γ) predictions at S=1e8 floats:");
-    for plan in [out.plan.clone(), cps::allreduce(12), ring::allreduce(12)] {
-        let actual = simulate_plan(&plan, s_model, &topo, &env, &SimConfig::new(&topo)).total;
+    for algo in [
+        AlgoSpec::GenTree { rearrange: true },
+        AlgoSpec::Cps,
+        AlgoSpec::Ring,
+    ] {
+        // One plan per algorithm, priced under all three views.
+        let plan = engine.plan(&algo, s_model)?;
+        let name = algo.to_string();
+        let evs =
+            engine.compare_plan(&name, &plan, s_model, &[Backend::Simulated, Backend::Analytic])?;
         println!(
             "  {:<14} sim {:.3}s   GenModel {:.3}s   classic {:.3}s",
             plan.name,
-            actual,
-            cm.plan_total(&plan, s_model),
-            classic.plan_total(&plan, s_model),
+            evs[0].seconds,
+            evs[1].seconds,
+            classic.evaluate_plan(&name, &plan, s_model, Backend::Analytic)?.seconds,
         );
     }
 
     // --- 3. run it for real ------------------------------------------------
     let s_exec = 300_000usize; // keep the demo light: 300k floats/worker
-    let reducer = ReducerSpec::Auto.build()?;
+    println!("\nexecuting on real data, 12 workers × {s_exec} floats…");
+    let ev = engine.evaluate(
+        &AlgoSpec::GenTree { rearrange: true },
+        s_exec as f64,
+        Backend::Executed,
+    )?;
+    let x = ev.exec.expect("executed backend reports execution stats");
     println!(
-        "\nexecuting on real data ({} reducer), {} workers × {} floats…",
-        if reducer.is_pjrt() { "PJRT" } else { "scalar" },
-        12,
-        s_exec
-    );
-    let mut rng = Rng::new(2024);
-    let inputs: Vec<Vec<f32>> = (0..12).map(|_| rng.f32_vec(s_exec)).collect();
-    let t0 = std::time::Instant::now();
-    let outcome = exec::execute_plan(&out.plan, &inputs, &reducer)?;
-    exec::verify(&outcome, &inputs, 1e-4)?;
-    println!(
-        "  verified ✓  ({} reduce calls, max fan-in {}, {:.1} ms wall)",
-        outcome.reduce_calls,
-        outcome.max_fanin,
-        t0.elapsed().as_secs_f64() * 1e3
+        "  verified ✓  ({} reducer, {} reduce calls, max fan-in {}, {:.1} ms wall)",
+        if x.pjrt { "PJRT" } else { "scalar" },
+        x.reduce_calls,
+        x.max_fanin,
+        x.wall_secs * 1e3
     );
     Ok(())
 }

@@ -67,13 +67,17 @@ fn main() {
                 bucket_floats: 1 << 20,
             },
             flush_after: Duration::from_micros(200),
+            ..ServiceConfig::default()
         },
     );
     let jobs: Vec<Vec<Vec<f32>>> = (0..64)
         .map(|_| (0..8).map(|_| rng.f32_vec(4096)).collect())
         .collect();
     bench("service_64x4k_jobs", || {
-        let handles: Vec<_> = jobs.iter().map(|t| svc.submit(t.clone())).collect();
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|t| svc.submit(t.clone()).expect("service up"))
+            .collect();
         for h in handles {
             h.recv().unwrap().unwrap();
         }

@@ -1,0 +1,324 @@
+//! The `Engine` facade: one object tying a topology + parameter
+//! environment to the algorithm registry and the three evaluation
+//! backends.
+//!
+//! ```no_run
+//! use genmodel::api::{Backend, Engine};
+//! use genmodel::model::params::Environment;
+//! use genmodel::topo::builders::single_switch;
+//!
+//! let engine = Engine::new(single_switch(8), Environment::paper());
+//! let algo = engine.parse_algo("ring")?;
+//! let pred = engine.evaluate(&algo, 1e8, Backend::Analytic)?;
+//! let sim = engine.evaluate(&algo, 1e8, Backend::Simulated)?;
+//! println!("predicted {:.3}s vs simulated {:.3}s", pred.seconds, sim.seconds);
+//! # Ok::<(), genmodel::api::ApiError>(())
+//! ```
+
+use std::time::Instant;
+
+use crate::exec;
+use crate::model::cost::{CostModel, ModelKind};
+use crate::model::params::Environment;
+use crate::plan::validate::{validate, Goal};
+use crate::plan::Plan;
+use crate::runtime::ReducerSpec;
+use crate::sim::{simulate_plan, SimConfig};
+use crate::topo::Topology;
+use crate::util::rng::Rng;
+
+use super::error::ApiError;
+use super::evaluator::{Backend, Evaluation, ExecReport};
+use super::spec::{applicable_specs, AlgoSpec};
+
+/// Ceiling on `n_servers × payload` floats the executed backend will
+/// allocate (~6 GiB of f32 buffers) — a typo in `--size` should fail
+/// fast, not OOM the host.
+const EXEC_FLOAT_BUDGET: f64 = 1.5e9;
+
+/// Facade over (topology, environment, registry, backends).
+#[derive(Clone)]
+pub struct Engine {
+    topo: Topology,
+    env: Environment,
+    kind: ModelKind,
+    reducer: ReducerSpec,
+    exec_seed: u64,
+}
+
+impl Engine {
+    /// Engine with the GenModel predictor and the scalar reducer.
+    pub fn new(topo: Topology, env: Environment) -> Engine {
+        Engine {
+            topo,
+            env,
+            kind: ModelKind::GenModel,
+            reducer: ReducerSpec::Scalar,
+            exec_seed: 0xC0FFEE,
+        }
+    }
+
+    /// Which analytic model prices plans (GenModel vs classic (α,β,γ)).
+    pub fn with_model(mut self, kind: ModelKind) -> Engine {
+        self.kind = kind;
+        self
+    }
+
+    /// Which reducer the executed backend uses.
+    pub fn with_reducer(mut self, reducer: ReducerSpec) -> Engine {
+        self.reducer = reducer;
+        self
+    }
+
+    /// Seed for the executed backend's synthetic input tensors.
+    pub fn with_exec_seed(mut self, seed: u64) -> Engine {
+        self.exec_seed = seed;
+        self
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn env(&self) -> &Environment {
+        &self.env
+    }
+
+    /// Parse an algorithm string and check it applies to this topology.
+    pub fn parse_algo(&self, spec: &str) -> Result<AlgoSpec, ApiError> {
+        let algo = AlgoSpec::parse(spec)?;
+        algo.applicable(&self.topo)?;
+        Ok(algo)
+    }
+
+    /// Every registered algorithm applicable to this topology.
+    pub fn algorithms(&self) -> Vec<AlgoSpec> {
+        applicable_specs(&self.topo)
+    }
+
+    /// Build (and validate) the plan for `spec` at payload `s` floats.
+    pub fn plan(&self, spec: &AlgoSpec, s: f64) -> Result<Plan, ApiError> {
+        spec.build(&self.topo, &self.env, s)
+    }
+
+    /// Evaluate `spec` at payload `s` floats on one backend.
+    pub fn evaluate(
+        &self,
+        spec: &AlgoSpec,
+        s: f64,
+        backend: Backend,
+    ) -> Result<Evaluation, ApiError> {
+        Ok(self.compare(spec, s, &[backend])?.pop().expect("one backend"))
+    }
+
+    /// Evaluate `spec` on several backends (Fig. 8-style comparison).
+    /// The plan is built and validated once, whatever the backend count.
+    pub fn compare(
+        &self,
+        spec: &AlgoSpec,
+        s: f64,
+        backends: &[Backend],
+    ) -> Result<Vec<Evaluation>, ApiError> {
+        // Build without the registry's own validation pass — the stats
+        // pass below validates exactly once.
+        spec.applicable(&self.topo)?;
+        let plan = (spec.source().build)(spec, &self.topo, &self.env, s);
+        self.compare_plan(&spec.to_string(), &plan, s, backends)
+    }
+
+    /// Evaluate an already-built plan on several backends, validating it
+    /// once (the multi-backend sibling of [`Self::evaluate_plan`]).
+    pub fn compare_plan(
+        &self,
+        algo: &str,
+        plan: &Plan,
+        s: f64,
+        backends: &[Backend],
+    ) -> Result<Vec<Evaluation>, ApiError> {
+        let stats = self.validated_stats(algo, plan)?;
+        backends
+            .iter()
+            .map(|&b| self.evaluate_validated(algo, plan, stats.clone(), s, b))
+            .collect()
+    }
+
+    /// Evaluate an already-built plan (any source — GenTree output, a
+    /// hand-written plan, a cached router entry) on one backend.
+    pub fn evaluate_plan(
+        &self,
+        algo: &str,
+        plan: &Plan,
+        s: f64,
+        backend: Backend,
+    ) -> Result<Evaluation, ApiError> {
+        let stats = self.validated_stats(algo, plan)?;
+        self.evaluate_validated(algo, plan, stats, s, backend)
+    }
+
+    fn validated_stats(
+        &self,
+        algo: &str,
+        plan: &Plan,
+    ) -> Result<crate::plan::PlanStats, ApiError> {
+        validate(plan, Goal::AllReduce).map_err(|e| ApiError::InvalidPlan {
+            algo: algo.to_string(),
+            source: e,
+        })
+    }
+
+    fn evaluate_validated(
+        &self,
+        algo: &str,
+        plan: &Plan,
+        stats: crate::plan::PlanStats,
+        s: f64,
+        backend: Backend,
+    ) -> Result<Evaluation, ApiError> {
+        let mut ev = Evaluation {
+            algo: algo.to_string(),
+            plan_name: plan.name.clone(),
+            backend,
+            payload: s,
+            seconds: 0.0,
+            terms: None,
+            sim: None,
+            exec: None,
+            stats,
+            transfers: plan.n_transfers(),
+        };
+        match backend {
+            Backend::Analytic => {
+                let cost = CostModel::new(&self.topo, &self.env, self.kind).plan_cost(plan, s);
+                ev.seconds = cost.total();
+                ev.terms = Some(cost);
+            }
+            Backend::Simulated => {
+                let r = simulate_plan(plan, s, &self.topo, &self.env, &SimConfig::new(&self.topo));
+                ev.seconds = r.total;
+                ev.sim = Some(r);
+            }
+            Backend::Executed => {
+                ev.exec = Some(self.execute(plan, s, &mut ev.seconds)?);
+            }
+        }
+        Ok(ev)
+    }
+
+    fn execute(&self, plan: &Plan, s: f64, seconds: &mut f64) -> Result<ExecReport, ApiError> {
+        let floats = s as usize;
+        if floats == 0 {
+            return Err(ApiError::BadRequest {
+                reason: format!("executed backend needs a positive integer payload, got {s}"),
+            });
+        }
+        if s * plan.n_servers as f64 > EXEC_FLOAT_BUDGET {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "executed backend refuses {} × {floats} floats (> {EXEC_FLOAT_BUDGET:.1e} \
+                     total); pass a smaller size",
+                    plan.n_servers
+                ),
+            });
+        }
+        let reducer = self.reducer.build().map_err(|e| ApiError::BackendUnavailable {
+            backend: "exec",
+            reason: e.to_string(),
+        })?;
+        let mut rng = Rng::new(self.exec_seed);
+        let inputs: Vec<Vec<f32>> = (0..plan.n_servers).map(|_| rng.f32_vec(floats)).collect();
+        let t0 = Instant::now();
+        let out = exec::execute_plan(plan, &inputs, &reducer).map_err(|e| ApiError::ExecFailed {
+            reason: e.to_string(),
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        // Same tolerance the pre-API `repro run` gate used.
+        exec::verify(&out, &inputs, 1e-4).map_err(|e| ApiError::ExecFailed {
+            reason: format!("verification against oracle failed: {e}"),
+        })?;
+        *seconds = wall;
+        Ok(ExecReport {
+            wall_secs: wall,
+            reduce_calls: out.reduce_calls,
+            reduced_floats: out.reduced_floats,
+            max_fanin: out.max_fanin,
+            verified: true,
+            pjrt: reducer.is_pjrt(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::single_switch;
+
+    fn engine(n: usize) -> Engine {
+        Engine::new(single_switch(n), Environment::paper())
+    }
+
+    #[test]
+    fn one_code_path_serves_all_backends() {
+        let e = engine(6);
+        let algo = e.parse_algo("cps").unwrap();
+        let model = e.evaluate(&algo, 4096.0, Backend::Analytic).unwrap();
+        assert!(model.seconds > 0.0);
+        assert!(model.terms.is_some() && model.sim.is_none() && model.exec.is_none());
+
+        let sim = e.evaluate(&algo, 4096.0, Backend::Simulated).unwrap();
+        assert!(sim.seconds > 0.0);
+        assert!(sim.sim.is_some() && sim.terms.is_none());
+
+        let exec = e.evaluate(&algo, 4096.0, Backend::Executed).unwrap();
+        let report = exec.exec.unwrap();
+        assert!(report.verified);
+        assert!(report.reduce_calls > 0);
+    }
+
+    #[test]
+    fn compare_is_a_one_liner() {
+        let e = engine(4);
+        let algo = e.parse_algo("ring").unwrap();
+        let evs = e.compare(&algo, 1e6, &[Backend::Analytic, Backend::Simulated]).unwrap();
+        assert_eq!(evs.len(), 2);
+        // Ring on a quiet single switch: predictor and simulator agree.
+        let (a, b) = (evs[0].seconds, evs[1].seconds);
+        assert!((a - b).abs() / b < 0.1, "model {a} vs sim {b}");
+    }
+
+    #[test]
+    fn wrong_topology_is_a_typed_error() {
+        let e = engine(6);
+        match e.parse_algo("rhd") {
+            Err(ApiError::AlgoTopoMismatch { .. }) => {}
+            other => panic!("expected AlgoTopoMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_algo_is_a_typed_error() {
+        assert!(matches!(
+            engine(4).parse_algo("nope"),
+            Err(ApiError::UnknownAlgo { .. })
+        ));
+    }
+
+    #[test]
+    fn exec_budget_guard() {
+        let e = engine(4);
+        let algo = e.parse_algo("cps").unwrap();
+        match e.evaluate(&algo, 1e12, Backend::Executed) {
+            Err(ApiError::BadRequest { reason }) => assert!(reason.contains("refuses")),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gentree_selection_consistency() {
+        // The facade's gentree plan equals the direct generator output.
+        let e = engine(9);
+        let algo = e.parse_algo("gentree").unwrap();
+        let via_api = e.plan(&algo, 1e6).unwrap();
+        let direct = crate::gentree::generate(e.topo(), e.env(), 1e6).plan;
+        assert_eq!(via_api, direct);
+    }
+}

@@ -1,0 +1,110 @@
+//! Typed errors for the public API surface.
+//!
+//! Every fallible entry point of the [`crate::api`] layer — algorithm
+//! parsing, applicability checks, plan building, backend evaluation, and
+//! the coordinator service — returns [`ApiError`] instead of panicking or
+//! stringly-typed errors, so callers can branch on the failure class
+//! (retry on `ExecFailed`, re-plan on `AlgoTopoMismatch`, surface
+//! `UnknownAlgo` with the registry listing, …).
+
+use std::fmt;
+
+use crate::plan::validate::ValidateError;
+
+/// The error type of the `api` layer and the coordinator service.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// The algorithm string matched no registered plan source.
+    UnknownAlgo {
+        spec: String,
+        /// Spec templates of every registered source (e.g. `hcps:AxB[xC]`).
+        known: Vec<&'static str>,
+    },
+    /// The backend string matched no evaluation backend.
+    UnknownBackend { spec: String },
+    /// The algorithm is registered but cannot run on this topology
+    /// (e.g. RHD on a non-power-of-two server count).
+    AlgoTopoMismatch {
+        algo: String,
+        topo: String,
+        reason: String,
+    },
+    /// A built plan failed AllReduce validation — a bug in a plan builder
+    /// or a corrupted registry entry; never expected for shipped sources.
+    InvalidPlan {
+        algo: String,
+        source: ValidateError,
+    },
+    /// The request itself is malformed (wrong tensor count, ragged
+    /// tensors, zero payload, …).
+    BadRequest { reason: String },
+    /// The data-plane execution failed or its result failed verification.
+    ExecFailed { reason: String },
+    /// The requested backend cannot run in this build/environment.
+    BackendUnavailable {
+        backend: &'static str,
+        reason: String,
+    },
+    /// The coordinator service has been stopped (or its leader is gone).
+    ServiceStopped,
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownAlgo { spec, known } => {
+                write!(f, "unknown algorithm {spec:?} (known: {})", known.join(", "))
+            }
+            ApiError::UnknownBackend { spec } => {
+                write!(f, "unknown backend {spec:?} (known: model, sim, exec)")
+            }
+            ApiError::AlgoTopoMismatch { algo, topo, reason } => {
+                write!(f, "algorithm {algo} cannot run on {topo}: {reason}")
+            }
+            ApiError::InvalidPlan { algo, source } => {
+                write!(f, "algorithm {algo} built an invalid plan: {source}")
+            }
+            ApiError::BadRequest { reason } => write!(f, "bad request: {reason}"),
+            ApiError::ExecFailed { reason } => write!(f, "execution failed: {reason}"),
+            ApiError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend {backend} unavailable: {reason}")
+            }
+            ApiError::ServiceStopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApiError::InvalidPlan { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_class() {
+        let e = ApiError::UnknownAlgo {
+            spec: "warp".into(),
+            known: vec!["gentree", "cps"],
+        };
+        assert!(e.to_string().contains("warp"));
+        assert!(e.to_string().contains("gentree"));
+        assert_eq!(ApiError::ServiceStopped.to_string(), "service stopped");
+    }
+
+    #[test]
+    fn invalid_plan_carries_source() {
+        use std::error::Error;
+        let e = ApiError::InvalidPlan {
+            algo: "cps".into(),
+            source: ValidateError::OutOfRange("x".into()),
+        };
+        assert!(e.source().is_some());
+    }
+}

@@ -1,0 +1,146 @@
+//! Evaluation backends and the unified evaluation report.
+//!
+//! The paper compares every algorithm three ways: the analytic GenModel
+//! predictor (Eq. 11), the flow-level simulator (§5.3, the "actual" of
+//! Fig. 8), and the real testbed. [`Backend`] names those three ways and
+//! [`Evaluation`] is the one report shape they all return, so predict /
+//! simulate / execute become a single code path and Fig. 8-style
+//! cross-backend accuracy checks are a loop over [`Backend::ALL`].
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::model::cost::CostBreakdown;
+use crate::plan::PlanStats;
+use crate::sim::SimResult;
+
+use super::error::ApiError;
+
+/// How a plan's time cost is obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Closed-form GenModel / classic-model prediction (`CostModel`).
+    Analytic,
+    /// Incast-aware flow-level simulation (`sim`).
+    Simulated,
+    /// Real data-plane execution (`exec` + reducer), verified against the
+    /// exact oracle; reports wall-clock time.
+    Executed,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 3] = [Backend::Analytic, Backend::Simulated, Backend::Executed];
+
+    /// Canonical CLI name (`model` / `sim` / `exec`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Analytic => "model",
+            Backend::Simulated => "sim",
+            Backend::Executed => "exec",
+        }
+    }
+
+    pub fn parse(spec: &str) -> Result<Backend, ApiError> {
+        match spec.trim().to_ascii_lowercase().as_str() {
+            "model" | "analytic" | "genmodel" => Ok(Backend::Analytic),
+            "sim" | "simulated" | "simulator" => Ok(Backend::Simulated),
+            "exec" | "executed" | "run" | "testbed" => Ok(Backend::Executed),
+            _ => Err(ApiError::UnknownBackend {
+                spec: spec.to_string(),
+            }),
+        }
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Backend {
+    type Err = ApiError;
+
+    fn from_str(s: &str) -> Result<Backend, ApiError> {
+        Backend::parse(s)
+    }
+}
+
+/// Accounting of one real data-plane execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecReport {
+    /// Wall-clock execution time (the [`Evaluation::seconds`] of `exec`).
+    pub wall_secs: f64,
+    pub reduce_calls: usize,
+    pub reduced_floats: usize,
+    pub max_fanin: usize,
+    /// Result checked against the exact f64 oracle.
+    pub verified: bool,
+    /// Whether the PJRT reducer (vs the scalar fallback) did the math.
+    pub pjrt: bool,
+}
+
+/// The unified report every backend returns.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// The algorithm spec that was evaluated (`AlgoSpec` display form).
+    pub algo: String,
+    /// The concrete plan's name (e.g. `GenTree`, `CPS(n=24)`).
+    pub plan_name: String,
+    pub backend: Backend,
+    /// Payload size in floats.
+    pub payload: f64,
+    /// The headline time in seconds: predicted (analytic), modelled
+    /// (simulated), or wall-clock (executed).
+    pub seconds: f64,
+    /// Per-term (α, β, γ, δ, ε) decomposition — analytic backend only.
+    pub terms: Option<CostBreakdown>,
+    /// Full simulator outcome — simulated backend only.
+    pub sim: Option<SimResult>,
+    /// Execution accounting — executed backend only.
+    pub exec: Option<ExecReport>,
+    /// Structural plan statistics from the validator (phases, per-server
+    /// traffic, reduce fan-ins) — present for every backend.
+    pub stats: PlanStats,
+    pub transfers: usize,
+}
+
+impl Evaluation {
+    /// One-line human summary (CLI output rows).
+    pub fn summary(&self) -> String {
+        format!(
+            "{algo:<14} {backend:<5} {secs:.4}s  ({phases} phases, {transfers} transfers)",
+            algo = self.algo,
+            backend = self.backend,
+            secs = self.seconds,
+            phases = self.stats.phases,
+            transfers = self.transfers,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_aliases() {
+        assert_eq!(Backend::parse("model").unwrap(), Backend::Analytic);
+        assert_eq!(Backend::parse("GenModel").unwrap(), Backend::Analytic);
+        assert_eq!(Backend::parse("sim").unwrap(), Backend::Simulated);
+        assert_eq!(Backend::parse("exec").unwrap(), Backend::Executed);
+        assert_eq!(Backend::parse("run").unwrap(), Backend::Executed);
+        assert!(matches!(
+            Backend::parse("quantum"),
+            Err(ApiError::UnknownBackend { .. })
+        ));
+    }
+
+    #[test]
+    fn backend_name_roundtrip() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! The unified public API: algorithm registry + evaluation backends +
+//! typed errors.
+//!
+//! The paper's whole program is "compare many AllReduce algorithms under
+//! one cost model, across model / simulator / testbed". This module is
+//! that program as an API:
+//!
+//! * [`AlgoSpec`] / [`registry`] — *algorithm as data*: a parsed,
+//!   hashable, `FromStr`/`Display`-round-trippable identifier per
+//!   algorithm, and a [`PlanSource`] table mapping each to its
+//!   applicability check and plan builder. CLI dispatch
+//!   (`repro predict --algo …`), the bench baselines, and the
+//!   coordinator's plan router all consume this one table.
+//! * [`Backend`] / [`Evaluation`] — the three evaluation backends
+//!   (analytic [`crate::model::cost`], simulated [`crate::sim`], executed
+//!   [`crate::exec`]) behind one report shape, making Fig. 8-style
+//!   cross-backend accuracy checks a loop over [`Backend::ALL`].
+//! * [`Engine`] — the facade tying a topology + environment to both:
+//!   `engine.evaluate(&algo, size, backend)`.
+//! * [`ApiError`] — the typed error enum threaded end-to-end, including
+//!   through [`crate::coordinator::AllReduceService`].
+
+pub mod engine;
+pub mod error;
+pub mod evaluator;
+pub mod spec;
+
+pub use engine::Engine;
+pub use error::ApiError;
+pub use evaluator::{Backend, Evaluation, ExecReport};
+pub use spec::{applicable_specs, baseline_plans, gentree_config, registry, AlgoSpec, PlanSource};

@@ -1,0 +1,456 @@
+//! Parsed algorithm identifiers and the plan-source registry.
+//!
+//! [`AlgoSpec`] is the *algorithm-as-data* identifier: a small, hashable,
+//! round-trippable (`FromStr`/`Display`) value naming one AllReduce
+//! algorithm and its parameters. The [`registry`] maps every spec to a
+//! [`PlanSource`] — parse, applicability check, plan builder, and default
+//! instances for enumeration — so that CLI dispatch, the bench baselines,
+//! and the coordinator's plan router all share one table instead of three
+//! divergent string `match`es.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::gentree;
+use crate::model::params::Environment;
+use crate::plan::validate::{validate, Goal};
+use crate::plan::{acps, cps, hcps, reduce_broadcast, rhd, ring, Plan};
+use crate::topo::Topology;
+
+use super::error::ApiError;
+
+/// A parsed, serializable algorithm identifier.
+///
+/// `Display` and `FromStr` round-trip every variant, so specs can be
+/// carried through CLIs, logs, and cache keys verbatim.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum AlgoSpec {
+    /// The paper's plan-generation heuristic (Algorithms 1–2);
+    /// `rearrange: false` is Table 7's GenTree* ablation.
+    GenTree { rearrange: bool },
+    /// Co-located Parameter Server (Fig. 1b).
+    Cps,
+    /// Ring AllReduce (Fig. 1c).
+    Ring,
+    /// Recursive Halving-Doubling (Fig. 1d) — power-of-two server counts.
+    Rhd,
+    /// Hierarchical CPS over the given group factors (product = n).
+    Hcps { factors: Vec<usize> },
+    /// Reduce + Broadcast through one root (Fig. 1a).
+    ReduceBroadcast,
+    /// Asymmetric CPS with the balanced one-block-per-server owner map.
+    Acps,
+}
+
+impl AlgoSpec {
+    /// The registry family key this spec belongs to.
+    pub fn family(&self) -> &'static str {
+        match self {
+            AlgoSpec::GenTree { .. } => "gentree",
+            AlgoSpec::Cps => "cps",
+            AlgoSpec::Ring => "ring",
+            AlgoSpec::Rhd => "rhd",
+            AlgoSpec::Hcps { .. } => "hcps",
+            AlgoSpec::ReduceBroadcast => "reduce-broadcast",
+            AlgoSpec::Acps => "acps",
+        }
+    }
+
+    /// The registry entry backing this spec.
+    pub fn source(&self) -> &'static PlanSource {
+        let fam = self.family();
+        registry()
+            .iter()
+            .find(|s| s.family == fam)
+            .expect("every AlgoSpec variant has a registered PlanSource")
+    }
+
+    /// Parse an algorithm string against the registry.
+    pub fn parse(spec: &str) -> Result<AlgoSpec, ApiError> {
+        let lower = spec.trim().to_ascii_lowercase();
+        for src in registry() {
+            if let Some(a) = (src.parse)(&lower) {
+                return Ok(a);
+            }
+        }
+        Err(ApiError::UnknownAlgo {
+            spec: spec.to_string(),
+            known: registry().iter().map(|s| s.template).collect(),
+        })
+    }
+
+    /// Check whether this algorithm can run on `topo`.
+    pub fn applicable(&self, topo: &Topology) -> Result<(), ApiError> {
+        (self.source().applicable)(self, topo).map_err(|reason| ApiError::AlgoTopoMismatch {
+            algo: self.to_string(),
+            topo: topo.name.clone(),
+            reason,
+        })
+    }
+
+    /// Build (and validate) the plan for payload size `s` on `topo`.
+    pub fn build(&self, topo: &Topology, env: &Environment, s: f64) -> Result<Plan, ApiError> {
+        self.applicable(topo)?;
+        let plan = (self.source().build)(self, topo, env, s);
+        validate(&plan, Goal::AllReduce).map_err(|e| ApiError::InvalidPlan {
+            algo: self.to_string(),
+            source: e,
+        })?;
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlgoSpec::GenTree { rearrange: true } => write!(f, "gentree"),
+            AlgoSpec::GenTree { rearrange: false } => write!(f, "gentree-star"),
+            AlgoSpec::Cps => write!(f, "cps"),
+            AlgoSpec::Ring => write!(f, "ring"),
+            AlgoSpec::Rhd => write!(f, "rhd"),
+            AlgoSpec::Hcps { factors } => {
+                write!(f, "hcps:")?;
+                for (i, x) in factors.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, "x")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                Ok(())
+            }
+            AlgoSpec::ReduceBroadcast => write!(f, "reduce-broadcast"),
+            AlgoSpec::Acps => write!(f, "acps"),
+        }
+    }
+}
+
+impl FromStr for AlgoSpec {
+    type Err = ApiError;
+
+    fn from_str(s: &str) -> Result<AlgoSpec, ApiError> {
+        AlgoSpec::parse(s)
+    }
+}
+
+/// One registered algorithm family: how to parse it, whether it applies
+/// to a topology, how to build its plan, and which instances to use when
+/// enumerating algorithms for a topology.
+pub struct PlanSource {
+    /// Family key (also [`AlgoSpec::family`]).
+    pub family: &'static str,
+    /// Spec template for help/usage text (e.g. `hcps:AxB[xC]`).
+    pub template: &'static str,
+    /// One-line description for `repro algos`.
+    pub synopsis: &'static str,
+    /// Member of the paper's Table 7 baseline set.
+    pub baseline: bool,
+    /// Parse a (lowercased, trimmed) algorithm string of this family.
+    pub parse: fn(&str) -> Option<AlgoSpec>,
+    /// `Err(reason)` when the spec cannot run on the topology.
+    pub applicable: fn(&AlgoSpec, &Topology) -> Result<(), String>,
+    /// Build the plan. Only called after `applicable` passed.
+    pub build: fn(&AlgoSpec, &Topology, &Environment, f64) -> Plan,
+    /// Default instances to evaluate on a topology (may be empty, e.g.
+    /// HCPS on a prime server count).
+    pub defaults: fn(&Topology) -> Vec<AlgoSpec>,
+}
+
+/// The algorithm registry, in presentation order. GenTree first (the
+/// paper's contribution), then the Table 7 baselines (RHD, Ring, CPS),
+/// then the remaining plan families.
+pub fn registry() -> &'static [PlanSource] {
+    static REGISTRY: std::sync::OnceLock<Vec<PlanSource>> = std::sync::OnceLock::new();
+    REGISTRY.get_or_init(build_registry)
+}
+
+/// Specs of every registered family applicable to `topo`, in registry
+/// order — the "what can I run here" enumeration.
+pub fn applicable_specs(topo: &Topology) -> Vec<AlgoSpec> {
+    registry()
+        .iter()
+        .flat_map(|src| (src.defaults)(topo))
+        .filter(|spec| spec.applicable(topo).is_ok())
+        .collect()
+}
+
+/// Built plans of the Table 7 baseline families applicable to `topo`
+/// (RHD only on power-of-two n, as in the paper), in registry order.
+///
+/// Inapplicability is expected and filtered; a *build* failure of an
+/// applicable baseline is a plan-builder regression and panics rather
+/// than silently shrinking the baseline set under the benches.
+pub fn baseline_plans(topo: &Topology, env: &Environment, s: f64) -> Vec<Plan> {
+    registry()
+        .iter()
+        .filter(|src| src.baseline)
+        .flat_map(|src| (src.defaults)(topo))
+        .filter(|spec| spec.applicable(topo).is_ok())
+        .map(|spec| {
+            spec.build(topo, env, s)
+                .unwrap_or_else(|e| panic!("baseline {spec} failed to build: {e}"))
+        })
+        .collect()
+}
+
+fn build_registry() -> Vec<PlanSource> {
+    vec![
+    PlanSource {
+        family: "gentree",
+        template: "gentree|gentree-star",
+        synopsis: "paper's generated plan (star = no data rearrangement)",
+        baseline: false,
+        parse: |s| match s {
+            "gentree" => Some(AlgoSpec::GenTree { rearrange: true }),
+            "gentree-star" | "gentree*" => Some(AlgoSpec::GenTree { rearrange: false }),
+            _ => None,
+        },
+        applicable: |_, topo| {
+            if topo.n_servers() >= 1 {
+                Ok(())
+            } else {
+                Err("topology has no servers".into())
+            }
+        },
+        build: |spec, topo, env, s| {
+            gentree::generate_with(topo, env, s, &gentree_config(spec)).plan
+        },
+        defaults: |_| {
+            vec![
+                AlgoSpec::GenTree { rearrange: true },
+                AlgoSpec::GenTree { rearrange: false },
+            ]
+        },
+    },
+    PlanSource {
+        family: "rhd",
+        template: "rhd",
+        synopsis: "recursive halving-doubling (power-of-two n)",
+        baseline: true,
+        parse: |s| (s == "rhd").then_some(AlgoSpec::Rhd),
+        applicable: |_, topo| {
+            let n = topo.n_servers();
+            if n < 2 {
+                Err("needs at least 2 servers".into())
+            } else if !n.is_power_of_two() {
+                Err(format!(
+                    "RHD requires a power-of-two server count, got {n} \
+                     (the fold patch is available via plan::rhd directly)"
+                ))
+            } else {
+                Ok(())
+            }
+        },
+        build: |_, topo, _, _| rhd::allreduce(topo.n_servers()),
+        defaults: |_| vec![AlgoSpec::Rhd],
+    },
+    PlanSource {
+        family: "ring",
+        template: "ring",
+        synopsis: "ring AllReduce (NCCL-style)",
+        baseline: true,
+        parse: |s| (s == "ring").then_some(AlgoSpec::Ring),
+        applicable: |_, topo| min_servers(topo, 2),
+        build: |_, topo, _, _| ring::allreduce(topo.n_servers()),
+        defaults: |_| vec![AlgoSpec::Ring],
+    },
+    PlanSource {
+        family: "cps",
+        template: "cps",
+        synopsis: "co-located parameter server",
+        baseline: true,
+        parse: |s| (s == "cps").then_some(AlgoSpec::Cps),
+        applicable: |_, topo| min_servers(topo, 2),
+        build: |_, topo, _, _| cps::allreduce(topo.n_servers()),
+        defaults: |_| vec![AlgoSpec::Cps],
+    },
+    PlanSource {
+        family: "hcps",
+        template: "hcps:AxB[xC]",
+        synopsis: "hierarchical CPS over group factors (product = n)",
+        baseline: false,
+        parse: |s| {
+            let fs = s.strip_prefix("hcps:")?;
+            let factors: Vec<usize> = fs.split('x').map(|x| x.parse().ok()).collect::<Option<_>>()?;
+            (!factors.is_empty()).then_some(AlgoSpec::Hcps { factors })
+        },
+        applicable: |spec, topo| {
+            let AlgoSpec::Hcps { factors } = spec else {
+                return Err("not an hcps spec".into());
+            };
+            let n = topo.n_servers();
+            if factors.iter().any(|&f| f < 2) {
+                Err(format!("every factor must be ≥ 2, got {factors:?}"))
+            } else if factors.iter().product::<usize>() != n {
+                Err(format!(
+                    "factors {factors:?} multiply to {}, topology has {n} servers",
+                    factors.iter().product::<usize>()
+                ))
+            } else {
+                Ok(())
+            }
+        },
+        build: |spec, _, _, _| {
+            let AlgoSpec::Hcps { factors } = spec else { unreachable!() };
+            hcps::allreduce(factors)
+        },
+        defaults: |topo| match balanced_split(topo.n_servers()) {
+            Some(factors) => vec![AlgoSpec::Hcps { factors }],
+            None => vec![],
+        },
+    },
+    PlanSource {
+        family: "reduce-broadcast",
+        template: "reduce-broadcast",
+        synopsis: "reduce to one root, then broadcast",
+        baseline: false,
+        parse: |s| {
+            matches!(s, "reduce-broadcast" | "reducebroadcast" | "rb")
+                .then_some(AlgoSpec::ReduceBroadcast)
+        },
+        applicable: |_, topo| min_servers(topo, 2),
+        build: |_, topo, _, _| reduce_broadcast::allreduce(topo.n_servers()),
+        defaults: |_| vec![AlgoSpec::ReduceBroadcast],
+    },
+    PlanSource {
+        family: "acps",
+        template: "acps",
+        synopsis: "asymmetric CPS (balanced owner map)",
+        baseline: false,
+        parse: |s| (s == "acps").then_some(AlgoSpec::Acps),
+        applicable: |_, topo| min_servers(topo, 2),
+        build: |_, topo, _, _| {
+            let n = topo.n_servers();
+            let owners: Vec<usize> = (0..n).collect();
+            acps::allreduce_with_owners(n, &owners)
+        },
+        defaults: |_| vec![AlgoSpec::Acps],
+    },
+    ]
+}
+
+/// The GenTree generator config a gentree-family spec maps to — the
+/// single source of that mapping, shared by the registry builder and the
+/// coordinator's router (which additionally wants the selections).
+/// Non-gentree specs get the default config (callers never pass them).
+pub fn gentree_config(spec: &AlgoSpec) -> gentree::GenTreeConfig {
+    gentree::GenTreeConfig {
+        allow_rearrangement: !matches!(spec, AlgoSpec::GenTree { rearrange: false }),
+        ..Default::default()
+    }
+}
+
+fn min_servers(topo: &Topology, min: usize) -> Result<(), String> {
+    if topo.n_servers() >= min {
+        Ok(())
+    } else {
+        Err(format!("needs at least {min} servers, topology has {}", topo.n_servers()))
+    }
+}
+
+/// The most balanced 2-factorization of `n` (a·b = n, a ≤ b, a maximal),
+/// or `None` when `n` has no such split (prime or < 4).
+fn balanced_split(n: usize) -> Option<Vec<usize>> {
+    if n < 4 {
+        return None;
+    }
+    let mut a = (n as f64).sqrt() as usize;
+    while a >= 2 {
+        if n % a == 0 {
+            return Some(vec![a, n / a]);
+        }
+        a -= 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::single_switch;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for s in [
+            "gentree",
+            "gentree-star",
+            "cps",
+            "ring",
+            "rhd",
+            "hcps:2x3",
+            "hcps:2x3x4",
+            "reduce-broadcast",
+            "acps",
+        ] {
+            let spec = AlgoSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(spec.to_string().parse::<AlgoSpec>().unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_aliased() {
+        assert_eq!(
+            AlgoSpec::parse("GenTree*").unwrap(),
+            AlgoSpec::GenTree { rearrange: false }
+        );
+        assert_eq!(AlgoSpec::parse("RB").unwrap(), AlgoSpec::ReduceBroadcast);
+    }
+
+    #[test]
+    fn unknown_algo_lists_registry() {
+        match AlgoSpec::parse("warpdrive") {
+            Err(ApiError::UnknownAlgo { spec, known }) => {
+                assert_eq!(spec, "warpdrive");
+                assert!(known.contains(&"hcps:AxB[xC]"));
+            }
+            other => panic!("expected UnknownAlgo, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rhd_applicability_wants_power_of_two() {
+        assert!(AlgoSpec::Rhd.applicable(&single_switch(8)).is_ok());
+        match AlgoSpec::Rhd.applicable(&single_switch(24)) {
+            Err(ApiError::AlgoTopoMismatch { reason, .. }) => {
+                assert!(reason.contains("power-of-two"));
+            }
+            other => panic!("expected AlgoTopoMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hcps_factors_must_multiply_to_n() {
+        let spec = AlgoSpec::parse("hcps:2x3").unwrap();
+        assert!(spec.applicable(&single_switch(6)).is_ok());
+        assert!(spec.applicable(&single_switch(7)).is_err());
+    }
+
+    #[test]
+    fn every_applicable_default_builds_a_valid_plan() {
+        let env = Environment::paper();
+        for n in [2usize, 4, 6, 8, 9, 12] {
+            let topo = single_switch(n);
+            let specs = applicable_specs(&topo);
+            assert!(!specs.is_empty());
+            for spec in specs {
+                let plan = spec.build(&topo, &env, 1e6).unwrap();
+                assert_eq!(plan.n_servers, n, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_plans_respect_rhd_rule() {
+        let env = Environment::paper();
+        assert_eq!(baseline_plans(&single_switch(24), &env, 1e8).len(), 2);
+        assert_eq!(baseline_plans(&single_switch(32), &env, 1e8).len(), 3);
+    }
+
+    #[test]
+    fn balanced_split_prefers_square_factors() {
+        assert_eq!(balanced_split(12), Some(vec![3, 4]));
+        assert_eq!(balanced_split(16), Some(vec![4, 4]));
+        assert_eq!(balanced_split(7), None);
+        assert_eq!(balanced_split(2), None);
+    }
+}

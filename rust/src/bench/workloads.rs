@@ -1,8 +1,9 @@
 //! Shared workload definitions for the evaluation harness: the paper's
 //! topology instances (§5.3) and baseline plan sets.
 
+use crate::api;
 use crate::model::params::Environment;
-use crate::plan::{cps, rhd, ring, Plan};
+use crate::plan::Plan;
 use crate::topo::{builders, Topology};
 
 /// The six evaluation topologies of Fig. 11 / Table 7, by paper name.
@@ -56,13 +57,10 @@ pub fn parse_topology(spec: &str) -> Option<Topology> {
 pub const PAPER_SIZES: [f64; 3] = [1e7, 3.2e7, 1e8];
 
 /// Baseline plans for `n` servers, named as in Table 7 (RHD only for
-/// power-of-two n, as in the paper).
+/// power-of-two n, as in the paper). Enumeration and construction go
+/// through the `api` registry — this is just the flat-topology view.
 pub fn baselines(n: usize) -> Vec<Plan> {
-    let mut out = vec![ring::allreduce(n), cps::allreduce(n)];
-    if n.is_power_of_two() {
-        out.insert(0, rhd::allreduce(n));
-    }
-    out
+    api::baseline_plans(&builders::single_switch(n), &Environment::paper(), 1e8)
 }
 
 /// The environment used for the CPU-cluster simulations (Table 5 values).

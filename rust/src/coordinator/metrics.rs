@@ -11,6 +11,9 @@ pub struct Metrics {
     pub reduce_calls: AtomicU64,
     /// Nanoseconds spent executing plans.
     pub busy_nanos: AtomicU64,
+    /// Times the leader had to fall back to the scalar reducer because
+    /// the configured reducer spec failed to build (0 or 1 per leader).
+    pub reducer_fallbacks: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -21,6 +24,7 @@ pub struct MetricsSnapshot {
     pub floats_reduced: u64,
     pub reduce_calls: u64,
     pub busy_secs: f64,
+    pub reducer_fallbacks: u64,
 }
 
 impl Metrics {
@@ -36,6 +40,7 @@ impl Metrics {
             floats_reduced: self.floats_reduced.load(Ordering::Relaxed),
             reduce_calls: self.reduce_calls.load(Ordering::Relaxed),
             busy_secs: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            reducer_fallbacks: self.reducer_fallbacks.load(Ordering::Relaxed),
         }
     }
 }

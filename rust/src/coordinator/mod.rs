@@ -8,8 +8,9 @@
 //! * [`batcher`] — gradient bucketing: small tensors from concurrent jobs
 //!   fuse into one AllReduce round (amortizing the α term — exactly the
 //!   trade GenModel prices), flushed on size or time;
-//! * [`router`] — plan cache: picks and caches the GenTree plan per
-//!   payload-size bucket for the configured topology;
+//! * [`router`] — plan cache: routes any registered `api::AlgoSpec`
+//!   (GenTree by default), cached per `(algorithm, payload-size bucket)`
+//!   and shared as `Arc<RoutedPlan>` on the hot path;
 //! * [`metrics`] — atomic counters exposed for the CLI and benches.
 //!
 //! Threads + channels stand in for an async runtime (tokio is not in the
@@ -21,5 +22,5 @@ pub mod router;
 pub mod service;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::PlanRouter;
+pub use router::{PlanRouter, RoutedPlan};
 pub use service::{AllReduceService, JobResult, ServiceConfig};

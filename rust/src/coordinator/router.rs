@@ -1,21 +1,40 @@
-//! Plan routing: pick (and cache) the right GenTree plan per payload size.
+//! Plan routing: pick (and cache) the right plan per (algorithm, payload
+//! size bucket).
 //!
 //! GenTree's choice depends on S (Table 6: CPS at 1e7, hierarchical at
 //! 1e8), so plans are cached per power-of-two size bucket; a fused batch
-//! of size s uses the plan generated for its bucket's representative size.
+//! of size s uses the plan generated for its bucket's representative
+//! size. The router is generalized over the `api` registry: any
+//! [`AlgoSpec`] can be routed, the cache is keyed `(algo, bucket)`, and
+//! entries are shared as `Arc<RoutedPlan>` — the hot path takes one lock
+//! and clones one `Arc`, never a whole `Plan`.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::gentree::{generate, GenTreeOutput};
+use crate::api::{self, AlgoSpec, ApiError};
+use crate::gentree::{self, Selection};
 use crate::model::params::Environment;
+use crate::plan::validate::{validate, Goal};
 use crate::plan::Plan;
 use crate::topo::Topology;
+
+/// One cached routing decision: the plan plus (for GenTree) the
+/// per-switch selections behind it (Table 6 reporting).
+#[derive(Debug, Clone)]
+pub struct RoutedPlan {
+    pub algo: AlgoSpec,
+    pub bucket: u32,
+    pub plan: Plan,
+    /// Per-switch template choices; empty for non-GenTree algorithms.
+    pub selections: Vec<Selection>,
+}
 
 pub struct PlanRouter {
     topo: Topology,
     env: Environment,
-    cache: Mutex<HashMap<u32, GenTreeOutput>>,
+    default_algo: AlgoSpec,
+    cache: Mutex<HashMap<(AlgoSpec, u32), Arc<RoutedPlan>>>,
 }
 
 impl PlanRouter {
@@ -23,12 +42,24 @@ impl PlanRouter {
         PlanRouter {
             topo,
             env,
+            default_algo: AlgoSpec::GenTree { rearrange: true },
             cache: Mutex::new(HashMap::new()),
         }
     }
 
+    /// Route a different default algorithm (the coordinator's
+    /// `ServiceConfig::algo`).
+    pub fn with_default_algo(mut self, algo: AlgoSpec) -> Self {
+        self.default_algo = algo;
+        self
+    }
+
     pub fn topo(&self) -> &Topology {
         &self.topo
+    }
+
+    pub fn default_algo(&self) -> &AlgoSpec {
+        &self.default_algo
     }
 
     /// Bucket index: ⌈log2(s)⌉ clamped below at 2^10.
@@ -41,29 +72,56 @@ impl PlanRouter {
         (1u64 << bucket) as f64
     }
 
-    /// Plan for a payload of `s` floats (cached per bucket).
-    pub fn plan_for(&self, s: usize) -> Plan {
-        let b = Self::bucket(s);
+    /// Routed plan for `algo` at a payload of `s` floats, cached per
+    /// `(algo, bucket)`. One lock acquisition; misses build inside the
+    /// lock (single-leader access pattern — contention-free in practice,
+    /// and duplicate generation would cost more than the wait).
+    pub fn route(&self, algo: &AlgoSpec, s: usize) -> Result<Arc<RoutedPlan>, ApiError> {
+        let bucket = Self::bucket(s);
         let mut cache = self.cache.lock().unwrap();
-        cache
-            .entry(b)
-            .or_insert_with(|| generate(&self.topo, &self.env, Self::bucket_size(b)))
-            .plan
-            .clone()
+        if let Some(hit) = cache.get(&(algo.clone(), bucket)) {
+            return Ok(hit.clone());
+        }
+        let built = Arc::new(self.build(algo, bucket)?);
+        cache.insert((algo.clone(), bucket), built.clone());
+        Ok(built)
     }
 
-    /// Selections behind the plan for `s` (Table 6 reporting).
-    pub fn selections_for(&self, s: usize) -> Vec<crate::gentree::Selection> {
-        let b = Self::bucket(s);
-        let mut cache = self.cache.lock().unwrap();
-        cache
-            .entry(b)
-            .or_insert_with(|| generate(&self.topo, &self.env, Self::bucket_size(b)))
-            .selections
-            .clone()
+    /// Routed plan for the default algorithm (the serve hot path).
+    pub fn plan_for(&self, s: usize) -> Result<Arc<RoutedPlan>, ApiError> {
+        self.route(&self.default_algo, s)
     }
 
-    pub fn cached_buckets(&self) -> usize {
+    fn build(&self, algo: &AlgoSpec, bucket: u32) -> Result<RoutedPlan, ApiError> {
+        let s = Self::bucket_size(bucket);
+        algo.applicable(&self.topo)?;
+        // GenTree runs the generator directly because the router also
+        // wants the per-switch selections; the config mapping is the
+        // registry's own (`api::gentree_config`), so router-served and
+        // Engine-served plans cannot diverge. Everything else calls the
+        // registry builder raw — applicability was just checked, and the
+        // validation below is the single validation pass.
+        let (plan, selections) = match algo {
+            AlgoSpec::GenTree { .. } => {
+                let out =
+                    gentree::generate_with(&self.topo, &self.env, s, &api::gentree_config(algo));
+                (out.plan, out.selections)
+            }
+            other => ((other.source().build)(other, &self.topo, &self.env, s), Vec::new()),
+        };
+        validate(&plan, Goal::AllReduce).map_err(|e| ApiError::InvalidPlan {
+            algo: algo.to_string(),
+            source: e,
+        })?;
+        Ok(RoutedPlan {
+            algo: algo.clone(),
+            bucket,
+            plan,
+            selections,
+        })
+    }
+
+    pub fn cached_plans(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 }
@@ -83,14 +141,25 @@ mod tests {
     }
 
     #[test]
-    fn caches_per_bucket() {
+    fn caches_per_bucket_and_shares_arcs() {
         let r = PlanRouter::new(single_switch(8), Environment::paper());
-        let a = r.plan_for(2000);
-        let b = r.plan_for(2047); // same bucket
-        assert_eq!(a, b);
-        assert_eq!(r.cached_buckets(), 1);
-        let _ = r.plan_for(100_000);
-        assert_eq!(r.cached_buckets(), 2);
+        let a = r.plan_for(2000).unwrap();
+        let b = r.plan_for(2047).unwrap(); // same bucket
+        assert!(Arc::ptr_eq(&a, &b), "same bucket must share one Arc");
+        assert_eq!(r.cached_plans(), 1);
+        let _ = r.plan_for(100_000).unwrap();
+        assert_eq!(r.cached_plans(), 2);
+    }
+
+    #[test]
+    fn cache_is_keyed_by_algorithm_too() {
+        let r = PlanRouter::new(single_switch(8), Environment::paper());
+        let gen = r.route(&AlgoSpec::GenTree { rearrange: true }, 5000).unwrap();
+        let ring = r.route(&AlgoSpec::Ring, 5000).unwrap();
+        assert!(!Arc::ptr_eq(&gen, &ring));
+        assert_eq!(r.cached_plans(), 2);
+        assert!(gen.selections.len() > 0, "GenTree keeps its selections");
+        assert!(ring.selections.is_empty());
     }
 
     #[test]
@@ -98,9 +167,19 @@ mod tests {
         use crate::plan::validate::{validate, Goal};
         let r = PlanRouter::new(single_switch(12), Environment::paper());
         for s in [1_000usize, 100_000, 10_000_000] {
-            let p = r.plan_for(s);
-            validate(&p, Goal::AllReduce).unwrap();
-            assert_eq!(p.n_servers, 12);
+            let routed = r.plan_for(s).unwrap();
+            validate(&routed.plan, Goal::AllReduce).unwrap();
+            assert_eq!(routed.plan.n_servers, 12);
         }
+    }
+
+    #[test]
+    fn inapplicable_algo_is_a_typed_error() {
+        let r = PlanRouter::new(single_switch(6), Environment::paper());
+        assert!(matches!(
+            r.route(&AlgoSpec::Rhd, 4096),
+            Err(ApiError::AlgoTopoMismatch { .. })
+        ));
+        assert_eq!(r.cached_plans(), 0, "failures are not cached");
     }
 }

@@ -3,17 +3,23 @@
 //! Clients call [`AllReduceService::submit`] with one tensor per worker
 //! and get a channel receiving the reduced result. The leader drains the
 //! queue, fuses jobs into buckets ([`super::batcher`]), routes each batch
-//! to a cached GenTree plan ([`super::router`]), executes it on the real
-//! data plane (`exec` + PJRT), and fans results back out.
+//! to a cached plan ([`super::router`], any registered [`AlgoSpec`] —
+//! GenTree by default), executes it on the real data plane (`exec` +
+//! reducer), and fans results back out.
+//!
+//! Every failure is a typed [`ApiError`]: malformed submissions return
+//! `Err(ApiError::BadRequest)` immediately, submitting to a stopped
+//! service returns `Err(ApiError::ServiceStopped)`, and per-job results
+//! carry `ApiError::ExecFailed` when the data plane rejects a batch —
+//! no `assert!`/`expect` on the request path.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use crate::api::{AlgoSpec, ApiError};
 use crate::exec::execute_plan;
 use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
@@ -36,7 +42,7 @@ struct Job {
     id: u64,
     /// One tensor per worker.
     tensors: Vec<Vec<f32>>,
-    respond: Sender<Result<JobResult, String>>,
+    respond: Sender<Result<JobResult, ApiError>>,
 }
 
 #[derive(Clone)]
@@ -45,6 +51,8 @@ pub struct ServiceConfig {
     /// How long the leader waits for more jobs before flushing a
     /// non-empty queue.
     pub flush_after: Duration,
+    /// Which registered algorithm the router serves (default GenTree).
+    pub algo: AlgoSpec,
 }
 
 impl Default for ServiceConfig {
@@ -52,13 +60,14 @@ impl Default for ServiceConfig {
         ServiceConfig {
             policy: BatchPolicy::default(),
             flush_after: Duration::from_millis(2),
+            algo: AlgoSpec::GenTree { rearrange: true },
         }
     }
 }
 
 pub struct AllReduceService {
-    tx: Option<Sender<Job>>,
-    leader: Option<JoinHandle<()>>,
+    tx: Mutex<Option<Sender<Job>>>,
+    leader: Mutex<Option<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
     n_workers: usize,
     next_id: std::sync::atomic::AtomicU64,
@@ -73,21 +82,32 @@ impl AllReduceService {
     ) -> AllReduceService {
         let n_workers = topo.n_servers();
         let metrics = Arc::new(Metrics::default());
-        let router = PlanRouter::new(topo, env);
+        let router = PlanRouter::new(topo, env).with_default_algo(cfg.algo.clone());
         let (tx, rx) = channel::<Job>();
         let m = metrics.clone();
         let leader = std::thread::Builder::new()
             .name("allreduce-leader".into())
             .spawn(move || {
                 // PJRT clients are thread-affine (Rc internally): build
-                // the reducer on the leader thread from the spec.
-                let reducer = reducer.build().expect("reducer spec");
+                // the reducer on the leader thread from the spec. A bad
+                // spec degrades to the scalar oracle path rather than
+                // killing the leader — loudly (stderr + the
+                // `reducer_fallbacks` metric), so a misconfigured data
+                // plane doesn't masquerade as a slow one.
+                let reducer = reducer.build().unwrap_or_else(|e| {
+                    eprintln!(
+                        "allreduce-leader: requested reducer unavailable ({e}); \
+                         falling back to the scalar data plane"
+                    );
+                    m.add(&m.reducer_fallbacks, 1);
+                    Reducer::Scalar
+                });
                 leader_loop(rx, router, reducer, cfg, m)
             })
             .expect("spawn leader");
         AllReduceService {
-            tx: Some(tx),
-            leader: Some(leader),
+            tx: Mutex::new(Some(tx)),
+            leader: Mutex::new(Some(leader)),
             metrics,
             n_workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
@@ -99,38 +119,65 @@ impl AllReduceService {
     }
 
     /// Submit one AllReduce job (one equal-length tensor per worker).
-    /// Returns the receiver for the result.
-    pub fn submit(&self, tensors: Vec<Vec<f32>>) -> Receiver<Result<JobResult, String>> {
-        assert_eq!(tensors.len(), self.n_workers, "one tensor per worker");
+    /// Returns the receiver for the result, or a typed error when the
+    /// request is malformed or the service is stopped.
+    pub fn submit(
+        &self,
+        tensors: Vec<Vec<f32>>,
+    ) -> Result<Receiver<Result<JobResult, ApiError>>, ApiError> {
+        if tensors.len() != self.n_workers {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "one tensor per worker: expected {} tensors, got {}",
+                    self.n_workers,
+                    tensors.len()
+                ),
+            });
+        }
+        let len = tensors[0].len();
+        if let Some((i, t)) = tensors.iter().enumerate().find(|(_, t)| t.len() != len) {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "ragged tensors: worker 0 has {len} floats, worker {i} has {}",
+                    t.len()
+                ),
+            });
+        }
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or(ApiError::ServiceStopped)?;
+        tx.send(Job {
+            id,
+            tensors,
+            respond: rtx,
+        })
+        .map_err(|_| ApiError::ServiceStopped)?;
         self.metrics.add(&self.metrics.jobs_submitted, 1);
-        self.tx
-            .as_ref()
-            .expect("service stopped")
-            .send(Job {
-                id,
-                tensors,
-                respond: rtx,
-            })
-            .expect("leader alive");
-        rrx
+        Ok(rrx)
     }
 
     /// Convenience: submit and wait.
-    pub fn allreduce(&self, tensors: Vec<Vec<f32>>) -> Result<JobResult, String> {
-        self.submit(tensors)
+    pub fn allreduce(&self, tensors: Vec<Vec<f32>>) -> Result<JobResult, ApiError> {
+        self.submit(tensors)?
             .recv()
-            .map_err(|e| format!("leader dropped: {e}"))?
+            .map_err(|_| ApiError::ServiceStopped)?
+    }
+
+    /// Stop accepting jobs and join the leader after it drains the queue.
+    /// Idempotent; subsequent [`submit`](Self::submit) calls return
+    /// `Err(ApiError::ServiceStopped)`.
+    pub fn stop(&self) {
+        drop(self.tx.lock().unwrap().take()); // close queue → leader drains and exits
+        if let Some(h) = self.leader.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for AllReduceService {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close queue → leader drains and exits
-        if let Some(h) = self.leader.take() {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
@@ -194,6 +241,18 @@ fn run_batch(
     let offsets = fuse_offsets(batch);
     let total: usize = batch.iter().map(|j| j.floats).sum();
     let n_workers = router.topo().n_servers();
+    // Route first: a routing failure (misconfigured algo) fails the whole
+    // batch with the typed error, before any fuse work.
+    let routed = match router.plan_for(total) {
+        Ok(r) => r,
+        Err(e) => {
+            for &(id, _, _) in &offsets {
+                let job = jobs.remove(&id).unwrap();
+                let _ = job.respond.send(Err(e.clone()));
+            }
+            return;
+        }
+    };
     // Fuse: one buffer per worker.
     let mut fused: Vec<Vec<f32>> = vec![vec![0f32; total]; n_workers];
     for &(id, off, len) in &offsets {
@@ -202,9 +261,8 @@ fn run_batch(
             fused[w][off..off + len].copy_from_slice(t);
         }
     }
-    let plan = router.plan_for(total);
     let t0 = Instant::now();
-    let outcome = execute_plan(&plan, &fused, reducer);
+    let outcome = execute_plan(&routed.plan, &fused, reducer);
     let elapsed = t0.elapsed();
     metrics.add(&metrics.batches_flushed, 1);
     metrics.add(&metrics.busy_nanos, elapsed.as_nanos() as u64);
@@ -220,14 +278,16 @@ fn run_batch(
                 let _ = job.respond.send(Ok(JobResult {
                     reduced: result[off..off + len].to_vec(),
                     batch_jobs: batch.len(),
-                    plan_name: plan.name.clone(),
+                    plan_name: routed.plan.name.clone(),
                 }));
             }
         }
         Err(e) => {
             for &(id, _, _) in &offsets {
                 let job = jobs.remove(&id).unwrap();
-                let _ = job.respond.send(Err(format!("execution failed: {e}")));
+                let _ = job.respond.send(Err(ApiError::ExecFailed {
+                    reason: e.to_string(),
+                }));
             }
         }
     }
@@ -249,6 +309,7 @@ mod tests {
                     bucket_floats: bucket,
                 },
                 flush_after: Duration::from_millis(1),
+                ..ServiceConfig::default()
             },
         )
     }
@@ -302,8 +363,8 @@ mod tests {
     #[test]
     fn oversized_jobs_split_batches() {
         let svc = make_service(2, 100);
-        let a = svc.submit(tensors(2, 400, 1));
-        let b = svc.submit(tensors(2, 400, 2));
+        let a = svc.submit(tensors(2, 400, 1)).unwrap();
+        let b = svc.submit(tensors(2, 400, 2)).unwrap();
         a.recv().unwrap().unwrap();
         b.recv().unwrap().unwrap();
         let m = svc.metrics.snapshot();
@@ -324,10 +385,100 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "one tensor per worker")]
-    fn wrong_tensor_count_panics() {
+    fn wrong_tensor_count_is_a_typed_error() {
         let svc = make_service(4, 1000);
-        let _ = svc.submit(tensors(3, 10, 0));
+        match svc.submit(tensors(3, 10, 0)) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("expected 4 tensors, got 3"), "{reason}");
+            }
+            other => panic!("expected BadRequest, got {:?}", other.map(|_| ())),
+        }
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.jobs_submitted, 0, "rejected jobs are not counted");
+    }
+
+    #[test]
+    fn ragged_tensors_are_a_typed_error() {
+        let svc = make_service(3, 1000);
+        let mut ts = tensors(3, 10, 0);
+        ts[2].pop();
+        assert!(matches!(
+            svc.submit(ts),
+            Err(ApiError::BadRequest { .. })
+        ));
+    }
+
+    #[test]
+    fn stopped_service_is_a_typed_error() {
+        let svc = make_service(2, 1000);
+        svc.allreduce(tensors(2, 10, 0)).unwrap();
+        svc.stop();
+        svc.stop(); // idempotent
+        assert_eq!(
+            svc.submit(tensors(2, 10, 1)).err(),
+            Some(ApiError::ServiceStopped)
+        );
+        assert_eq!(
+            svc.allreduce(tensors(2, 10, 2)).err(),
+            Some(ApiError::ServiceStopped)
+        );
+    }
+
+    #[test]
+    fn non_default_algorithm_serves_jobs() {
+        let svc = AllReduceService::start(
+            single_switch(4),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                algo: AlgoSpec::Ring,
+                ..ServiceConfig::default()
+            },
+        );
+        let ts = tensors(4, 256, 9);
+        let want = oracle(&ts);
+        let res = svc.allreduce(ts).unwrap();
+        assert!(res.plan_name.to_ascii_lowercase().contains("ring"));
+        for (a, b) in res.reduced.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn misconfigured_algorithm_fails_jobs_with_typed_error() {
+        // RHD on 6 servers: routing fails per batch, job gets the error.
+        let svc = AllReduceService::start(
+            single_switch(6),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                algo: AlgoSpec::Rhd,
+                ..ServiceConfig::default()
+            },
+        );
+        match svc.allreduce(tensors(6, 64, 1)) {
+            Err(ApiError::AlgoTopoMismatch { .. }) => {}
+            other => panic!("expected AlgoTopoMismatch, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn bad_reducer_spec_falls_back_and_is_counted() {
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::PjrtDir("/nonexistent/artifacts".into()),
+            ServiceConfig::default(),
+        );
+        // Jobs are still served (scalar fallback) and the downgrade is
+        // visible in metrics rather than silent.
+        let ts = tensors(2, 32, 1);
+        let want = oracle(&ts);
+        let res = svc.allreduce(ts).unwrap();
+        for (a, b) in res.reduced.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(svc.metrics.snapshot().reducer_fallbacks, 1);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //!   for slow uplinks), price each with GenModel, keep the cheapest, and
 //!   merge same-depth sub-plans into concurrent phases. The AllGather is
 //!   the mirrored ReduceScatter (§4.2).
+//!
+//! GenTree is registered in the `api` registry as `gentree` /
+//! `gentree-star`; go through `api::Engine` unless you need the raw
+//! [`GenTreeOutput`] (per-switch [`Selection`]s for Table 6 reporting),
+//! which the coordinator's router also caches per size bucket.
 
 pub mod generate;
 pub mod placement;

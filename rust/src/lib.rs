@@ -4,6 +4,11 @@
 //! Crate layout (three-layer architecture; python/JAX/Pallas only in the
 //! compile path, never at runtime):
 //!
+//! * [`api`] — **the front door**: the [`api::Engine`] facade over one
+//!   algorithm registry ([`api::AlgoSpec`] + [`api::registry`]), three
+//!   evaluation backends ([`api::Backend`]: analytic / simulated /
+//!   executed) returning one [`api::Evaluation`] report, and the typed
+//!   [`api::ApiError`] threaded end-to-end (CLI, coordinator, benches).
 //! * [`model`] — GenModel: the `(α, β, γ, δ, ε, w_t)` time-cost model,
 //!   closed-form expressions (paper Tables 1–2), cost evaluation of
 //!   arbitrary plans, and the parameter-fitting toolkit (§3.4).
@@ -24,6 +29,7 @@
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
 
+pub mod api;
 pub mod bench;
 pub mod coordinator;
 pub mod exec;

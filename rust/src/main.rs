@@ -4,26 +4,30 @@
 //!
 //! * `fit`       — the §3.4 benchmarking toolkit: run (simulated) CPS
 //!                 benches and fit the GenModel parameters.
-//! * `predict`   — price a plan on a topology with GenModel, the classic
-//!                 model, and the flow simulator.
+//! * `predict`   — price an algorithm on a topology: one backend via
+//!                 `--backend model|sim|exec`, or the Fig. 8-style
+//!                 model-vs-classic-vs-simulator comparison by default.
 //! * `plan`      — show the plan GenTree generates (Table 6 style).
 //! * `simulate`  — flow-level simulation of one algorithm on a topology.
-//! * `run`       — execute a plan on real data through the PJRT runtime
-//!                 and verify against the exact oracle.
+//! * `run`       — execute a plan on real data through the runtime and
+//!                 verify against the exact oracle.
 //! * `serve`     — start the coordinator and push a synthetic job stream,
 //!                 reporting service metrics.
+//! * `algos`     — list the algorithm registry (and what applies where).
 //! * `reproduce` — regenerate the paper's tables and figures.
+//!
+//! All algorithm dispatch goes through `genmodel::api`: one registry
+//! ([`genmodel::api::AlgoSpec`]), one facade ([`genmodel::api::Engine`]),
+//! three backends ([`genmodel::api::Backend`]) — no per-algorithm
+//! `match` lives in this binary.
 
-use std::time::Instant;
-
+use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
 use genmodel::coordinator::{AllReduceService, ServiceConfig};
-use genmodel::exec;
-use genmodel::gentree;
-use genmodel::model::cost::{CostModel, ModelKind};
+use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
 use genmodel::model::params::Environment;
-use genmodel::plan::{cps, rhd, ring, Plan};
+use genmodel::plan::cps;
 use genmodel::runtime::ReducerSpec;
 use genmodel::sim::{simulate_plan, SimConfig};
 use genmodel::topo::Topology;
@@ -36,16 +40,19 @@ repro — GenModel/GenTree toolkit ('Revisiting the Time Cost Model of AllReduce
 USAGE: repro <subcommand> [options]
 
   fit        [--max-n 15] [--sizes 2e7,1e8]
-  predict    --topo <spec> --algo <algo> [--size 1e8]
+  predict    --topo <spec> --algo <algo> [--size 1e8] [--backend model|sim|exec]
   plan       --topo <spec> [--size 1e8] [--no-rearrange]
   simulate   --topo <spec> --algo <algo> [--size 1e8]
   run        [--servers 8] [--size 100000] [--algo gentree] [--scalar]
-  serve      [--servers 8] [--jobs 64] [--tensor 4096] [--scalar]
+  serve      [--servers 8] [--jobs 64] [--tensor 4096] [--algo gentree] [--scalar]
+  algos      [--topo <spec>]
   reproduce  [--table 3|4|5|6|7] [--fig 3|4|8|9|10] [--all]
 
   <spec>: ss24 ss32 sym384 sym512 asy384 cdc384 | single:N sym:M,K gpu:M,G
           asy:a+b/c+d cdc:a+b/c+d
-  <algo>: gentree gentree-star cps ring rhd hcps:AxB[xC]
+  <algo>: any registered algorithm (see `repro algos`), e.g. gentree
+          gentree-star cps ring rhd hcps:AxB[xC] reduce-broadcast acps
+  `--backend exec` defaults --size to 1e6 (real buffers are allocated).
 ";
 
 fn main() {
@@ -81,51 +88,24 @@ fn topo_arg(args: &Args) -> anyhow::Result<Topology> {
         .ok_or_else(|| anyhow::anyhow!("unknown topology spec {spec:?}"))
 }
 
-fn size_arg(args: &Args) -> anyhow::Result<f64> {
+fn size_arg(args: &Args, default: f64) -> anyhow::Result<f64> {
     Ok(args
         .opt("size")
         .map(|s| s.parse::<f64>())
         .transpose()
         .map_err(|e| anyhow::anyhow!("--size: {e}"))?
-        .unwrap_or(1e8))
+        .unwrap_or(default))
 }
 
-fn algo_plan(spec: &str, topo: &Topology, env: &Environment, s: f64) -> anyhow::Result<Plan> {
-    let n = topo.n_servers();
-    Ok(match spec.to_ascii_lowercase().as_str() {
-        "gentree" => gentree::generate(topo, env, s).plan,
-        "gentree-star" => {
-            gentree::generate_with(
-                topo,
-                env,
-                s,
-                &gentree::GenTreeConfig {
-                    allow_rearrangement: false,
-                    ..Default::default()
-                },
-            )
-            .plan
-        }
-        "cps" => cps::allreduce(n),
-        "ring" => ring::allreduce(n),
-        "rhd" => rhd::allreduce(n),
-        other => {
-            if let Some(fs) = other.strip_prefix("hcps:") {
-                let factors: Vec<usize> = fs
-                    .split('x')
-                    .map(|x| x.parse())
-                    .collect::<Result<_, _>>()
-                    .map_err(|e| anyhow::anyhow!("bad hcps factors: {e}"))?;
-                anyhow::ensure!(
-                    factors.iter().product::<usize>() == n,
-                    "hcps factors must multiply to {n}"
-                );
-                genmodel::plan::hcps::allreduce(&factors)
-            } else {
-                anyhow::bail!("unknown algorithm {spec:?}")
-            }
-        }
-    })
+/// The engine for a topology: GenModel predictor, auto (PJRT-or-scalar)
+/// reducer unless `--scalar`.
+fn engine_for(args: &Args, topo: Topology) -> Engine {
+    let reducer = if args.flag("scalar") {
+        ReducerSpec::Scalar
+    } else {
+        ReducerSpec::Auto
+    };
+    Engine::new(topo, Environment::paper()).with_reducer(reducer)
 }
 
 fn dispatch(args: &Args) -> anyhow::Result<()> {
@@ -140,6 +120,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("algos") => cmd_algos(args),
         Some("reproduce") => cmd_reproduce(args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
@@ -174,43 +155,98 @@ fn cmd_fit(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn print_evaluation(ev: &Evaluation) {
+    println!(
+        "{} via {} backend on S = {:.3e} floats",
+        ev.plan_name, ev.backend, ev.payload
+    );
+    println!("  time          : {:.4} s", ev.seconds);
+    println!("  phases        : {}", ev.stats.phases);
+    println!("  transfers     : {}", ev.transfers);
+    println!("  max comm w    : {}", ev.stats.max_comm_fanin);
+    if let Some(t) = &ev.terms {
+        println!(
+            "  terms: α={:.4} β={:.4} γ={:.4} δ={:.4} ε={:.4}",
+            t.alpha, t.beta, t.gamma, t.delta, t.epsilon
+        );
+    }
+    if let Some(s) = &ev.sim {
+        println!("  communication : {:.4} s", s.communication);
+        println!("  calculation   : {:.4} s", s.calculation);
+        println!("  pause units   : {:.4}", s.pause_units);
+        println!("  events        : {}", s.events);
+    }
+    if let Some(x) = &ev.exec {
+        println!(
+            "  reducer       : {}",
+            if x.pjrt { "PJRT" } else { "scalar" }
+        );
+        println!("  reduce calls  : {}", x.reduce_calls);
+        println!("  floats reduced: {}", x.reduced_floats);
+        println!("  max fan-in    : {}", x.max_fanin);
+        println!("  verified      : {}", if x.verified { "✓" } else { "✗" });
+    }
+}
+
 fn cmd_predict(args: &Args) -> anyhow::Result<()> {
-    let topo = topo_arg(args)?;
-    let s = size_arg(args)?;
-    let env = Environment::paper();
-    let algo = args.opt_or("algo", "gentree").to_string();
-    let plan = algo_plan(&algo, &topo, &env, s)?;
-    let gen = CostModel::new(&topo, &env, ModelKind::GenModel).plan_cost(&plan, s);
-    let classic = CostModel::new(&topo, &env, ModelKind::Classic).plan_total(&plan, s);
-    let actual = simulate_plan(&plan, s, &topo, &env, &SimConfig::new(&topo)).total;
-    println!("plan {} on {} (S = {s:.3e} floats)", plan.name, topo.name);
-    println!("  phases            : {}", plan.phases.len());
+    let engine = engine_for(args, topo_arg(args)?);
+    let algo = engine.parse_algo(args.opt_or("algo", "gentree"))?;
+    if let Some(b) = args.opt("backend") {
+        let backend = Backend::parse(b)?;
+        let default_s = if backend == Backend::Executed { 1e6 } else { 1e8 };
+        let ev = engine.evaluate(&algo, size_arg(args, default_s)?, backend)?;
+        print_evaluation(&ev);
+        return Ok(());
+    }
+    // Default: the Fig. 8 comparison — simulator as "actual", GenModel
+    // and the classic (α,β,γ) model as predictors. Build the plan once
+    // (GenTree generation is expensive on large topologies) and price
+    // that one plan under every predictor.
+    let s = size_arg(args, 1e8)?;
+    let plan = engine.plan(&algo, s)?;
+    let name = algo.to_string();
+    let mut evs = engine.compare_plan(&name, &plan, s, &[Backend::Simulated, Backend::Analytic])?;
+    let gen = evs.pop().expect("analytic evaluation");
+    let sim = evs.pop().expect("simulated evaluation");
+    let classic = engine
+        .clone()
+        .with_model(ModelKind::Classic)
+        .evaluate_plan(&name, &plan, s, Backend::Analytic)?;
+    let actual = sim.seconds;
+    println!(
+        "plan {} on {} (S = {s:.3e} floats)",
+        gen.plan_name,
+        engine.topo().name
+    );
+    println!("  phases            : {}", gen.stats.phases);
     println!("  simulator (actual): {actual:.4} s");
     println!(
         "  GenModel          : {:.4} s  (err {:+.1}%)",
-        gen.total(),
-        (gen.total() - actual) / actual * 100.0
+        gen.seconds,
+        (gen.seconds - actual) / actual * 100.0
     );
     println!(
-        "  (α,β,γ) model     : {classic:.4} s  (err {:+.1}%)",
-        (classic - actual) / actual * 100.0
+        "  (α,β,γ) model     : {:.4} s  (err {:+.1}%)",
+        classic.seconds,
+        (classic.seconds - actual) / actual * 100.0
     );
+    let t = gen.terms.as_ref().expect("analytic backend has terms");
     println!(
         "  terms: α={:.4} β={:.4} γ={:.4} δ={:.4} ε={:.4}",
-        gen.alpha, gen.beta, gen.gamma, gen.delta, gen.epsilon
+        t.alpha, t.beta, t.gamma, t.delta, t.epsilon
     );
     Ok(())
 }
 
 fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let topo = topo_arg(args)?;
-    let s = size_arg(args)?;
+    let s = size_arg(args, 1e8)?;
     let env = Environment::paper();
-    let cfg = gentree::GenTreeConfig {
+    let cfg = genmodel::gentree::GenTreeConfig {
         allow_rearrangement: !args.flag("no-rearrange"),
         ..Default::default()
     };
-    let out = gentree::generate_with(&topo, &env, s, &cfg);
+    let out = genmodel::gentree::generate_with(&topo, &env, s, &cfg);
     println!(
         "GenTree plan for {} at S = {s:.3e}: {} phases, {} transfers",
         topo.name,
@@ -232,14 +268,17 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let topo = topo_arg(args)?;
-    let s = size_arg(args)?;
-    let env = Environment::paper();
-    let algo = args.opt_or("algo", "gentree").to_string();
-    let plan = algo_plan(&algo, &topo, &env, s)?;
-    let t0 = Instant::now();
-    let r = simulate_plan(&plan, s, &topo, &env, &SimConfig::new(&topo));
-    println!("simulated {} on {} (S = {s:.3e})", plan.name, topo.name);
+    let engine = engine_for(args, topo_arg(args)?);
+    let algo = engine.parse_algo(args.opt_or("algo", "gentree"))?;
+    let s = size_arg(args, 1e8)?;
+    let t0 = std::time::Instant::now();
+    let ev = engine.evaluate(&algo, s, Backend::Simulated)?;
+    println!(
+        "simulated {} on {} (S = {s:.3e})",
+        ev.plan_name,
+        engine.topo().name
+    );
+    let r = ev.sim.as_ref().expect("simulated backend has sim report");
     println!("  modelled time : {:.4} s", r.total);
     println!("  communication : {:.4} s", r.communication);
     println!("  calculation   : {:.4} s", r.calculation);
@@ -252,31 +291,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let servers: usize = args.opt_parse_or("servers", 8)?;
     let s: usize = args.opt_parse_or("size", 100_000)?;
-    let algo = args.opt_or("algo", "gentree").to_string();
-    let env = Environment::paper();
-    let topo = genmodel::topo::builders::single_switch(servers);
-    let plan = algo_plan(&algo, &topo, &env, s as f64)?;
-    let reducer = if args.flag("scalar") {
-        ReducerSpec::Scalar.build()?
-    } else {
-        ReducerSpec::Auto.build()?
-    };
-    println!(
-        "executing {} over {servers} workers × {s} floats (reducer: {})",
-        plan.name,
-        if reducer.is_pjrt() { "PJRT" } else { "scalar" }
-    );
-    let mut rng = Rng::new(0xC0FFEE);
-    let inputs: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(s)).collect();
-    let t0 = Instant::now();
-    let out = exec::execute_plan(&plan, &inputs, &reducer)?;
-    let wall = t0.elapsed().as_secs_f64();
-    exec::verify(&out, &inputs, 1e-4).map_err(|e| anyhow::anyhow!("VERIFY FAILED: {e}"))?;
+    let engine = engine_for(args, genmodel::topo::builders::single_switch(servers));
+    let algo = engine.parse_algo(args.opt_or("algo", "gentree"))?;
+    println!("executing {algo} over {servers} workers × {s} floats");
+    let ev = engine.evaluate(&algo, s as f64, Backend::Executed)?;
+    let x = ev.exec.as_ref().expect("executed backend has exec report");
+    println!("  reducer      : {}", if x.pjrt { "PJRT" } else { "scalar" });
     println!("  verified against exact oracle ✓");
-    println!("  wall time    : {wall:.4} s");
-    println!("  reduce calls : {}", out.reduce_calls);
-    println!("  floats reduced: {}", out.reduced_floats);
-    println!("  max fan-in   : {}", out.max_fanin);
+    println!("  wall time    : {:.4} s", x.wall_secs);
+    println!("  reduce calls : {}", x.reduce_calls);
+    println!("  floats reduced: {}", x.reduced_floats);
+    println!("  max fan-in   : {}", x.max_fanin);
     Ok(())
 }
 
@@ -284,24 +309,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let servers: usize = args.opt_parse_or("servers", 8)?;
     let jobs: usize = args.opt_parse_or("jobs", 64)?;
     let tensor: usize = args.opt_parse_or("tensor", 4096)?;
+    let algo = AlgoSpec::parse(args.opt_or("algo", "gentree"))?;
     let spec = if args.flag("scalar") {
         ReducerSpec::Scalar
     } else {
         ReducerSpec::Auto
     };
     let topo = genmodel::topo::builders::single_switch(servers);
-    let svc = AllReduceService::start(topo, Environment::paper(), spec, ServiceConfig::default());
+    algo.applicable(&topo)?;
+    let svc = AllReduceService::start(
+        topo,
+        Environment::paper(),
+        spec,
+        ServiceConfig {
+            algo,
+            ..ServiceConfig::default()
+        },
+    );
     println!("coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats");
-    let t0 = Instant::now();
+    let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
     let handles: Vec<_> = (0..jobs)
         .map(|_| {
             let tensors: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(tensor)).collect();
             svc.submit(tensors)
         })
-        .collect();
+        .collect::<Result<_, _>>()?;
     for h in handles {
-        h.recv().expect("leader alive").map_err(|e| anyhow::anyhow!(e))?;
+        h.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics.snapshot();
@@ -316,6 +351,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  throughput       : {:.2} Mfloat/s reduced",
         m.floats_reduced as f64 / wall / 1e6
     );
+    Ok(())
+}
+
+fn cmd_algos(args: &Args) -> anyhow::Result<()> {
+    println!("registered algorithms:");
+    for src in genmodel::api::registry() {
+        println!("  {:<18} {}", src.template, src.synopsis);
+    }
+    if let Some(spec) = args.opt("topo") {
+        let topo = workloads::parse_topology(spec)
+            .ok_or_else(|| anyhow::anyhow!("unknown topology spec {spec:?}"))?;
+        println!(
+            "\napplicable on {} ({} servers):",
+            topo.name,
+            topo.n_servers()
+        );
+        for algo in genmodel::api::applicable_specs(&topo) {
+            println!("  {algo}");
+        }
+    }
     Ok(())
 }
 

@@ -59,13 +59,26 @@ fn cps_design_row(n: usize, s: f64, w_t: usize) -> (f64, f64, f64, f64) {
     )
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FitError {
-    #[error("need at least 4 benchmark rows spanning different n, got {0}")]
     TooFewRows(usize),
-    #[error("fit is singular — rows do not span the parameter space")]
     Singular,
 }
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::TooFewRows(n) => {
+                write!(f, "need at least 4 benchmark rows spanning different n, got {n}")
+            }
+            FitError::Singular => {
+                write!(f, "fit is singular — rows do not span the parameter space")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
 
 /// Fit GenModel parameters from CPS benchmark rows.
 pub fn fit(rows: &[BenchRow]) -> Result<FittedParams, FitError> {

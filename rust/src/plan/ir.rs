@@ -58,16 +58,41 @@ impl Phase {
 
     /// Number of distinct sources sending to `dst` in this phase — the
     /// communication fan-in degree `w` of GenModel's incast term.
+    ///
+    /// Called per (phase, dst) inside cost evaluation, so it must not
+    /// allocate on the common path: distinct sources are collected into a
+    /// fixed stack buffer (fan-ins beyond `w_t`-scale are rare). Once a
+    /// phase exceeds 32 distinct senders it falls back to one
+    /// sort+dedup pass — O(k log k), not quadratic membership scans.
     pub fn comm_fanin(&self, dst: ServerIdx) -> usize {
-        let mut srcs: Vec<ServerIdx> = self
-            .transfers
-            .iter()
-            .filter(|t| t.dst == dst)
-            .map(|t| t.src)
-            .collect();
-        srcs.sort_unstable();
-        srcs.dedup();
-        srcs.len()
+        const STACK: usize = 32;
+        let mut small = [0 as ServerIdx; STACK];
+        let mut count = 0usize;
+        for t in &self.transfers {
+            if t.dst != dst {
+                continue;
+            }
+            let s = t.src;
+            if small[..count].contains(&s) {
+                continue;
+            }
+            if count == STACK {
+                // Large incast (e.g. CPS root at n = 384): the old
+                // allocating path is asymptotically the right tool.
+                let mut srcs: Vec<ServerIdx> = self
+                    .transfers
+                    .iter()
+                    .filter(|t| t.dst == dst)
+                    .map(|t| t.src)
+                    .collect();
+                srcs.sort_unstable();
+                srcs.dedup();
+                return srcs.len();
+            }
+            small[count] = s;
+            count += 1;
+        }
+        count
     }
 }
 
@@ -218,6 +243,18 @@ mod tests {
         p.push(2, 0, 2, Mode::Move);
         assert_eq!(p.comm_fanin(0), 2);
         assert_eq!(p.comm_fanin(1), 0);
+    }
+
+    #[test]
+    fn comm_fanin_spills_past_stack_capacity() {
+        // More than 32 distinct senders, each sending two blocks: the
+        // heap spill path must still count distinct sources exactly once.
+        let mut p = Phase::new();
+        for s in 1..=40 {
+            p.push(s, 0, 0, Mode::Move);
+            p.push(s, 0, 1, Mode::Move);
+        }
+        assert_eq!(p.comm_fanin(0), 40);
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //! * `model::cost` prices a plan with GenModel on a topology;
 //! * `sim` replays a plan on the flow-level network simulator;
 //! * `exec` runs a plan on real `f32` buffers through the PJRT reducer.
+//!
+//! Callers normally reach these builders through the `api` registry
+//! (`api::AlgoSpec` → plan) rather than calling them directly; the
+//! registry adds per-algorithm applicability checks and validation.
 
 pub mod acps;
 pub mod cps;

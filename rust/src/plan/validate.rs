@@ -56,33 +56,54 @@ impl Contribs {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ValidateError {
-    #[error("phase {phase}: server {src} sends block {block} it does not hold")]
     MissingSource {
         phase: usize,
         src: ServerIdx,
         block: usize,
     },
-    #[error("phase {phase}: overlapping contributors merged at server {dst} for block {block}")]
     OverlappingMerge {
         phase: usize,
         dst: ServerIdx,
         block: usize,
     },
-    #[error("phase {phase}: server {src} copies incomplete block {block}")]
     IncompleteCopy {
         phase: usize,
         src: ServerIdx,
         block: usize,
     },
-    #[error("final state: server {server} lacks the full value of block {block}")]
     IncompleteFinal { server: ServerIdx, block: usize },
-    #[error("final state: block {block} fully reduced at {holders} servers (expected exactly 1)")]
     NotScattered { block: usize, holders: usize },
-    #[error("transfer out of range: {0}")]
     OutOfRange(String),
 }
+
+impl std::fmt::Display for ValidateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidateError::MissingSource { phase, src, block } => {
+                write!(f, "phase {phase}: server {src} sends block {block} it does not hold")
+            }
+            ValidateError::OverlappingMerge { phase, dst, block } => write!(
+                f,
+                "phase {phase}: overlapping contributors merged at server {dst} for block {block}"
+            ),
+            ValidateError::IncompleteCopy { phase, src, block } => {
+                write!(f, "phase {phase}: server {src} copies incomplete block {block}")
+            }
+            ValidateError::IncompleteFinal { server, block } => {
+                write!(f, "final state: server {server} lacks the full value of block {block}")
+            }
+            ValidateError::NotScattered { block, holders } => write!(
+                f,
+                "final state: block {block} fully reduced at {holders} servers (expected exactly 1)"
+            ),
+            ValidateError::OutOfRange(what) => write!(f, "transfer out of range: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ValidateError {}
 
 /// What the plan is expected to accomplish.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

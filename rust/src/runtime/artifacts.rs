@@ -5,6 +5,7 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -63,7 +64,10 @@ impl Manifest {
     }
 }
 
-/// Compiled executables on a PJRT CPU client.
+/// Compiled executables on a PJRT CPU client. Only available with the
+/// `pjrt` feature (the `xla` bindings are outside the offline dependency
+/// closure); without it the reducer falls back to the scalar path.
+#[cfg(feature = "pjrt")]
 pub struct Artifacts {
     pub manifest: Manifest,
     pub dir: PathBuf,
@@ -72,6 +76,7 @@ pub struct Artifacts {
     cache: std::sync::Mutex<HashMap<(String, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifacts {
     /// Default artifact directory: $REPRO_ARTIFACTS or ./artifacts
     /// relative to the crate root.

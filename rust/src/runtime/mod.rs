@@ -11,5 +11,7 @@
 pub mod artifacts;
 pub mod reducer;
 
-pub use artifacts::{Artifacts, Manifest};
+#[cfg(feature = "pjrt")]
+pub use artifacts::Artifacts;
+pub use artifacts::Manifest;
 pub use reducer::{Reducer, ReducerSpec};

@@ -13,10 +13,12 @@
 //! fallback when artifacts are absent, and the baseline the §Perf pass
 //! compares the PJRT path against.
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use super::artifacts::Artifacts;
 
 /// Thread-safe recipe for building a [`Reducer`]. The PJRT client is
@@ -37,7 +39,13 @@ impl ReducerSpec {
         match self {
             ReducerSpec::Scalar => Ok(Reducer::Scalar),
             ReducerSpec::Auto => Ok(Reducer::auto()),
+            #[cfg(feature = "pjrt")]
             ReducerSpec::PjrtDir(d) => Ok(Reducer::Pjrt(Arc::new(Artifacts::load(d)?))),
+            #[cfg(not(feature = "pjrt"))]
+            ReducerSpec::PjrtDir(d) => Err(anyhow::anyhow!(
+                "built without the `pjrt` feature: cannot load PJRT artifacts from {}",
+                d.display()
+            )),
         }
     }
 }
@@ -45,6 +53,7 @@ impl ReducerSpec {
 #[derive(Clone)]
 pub enum Reducer {
     /// PJRT-compiled fused kernels (the production path).
+    #[cfg(feature = "pjrt")]
     Pjrt(Arc<Artifacts>),
     /// Pure-rust scalar loops (oracle / fallback).
     Scalar,
@@ -52,16 +61,31 @@ pub enum Reducer {
 
 impl Reducer {
     /// Load the PJRT reducer from the default artifact dir, falling back
-    /// to scalar when artifacts are missing (e.g. unit tests).
+    /// to scalar when artifacts are missing (e.g. unit tests) or the
+    /// `pjrt` feature is off.
     pub fn auto() -> Reducer {
-        match Artifacts::load_default() {
-            Ok(a) => Reducer::Pjrt(Arc::new(a)),
-            Err(_) => Reducer::Scalar,
+        #[cfg(feature = "pjrt")]
+        {
+            match Artifacts::load_default() {
+                Ok(a) => Reducer::Pjrt(Arc::new(a)),
+                Err(_) => Reducer::Scalar,
+            }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Reducer::Scalar
         }
     }
 
     pub fn is_pjrt(&self) -> bool {
-        matches!(self, Reducer::Pjrt(_))
+        #[cfg(feature = "pjrt")]
+        {
+            matches!(self, Reducer::Pjrt(_))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            false
+        }
     }
 
     /// Sum `k` equal-length buffers element-wise.
@@ -76,6 +100,7 @@ impl Reducer {
         }
         match self {
             Reducer::Scalar => Ok(scalar_reduce(inputs)),
+            #[cfg(feature = "pjrt")]
             Reducer::Pjrt(arts) => pjrt_reduce(arts, inputs),
         }
     }
@@ -90,6 +115,7 @@ impl Reducer {
                 }
                 Ok(())
             }
+            #[cfg(feature = "pjrt")]
             Reducer::Pjrt(arts) => {
                 let n = arts.manifest.chunk_n;
                 let len = w.len();
@@ -136,6 +162,7 @@ pub fn scalar_reduce_chained(inputs: &[&[f32]]) -> Vec<f32> {
     acc
 }
 
+#[cfg(feature = "pjrt")]
 fn pjrt_reduce(arts: &Artifacts, inputs: &[&[f32]]) -> Result<Vec<f32>> {
     // Available (k, n) reduce variants, derived from the manifest.
     let mut ns: Vec<usize> = arts

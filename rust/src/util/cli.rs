@@ -15,19 +15,30 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     BadValue {
         key: String,
         value: String,
         why: String,
     },
-    #[error("unknown options: {0}")]
     UnknownOptions(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+            CliError::UnknownOptions(o) => write!(f, "unknown options: {o}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (without argv[0]).

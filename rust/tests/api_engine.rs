@@ -1,0 +1,178 @@
+//! API-layer tests: the registry's applicability contract, cross-backend
+//! agreement, and the typed-error guarantees of the coordinator service.
+
+use genmodel::api::{applicable_specs, AlgoSpec, ApiError, Backend, Engine};
+use genmodel::coordinator::{AllReduceService, ServiceConfig};
+use genmodel::model::params::Environment;
+use genmodel::plan::validate::{validate, Goal};
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::{builders, Topology};
+use genmodel::util::prop;
+use genmodel::util::rng::Rng;
+
+/// Random tree topology: flat, asymmetric 2-level, or cross-DC.
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.gen_range(0, 3) {
+        0 => builders::single_switch(rng.gen_range(2, 24)),
+        1 => {
+            let mids = rng.gen_range(2, 5);
+            let sizes: Vec<usize> = (0..mids).map(|_| rng.gen_range(1, 8)).collect();
+            if sizes.iter().sum::<usize>() < 2 {
+                builders::single_switch(4)
+            } else {
+                builders::asymmetric(&sizes, &[])
+            }
+        }
+        _ => {
+            let a: Vec<usize> = (0..rng.gen_range(1, 3)).map(|_| rng.gen_range(1, 6)).collect();
+            let b: Vec<usize> = (0..rng.gen_range(1, 3)).map(|_| rng.gen_range(1, 6)).collect();
+            if a.iter().chain(&b).sum::<usize>() < 2 {
+                builders::single_switch(3)
+            } else {
+                builders::cross_dc(&a, &b)
+            }
+        }
+    }
+}
+
+/// Every spec the registry reports applicable for a sampled topology
+/// must build a plan that passes AllReduce validation, for the right
+/// server count, and round-trip through `Display`/`FromStr`.
+#[test]
+fn prop_applicable_specs_build_valid_plans() {
+    let env = Environment::paper();
+    prop::run("registry-applicable-valid", 48, |rng| {
+        let topo = random_topology(rng);
+        let s = 10f64.powf(rng.gen_range(4, 8) as f64);
+        let specs = applicable_specs(&topo);
+        if topo.n_servers() >= 2 && specs.len() < 3 {
+            return Err(format!(
+                "{}: suspiciously few applicable algorithms: {specs:?}",
+                topo.name
+            ));
+        }
+        for spec in specs {
+            let plan = spec
+                .build(&topo, &env, s)
+                .map_err(|e| format!("{}: {spec}: {e}", topo.name))?;
+            validate(&plan, Goal::AllReduce)
+                .map_err(|e| format!("{}: {spec}: {e}", topo.name))?;
+            if plan.n_servers != topo.n_servers() {
+                return Err(format!("{spec}: plan n={} topo n={}", plan.n_servers, topo.n_servers()));
+            }
+            let reparsed: AlgoSpec = spec
+                .to_string()
+                .parse()
+                .map_err(|e: ApiError| format!("{spec}: reparse: {e}"))?;
+            if reparsed != spec {
+                return Err(format!("{spec}: display/parse roundtrip broke: {reparsed}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// On a single switch, the analytic GenModel backend and the flow
+/// simulator agree within tolerance for every applicable algorithm —
+/// the Fig. 8 accuracy claim as a property.
+#[test]
+fn prop_analytic_and_simulated_agree_on_single_switch() {
+    let env = Environment::paper();
+    prop::run("model-vs-sim-single-switch", 24, |rng| {
+        let n = rng.gen_range(2, 12);
+        let s = 10f64.powf(rng.gen_range(4, 8) as f64);
+        let engine = Engine::new(builders::single_switch(n), env.clone());
+        for algo in engine.algorithms() {
+            let evs = engine
+                .compare(&algo, s, &[Backend::Analytic, Backend::Simulated])
+                .map_err(|e| format!("n={n}: {algo}: {e}"))?;
+            let (model, sim) = (evs[0].seconds, evs[1].seconds);
+            if !(model.is_finite() && sim.is_finite() && model > 0.0 && sim > 0.0) {
+                return Err(format!("n={n} {algo}: degenerate times {model} / {sim}"));
+            }
+            let rel = (model - sim).abs() / sim;
+            if rel > 0.12 {
+                return Err(format!(
+                    "n={n} S={s:.0e} {algo}: model {model:.5}s vs sim {sim:.5}s (rel {rel:.3})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The executed backend agrees with itself across algorithms: every
+/// applicable algorithm reduces the same inputs to the same (oracle)
+/// result — verification happens inside the backend.
+#[test]
+fn prop_executed_backend_verifies_for_every_algorithm() {
+    let env = Environment::paper();
+    prop::run("exec-all-algorithms", 12, |rng| {
+        let n = rng.gen_range(2, 9);
+        let s = rng.gen_range(3, 4000) as f64;
+        let engine = Engine::new(builders::single_switch(n), env.clone());
+        for algo in engine.algorithms() {
+            let ev = engine
+                .evaluate(&algo, s, Backend::Executed)
+                .map_err(|e| format!("n={n} {algo}: {e}"))?;
+            let x = ev.exec.ok_or_else(|| format!("{algo}: no exec report"))?;
+            if !x.verified {
+                return Err(format!("{algo}: not verified"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn submit_on_stopped_service_is_typed_error() {
+    let svc = AllReduceService::start(
+        builders::single_switch(3),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig::default(),
+    );
+    let ts = |seed| {
+        let mut rng = Rng::new(seed);
+        (0..3).map(|_| rng.f32_vec(16)).collect::<Vec<_>>()
+    };
+    svc.allreduce(ts(1)).unwrap();
+    svc.stop();
+    assert_eq!(svc.submit(ts(2)).err(), Some(ApiError::ServiceStopped));
+}
+
+#[test]
+fn wrong_tensor_count_is_typed_error_end_to_end() {
+    let svc = AllReduceService::start(
+        builders::single_switch(4),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig::default(),
+    );
+    let mut rng = Rng::new(0);
+    let three: Vec<Vec<f32>> = (0..3).map(|_| rng.f32_vec(8)).collect();
+    match svc.submit(three) {
+        Err(ApiError::BadRequest { reason }) => assert!(reason.contains("tensor")),
+        other => panic!("expected BadRequest, got {:?}", other.map(|_| ())),
+    }
+}
+
+/// `repro predict --algo X --backend model|sim|exec` works for every
+/// registered algorithm — here as the library calls the CLI makes.
+#[test]
+fn every_registered_algorithm_evaluates_on_every_backend() {
+    let engine = Engine::new(builders::single_switch(8), Environment::paper());
+    let algos = engine.algorithms();
+    // All seven families are applicable on 8 servers (power of two,
+    // composite): gentree, gentree-star, rhd, ring, cps, hcps, rb, acps.
+    assert!(algos.len() >= 7, "expected the full registry, got {algos:?}");
+    for algo in &algos {
+        for backend in Backend::ALL {
+            let s = if backend == Backend::Executed { 2000.0 } else { 1e7 };
+            let ev = engine
+                .evaluate(algo, s, backend)
+                .unwrap_or_else(|e| panic!("{algo} on {backend}: {e}"));
+            assert!(ev.seconds > 0.0, "{algo} on {backend}: zero time");
+        }
+    }
+}

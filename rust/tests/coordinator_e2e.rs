@@ -16,6 +16,7 @@ fn cfg(bucket: usize) -> ServiceConfig {
             bucket_floats: bucket,
         },
         flush_after: Duration::from_millis(1),
+        ..ServiceConfig::default()
     }
 }
 

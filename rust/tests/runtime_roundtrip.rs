@@ -1,6 +1,8 @@
 //! PJRT round-trip tests: the AOT artifacts loaded and executed from rust
 //! must match the scalar oracle bit-for-bit tolerances aside.
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! Requires the `pjrt` feature and `make artifacts` (skips gracefully
+//! otherwise).
+#![cfg(feature = "pjrt")]
 
 use genmodel::runtime::{Artifacts, Reducer};
 use genmodel::util::rng::Rng;

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# One-command gate for this repository: formatting, lints, build, tier-1
+# tests. Future PRs should pass `scripts/ci.sh` before merging.
+#
+# Lint baseline: clippy runs with -D warnings but keeps a small allowlist
+# (below) for pre-existing idioms the seed tree uses on purpose
+# (e.g. manual Display impls over long match arms). Shrink, don't grow.
+set -u
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: WARNING: cargo not found on PATH — this container ships no" >&2
+    echo "ci.sh: rust toolchain, so the gate cannot run here. Run it in an" >&2
+    echo "ci.sh: environment with the rust_pallas toolchain installed." >&2
+    exit 0
+fi
+
+fail=0
+step() {
+    echo
+    echo "==> $*"
+    if ! "$@"; then
+        fail=1
+        echo "ci.sh: FAILED: $*" >&2
+    fi
+}
+
+# 1. Formatting.
+step cargo fmt --all --check
+
+# 2. Lints (documented baseline allows: needless_range_loop and
+#    too_many_arguments, which the plan builders trip by construction).
+step cargo clippy --workspace --all-targets -- \
+    -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments
+
+# 3. Tier-1: release build + tests (ROADMAP.md's verify line).
+step cargo build --release
+step cargo test -q
+
+# 4. Everything else compiles (benches are excluded from `cargo test`).
+step cargo build --release --all-targets
+
+exit $fail
