@@ -1,0 +1,66 @@
+//! Campaign quickstart: sweep scenarios in parallel, reduce the sweep to
+//! a selection table, and serve jobs through it — the paper's §5.4
+//! offline study wired into the serving hot path, in ~60 lines.
+//!
+//! Run: `cargo run --release --example campaign`
+
+use genmodel::campaign::{run_campaign, Metric, RunConfig, ScenarioGrid, SelectionTable};
+use genmodel::coordinator::{AllReduceService, ServiceConfig};
+use genmodel::model::params::Environment;
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small sweep: one rack, two payload sizes, every applicable
+    //    algorithm, evaluated by GenModel and the flow simulator on two
+    //    worker threads. The JSONL artifact memoizes by scenario hash, so
+    //    re-running this example resumes instead of recomputing.
+    let grid = ScenarioGrid {
+        name: "example".into(),
+        topos: vec!["single:6".into()],
+        sizes: vec![1e4, 1e8],
+        algos: Vec::new(),
+        env: genmodel::campaign::EnvKind::Paper,
+    };
+    let out = std::env::temp_dir().join("genmodel_example_campaign.jsonl");
+    let summary = run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() })?;
+    println!(
+        "swept {} scenario(s) ({} resumed) in {:.2}s",
+        summary.total, summary.resumed, summary.wall_secs
+    );
+
+    // 2. Reduce to the per-(topology class, size bucket) winners under
+    //    the analytic GenModel metric — selection without simulation.
+    let rows = genmodel::campaign::load_rows(&out)?;
+    let table = SelectionTable::from_rows(&rows, Metric::Model);
+    for (class, cells) in table.classes() {
+        for (bucket, choice) in cells {
+            println!(
+                "  {class} bucket 2^{bucket} → {} ({:.5}s, margin {:.2}x)",
+                choice.algo,
+                choice.seconds,
+                choice.margin()
+            );
+        }
+    }
+
+    // 3. Feed the table to the coordinator: every submitted job now
+    //    routes to the precomputed winner for its size bucket.
+    let svc = AllReduceService::start(
+        single_switch(6),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig {
+            selection: table.rules_for("single:6")?,
+            ..ServiceConfig::default()
+        },
+    );
+    let mut rng = Rng::new(42);
+    for len in [1_000usize, 200_000] {
+        let tensors: Vec<Vec<f32>> = (0..6).map(|_| rng.f32_vec(len)).collect();
+        let res = svc.allreduce(tensors)?;
+        println!("job of {len} floats routed to {} ({})", res.algo, res.plan_name);
+    }
+    Ok(())
+}

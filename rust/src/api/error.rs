@@ -22,6 +22,9 @@ pub enum ApiError {
     },
     /// The backend string matched no evaluation backend.
     UnknownBackend { spec: String },
+    /// The topology spec string is unknown or malformed (e.g. `sym:16`
+    /// with a missing server count, or `asy:32/` with an empty side).
+    BadTopology { spec: String, reason: String },
     /// The algorithm is registered but cannot run on this topology
     /// (e.g. RHD on a non-power-of-two server count).
     AlgoTopoMismatch {
@@ -45,6 +48,8 @@ pub enum ApiError {
         backend: &'static str,
         reason: String,
     },
+    /// A campaign/selection artifact could not be read or written.
+    Io { path: String, reason: String },
     /// The coordinator service has been stopped (or its leader is gone).
     ServiceStopped,
 }
@@ -58,6 +63,9 @@ impl fmt::Display for ApiError {
             ApiError::UnknownBackend { spec } => {
                 write!(f, "unknown backend {spec:?} (known: model, sim, exec)")
             }
+            ApiError::BadTopology { spec, reason } => {
+                write!(f, "bad topology spec {spec:?}: {reason}")
+            }
             ApiError::AlgoTopoMismatch { algo, topo, reason } => {
                 write!(f, "algorithm {algo} cannot run on {topo}: {reason}")
             }
@@ -69,6 +77,7 @@ impl fmt::Display for ApiError {
             ApiError::BackendUnavailable { backend, reason } => {
                 write!(f, "backend {backend} unavailable: {reason}")
             }
+            ApiError::Io { path, reason } => write!(f, "io error on {path}: {reason}"),
             ApiError::ServiceStopped => write!(f, "service stopped"),
         }
     }
@@ -96,6 +105,12 @@ mod tests {
         assert!(e.to_string().contains("warp"));
         assert!(e.to_string().contains("gentree"));
         assert_eq!(ApiError::ServiceStopped.to_string(), "service stopped");
+        let t = ApiError::BadTopology {
+            spec: "sym:16".into(),
+            reason: "sym expects M,K".into(),
+        };
+        assert!(t.to_string().contains("sym:16"));
+        assert!(t.to_string().contains("M,K"));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Shared workload definitions for the evaluation harness: the paper's
 //! topology instances (§5.3) and baseline plan sets.
 
-use crate::api;
+use crate::api::{self, ApiError};
 use crate::model::params::Environment;
 use crate::plan::Plan;
 use crate::topo::{builders, Topology};
@@ -21,35 +21,99 @@ pub fn paper_topology(name: &str) -> Option<Topology> {
 
 /// Parse extended topology specs: paper names plus `single:N`, `sym:M,K`,
 /// `gpu:M,G`, `asy:a+b+…/c+d+…`, `cdc:a+b/c+d`.
-pub fn parse_topology(spec: &str) -> Option<Topology> {
+///
+/// Malformed specs (wrong arity, empty sides, non-numeric counts) are
+/// typed [`ApiError::BadTopology`] errors naming the offending spec —
+/// never a silent `None`.
+pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
+    let bad = |reason: String| ApiError::BadTopology {
+        spec: spec.to_string(),
+        reason,
+    };
     if let Some(t) = paper_topology(spec) {
-        return Some(t);
+        return Ok(t);
     }
-    let (kind, rest) = spec.split_once(':')?;
-    let nums = |s: &str| -> Option<Vec<usize>> {
+    let (kind, rest) = spec.split_once(':').ok_or_else(|| {
+        bad(
+            "expected a paper name (ss24 ss32 sym384 sym512 asy384 cdc384) or \
+             kind:params (single:N sym:M,K gpu:M,G asy:a+b/c+d cdc:a+b/c+d)"
+                .into(),
+        )
+    })?;
+    let nums = |s: &str, what: &str| -> Result<Vec<usize>, ApiError> {
+        if s.trim().is_empty() {
+            return Err(bad(format!("{what} is empty")));
+        }
         s.split(&['+', ','][..])
-            .map(|x| x.trim().parse::<usize>().ok())
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|_| bad(format!("{what} has a non-numeric count {x:?}")))
+            })
             .collect()
     };
     match kind {
-        "single" => Some(builders::single_switch(rest.parse().ok()?)),
+        "single" => {
+            let n: usize = rest
+                .trim()
+                .parse()
+                .map_err(|_| bad(format!("single expects a server count, got {rest:?}")))?;
+            if n < 2 {
+                return Err(bad(format!("single needs ≥ 2 servers, got {n}")));
+            }
+            Ok(builders::single_switch(n))
+        }
         "sym" => {
-            let v = nums(rest)?;
-            (v.len() == 2).then(|| builders::symmetric(v[0], v[1]))
+            let v = nums(rest, "sym parameter list")?;
+            if v.len() != 2 {
+                return Err(bad(format!(
+                    "sym expects M,K (switches, servers-per-switch), got {} value(s)",
+                    v.len()
+                )));
+            }
+            if v[0] == 0 || v[1] == 0 {
+                return Err(bad("sym factors must be positive".into()));
+            }
+            Ok(builders::symmetric(v[0], v[1]))
         }
         "gpu" => {
-            let v = nums(rest)?;
-            (v.len() == 2).then(|| builders::gpu_pod(v[0], v[1]))
+            let v = nums(rest, "gpu parameter list")?;
+            if v.len() != 2 {
+                return Err(bad(format!(
+                    "gpu expects M,G (machines, gpus-per-machine), got {} value(s)",
+                    v.len()
+                )));
+            }
+            if v[0] == 0 || v[1] == 0 {
+                return Err(bad("gpu factors must be positive".into()));
+            }
+            Ok(builders::gpu_pod(v[0], v[1]))
         }
         "asy" => {
-            let (a, b) = rest.split_once('/')?;
-            Some(builders::asymmetric(&nums(a)?, &nums(b)?))
+            let (a, b) = rest
+                .split_once('/')
+                .ok_or_else(|| bad("asy expects big/small server-count lists".into()))?;
+            let big = nums(a, "asy big side")?;
+            let small = nums(b, "asy small side")?;
+            if big.iter().chain(&small).sum::<usize>() == 0 {
+                return Err(bad("asy topology has no servers".into()));
+            }
+            Ok(builders::asymmetric(&big, &small))
         }
         "cdc" => {
-            let (a, b) = rest.split_once('/')?;
-            Some(builders::cross_dc(&nums(a)?, &nums(b)?))
+            let (a, b) = rest
+                .split_once('/')
+                .ok_or_else(|| bad("cdc expects dc0/dc1 server-count lists".into()))?;
+            let dc0 = nums(a, "cdc first data center")?;
+            let dc1 = nums(b, "cdc second data center")?;
+            if dc0.iter().chain(&dc1).sum::<usize>() == 0 {
+                return Err(bad("cdc topology has no servers".into()));
+            }
+            Ok(builders::cross_dc(&dc0, &dc1))
         }
-        _ => None,
+        other => Err(bad(format!(
+            "unknown topology kind {other:?} (known: single, sym, gpu, asy, cdc)"
+        ))),
     }
 }
 
@@ -94,7 +158,31 @@ mod tests {
         assert_eq!(parse_topology("gpu:2,8").unwrap().n_servers(), 16);
         assert_eq!(parse_topology("asy:4+4/2").unwrap().n_servers(), 10);
         assert_eq!(parse_topology("cdc:4/2+2").unwrap().n_servers(), 8);
-        assert!(parse_topology("bogus:1").is_none());
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors_naming_the_spec() {
+        for spec in [
+            "bogus:1",     // unknown kind
+            "sym:16",      // missing K
+            "sym:4,6,8",   // too many values
+            "asy:32/",     // empty small side
+            "asy:32",      // missing '/'
+            "cdc:4",       // missing '/'
+            "single:x",    // non-numeric
+            "single:1",    // too few servers
+            "sym:0,4",     // zero factor
+            "asy:a+4/2",   // non-numeric count
+            "nonsense",    // neither paper name nor kind:params
+        ] {
+            match parse_topology(spec) {
+                Err(ApiError::BadTopology { spec: s, reason }) => {
+                    assert_eq!(s, spec);
+                    assert!(!reason.is_empty(), "{spec}: empty reason");
+                }
+                other => panic!("{spec}: expected BadTopology, got {other:?}"),
+            }
+        }
     }
 
     #[test]

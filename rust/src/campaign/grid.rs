@@ -1,0 +1,330 @@
+//! Declarative scenario grids and their expansion into concrete scenarios.
+//!
+//! A [`ScenarioGrid`] is the campaign's input: topology specs (anything
+//! [`crate::bench::workloads::parse_topology`] accepts), a message-size
+//! ladder, an algorithm set (empty = every registry algorithm applicable
+//! to the topology), and a parameter environment. [`ScenarioGrid::expand`]
+//! turns it into a deduplicated, deterministically-ordered [`Scenario`]
+//! list — the unit of work the [`super::runner`] distributes over threads
+//! and memoizes by [`Scenario::hash`].
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::api::{applicable_specs, AlgoSpec, ApiError};
+use crate::bench::workloads::parse_topology;
+use crate::model::params::Environment;
+use crate::util::rng::fnv1a;
+
+/// Which parameter environment prices the scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvKind {
+    /// Table 5 CPU-cluster parameters ([`Environment::paper`]).
+    Paper,
+    /// §5.2 GPU-pod parameters ([`Environment::gpu`]).
+    Gpu,
+}
+
+impl EnvKind {
+    pub fn parse(spec: &str) -> Result<EnvKind, ApiError> {
+        match spec.trim().to_ascii_lowercase().as_str() {
+            "paper" | "cpu" => Ok(EnvKind::Paper),
+            "gpu" => Ok(EnvKind::Gpu),
+            _ => Err(ApiError::BadRequest {
+                reason: format!("unknown environment {spec:?} (known: paper, gpu)"),
+            }),
+        }
+    }
+
+    pub fn environment(&self) -> Environment {
+        match self {
+            EnvKind::Paper => Environment::paper(),
+            EnvKind::Gpu => Environment::gpu(),
+        }
+    }
+}
+
+impl fmt::Display for EnvKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EnvKind::Paper => "paper",
+            EnvKind::Gpu => "gpu",
+        })
+    }
+}
+
+/// One concrete (topology × algorithm × size × environment) evaluation.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// The topology spec string (the selection table's class key).
+    pub topo: String,
+    /// The built topology's display name (e.g. `SYM384`).
+    pub topo_name: String,
+    pub n_servers: usize,
+    pub algo: AlgoSpec,
+    /// Payload size in floats.
+    pub size: f64,
+    pub env: EnvKind,
+}
+
+impl Scenario {
+    /// Canonical identity string — the memoization key. `{:e}` renders
+    /// sizes shortest-roundtrip, so equal f64s always produce equal keys.
+    pub fn key(&self) -> String {
+        format!("{}|{}|{:e}|{}", self.topo, self.algo, self.size, self.env)
+    }
+
+    /// FNV-1a of [`Self::key`], reported in the JSONL rows.
+    pub fn hash(&self) -> u64 {
+        fnv1a(self.key().as_bytes())
+    }
+}
+
+/// A declarative sweep: the cross product of topologies × sizes × algos,
+/// filtered by registry applicability.
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    /// Grid name (artifact naming, report titles).
+    pub name: String,
+    /// Topology spec strings ([`parse_topology`] grammar).
+    pub topos: Vec<String>,
+    /// Message-size ladder in floats.
+    pub sizes: Vec<f64>,
+    /// Algorithm spec strings; empty = all applicable registry defaults.
+    pub algos: Vec<String>,
+    pub env: EnvKind,
+}
+
+impl ScenarioGrid {
+    /// The paper's Fig. 11 / Table 7 sweep: all six evaluation topologies,
+    /// a five-point size ladder around [`crate::bench::workloads::PAPER_SIZES`],
+    /// every applicable registry algorithm (≥ 200 scenarios).
+    pub fn fig11() -> ScenarioGrid {
+        ScenarioGrid {
+            name: "fig11".into(),
+            topos: ["ss24", "ss32", "sym384", "sym512", "asy384", "cdc384"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            sizes: vec![1e6, 1e7, 3.2e7, 1e8, 3.2e8],
+            algos: Vec::new(),
+            env: EnvKind::Paper,
+        }
+    }
+
+    /// A CI-sized smoke sweep (~24 scenarios): small single-switch racks,
+    /// one size, every applicable algorithm. Fast enough to run on every
+    /// merge while still exercising the full runner/selector path.
+    pub fn smoke() -> ScenarioGrid {
+        ScenarioGrid {
+            name: "smoke".into(),
+            topos: ["single:4", "single:6", "single:8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            sizes: vec![1e6],
+            algos: Vec::new(),
+            env: EnvKind::Paper,
+        }
+    }
+
+    /// Resolve a named preset.
+    pub fn named(name: &str) -> Result<ScenarioGrid, ApiError> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "fig11" => Ok(ScenarioGrid::fig11()),
+            "smoke" => Ok(ScenarioGrid::smoke()),
+            _ => Err(ApiError::BadRequest {
+                reason: format!("unknown campaign grid {name:?} (known: fig11, smoke)"),
+            }),
+        }
+    }
+
+    /// Short stable fingerprint of the grid's contents (topos, sizes,
+    /// algos, env) — folded into derived artifact names so two different
+    /// grids never default to the same file.
+    pub fn fingerprint(&self) -> u64 {
+        let mut text = String::new();
+        for t in &self.topos {
+            text.push_str(t);
+            text.push('|');
+        }
+        for s in &self.sizes {
+            text.push_str(&format!("{s:e}|"));
+        }
+        for a in &self.algos {
+            text.push_str(a);
+            text.push('|');
+        }
+        text.push_str(&self.env.to_string());
+        fnv1a(text.as_bytes())
+    }
+
+    /// Expand into the deduplicated scenario list, in deterministic
+    /// (topos × sizes × algos) order. Explicitly-listed algorithms that
+    /// are registered but inapplicable to a topology (e.g. RHD on 24
+    /// servers) are skipped, mirroring the paper's Table 7; unknown
+    /// algorithm strings and bad topology specs are errors.
+    pub fn expand(&self) -> Result<Vec<Scenario>, ApiError> {
+        if self.topos.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!("campaign grid {:?} lists no topologies", self.name),
+            });
+        }
+        if self.sizes.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!("campaign grid {:?} lists no sizes", self.name),
+            });
+        }
+        if let Some(&s) = self.sizes.iter().find(|&&s| !(s.is_finite() && s > 0.0)) {
+            return Err(ApiError::BadRequest {
+                reason: format!("campaign grid {:?} has a non-positive size {s}", self.name),
+            });
+        }
+        let mut out = Vec::new();
+        let mut seen = BTreeSet::new();
+        for topo_spec in &self.topos {
+            let topo = parse_topology(topo_spec)?;
+            let algos: Vec<AlgoSpec> = if self.algos.is_empty() {
+                applicable_specs(&topo)
+            } else {
+                let mut v = Vec::new();
+                for a in &self.algos {
+                    let spec = AlgoSpec::parse(a)?;
+                    if spec.applicable(&topo).is_ok() {
+                        v.push(spec);
+                    }
+                }
+                v
+            };
+            for &size in &self.sizes {
+                for algo in &algos {
+                    let sc = Scenario {
+                        topo: topo_spec.clone(),
+                        topo_name: topo.name.clone(),
+                        n_servers: topo.n_servers(),
+                        algo: algo.clone(),
+                        size,
+                        env: self.env,
+                    };
+                    if seen.insert(sc.key()) {
+                        out.push(sc);
+                    }
+                }
+            }
+        }
+        if out.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "campaign grid {:?} expands to no scenarios — none of the listed \
+                     algorithm(s) {:?} apply to the listed topolog(ies) {:?}",
+                    self.name, self.algos, self.topos
+                ),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_grid_is_large_enough() {
+        let scenarios = ScenarioGrid::fig11().expand().unwrap();
+        assert!(
+            scenarios.len() >= 200,
+            "fig11 must cover ≥ 200 scenarios, got {}",
+            scenarios.len()
+        );
+        // RHD only where the server count is a power of two.
+        for sc in &scenarios {
+            if sc.algo == AlgoSpec::Rhd {
+                assert!(sc.n_servers.is_power_of_two(), "{}", sc.key());
+            }
+        }
+    }
+
+    #[test]
+    fn smoke_grid_is_ci_sized() {
+        let scenarios = ScenarioGrid::smoke().expand().unwrap();
+        assert!(
+            (15..=40).contains(&scenarios.len()),
+            "smoke should stay CI-sized, got {}",
+            scenarios.len()
+        );
+    }
+
+    #[test]
+    fn expansion_deduplicates_and_keeps_order() {
+        let mut grid = ScenarioGrid::smoke();
+        grid.topos.push("single:4".into()); // duplicate of the first
+        let once = ScenarioGrid::smoke().expand().unwrap();
+        let twice = grid.expand().unwrap();
+        assert_eq!(once.len(), twice.len());
+        let keys: Vec<String> = once.iter().map(|s| s.key()).collect();
+        let keys2: Vec<String> = twice.iter().map(|s| s.key()).collect();
+        assert_eq!(keys, keys2);
+    }
+
+    #[test]
+    fn explicit_algos_filter_by_applicability() {
+        let grid = ScenarioGrid {
+            name: "t".into(),
+            topos: vec!["single:6".into()],
+            sizes: vec![1e5],
+            algos: vec!["ring".into(), "rhd".into()], // rhd inapplicable on 6
+            env: EnvKind::Paper,
+        };
+        let scenarios = grid.expand().unwrap();
+        assert_eq!(scenarios.len(), 1);
+        assert_eq!(scenarios[0].algo, AlgoSpec::Ring);
+    }
+
+    #[test]
+    fn bad_inputs_are_typed_errors() {
+        let mut grid = ScenarioGrid::smoke();
+        grid.topos = vec!["sym:16".into()];
+        assert!(matches!(grid.expand(), Err(ApiError::BadTopology { .. })));
+
+        let mut grid = ScenarioGrid::smoke();
+        grid.algos = vec!["warpdrive".into()];
+        assert!(matches!(grid.expand(), Err(ApiError::UnknownAlgo { .. })));
+
+        let mut grid = ScenarioGrid::smoke();
+        grid.sizes = vec![-1.0];
+        assert!(matches!(grid.expand(), Err(ApiError::BadRequest { .. })));
+
+        // Every listed algorithm inapplicable everywhere: a 0-scenario
+        // sweep is an error, not a silent empty artifact.
+        let grid = ScenarioGrid {
+            name: "t".into(),
+            topos: vec!["single:6".into()],
+            sizes: vec![1e5],
+            algos: vec!["rhd".into()], // needs a power-of-two server count
+            env: EnvKind::Paper,
+        };
+        match grid.expand() {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("no scenarios"), "{reason}");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scenario_keys_are_stable() {
+        let sc = ScenarioGrid::smoke().expand().unwrap().remove(0);
+        assert_eq!(sc.key(), sc.clone().key());
+        assert_eq!(sc.hash(), sc.hash());
+        assert!(sc.key().contains(&sc.topo));
+    }
+
+    #[test]
+    fn env_kind_roundtrip() {
+        assert_eq!(EnvKind::parse("paper").unwrap(), EnvKind::Paper);
+        assert_eq!(EnvKind::parse("GPU").unwrap(), EnvKind::Gpu);
+        assert_eq!(EnvKind::parse(&EnvKind::Gpu.to_string()).unwrap(), EnvKind::Gpu);
+        assert!(EnvKind::parse("tpu").is_err());
+    }
+}

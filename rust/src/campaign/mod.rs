@@ -1,0 +1,37 @@
+//! Campaign subsystem: parallel scenario sweeps and model-driven
+//! algorithm selection (the paper's §5.4 large-scale study as a service
+//! component).
+//!
+//! The paper's headline result — GenTree beating the state of the art by
+//! 1.2–7.4× "in scenarios where the two new terms dominate" — comes from
+//! sweeping many (topology × size × algorithm) scenarios. This module
+//! makes that sweep one command and turns its output into the
+//! coordinator's routing policy:
+//!
+//! * [`grid`] — a declarative [`ScenarioGrid`] (topology specs, a
+//!   message-size ladder, algorithm sets from the `api` registry, the
+//!   parameter environment) expanded into a deduplicated scenario list;
+//!   presets [`ScenarioGrid::fig11`] (the paper's six evaluation
+//!   topologies, ≥ 200 scenarios) and [`ScenarioGrid::smoke`] (CI-sized).
+//! * [`runner`] — a `std::thread::scope` worker pool sweeping the grid
+//!   through the analytic and simulated backends, streaming JSONL,
+//!   memoizing by scenario hash (interrupted campaigns resume), and
+//!   canonicalizing the finished artifact so it is byte-identical for
+//!   any worker count.
+//! * [`select`] — the [`SelectionTable`] reducer: winner per (topology
+//!   class, payload-size bucket), serialized as JSON, convertible into
+//!   the bucket→algorithm rules `coordinator::PlanRouter` routes by.
+//! * [`report`] — the Fig. 11-style winners table with GenTree-vs-best-
+//!   baseline ratios.
+//!
+//! CLI: `repro campaign run|select|report` (see `repro` usage); the
+//! serving side consumes tables via `repro serve --selection <file>`.
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+pub mod select;
+
+pub use grid::{EnvKind, Scenario, ScenarioGrid};
+pub use runner::{evaluate_scenario, load_rows, run_campaign, CampaignRow, RunConfig, RunSummary};
+pub use select::{table_from_entries, Choice, Metric, SelectionTable};

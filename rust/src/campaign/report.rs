@@ -1,0 +1,115 @@
+//! Table-driven campaign reports: the Fig. 11-style per-(topology, size)
+//! winner view, with the GenTree-vs-best-baseline ratio the paper's §5.4
+//! headline (1.2–7.4×) is quoted from.
+
+use std::collections::BTreeMap;
+
+use crate::util::table::{secs, speedup, Table};
+
+use super::runner::CampaignRow;
+
+/// Render the per-(topology, size) winner table from campaign rows.
+///
+/// Columns: the winning algorithm under both backends, GenTree's own
+/// simulated time, the best non-GenTree (baseline/SOTA) simulated time,
+/// and their ratio — `>1x` means GenTree wins by that factor.
+pub fn winners_table(rows: &[CampaignRow]) -> Table {
+    // (topo, size) → algo → (model_s, sim_s)
+    let mut cells: BTreeMap<(String, u64), BTreeMap<String, (Option<f64>, Option<f64>)>> =
+        BTreeMap::new();
+    for r in rows {
+        if r.error.is_some() {
+            continue;
+        }
+        cells
+            .entry((r.topo.clone(), r.size as u64))
+            .or_default()
+            .insert(r.algo.clone(), (r.model_s, r.sim_s));
+    }
+    let mut t = Table::new(
+        "Campaign winners per (topology, size) — Fig. 11 view",
+        &[
+            "topo", "size", "win(model)", "win(sim)", "gentree s", "best other s", "gentree vs best",
+        ],
+    );
+    for ((topo, size), algos) in &cells {
+        let win_model = best_by(algos, |v| v.0);
+        let win_sim = best_by(algos, |v| v.1);
+        let gentree = algos
+            .iter()
+            .filter(|(a, _)| a.starts_with("gentree"))
+            .filter_map(|(_, v)| v.1)
+            .min_by(|a, b| a.partial_cmp(b).unwrap());
+        let best_other = algos
+            .iter()
+            .filter(|(a, _)| !a.starts_with("gentree"))
+            .filter_map(|(_, v)| v.1)
+            .min_by(|a, b| a.partial_cmp(b).unwrap());
+        let ratio = match (gentree, best_other) {
+            (Some(g), Some(o)) if g > 0.0 => speedup(o, g),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            topo.clone(),
+            format!("{:.1e}", *size as f64),
+            win_model.map(|(a, _)| a.to_string()).unwrap_or_else(|| "-".into()),
+            win_sim.map(|(a, _)| a.to_string()).unwrap_or_else(|| "-".into()),
+            gentree.map(secs).unwrap_or_else(|| "-".into()),
+            best_other.map(secs).unwrap_or_else(|| "-".into()),
+            ratio,
+        ]);
+    }
+    t
+}
+
+/// The (algorithm, seconds) minimum of one cell under the picked metric;
+/// ties break lexicographically so the report is order-independent.
+fn best_by(
+    algos: &BTreeMap<String, (Option<f64>, Option<f64>)>,
+    pick: fn(&(Option<f64>, Option<f64>)) -> Option<f64>,
+) -> Option<(&str, f64)> {
+    algos
+        .iter()
+        .filter_map(|(a, v)| pick(v).map(|s| (a.as_str(), s)))
+        .filter(|(_, s)| s.is_finite() && *s > 0.0)
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(b.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(topo: &str, algo: &str, size: f64, sim_s: f64) -> CampaignRow {
+        CampaignRow {
+            key: format!("{topo}|{algo}|{size:e}|paper"),
+            hash: "0".repeat(16),
+            topo: topo.into(),
+            topo_name: topo.to_ascii_uppercase(),
+            n_servers: 24,
+            algo: algo.into(),
+            size,
+            env: "paper".into(),
+            model_s: Some(sim_s * 0.98),
+            sim_s: Some(sim_s),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn winners_and_ratio() {
+        let rows = vec![
+            row("ss24", "gentree", 1e8, 0.5),
+            row("ss24", "ring", 1e8, 1.0),
+            row("ss24", "cps", 1e8, 0.9),
+        ];
+        let rendered = winners_table(&rows).render();
+        assert!(rendered.contains("gentree"), "{rendered}");
+        assert!(rendered.contains("1.80x"), "{rendered}"); // 0.9 / 0.5
+    }
+
+    #[test]
+    fn empty_rows_render_empty_table() {
+        let rendered = winners_table(&[]).render();
+        assert!(rendered.contains("Campaign winners"));
+    }
+}

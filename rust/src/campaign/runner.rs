@@ -1,0 +1,466 @@
+//! The multi-threaded campaign runner: evaluate every scenario of a grid
+//! through the analytic and simulated backends, stream results as JSONL,
+//! and memoize by scenario hash so interrupted campaigns resume.
+//!
+//! Concurrency model: `std::thread::scope` with N workers pulling scenario
+//! indices from a shared atomic cursor; the main thread is the single
+//! writer, appending each finished row to the artifact as it arrives
+//! (crash-resumable streaming). After the sweep completes, the artifact is
+//! rewritten in canonical scenario order through a temp-file rename, so a
+//! finished campaign's JSONL is **byte-identical whatever the worker
+//! count** — resumed, 1-thread, and 16-thread runs all converge to the
+//! same artifact.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::api::{ApiError, Backend, Engine};
+use crate::bench::workloads::parse_topology;
+use crate::util::json::Json;
+
+use super::grid::{Scenario, ScenarioGrid};
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Worker threads (clamped to ≥ 1).
+    pub threads: usize,
+    /// The JSONL artifact path (also the resume memo).
+    pub out: PathBuf,
+}
+
+/// What one campaign run did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    /// Scenarios in the expanded grid.
+    pub total: usize,
+    /// Scenarios evaluated fresh in this run.
+    pub evaluated: usize,
+    /// Scenarios resumed from the existing artifact.
+    pub resumed: usize,
+    /// Rows (fresh or resumed) that record an evaluation error.
+    pub failed: usize,
+    pub wall_secs: f64,
+}
+
+impl RunSummary {
+    /// Fresh-evaluation throughput (the `BENCH_campaign.json` metric).
+    pub fn scenarios_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.evaluated as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One JSONL row: a scenario's identity plus its per-backend timings.
+/// Every field is present in every row (absent values are JSON `null`),
+/// so the schema is fixed and externally checkable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignRow {
+    pub key: String,
+    /// Scenario hash, 16 hex digits.
+    pub hash: String,
+    pub topo: String,
+    pub topo_name: String,
+    pub n_servers: usize,
+    pub algo: String,
+    pub size: f64,
+    pub env: String,
+    /// Analytic (GenModel) prediction in seconds.
+    pub model_s: Option<f64>,
+    /// Flow-level simulation in seconds.
+    pub sim_s: Option<f64>,
+    /// Evaluation failure, when the backends could not run.
+    pub error: Option<String>,
+}
+
+impl CampaignRow {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("algo", Json::str(&self.algo)),
+            ("env", Json::str(&self.env)),
+            (
+                "error",
+                self.error
+                    .as_ref()
+                    .map(|s| Json::Str(s.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("hash", Json::str(&self.hash)),
+            ("key", Json::str(&self.key)),
+            ("model_s", opt(self.model_s)),
+            ("n_servers", Json::num(self.n_servers as f64)),
+            ("sim_s", opt(self.sim_s)),
+            ("size", Json::num(self.size)),
+            ("topo", Json::str(&self.topo)),
+            ("topo_name", Json::str(&self.topo_name)),
+        ])
+    }
+
+    /// Parse and schema-check one row.
+    pub fn from_json(v: &Json) -> Result<CampaignRow, ApiError> {
+        let bad = |what: &str| ApiError::BadRequest {
+            reason: format!("campaign row missing/mistyped field {what:?} in {v}"),
+        };
+        let s = |k: &str| -> Result<String, ApiError> {
+            v.get(k).and_then(Json::as_str).map(String::from).ok_or_else(|| bad(k))
+        };
+        let opt_f = |k: &str| -> Result<Option<f64>, ApiError> {
+            match v.get(k) {
+                Some(Json::Null) | None => Ok(None),
+                Some(x) => x.as_f64().map(Some).ok_or_else(|| bad(k)),
+            }
+        };
+        let opt_s = |k: &str| -> Result<Option<String>, ApiError> {
+            match v.get(k) {
+                Some(Json::Null) | None => Ok(None),
+                Some(x) => x.as_str().map(String::from).map(Some).ok_or_else(|| bad(k)),
+            }
+        };
+        Ok(CampaignRow {
+            key: s("key")?,
+            hash: s("hash")?,
+            topo: s("topo")?,
+            topo_name: s("topo_name")?,
+            n_servers: v.get("n_servers").and_then(Json::as_usize).ok_or_else(|| bad("n_servers"))?,
+            algo: s("algo")?,
+            size: v.get("size").and_then(Json::as_f64).ok_or_else(|| bad("size"))?,
+            env: s("env")?,
+            model_s: opt_f("model_s")?,
+            sim_s: opt_f("sim_s")?,
+            error: opt_s("error")?,
+        })
+    }
+}
+
+fn io_err(path: &Path, e: impl std::fmt::Display) -> ApiError {
+    ApiError::Io {
+        path: path.display().to_string(),
+        reason: e.to_string(),
+    }
+}
+
+/// Load a completed campaign artifact, schema-checking every row.
+pub fn load_rows(path: &Path) -> Result<Vec<CampaignRow>, ApiError> {
+    let text = fs::read_to_string(path).map_err(|e| io_err(path, e))?;
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| ApiError::BadRequest {
+            reason: format!("{}:{}: {e}", path.display(), i + 1),
+        })?;
+        rows.push(CampaignRow::from_json(&v).map_err(|e| ApiError::BadRequest {
+            reason: format!("{}:{}: {e}", path.display(), i + 1),
+        })?);
+    }
+    Ok(rows)
+}
+
+/// Resume loader. Exactly one kind of damage is forgiven: a **torn
+/// final line without a trailing newline** — what an interrupted
+/// `writeln!` leaves behind. Anything else unparseable means the file
+/// is not a campaign artifact of ours, and since `run_campaign` ends by
+/// rewriting the whole file, loading on regardless would destroy it —
+/// so that is a refusal, not a warning. Returns the memoized rows and
+/// whether a torn tail must be newline-terminated before appending.
+fn load_resume_memo(path: &Path) -> Result<(Vec<CampaignRow>, bool), ApiError> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return Ok((Vec::new(), false));
+    };
+    let torn_tail = !text.is_empty() && !text.ends_with('\n');
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut rows = Vec::new();
+    for (pos, &(lineno, line)) in lines.iter().enumerate() {
+        match Json::parse(line).ok().as_ref().map(CampaignRow::from_json) {
+            Some(Ok(row)) => rows.push(row),
+            _ if torn_tail && pos == lines.len() - 1 => {
+                eprintln!(
+                    "campaign: {}:{}: dropping torn final line (interrupted write)",
+                    path.display(),
+                    lineno + 1
+                );
+            }
+            _ => {
+                return Err(ApiError::BadRequest {
+                    reason: format!(
+                        "{}:{}: not a campaign row — refusing to treat this file as a \
+                         resumable campaign artifact (the run would rewrite it); pass a \
+                         different --out or delete the file",
+                        path.display(),
+                        lineno + 1
+                    ),
+                });
+            }
+        }
+    }
+    Ok((rows, torn_tail))
+}
+
+/// Evaluate one scenario through the analytic and simulated backends.
+/// Failures become rows carrying `error`, not panics — a campaign keeps
+/// sweeping past individual bad scenarios.
+pub fn evaluate_scenario(sc: &Scenario) -> CampaignRow {
+    let mut row = CampaignRow {
+        key: sc.key(),
+        hash: format!("{:016x}", sc.hash()),
+        topo: sc.topo.clone(),
+        topo_name: sc.topo_name.clone(),
+        n_servers: sc.n_servers,
+        algo: sc.algo.to_string(),
+        size: sc.size,
+        env: sc.env.to_string(),
+        model_s: None,
+        sim_s: None,
+        error: None,
+    };
+    let outcome = (|| -> Result<(f64, f64), ApiError> {
+        let topo = parse_topology(&sc.topo)?;
+        let engine = Engine::new(topo, sc.env.environment());
+        let evs = engine.compare(&sc.algo, sc.size, &[Backend::Analytic, Backend::Simulated])?;
+        Ok((evs[0].seconds, evs[1].seconds))
+    })();
+    match outcome {
+        Ok((model, sim)) => {
+            row.model_s = Some(model);
+            row.sim_s = Some(sim);
+        }
+        Err(e) => row.error = Some(e.to_string()),
+    }
+    row
+}
+
+/// Run (or resume) a campaign. See the module docs for the concurrency
+/// and determinism contract.
+pub fn run_campaign(grid: &ScenarioGrid, cfg: &RunConfig) -> Result<RunSummary, ApiError> {
+    let scenarios = grid.expand()?;
+    let threads = cfg.threads.max(1);
+
+    // Resume memo: rows already computed for scenarios of this grid.
+    let (memo_rows, torn_tail) = load_resume_memo(&cfg.out)?;
+    let mut memo: std::collections::HashMap<String, CampaignRow> = memo_rows
+        .into_iter()
+        .map(|r| (r.key.clone(), r))
+        .collect();
+
+    // Partition: resumed rows land directly in `results`; the rest queue.
+    let mut results: Vec<Option<CampaignRow>> = vec![None; scenarios.len()];
+    let mut todo: Vec<(usize, &Scenario)> = Vec::new();
+    for (i, sc) in scenarios.iter().enumerate() {
+        match memo.remove(&sc.key()) {
+            Some(row) => results[i] = Some(row),
+            None => todo.push((i, sc)),
+        }
+    }
+    if !memo.is_empty() {
+        // The artifact holds rows this grid would silently erase in the
+        // canonical rewrite — almost certainly another campaign's output
+        // (different grid/sizes/env at the same --out). Refuse rather
+        // than destroy completed sweep work.
+        return Err(ApiError::BadRequest {
+            reason: format!(
+                "{}: {} row(s) are not scenarios of grid {:?} — refusing to overwrite \
+                 another campaign's artifact; pass a different --out or delete the file",
+                cfg.out.display(),
+                memo.len(),
+                grid.name
+            ),
+        });
+    }
+    let resumed = scenarios.len() - todo.len();
+
+    // Stream fresh rows into the artifact as they complete (append mode:
+    // an interrupted run resumes from everything flushed so far).
+    if let Some(dir) = cfg.out.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir).map_err(|e| io_err(&cfg.out, e))?;
+        }
+    }
+    let mut stream = fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&cfg.out)
+        .map_err(|e| io_err(&cfg.out, e))?;
+    if torn_tail {
+        // Terminate the interrupted run's half-written line so the first
+        // fresh row is not glued onto it (it would corrupt an otherwise
+        // flushed, resumable row).
+        writeln!(stream).map_err(|e| io_err(&cfg.out, e))?;
+    }
+
+    let t0 = Instant::now();
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, CampaignRow)>();
+    let todo_ref: &[(usize, &Scenario)] = &todo;
+    let cursor_ref = &cursor;
+    std::thread::scope(|scope| -> Result<(), ApiError> {
+        for _ in 0..threads.min(todo_ref.len().max(1)) {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let k = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                let Some(&(idx, sc)) = todo_ref.get(k) else {
+                    break;
+                };
+                if tx.send((idx, evaluate_scenario(sc))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (idx, row) in rx {
+            writeln!(stream, "{}", row.to_json()).map_err(|e| io_err(&cfg.out, e))?;
+            stream.flush().map_err(|e| io_err(&cfg.out, e))?;
+            results[idx] = Some(row);
+        }
+        Ok(())
+    })?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    drop(stream);
+
+    // Canonical rewrite: rows in scenario order, temp file + rename, so
+    // the finished artifact is byte-identical for any thread count.
+    let mut canonical = String::new();
+    let mut failed = 0usize;
+    for row in results.iter() {
+        let row = row.as_ref().expect("every scenario resolved");
+        if row.error.is_some() {
+            failed += 1;
+        }
+        canonical.push_str(&row.to_json().to_string());
+        canonical.push('\n');
+    }
+    let tmp = cfg.out.with_extension("jsonl.tmp");
+    fs::write(&tmp, canonical).map_err(|e| io_err(&tmp, e))?;
+    fs::rename(&tmp, &cfg.out).map_err(|e| io_err(&cfg.out, e))?;
+
+    Ok(RunSummary {
+        total: scenarios.len(),
+        evaluated: todo.len(),
+        resumed,
+        failed,
+        wall_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid::EnvKind;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "genmodel_runner_{tag}_{}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn tiny_grid() -> ScenarioGrid {
+        ScenarioGrid {
+            name: "tiny".into(),
+            topos: vec!["single:4".into()],
+            sizes: vec![1e5],
+            algos: vec!["cps".into(), "ring".into()],
+            env: EnvKind::Paper,
+        }
+    }
+
+    #[test]
+    fn row_json_roundtrip() {
+        let sc = &tiny_grid().expand().unwrap()[0];
+        let row = evaluate_scenario(sc);
+        assert!(row.error.is_none(), "{:?}", row.error);
+        assert!(row.model_s.unwrap() > 0.0 && row.sim_s.unwrap() > 0.0);
+        let back = CampaignRow::from_json(&row.to_json()).unwrap();
+        assert_eq!(back, row);
+        // Canonical serialization is a fixed point.
+        assert_eq!(back.to_json().to_string(), row.to_json().to_string());
+    }
+
+    #[test]
+    fn run_writes_schema_valid_jsonl() {
+        let out = tmp_path("schema");
+        let _ = fs::remove_file(&out);
+        let summary = run_campaign(&tiny_grid(), &RunConfig { threads: 2, out: out.clone() })
+            .unwrap();
+        assert_eq!(summary.total, 2);
+        assert_eq!(summary.evaluated, 2);
+        assert_eq!(summary.resumed, 0);
+        assert_eq!(summary.failed, 0);
+        let rows = load_rows(&out).unwrap();
+        assert_eq!(rows.len(), 2);
+        let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn second_run_resumes_everything() {
+        let out = tmp_path("resume_all");
+        let _ = fs::remove_file(&out);
+        let grid = tiny_grid();
+        let first = run_campaign(&grid, &RunConfig { threads: 1, out: out.clone() }).unwrap();
+        let bytes = fs::read(&out).unwrap();
+        let second = run_campaign(&grid, &RunConfig { threads: 4, out: out.clone() }).unwrap();
+        assert_eq!(second.resumed, first.total);
+        assert_eq!(second.evaluated, 0);
+        assert_eq!(fs::read(&out).unwrap(), bytes, "resume must not change the artifact");
+        let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn refuses_to_rewrite_a_foreign_file() {
+        // `--out` pointed at a file that is not a campaign artifact (e.g.
+        // a selection table): the run must refuse before touching it.
+        let out = tmp_path("foreign");
+        fs::write(&out, "{\"metric\":\"model\",\"classes\":{}}\n").unwrap();
+        let before = fs::read(&out).unwrap();
+        match run_campaign(&tiny_grid(), &RunConfig { threads: 1, out: out.clone() }) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("refusing"), "{reason}");
+            }
+            other => panic!("expected refusal, got {other:?}"),
+        }
+        assert_eq!(fs::read(&out).unwrap(), before, "foreign file must be untouched");
+        let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn refuses_to_overwrite_another_grids_artifact() {
+        let out = tmp_path("stale");
+        let _ = fs::remove_file(&out);
+        let grid = tiny_grid();
+        run_campaign(&grid, &RunConfig { threads: 1, out: out.clone() }).unwrap();
+        let before = fs::read(&out).unwrap();
+        let mut other = tiny_grid();
+        other.sizes = vec![2e5]; // different scenarios, same artifact path
+        match run_campaign(&other, &RunConfig { threads: 1, out: out.clone() }) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("refusing"), "{reason}");
+            }
+            other => panic!("expected refusal, got {other:?}"),
+        }
+        assert_eq!(fs::read(&out).unwrap(), before, "artifact must be untouched");
+        let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn bad_scenario_becomes_error_row_not_panic() {
+        // An hcps spec whose factors never match: expansion filters it,
+        // so force a row through evaluate_scenario with a stale topo.
+        let mut sc = tiny_grid().expand().unwrap()[0].clone();
+        sc.topo = "sym:16".into(); // malformed on purpose
+        let row = evaluate_scenario(&sc);
+        assert!(row.error.as_deref().unwrap().contains("sym:16"));
+        assert!(row.model_s.is_none() && row.sim_s.is_none());
+    }
+}

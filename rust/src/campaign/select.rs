@@ -1,0 +1,425 @@
+//! Reduce a campaign's rows to a [`SelectionTable`]: the winning
+//! algorithm per (topology class, payload-size bucket), serialized as
+//! JSON — the precomputed routing policy the coordinator loads.
+//!
+//! The topology class is the scenario's topology spec string (`ss24`,
+//! `single:8`, …) and the size bucket is the router's power-of-two bucket
+//! ([`PlanRouter::bucket`]), so a table produced offline keys exactly the
+//! way the serving hot path looks plans up.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use crate::api::{AlgoSpec, ApiError};
+use crate::coordinator::PlanRouter;
+use crate::util::json::Json;
+
+use super::runner::CampaignRow;
+
+/// Which backend's seconds pick the winner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// GenModel analytic prediction (`model_s`) — the paper's point: the
+    /// model is accurate enough to drive selection without simulating.
+    Model,
+    /// Flow-level simulation (`sim_s`) — the Fig. 8 "actual".
+    Sim,
+}
+
+impl Metric {
+    pub fn parse(spec: &str) -> Result<Metric, ApiError> {
+        match spec.trim().to_ascii_lowercase().as_str() {
+            "model" | "analytic" | "genmodel" => Ok(Metric::Model),
+            "sim" | "simulated" | "simulator" => Ok(Metric::Sim),
+            _ => Err(ApiError::BadRequest {
+                reason: format!("unknown selection metric {spec:?} (known: model, sim)"),
+            }),
+        }
+    }
+}
+
+impl fmt::Display for Metric {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Metric::Model => "model",
+            Metric::Sim => "sim",
+        })
+    }
+}
+
+/// The winning algorithm of one (class, bucket) cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Choice {
+    pub algo: String,
+    /// Winner's seconds under the table's metric.
+    pub seconds: f64,
+    /// Runner-up seconds (∞ when the winner was unopposed) — the margin
+    /// the paper's §5.4 headline ratios come from.
+    pub runner_up: f64,
+}
+
+impl Choice {
+    /// How much slower the second-best algorithm is (1.0 = tie).
+    pub fn margin(&self) -> f64 {
+        if self.runner_up.is_finite() && self.seconds > 0.0 {
+            self.runner_up / self.seconds
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Winner per (topology class, size bucket), plus the metric that picked
+/// the winners. Serialization is canonical (sorted maps) so equal tables
+/// are byte-equal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionTable {
+    pub metric: Metric,
+    classes: BTreeMap<String, BTreeMap<u32, Choice>>,
+}
+
+impl SelectionTable {
+    /// Reduce campaign rows under `metric`. Error rows and rows missing
+    /// the metric's timing are skipped; ties break toward the
+    /// lexicographically smaller algorithm string so the reduction is
+    /// deterministic whatever the row order.
+    pub fn from_rows(rows: &[CampaignRow], metric: Metric) -> SelectionTable {
+        let mut classes: BTreeMap<String, BTreeMap<u32, Choice>> = BTreeMap::new();
+        for row in rows {
+            if row.error.is_some() {
+                continue;
+            }
+            let seconds = match metric {
+                Metric::Model => row.model_s,
+                Metric::Sim => row.sim_s,
+            };
+            let Some(seconds) = seconds else { continue };
+            if !(seconds.is_finite() && seconds > 0.0) {
+                continue;
+            }
+            let bucket = PlanRouter::bucket(row.size as usize);
+            let cell = classes.entry(row.topo.clone()).or_default().entry(bucket);
+            match cell {
+                std::collections::btree_map::Entry::Vacant(v) => {
+                    v.insert(Choice {
+                        algo: row.algo.clone(),
+                        seconds,
+                        runner_up: f64::INFINITY,
+                    });
+                }
+                std::collections::btree_map::Entry::Occupied(mut o) => {
+                    let c = o.get_mut();
+                    if row.algo == c.algo {
+                        // Another sample of the incumbent (two sizes can
+                        // share one bucket): keep its best time, never
+                        // let it compete with itself for runner-up.
+                        if seconds < c.seconds {
+                            c.seconds = seconds;
+                        }
+                        continue;
+                    }
+                    let better = seconds < c.seconds
+                        || (seconds == c.seconds && row.algo < c.algo);
+                    if better {
+                        c.runner_up = c.seconds.min(c.runner_up);
+                        c.seconds = seconds;
+                        c.algo = row.algo.clone();
+                    } else {
+                        c.runner_up = c.runner_up.min(seconds);
+                    }
+                }
+            }
+        }
+        SelectionTable { metric, classes }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.values().all(|m| m.is_empty())
+    }
+
+    /// Total (class, bucket) cells.
+    pub fn len(&self) -> usize {
+        self.classes.values().map(|m| m.len()).sum()
+    }
+
+    /// The topology classes the table knows about.
+    pub fn classes(&self) -> impl Iterator<Item = (&str, &BTreeMap<u32, Choice>)> {
+        self.classes.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// The winner for a payload of `s` floats on topology class `class`:
+    /// the entry of the nearest bucket at-or-below `s`'s bucket, else the
+    /// nearest above (sizes beyond the swept ladder reuse the edge
+    /// winner). Class matching is case-insensitive.
+    pub fn lookup(&self, class: &str, s: usize) -> Option<&Choice> {
+        let cells = self
+            .classes
+            .get(class)
+            .or_else(|| {
+                let lower = class.to_ascii_lowercase();
+                self.classes
+                    .iter()
+                    .find(|(k, _)| k.to_ascii_lowercase() == lower)
+                    .map(|(_, v)| v)
+            })?;
+        crate::coordinator::router::nearest_bucket(cells, PlanRouter::bucket(s))
+    }
+
+    /// The bucket → parsed-algorithm routing rules for one class — what
+    /// [`crate::coordinator::ServiceConfig::selection`] consumes. Errors
+    /// if a stored algorithm string no longer parses against the
+    /// registry (a stale table).
+    pub fn rules_for(&self, class: &str) -> Result<BTreeMap<u32, AlgoSpec>, ApiError> {
+        let lower = class.to_ascii_lowercase();
+        let Some(cells) = self
+            .classes
+            .iter()
+            .find(|(k, _)| k.to_ascii_lowercase() == lower)
+            .map(|(_, v)| v)
+        else {
+            return Ok(BTreeMap::new());
+        };
+        cells
+            .iter()
+            .map(|(&b, c)| -> Result<(u32, AlgoSpec), ApiError> {
+                Ok((b, AlgoSpec::parse(&c.algo)?))
+            })
+            .collect()
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let classes = self
+            .classes
+            .iter()
+            .map(|(class, cells)| {
+                let m = cells
+                    .iter()
+                    .map(|(b, c)| {
+                        let mut obj = vec![
+                            ("algo", Json::Str(c.algo.clone())),
+                            ("seconds", Json::num(c.seconds)),
+                        ];
+                        if c.runner_up.is_finite() {
+                            obj.push(("runner_up", Json::num(c.runner_up)));
+                        }
+                        (b.to_string(), Json::obj(obj))
+                    })
+                    .collect();
+                (class.clone(), Json::Obj(m))
+            })
+            .collect();
+        Json::obj(vec![
+            ("classes", Json::Obj(classes)),
+            ("metric", Json::Str(self.metric.to_string())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SelectionTable, ApiError> {
+        let bad = |what: String| ApiError::BadRequest {
+            reason: format!("selection table: {what}"),
+        };
+        let metric = Metric::parse(
+            v.get("metric")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("missing metric".into()))?,
+        )?;
+        let Some(Json::Obj(classes)) = v.get("classes") else {
+            return Err(bad("missing classes object".into()));
+        };
+        let mut out: BTreeMap<String, BTreeMap<u32, Choice>> = BTreeMap::new();
+        for (class, cells) in classes {
+            let Json::Obj(cells) = cells else {
+                return Err(bad(format!("class {class:?} is not an object")));
+            };
+            let mut m = BTreeMap::new();
+            for (bucket, cell) in cells {
+                let b: u32 = bucket
+                    .parse()
+                    .map_err(|_| bad(format!("bucket {bucket:?} is not a u32")))?;
+                let algo = cell
+                    .get("algo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad(format!("{class}/{bucket}: missing algo")))?
+                    .to_string();
+                let seconds = cell
+                    .get("seconds")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad(format!("{class}/{bucket}: missing seconds")))?;
+                let runner_up = cell
+                    .get("runner_up")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::INFINITY);
+                m.insert(b, Choice { algo, seconds, runner_up });
+            }
+            out.insert(class.clone(), m);
+        }
+        Ok(SelectionTable { metric, classes: out })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        fs::write(path, format!("{}\n", self.to_json())).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<SelectionTable, ApiError> {
+        let text = fs::read_to_string(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })?;
+        let v = Json::parse(&text).map_err(|e| ApiError::BadRequest {
+            reason: format!("{}: {e}", path.display()),
+        })?;
+        SelectionTable::from_json(&v)
+    }
+}
+
+/// Build a table directly from (class, bucket, algo) triples — test and
+/// hand-authoring convenience; seconds default to 0 and margins to ∞.
+pub fn table_from_entries(
+    metric: Metric,
+    entries: &[(&str, u32, &str)],
+) -> SelectionTable {
+    let mut classes: BTreeMap<String, BTreeMap<u32, Choice>> = BTreeMap::new();
+    for &(class, bucket, algo) in entries {
+        classes.entry(class.to_string()).or_default().insert(
+            bucket,
+            Choice {
+                algo: algo.to_string(),
+                seconds: 0.0,
+                runner_up: f64::INFINITY,
+            },
+        );
+    }
+    SelectionTable { metric, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(topo: &str, algo: &str, size: f64, model_s: f64) -> CampaignRow {
+        CampaignRow {
+            key: format!("{topo}|{algo}|{size:e}|paper"),
+            hash: "0".repeat(16),
+            topo: topo.into(),
+            topo_name: topo.to_ascii_uppercase(),
+            n_servers: 8,
+            algo: algo.into(),
+            size,
+            env: "paper".into(),
+            model_s: Some(model_s),
+            sim_s: Some(model_s * 1.01),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn picks_the_minimum_per_cell_and_keeps_runner_up() {
+        let rows = vec![
+            row("ss24", "ring", 1e6, 0.5),
+            row("ss24", "cps", 1e6, 0.2),
+            row("ss24", "gentree", 1e6, 0.3),
+            row("ss24", "gentree", 1e8, 1.0),
+            row("ss24", "ring", 1e8, 4.0),
+        ];
+        let t = SelectionTable::from_rows(&rows, Metric::Model);
+        assert_eq!(t.len(), 2);
+        let small = t.lookup("ss24", 1e6 as usize).unwrap();
+        assert_eq!(small.algo, "cps");
+        assert!((small.runner_up - 0.3).abs() < 1e-12);
+        assert!((small.margin() - 1.5).abs() < 1e-9);
+        let big = t.lookup("ss24", 1e8 as usize).unwrap();
+        assert_eq!(big.algo, "gentree");
+        assert!((big.margin() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn winner_is_order_independent() {
+        let mut rows = vec![
+            row("ss24", "ring", 1e6, 0.5),
+            row("ss24", "cps", 1e6, 0.2),
+            row("ss24", "acps", 1e6, 0.2), // exact tie with cps
+        ];
+        let a = SelectionTable::from_rows(&rows, Metric::Model);
+        rows.reverse();
+        let b = SelectionTable::from_rows(&rows, Metric::Model);
+        assert_eq!(a, b);
+        assert_eq!(a.lookup("ss24", 1 << 20).unwrap().algo, "acps"); // lexicographic tie-break
+    }
+
+    #[test]
+    fn runner_up_never_competes_with_itself() {
+        // Two sizes landing in the same bucket give the winner two rows;
+        // the runner-up must still be the best *other* algorithm.
+        let mut rows = vec![
+            row("ss24", "cps", 1.00e6, 0.20),
+            row("ss24", "cps", 1.02e6, 0.21), // same bucket, same algo
+            row("ss24", "ring", 1.00e6, 0.50),
+        ];
+        for _ in 0..2 {
+            let t = SelectionTable::from_rows(&rows, Metric::Model);
+            assert_eq!(t.len(), 1);
+            let c = t.lookup("ss24", 1 << 20).unwrap();
+            assert_eq!(c.algo, "cps");
+            assert!((c.seconds - 0.20).abs() < 1e-12);
+            assert!((c.runner_up - 0.50).abs() < 1e-12, "runner_up {}", c.runner_up);
+            assert!((c.margin() - 2.5).abs() < 1e-9);
+            rows.reverse();
+        }
+    }
+
+    #[test]
+    fn lookup_clamps_to_nearest_bucket() {
+        let rows = vec![row("ss24", "cps", 1e6, 0.2), row("ss24", "ring", 1e8, 1.0)];
+        let t = SelectionTable::from_rows(&rows, Metric::Model);
+        // Below the ladder: nearest above. Above the ladder: nearest below.
+        assert_eq!(t.lookup("ss24", 4).unwrap().algo, "cps");
+        assert_eq!(t.lookup("ss24", usize::MAX / 4).unwrap().algo, "ring");
+        // Between the two swept buckets: the lower one's winner.
+        assert_eq!(t.lookup("ss24", 1e7 as usize).unwrap().algo, "cps");
+        assert!(t.lookup("nope", 100).is_none());
+        assert_eq!(t.lookup("SS24", 100).unwrap().algo, "cps"); // case-insensitive
+    }
+
+    #[test]
+    fn error_rows_are_skipped() {
+        let mut bad = row("ss24", "ring", 1e6, 0.5);
+        bad.error = Some("boom".into());
+        bad.model_s = None;
+        let t = SelectionTable::from_rows(&[bad], Metric::Model);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_is_canonical() {
+        let rows = vec![
+            row("ss24", "cps", 1e6, 0.2),
+            row("ss24", "ring", 1e6, 0.5),
+            row("single:8", "gentree", 1e7, 0.1),
+        ];
+        let t = SelectionTable::from_rows(&rows, Metric::Sim);
+        let back = SelectionTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json().to_string(), t.to_json().to_string());
+    }
+
+    #[test]
+    fn rules_parse_against_the_registry() {
+        let t = table_from_entries(Metric::Model, &[("ss24", 10, "cps"), ("ss24", 20, "ring")]);
+        let rules = t.rules_for("ss24").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[&10], crate::api::AlgoSpec::Cps);
+        assert!(t.rules_for("absent").unwrap().is_empty());
+        let stale = table_from_entries(Metric::Model, &[("x", 10, "warpdrive")]);
+        assert!(matches!(
+            stale.rules_for("x"),
+            Err(ApiError::UnknownAlgo { .. })
+        ));
+    }
+}

@@ -22,5 +22,5 @@ pub mod router;
 pub mod service;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{PlanRouter, RoutedPlan};
+pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
 pub use service::{AllReduceService, JobResult, ServiceConfig};

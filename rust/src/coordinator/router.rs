@@ -8,8 +8,14 @@
 //! [`AlgoSpec`] can be routed, the cache is keyed `(algo, bucket)`, and
 //! entries are shared as `Arc<RoutedPlan>` — the hot path takes one lock
 //! and clones one `Arc`, never a whole `Plan`.
+//!
+//! With [`PlanRouter::with_selection`], the router additionally carries
+//! bucket→algorithm **selection rules** (precomputed offline by
+//! `campaign::SelectionTable::rules_for`): each payload routes to the
+//! campaign's winning algorithm for its size bucket instead of one fixed
+//! default — the paper's offline study becomes the serving hot path.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::api::{self, AlgoSpec, ApiError};
@@ -30,10 +36,29 @@ pub struct RoutedPlan {
     pub selections: Vec<Selection>,
 }
 
+/// Bucket→algorithm routing rules derived from a campaign selection
+/// table (`campaign::SelectionTable::rules_for`).
+pub type SelectionRules = BTreeMap<u32, AlgoSpec>;
+
+/// The entry at the nearest bucket at-or-below `bucket`, else the
+/// nearest above (sizes outside a swept ladder clamp to the edge). The
+/// single clamp shared by serve-time routing ([`PlanRouter::algo_for`])
+/// and the offline `campaign::SelectionTable::lookup` — the two must
+/// agree for campaign reports to describe what serving actually does.
+pub fn nearest_bucket<T>(rules: &BTreeMap<u32, T>, bucket: u32) -> Option<&T> {
+    rules
+        .range(..=bucket)
+        .next_back()
+        .or_else(|| rules.range(bucket..).next())
+        .map(|(_, v)| v)
+}
+
 pub struct PlanRouter {
     topo: Topology,
     env: Environment,
     default_algo: AlgoSpec,
+    /// Per-bucket winners; empty = always route `default_algo`.
+    selection: SelectionRules,
     cache: Mutex<HashMap<(AlgoSpec, u32), Arc<RoutedPlan>>>,
 }
 
@@ -43,6 +68,7 @@ impl PlanRouter {
             topo,
             env,
             default_algo: AlgoSpec::GenTree { rearrange: true },
+            selection: SelectionRules::new(),
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -51,6 +77,14 @@ impl PlanRouter {
     /// `ServiceConfig::algo`).
     pub fn with_default_algo(mut self, algo: AlgoSpec) -> Self {
         self.default_algo = algo;
+        self
+    }
+
+    /// Route by per-bucket selection rules; sizes outside the swept
+    /// buckets clamp to the nearest rule, and an empty rule set falls
+    /// back to the default algorithm.
+    pub fn with_selection(mut self, rules: SelectionRules) -> Self {
+        self.selection = rules;
         self
     }
 
@@ -87,9 +121,19 @@ impl PlanRouter {
         Ok(built)
     }
 
-    /// Routed plan for the default algorithm (the serve hot path).
+    /// The algorithm a payload of `s` floats routes to: the selection
+    /// rule of the nearest bucket at-or-below `s`'s bucket, else the
+    /// nearest above, else the default algorithm.
+    pub fn algo_for(&self, s: usize) -> &AlgoSpec {
+        nearest_bucket(&self.selection, Self::bucket(s)).unwrap_or(&self.default_algo)
+    }
+
+    /// Routed plan for [`Self::algo_for`]`(s)` (the serve hot path).
+    /// A selection rule naming an algorithm this topology cannot run
+    /// surfaces as a typed [`ApiError::AlgoTopoMismatch`] — never a
+    /// panic mid-route.
     pub fn plan_for(&self, s: usize) -> Result<Arc<RoutedPlan>, ApiError> {
-        self.route(&self.default_algo, s)
+        self.route(self.algo_for(s), s)
     }
 
     fn build(&self, algo: &AlgoSpec, bucket: u32) -> Result<RoutedPlan, ApiError> {
@@ -181,5 +225,43 @@ mod tests {
             Err(ApiError::AlgoTopoMismatch { .. })
         ));
         assert_eq!(r.cached_plans(), 0, "failures are not cached");
+    }
+
+    #[test]
+    fn selection_rules_pick_per_bucket_winners() {
+        let mut rules = SelectionRules::new();
+        rules.insert(10, AlgoSpec::Cps);
+        rules.insert(20, AlgoSpec::Ring);
+        let r = PlanRouter::new(single_switch(8), Environment::paper())
+            .with_selection(rules);
+        // Bucket 10 and anything between the rules clamps down to CPS.
+        assert_eq!(*r.algo_for(1000), AlgoSpec::Cps);
+        assert_eq!(*r.algo_for(1 << 15), AlgoSpec::Cps);
+        // Bucket 20 and beyond routes Ring.
+        assert_eq!(*r.algo_for(1 << 20), AlgoSpec::Ring);
+        assert_eq!(*r.algo_for(1 << 28), AlgoSpec::Ring);
+        let small = r.plan_for(1000).unwrap();
+        let big = r.plan_for(1 << 20).unwrap();
+        assert_eq!(small.algo, AlgoSpec::Cps);
+        assert_eq!(big.algo, AlgoSpec::Ring);
+    }
+
+    #[test]
+    fn empty_selection_falls_back_to_default() {
+        let r = PlanRouter::new(single_switch(8), Environment::paper())
+            .with_selection(SelectionRules::new());
+        assert_eq!(*r.algo_for(4096), AlgoSpec::GenTree { rearrange: true });
+    }
+
+    #[test]
+    fn selection_naming_inapplicable_algo_is_typed_error_not_panic() {
+        let mut rules = SelectionRules::new();
+        rules.insert(10, AlgoSpec::Rhd); // 6 servers: RHD cannot run
+        let r = PlanRouter::new(single_switch(6), Environment::paper())
+            .with_selection(rules);
+        assert!(matches!(
+            r.plan_for(2048),
+            Err(ApiError::AlgoTopoMismatch { .. })
+        ));
     }
 }

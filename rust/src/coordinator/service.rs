@@ -27,7 +27,7 @@ use crate::topo::Topology;
 
 use super::batcher::{fuse_offsets, plan_batches, BatchPolicy, PendingJob};
 use super::metrics::Metrics;
-use super::router::PlanRouter;
+use super::router::{PlanRouter, SelectionRules};
 
 /// One job's result: the reduced tensor, identical on every worker (so a
 /// single copy is returned), plus accounting.
@@ -36,6 +36,9 @@ pub struct JobResult {
     pub reduced: Vec<f32>,
     pub batch_jobs: usize,
     pub plan_name: String,
+    /// The algorithm the router picked for this job's batch (selection
+    /// rules may route different sizes to different algorithms).
+    pub algo: String,
 }
 
 struct Job {
@@ -53,6 +56,9 @@ pub struct ServiceConfig {
     pub flush_after: Duration,
     /// Which registered algorithm the router serves (default GenTree).
     pub algo: AlgoSpec,
+    /// Precomputed per-size-bucket winners (a campaign selection table's
+    /// `rules_for` output). Empty: every batch routes `algo`.
+    pub selection: SelectionRules,
 }
 
 impl Default for ServiceConfig {
@@ -61,6 +67,7 @@ impl Default for ServiceConfig {
             policy: BatchPolicy::default(),
             flush_after: Duration::from_millis(2),
             algo: AlgoSpec::GenTree { rearrange: true },
+            selection: SelectionRules::new(),
         }
     }
 }
@@ -82,7 +89,9 @@ impl AllReduceService {
     ) -> AllReduceService {
         let n_workers = topo.n_servers();
         let metrics = Arc::new(Metrics::default());
-        let router = PlanRouter::new(topo, env).with_default_algo(cfg.algo.clone());
+        let router = PlanRouter::new(topo, env)
+            .with_default_algo(cfg.algo.clone())
+            .with_selection(cfg.selection.clone());
         let (tx, rx) = channel::<Job>();
         let m = metrics.clone();
         let leader = std::thread::Builder::new()
@@ -241,13 +250,15 @@ fn run_batch(
     let offsets = fuse_offsets(batch);
     let total: usize = batch.iter().map(|j| j.floats).sum();
     let n_workers = router.topo().n_servers();
-    // Route first: a routing failure (misconfigured algo) fails the whole
-    // batch with the typed error, before any fuse work.
+    // Route first: a routing failure (misconfigured default algo, or a
+    // selection rule naming an algorithm this topology rejects) fails the
+    // whole batch with the typed error — never a panic — before any fuse
+    // work.
     let routed = match router.plan_for(total) {
         Ok(r) => r,
         Err(e) => {
             for &(id, _, _) in &offsets {
-                let job = jobs.remove(&id).unwrap();
+                let Some(job) = jobs.remove(&id) else { continue };
                 let _ = job.respond.send(Err(e.clone()));
             }
             return;
@@ -273,18 +284,19 @@ fn run_batch(
             // All workers hold the same result; return worker 0's view.
             let result = &out.outputs[0];
             for &(id, off, len) in &offsets {
-                let job = jobs.remove(&id).unwrap();
+                let Some(job) = jobs.remove(&id) else { continue };
                 metrics.add(&metrics.jobs_completed, 1);
                 let _ = job.respond.send(Ok(JobResult {
                     reduced: result[off..off + len].to_vec(),
                     batch_jobs: batch.len(),
                     plan_name: routed.plan.name.clone(),
+                    algo: routed.algo.to_string(),
                 }));
             }
         }
         Err(e) => {
             for &(id, _, _) in &offsets {
-                let job = jobs.remove(&id).unwrap();
+                let Some(job) = jobs.remove(&id) else { continue };
                 let _ = job.respond.send(Err(ApiError::ExecFailed {
                     reason: e.to_string(),
                 }));
@@ -460,6 +472,72 @@ mod tests {
             Err(ApiError::AlgoTopoMismatch { .. }) => {}
             other => panic!("expected AlgoTopoMismatch, got {:?}", other.map(|_| ())),
         }
+    }
+
+    #[test]
+    fn selection_rules_route_different_sizes_to_different_algorithms() {
+        // The acceptance check: a selection table with CPS for small
+        // buckets and Ring for large ones demonstrably drives routing —
+        // two jobs with different sizes come back from different
+        // algorithms, both numerically correct.
+        let mut selection = SelectionRules::new();
+        selection.insert(PlanRouter::bucket(1000), AlgoSpec::Cps);
+        selection.insert(PlanRouter::bucket(100_000), AlgoSpec::Ring);
+        let svc = AllReduceService::start(
+            single_switch(4),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy { bucket_floats: 1 }, // no cross-job fusing
+                flush_after: Duration::from_millis(1),
+                selection,
+                ..ServiceConfig::default()
+            },
+        );
+        let small_ts = tensors(4, 1000, 3);
+        let small_want = oracle(&small_ts);
+        let small = svc.allreduce(small_ts).unwrap();
+        let large_ts = tensors(4, 100_000, 4);
+        let large_want = oracle(&large_ts);
+        let large = svc.allreduce(large_ts).unwrap();
+        assert_eq!(small.algo, "cps", "small job routed {}", small.algo);
+        assert_eq!(large.algo, "ring", "large job routed {}", large.algo);
+        assert_ne!(small.algo, large.algo);
+        for (a, b) in small.reduced.iter().zip(&small_want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in large.reduced.iter().zip(&large_want) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn selection_rule_rejected_by_topology_is_typed_error_through_submit() {
+        // A stale table naming RHD for a 6-server class: the plan source
+        // rejects the topology mid-route; submit's result channel carries
+        // ApiError::AlgoTopoMismatch, the leader survives, and jobs in
+        // other buckets still serve.
+        let mut selection = SelectionRules::new();
+        selection.insert(PlanRouter::bucket(1000), AlgoSpec::Rhd);
+        selection.insert(PlanRouter::bucket(100_000), AlgoSpec::Ring);
+        let svc = AllReduceService::start(
+            single_switch(6),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy { bucket_floats: 1 },
+                flush_after: Duration::from_millis(1),
+                selection,
+                ..ServiceConfig::default()
+            },
+        );
+        match svc.allreduce(tensors(6, 1000, 1)) {
+            Err(ApiError::AlgoTopoMismatch { algo, .. }) => assert_eq!(algo, "rhd"),
+            other => panic!("expected AlgoTopoMismatch, got {:?}", other.map(|_| ())),
+        }
+        // The leader is still alive and the Ring bucket still works.
+        let res = svc.allreduce(tensors(6, 100_000, 2)).unwrap();
+        assert_eq!(res.algo, "ring");
     }
 
     #[test]

@@ -24,13 +24,19 @@
 //! * [`exec`] — real data-plane executor: in-process workers with real
 //!   buffers; numerics verified against an exact oracle.
 //! * [`coordinator`] — the L3 service: job queue, size-bucketing batcher,
-//!   plan cache/router, metrics.
+//!   plan cache/router (optionally driven by a campaign selection table),
+//!   metrics.
+//! * [`campaign`] — parallel (topology × size × algorithm) scenario
+//!   sweeps producing JSONL artifacts and the [`campaign::SelectionTable`]
+//!   that precomputes the best algorithm per (topology class, size
+//!   bucket) for the coordinator's router.
 //! * [`bench`] — the harness that regenerates every paper table and figure.
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
 
 pub mod api;
 pub mod bench;
+pub mod campaign;
 pub mod coordinator;
 pub mod exec;
 pub mod gentree;

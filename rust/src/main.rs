@@ -12,7 +12,11 @@
 //! * `run`       — execute a plan on real data through the runtime and
 //!                 verify against the exact oracle.
 //! * `serve`     — start the coordinator and push a synthetic job stream,
-//!                 reporting service metrics.
+//!                 reporting service metrics; `--selection` routes each
+//!                 job through a campaign selection table.
+//! * `campaign`  — parallel scenario sweeps (`run`), the Fig. 11-style
+//!                 winners report (`report`), and the per-(topology,
+//!                 size-bucket) selection table (`select`).
 //! * `algos`     — list the algorithm registry (and what applies where).
 //! * `reproduce` — regenerate the paper's tables and figures.
 //!
@@ -23,7 +27,8 @@
 
 use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
-use genmodel::coordinator::{AllReduceService, ServiceConfig};
+use genmodel::campaign::{self, Metric, RunConfig, ScenarioGrid, SelectionTable};
+use genmodel::coordinator::{AllReduceService, SelectionRules, ServiceConfig};
 use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
 use genmodel::model::params::Environment;
@@ -45,6 +50,12 @@ USAGE: repro <subcommand> [options]
   simulate   --topo <spec> --algo <algo> [--size 1e8]
   run        [--servers 8] [--size 100000] [--algo gentree] [--scalar]
   serve      [--servers 8] [--jobs 64] [--tensor 4096] [--algo gentree] [--scalar]
+             [--selection table.json] [--class <topo-class>]
+  campaign   run    [--grid fig11|smoke] [--topos s1,s2] [--sizes 1e6,1e8]
+                    [--algos a1,a2] [--env paper|gpu] [--threads 4]
+                    [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
+  campaign   report --in campaign.jsonl
+  campaign   select --in campaign.jsonl [--out selection.json] [--by model|sim]
   algos      [--topo <spec>]
   reproduce  [--table 3|4|5|6|7] [--fig 3|4|8|9|10] [--all]
 
@@ -84,8 +95,7 @@ fn topo_arg(args: &Args) -> anyhow::Result<Topology> {
     let spec = args
         .opt("topo")
         .ok_or_else(|| anyhow::anyhow!("--topo required (e.g. --topo ss24)"))?;
-    workloads::parse_topology(spec)
-        .ok_or_else(|| anyhow::anyhow!("unknown topology spec {spec:?}"))
+    Ok(workloads::parse_topology(spec)?)
 }
 
 fn size_arg(args: &Args, default: f64) -> anyhow::Result<f64> {
@@ -120,6 +130,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("campaign") => cmd_campaign(args),
         Some("algos") => cmd_algos(args),
         Some("reproduce") => cmd_reproduce(args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -317,12 +328,44 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let topo = genmodel::topo::builders::single_switch(servers);
     algo.applicable(&topo)?;
+    // Optional campaign selection table: route each size bucket to its
+    // precomputed winner. The topology class defaults to this rack's
+    // spec spellings (`single:N`, `ssN`).
+    let selection: SelectionRules = match args.opt("selection") {
+        Some(path) => {
+            let table = SelectionTable::load(std::path::Path::new(path))?;
+            let classes: Vec<String> = match args.opt("class") {
+                Some(c) => vec![c.to_string()],
+                None => vec![format!("single:{servers}"), format!("ss{servers}")],
+            };
+            let rules = classes
+                .iter()
+                .map(|c| table.rules_for(c))
+                .collect::<Result<Vec<_>, _>>()?
+                .into_iter()
+                .find(|r| !r.is_empty())
+                .unwrap_or_default();
+            anyhow::ensure!(
+                !rules.is_empty(),
+                "selection table {path} has no entries for class(es) {classes:?} \
+                 (pass --class to name the topology class explicitly)"
+            );
+            println!(
+                "selection table: {} bucket rule(s) from {path} ({} metric)",
+                rules.len(),
+                table.metric
+            );
+            rules
+        }
+        None => SelectionRules::new(),
+    };
     let svc = AllReduceService::start(
         topo,
         Environment::paper(),
         spec,
         ServiceConfig {
             algo,
+            selection,
             ..ServiceConfig::default()
         },
     );
@@ -354,14 +397,137 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("campaign expects an action: run, report, or select"))?;
+    match action {
+        "run" => cmd_campaign_run(args),
+        "report" => {
+            let rows = campaign::load_rows(std::path::Path::new(in_arg(args)?))?;
+            println!("{}", campaign::report::winners_table(&rows).render());
+            Ok(())
+        }
+        "select" => {
+            let input = in_arg(args)?;
+            let rows = campaign::load_rows(std::path::Path::new(input))?;
+            let metric = Metric::parse(args.opt_or("by", "model"))?;
+            let table = SelectionTable::from_rows(&rows, metric);
+            anyhow::ensure!(
+                !table.is_empty(),
+                "no selection entries could be derived from {input} (all rows failed?)"
+            );
+            let out = args.opt_or("out", "selection.json");
+            table.save(std::path::Path::new(out))?;
+            println!(
+                "selection table: {} (topology class, size bucket) cell(s) by {metric} → {out}",
+                table.len()
+            );
+            for (class, cells) in table.classes() {
+                for (bucket, choice) in cells {
+                    println!(
+                        "  {class:<12} bucket 2^{bucket:<2} → {:<14} ({:.4}s, margin {:.2}x)",
+                        choice.algo,
+                        choice.seconds,
+                        choice.margin()
+                    );
+                }
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown campaign action {other:?} (known: run, report, select)"),
+    }
+}
+
+fn in_arg(args: &Args) -> anyhow::Result<&str> {
+    args.opt("in")
+        .ok_or_else(|| anyhow::anyhow!("--in <campaign.jsonl> required"))
+}
+
+fn cmd_campaign_run(args: &Args) -> anyhow::Result<()> {
+    let mut grid = ScenarioGrid::named(args.opt_or("grid", "fig11"))?;
+    let mut custom = false;
+    if let Some(topos) = args.opt_parse_list::<String>("topos")? {
+        grid.topos = topos;
+        custom = true;
+    }
+    if let Some(sizes) = args.opt_parse_list::<f64>("sizes")? {
+        grid.sizes = sizes;
+        custom = true;
+    }
+    if let Some(algos) = args.opt_parse_list::<String>("algos")? {
+        grid.algos = algos;
+        custom = true;
+    }
+    if let Some(env) = args.opt("env") {
+        grid.env = campaign::EnvKind::parse(env)?;
+    }
+    // The grid name decides the default artifact path; every override
+    // must change it (content fingerprint included, so two *different*
+    // custom sweeps never share — and the run never refuses over — one
+    // default file).
+    if grid.env == campaign::EnvKind::Gpu {
+        grid.name = format!("{}-gpu", grid.name);
+    }
+    if custom {
+        grid.name = format!("{}-custom-{:08x}", grid.name, grid.fingerprint() as u32);
+    }
+    let threads: usize = args.opt_parse_or("threads", 4)?;
+    let out = args
+        .opt("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("campaign_{}.jsonl", grid.name));
+    println!(
+        "campaign {:?}: {} topolog(ies) × {} size(s), {} thread(s) → {out}",
+        grid.name,
+        grid.topos.len(),
+        grid.sizes.len(),
+        threads.max(1)
+    );
+    let summary = campaign::run_campaign(
+        &grid,
+        &RunConfig {
+            threads,
+            out: out.clone().into(),
+        },
+    )?;
+    println!("  scenarios        : {}", summary.total);
+    println!("  evaluated        : {}", summary.evaluated);
+    println!("  resumed          : {}", summary.resumed);
+    println!("  failed           : {}", summary.failed);
+    println!("  wall time        : {:.3} s", summary.wall_secs);
+    println!("  throughput       : {:.2} scenarios/s", summary.scenarios_per_sec());
+    if let Some(bench_out) = args.opt("bench-out") {
+        use genmodel::util::json::Json;
+        let j = Json::obj(vec![
+            ("grid", Json::str(grid.name.clone())),
+            ("scenarios_evaluated", Json::num(summary.evaluated as f64)),
+            ("scenarios_per_sec", Json::num(summary.scenarios_per_sec())),
+            ("scenarios_total", Json::num(summary.total as f64)),
+            ("threads", Json::num(threads.max(1) as f64)),
+            ("wall_secs", Json::num(summary.wall_secs)),
+        ]);
+        std::fs::write(bench_out, format!("{j}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {bench_out}: {e}"))?;
+        println!("  bench record     → {bench_out}");
+    }
+    anyhow::ensure!(
+        summary.failed == 0,
+        "{} scenario(s) recorded evaluation errors (see {out})",
+        summary.failed
+    );
+    Ok(())
+}
+
 fn cmd_algos(args: &Args) -> anyhow::Result<()> {
     println!("registered algorithms:");
     for src in genmodel::api::registry() {
         println!("  {:<18} {}", src.template, src.synopsis);
     }
     if let Some(spec) = args.opt("topo") {
-        let topo = workloads::parse_topology(spec)
-            .ok_or_else(|| anyhow::anyhow!("unknown topology spec {spec:?}"))?;
+        let topo = workloads::parse_topology(spec)?;
         println!(
             "\napplicable on {} ({} servers):",
             topo.name,

@@ -15,7 +15,11 @@
 //!   block reduces with fan-in `k + 1` (its own partial plus the arrivals);
 //!   `Copy` transfers (AllGather) never reduce.
 
-use std::collections::HashMap;
+// Ordered maps throughout phase_cost: the per-link and per-server sums
+// fold f64s (and break bottleneck ties) in iteration order, and campaign
+// artifacts require bit-identical predictions across runs — HashMap
+// iteration order varies per instance.
+use std::collections::BTreeMap;
 
 use crate::plan::ir::{Mode, Plan};
 use crate::topo::{LinkId, NodeId, Topology};
@@ -111,13 +115,13 @@ impl<'a> CostModel<'a> {
             return (0.0, 0.0, 0.0, 0.0, 0.0);
         }
         // --- flows: group transfers by (src, dst) ------------------------
-        let mut flows: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut flows: BTreeMap<(usize, usize), f64> = BTreeMap::new();
         for t in &phase.transfers {
             *flows.entry((t.src, t.dst)).or_insert(0.0) += bs;
         }
         // --- per-link aggregation ---------------------------------------
-        let mut link_volume: HashMap<LinkId, f64> = HashMap::new();
-        let mut link_flows: HashMap<LinkId, usize> = HashMap::new();
+        let mut link_volume: BTreeMap<LinkId, f64> = BTreeMap::new();
+        let mut link_flows: BTreeMap<LinkId, usize> = BTreeMap::new();
         let mut alpha_phase: f64 = 0.0;
         for (&(src, dst), &vol) in &flows {
             let path = self
@@ -157,15 +161,15 @@ impl<'a> CostModel<'a> {
         let eps_time = full_time - beta_time;
         // --- computation --------------------------------------------------
         // fan-in per (dst, block) from Move transfers.
-        let mut fanin: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut fanin: BTreeMap<(usize, usize), usize> = BTreeMap::new();
         for t in &phase.transfers {
             if t.mode == Mode::Move {
                 *fanin.entry((t.dst, t.block)).or_insert(0) += 1;
             }
         }
         let sp = &self.env.server;
-        let mut per_server_gamma: HashMap<usize, f64> = HashMap::new();
-        let mut per_server_delta: HashMap<usize, f64> = HashMap::new();
+        let mut per_server_gamma: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut per_server_delta: BTreeMap<usize, f64> = BTreeMap::new();
         for (&(dst, _block), &incoming) in &fanin {
             let f = incoming + 1;
             *per_server_gamma.entry(dst).or_insert(0.0) += (f - 1) as f64 * bs * sp.gamma;

@@ -10,7 +10,7 @@
 //! per-hop start-up latency any flow pays. Phase times add up (AllReduce
 //! steps are barriers — Fig. 2).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::model::params::Environment;
 use crate::plan::ir::{Mode, Plan};
@@ -116,7 +116,10 @@ pub fn simulate_plan(
                 }
                 let rates = max_min_rates(&flows, &active, &caps);
                 // Pause-frame analogue: excess fan-in weighted volume rate.
-                let mut link_count: HashMap<LinkId, usize> = HashMap::new();
+                // Ordered map: the pause-unit sum below folds f64s in
+                // iteration order, and campaign artifacts require
+                // bit-identical results across runs.
+                let mut link_count: BTreeMap<LinkId, usize> = BTreeMap::new();
                 for &fi in &active {
                     for l in &flows[fi].path {
                         *link_count.entry(*l).or_insert(0) += 1;
@@ -165,14 +168,17 @@ pub fn simulate_plan(
         }
 
         // ---- computation ---------------------------------------------------
-        let mut fanin: HashMap<(usize, usize), usize> = HashMap::new();
+        // Ordered maps: per-server γ/δ sums fold f64s in iteration order;
+        // BTreeMap keeps the fold deterministic (HashMap order varies per
+        // instance, which would leak into campaign artifact bytes).
+        let mut fanin: BTreeMap<(usize, usize), usize> = BTreeMap::new();
         for tr in &phase.transfers {
             if tr.mode == Mode::Move {
                 *fanin.entry((tr.dst, tr.block)).or_insert(0) += 1;
             }
         }
         let sp = &env.server;
-        let mut per_server: HashMap<usize, f64> = HashMap::new();
+        let mut per_server: BTreeMap<usize, f64> = BTreeMap::new();
         for (&(dst, _b), &incoming) in &fanin {
             let f = (incoming + 1) as f64;
             *per_server.entry(dst).or_insert(0.0) +=

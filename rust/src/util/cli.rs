@@ -114,6 +114,38 @@ impl Args {
         Ok(self.opt_parse(key)?.unwrap_or(default))
     }
 
+    /// Comma-separated list option, each element parsed: `--sizes 1e6,1e7`.
+    /// `None` when the option is absent; empty elements are errors.
+    pub fn opt_parse_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<Vec<T>>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let Some(raw) = self.opt(key) else {
+            return Ok(None);
+        };
+        raw.split(',')
+            .map(|x| {
+                let x = x.trim();
+                if x.is_empty() {
+                    return Err(CliError::BadValue {
+                        key: key.to_string(),
+                        value: raw.to_string(),
+                        why: "empty list element".into(),
+                    });
+                }
+                x.parse::<T>().map_err(|e| CliError::BadValue {
+                    key: key.to_string(),
+                    value: x.to_string(),
+                    why: e.to_string(),
+                })
+            })
+            .collect::<Result<Vec<T>, CliError>>()
+            .map(Some)
+    }
+
     /// After dispatch: error if the user passed options nobody consumed.
     pub fn check_unused(&self) -> Result<(), CliError> {
         let used = self.used.borrow();
@@ -163,6 +195,24 @@ mod tests {
         assert_eq!(a.opt_parse_or::<f64>("s", 0.0).unwrap(), 2.5);
         assert_eq!(a.opt_parse_or::<u32>("missing", 7).unwrap(), 7);
         assert!(a.opt_parse::<usize>("s").is_err());
+    }
+
+    #[test]
+    fn list_options() {
+        let a = parse(&["x", "--sizes", "1e6, 3.2e7,1e8", "--names", "ss24,cdc384"]);
+        assert_eq!(
+            a.opt_parse_list::<f64>("sizes").unwrap(),
+            Some(vec![1e6, 3.2e7, 1e8])
+        );
+        assert_eq!(
+            a.opt_parse_list::<String>("names").unwrap(),
+            Some(vec!["ss24".to_string(), "cdc384".to_string()])
+        );
+        assert_eq!(a.opt_parse_list::<f64>("missing").unwrap(), None);
+        let b = parse(&["x", "--sizes", "1e6,,1e7"]);
+        assert!(b.opt_parse_list::<f64>("sizes").is_err());
+        let c = parse(&["x", "--sizes", "1e6,abc"]);
+        assert!(c.opt_parse_list::<f64>("sizes").is_err());
     }
 
     #[test]

@@ -48,13 +48,7 @@ where
 }
 
 fn hash_name(name: &str) -> u64 {
-    // FNV-1a.
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::util::rng::fnv1a(name.as_bytes())
 }
 
 #[cfg(test)]

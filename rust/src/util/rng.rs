@@ -4,6 +4,17 @@
 //! workload generators. Deterministic across platforms so every experiment
 //! in EXPERIMENTS.md is exactly reproducible from its seed.
 
+/// FNV-1a 64-bit hash — the repo's one stable content hash (property-test
+/// seed derivation, campaign scenario/grid fingerprints).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// SplitMix64: seeds the main generator and serves as a cheap stream-split.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {

@@ -1,0 +1,157 @@
+//! Campaign subsystem integration tests: artifact determinism across
+//! worker counts, resume-from-partial-JSONL, and the selection table
+//! demonstrably driving the coordinator's routing.
+
+use std::fs;
+use std::path::PathBuf;
+
+use genmodel::campaign::{
+    load_rows, run_campaign, Metric, RunConfig, ScenarioGrid, SelectionTable,
+};
+use genmodel::coordinator::{AllReduceService, PlanRouter, ServiceConfig};
+use genmodel::model::params::Environment;
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("genmodel_campaign_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// A grid small enough for CI but wide enough that winners differ by
+/// size bucket: two sizes spanning the latency- and bandwidth-dominated
+/// regimes, every algorithm applicable on a 6-server rack.
+fn test_grid() -> ScenarioGrid {
+    ScenarioGrid {
+        name: "test".into(),
+        topos: vec!["single:4".into(), "single:6".into()],
+        sizes: vec![1e3, 1e7],
+        algos: Vec::new(),
+        env: genmodel::campaign::EnvKind::Paper,
+    }
+}
+
+#[test]
+fn artifact_is_byte_identical_across_worker_counts() {
+    let out1 = tmp("det1");
+    let out4 = tmp("det4");
+    let _ = fs::remove_file(&out1);
+    let _ = fs::remove_file(&out4);
+    let grid = test_grid();
+    let s1 = run_campaign(&grid, &RunConfig { threads: 1, out: out1.clone() }).unwrap();
+    let s4 = run_campaign(&grid, &RunConfig { threads: 4, out: out4.clone() }).unwrap();
+    assert_eq!(s1.total, s4.total);
+    assert_eq!(s1.failed, 0);
+    let b1 = fs::read(&out1).unwrap();
+    let b4 = fs::read(&out4).unwrap();
+    assert_eq!(b1, b4, "campaign JSONL must not depend on worker count");
+
+    // The derived selection tables are byte-identical too.
+    let t1 = SelectionTable::from_rows(&load_rows(&out1).unwrap(), Metric::Model);
+    let t4 = SelectionTable::from_rows(&load_rows(&out4).unwrap(), Metric::Model);
+    assert_eq!(t1.to_json().to_string(), t4.to_json().to_string());
+    assert!(!t1.is_empty());
+    let _ = fs::remove_file(&out1);
+    let _ = fs::remove_file(&out4);
+}
+
+#[test]
+fn interrupted_campaign_resumes_and_converges() {
+    let full = tmp("resume_full");
+    let part = tmp("resume_part");
+    let _ = fs::remove_file(&full);
+    let _ = fs::remove_file(&part);
+    let grid = test_grid();
+    run_campaign(&grid, &RunConfig { threads: 2, out: full.clone() }).unwrap();
+    let complete = fs::read_to_string(&full).unwrap();
+    let lines: Vec<&str> = complete.lines().collect();
+    assert!(lines.len() >= 8, "grid too small to test resume: {}", lines.len());
+
+    // Simulate an interruption: keep the first 3 rows plus a torn line.
+    let mut partial: String = lines[..3].join("\n");
+    partial.push('\n');
+    partial.push_str("{\"algo\":\"ring\",\"truncat"); // torn mid-write
+    fs::write(&part, &partial).unwrap();
+
+    let resumed = run_campaign(&grid, &RunConfig { threads: 3, out: part.clone() }).unwrap();
+    assert_eq!(resumed.resumed, 3, "the 3 intact rows must be memoized");
+    assert_eq!(resumed.evaluated, lines.len() - 3);
+    assert_eq!(
+        fs::read_to_string(&part).unwrap(),
+        complete,
+        "a resumed campaign must converge to the from-scratch artifact"
+    );
+    let _ = fs::remove_file(&full);
+    let _ = fs::remove_file(&part);
+}
+
+#[test]
+fn campaign_to_selection_to_service_end_to_end() {
+    // The full pipeline of the acceptance criterion: sweep → selection
+    // table → AllReduceService routes each job to the table's winner for
+    // its size bucket.
+    let out = tmp("e2e");
+    let _ = fs::remove_file(&out);
+    let grid = ScenarioGrid {
+        name: "e2e".into(),
+        topos: vec!["single:6".into()],
+        sizes: vec![1e3, 1e7],
+        algos: Vec::new(),
+        env: genmodel::campaign::EnvKind::Paper,
+    };
+    run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
+    let table = SelectionTable::from_rows(&load_rows(&out).unwrap(), Metric::Model);
+    let rules = table.rules_for("single:6").unwrap();
+    assert!(!rules.is_empty());
+
+    let svc = AllReduceService::start(
+        single_switch(6),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig {
+            selection: rules,
+            ..ServiceConfig::default()
+        },
+    );
+    let mut rng = Rng::new(9);
+    for len in [1_000usize, 50_000] {
+        let tensors: Vec<Vec<f32>> = (0..6).map(|_| rng.f32_vec(len)).collect();
+        let res = svc.allreduce(tensors).unwrap();
+        // The served algorithm is exactly the table's winner for this
+        // payload's bucket.
+        let want = table
+            .lookup("single:6", len)
+            .unwrap_or_else(|| panic!("no selection for {len}"));
+        assert_eq!(res.algo, want.algo, "job of {len} floats");
+    }
+    let _ = fs::remove_file(&out);
+}
+
+#[test]
+fn selection_roundtrips_through_disk_and_feeds_the_router() {
+    let out = tmp("disk");
+    let table_path = out.with_extension("selection.json");
+    let _ = fs::remove_file(&out);
+    let grid = ScenarioGrid {
+        name: "disk".into(),
+        topos: vec!["single:4".into()],
+        sizes: vec![1e4],
+        algos: vec!["cps".into(), "ring".into(), "gentree".into()],
+        env: genmodel::campaign::EnvKind::Paper,
+    };
+    run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
+    let table = SelectionTable::from_rows(&load_rows(&out).unwrap(), Metric::Sim);
+    table.save(&table_path).unwrap();
+    let loaded = SelectionTable::load(&table_path).unwrap();
+    assert_eq!(loaded, table);
+
+    let router = PlanRouter::new(single_switch(4), Environment::paper())
+        .with_selection(loaded.rules_for("single:4").unwrap());
+    let routed = router.plan_for(1e4 as usize).unwrap();
+    assert_eq!(
+        routed.algo.to_string(),
+        loaded.lookup("single:4", 1e4 as usize).unwrap().algo
+    );
+    let _ = fs::remove_file(&out);
+    let _ = fs::remove_file(&table_path);
+}

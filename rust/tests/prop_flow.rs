@@ -1,0 +1,185 @@
+//! Property tests for the simulator's core: max-min fair rate allocation
+//! ([`genmodel::sim::flow::max_min_rates`]). The campaign subsystem
+//! treats the simulator as ground truth for algorithm selection, so its
+//! allocator invariants are pinned down here:
+//!
+//! 1. rates are non-negative and never NaN;
+//! 2. no link carries more than its (incast-degraded) capacity;
+//! 3. the allocation is work-conserving: every finite-rate flow is
+//!    bottlenecked by some saturated link on its path;
+//! 4. max-min fairness: on that saturated link the flow's rate is
+//!    maximal among the link's flows (you cannot raise any flow without
+//!    lowering an equal-or-smaller one).
+
+use std::collections::HashMap;
+
+use genmodel::sim::flow::{max_min_rates, Flow, LinkCap};
+use genmodel::topo::{Dir, LinkId};
+use genmodel::util::prop;
+use genmodel::util::rng::Rng;
+
+struct Case {
+    flows: Vec<Flow>,
+    caps: HashMap<LinkId, LinkCap>,
+}
+
+fn link(n: usize) -> LinkId {
+    LinkId {
+        node: n,
+        dir: if n % 2 == 0 { Dir::Up } else { Dir::Down },
+    }
+}
+
+/// Random allocation problem: up to 10 capped links, up to 16 flows with
+/// 1–3 distinct links per path, βs spread over three orders of
+/// magnitude, incast thresholds low enough that the ε penalty triggers.
+fn random_case(rng: &mut Rng) -> Case {
+    let n_links = rng.gen_range(1, 10);
+    let mut caps = HashMap::new();
+    for i in 0..n_links {
+        caps.insert(
+            link(i),
+            LinkCap {
+                beta: 1e-9 * 10f64.powi(rng.gen_range(0, 3) as i32),
+                epsilon: if rng.gen_range(0, 2) == 0 { 0.0 } else { 1e-10 },
+                w_t: rng.gen_range(2, 12),
+            },
+        );
+    }
+    let n_flows = rng.gen_range(1, 16);
+    let mut flows = Vec::with_capacity(n_flows);
+    for f in 0..n_flows {
+        let hops = rng.gen_range(1, 3.min(n_links));
+        let mut ids: Vec<usize> = (0..n_links).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(hops);
+        ids.sort_unstable(); // paths hold distinct links; order is irrelevant to the allocator
+        flows.push(Flow {
+            src: f,
+            dst: f + 1,
+            volume: 1.0 + rng.next_f64() * 1e6,
+            path: ids.into_iter().map(link).collect(),
+        });
+    }
+    Case { flows, caps }
+}
+
+/// Per-link capacity under this allocation round's concurrency, exactly
+/// as the allocator computes it.
+fn capacities(case: &Case, active: &[usize]) -> HashMap<LinkId, (f64, Vec<usize>)> {
+    let mut on_link: HashMap<LinkId, Vec<usize>> = HashMap::new();
+    for (ai, &fi) in active.iter().enumerate() {
+        for l in &case.flows[fi].path {
+            on_link.entry(*l).or_default().push(ai);
+        }
+    }
+    on_link
+        .into_iter()
+        .map(|(l, ais)| {
+            let cap = case.caps[&l].capacity(ais.len());
+            (l, (cap, ais))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_rates_are_sane_and_capacity_respected() {
+    prop::run("flow-capacity", 96, |rng| {
+        let case = random_case(rng);
+        let active: Vec<usize> = (0..case.flows.len()).collect();
+        let rates = max_min_rates(&case.flows, &active, &case.caps);
+        if rates.len() != active.len() {
+            return Err(format!("rate count {} != active {}", rates.len(), active.len()));
+        }
+        for (ai, &r) in rates.iter().enumerate() {
+            if r.is_nan() || r < 0.0 {
+                return Err(format!("flow {ai}: bad rate {r}"));
+            }
+            // Every generated path crosses a capped link → finite rate.
+            if !r.is_finite() {
+                return Err(format!("flow {ai}: infinite rate on a capped path"));
+            }
+        }
+        for (l, (cap, ais)) in capacities(&case, &active) {
+            let used: f64 = ais.iter().map(|&ai| rates[ai]).sum();
+            if used > cap * (1.0 + 1e-6) {
+                return Err(format!(
+                    "link {l:?} over capacity: used {used:.6e} vs cap {cap:.6e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_is_work_conserving_and_max_min_fair() {
+    prop::run("flow-max-min", 96, |rng| {
+        let case = random_case(rng);
+        let active: Vec<usize> = (0..case.flows.len()).collect();
+        let rates = max_min_rates(&case.flows, &active, &case.caps);
+        let link_state = capacities(&case, &active);
+        for (ai, &r) in rates.iter().enumerate() {
+            // Work conservation: some link on the flow's path must be
+            // saturated — otherwise the flow could unilaterally go
+            // faster. Max-min fairness: among those saturated links there
+            // must be one where this flow's rate is maximal — raising it
+            // there would require lowering an equal-or-smaller flow.
+            let mut any_saturated = false;
+            let mut is_bottlenecked = false;
+            for l in &case.flows[active[ai]].path {
+                let (cap, ais) = &link_state[l];
+                let used: f64 = ais.iter().map(|&a| rates[a]).sum();
+                if used < cap * (1.0 - 1e-6) {
+                    continue;
+                }
+                any_saturated = true;
+                let max_on_link = ais.iter().map(|&a| rates[a]).fold(0.0f64, f64::max);
+                if r >= max_on_link * (1.0 - 1e-6) {
+                    is_bottlenecked = true;
+                    break;
+                }
+            }
+            if !any_saturated {
+                return Err(format!(
+                    "flow {ai} (rate {r:.6e}) has no saturated link on its path — \
+                     allocation is not work-conserving"
+                ));
+            }
+            if !is_bottlenecked {
+                return Err(format!(
+                    "flow {ai}: rate {r:.6e} is not maximal on any saturated link of \
+                     its path — not max-min fair"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incast_monotonicity() {
+    // More concurrent flows on a link never increases its capacity, and
+    // the penalty only starts past the threshold.
+    prop::run("flow-incast-monotone", 64, |rng| {
+        let cap = LinkCap {
+            beta: 1e-9 * (1.0 + rng.next_f64()),
+            epsilon: 1e-10 * rng.next_f64(),
+            w_t: rng.gen_range(2, 16),
+        };
+        let mut prev = f64::INFINITY;
+        for n_flows in 0..64 {
+            let c = cap.capacity(n_flows);
+            if !(c > 0.0) || c > prev {
+                return Err(format!(
+                    "capacity not monotone: {c} after {prev} at {n_flows} flows"
+                ));
+            }
+            if n_flows + 1 <= cap.w_t && (c - 1.0 / cap.beta).abs() > 1e-9 / cap.beta {
+                return Err(format!("penalty below threshold at {n_flows} flows"));
+            }
+            prev = c;
+        }
+        Ok(())
+    });
+}

@@ -43,4 +43,16 @@ step cargo test -q
 # 4. Everything else compiles (benches are excluded from `cargo test`).
 step cargo build --release --all-targets
 
+# 5. Smoke campaign: ~24 scenarios on 2 threads. `campaign run` exits
+#    non-zero if any scenario records an evaluation error; `campaign
+#    select` parses every JSONL row (schema validation) and exits
+#    non-zero when the derived selection table is empty. BENCH_campaign.json
+#    records scenarios/sec + wall time so the perf trajectory accumulates.
+rm -f target/campaign_smoke.jsonl
+step cargo run --release -p genmodel --quiet -- campaign run --grid smoke --threads 2 \
+    --out target/campaign_smoke.jsonl --bench-out BENCH_campaign.json
+step cargo run --release -p genmodel --quiet -- campaign select --in target/campaign_smoke.jsonl \
+    --out target/selection_smoke.json --by model
+step cargo run --release -p genmodel --quiet -- campaign report --in target/campaign_smoke.jsonl
+
 exit $fail
