@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         sizes: vec![1e4, 1e8],
         algos: Vec::new(),
         env: genmodel::campaign::EnvKind::Paper,
+        exec_spot_cap: 0.0,
     };
     let out = std::env::temp_dir().join("genmodel_example_campaign.jsonl");
     let summary = run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() })?;

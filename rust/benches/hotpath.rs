@@ -63,9 +63,7 @@ fn main() {
         Environment::paper(),
         ReducerSpec::Scalar,
         ServiceConfig {
-            policy: BatchPolicy {
-                bucket_floats: 1 << 20,
-            },
+            policy: BatchPolicy::with_cap(1 << 20),
             flush_after: Duration::from_micros(200),
             ..ServiceConfig::default()
         },

@@ -65,13 +65,19 @@ pub struct Scenario {
     /// Payload size in floats.
     pub size: f64,
     pub env: EnvKind,
+    /// Also run the executed backend (real data plane, oracle-verified)
+    /// as a spot check — set by [`ScenarioGrid::exec_spot_cap`].
+    pub exec: bool,
 }
 
 impl Scenario {
     /// Canonical identity string — the memoization key. `{:e}` renders
     /// sizes shortest-roundtrip, so equal f64s always produce equal keys.
+    /// Exec spot-check scenarios get a distinct key so resuming an
+    /// artifact swept without spot checks cannot satisfy one swept with.
     pub fn key(&self) -> String {
-        format!("{}|{}|{:e}|{}", self.topo, self.algo, self.size, self.env)
+        let exec = if self.exec { "|exec" } else { "" };
+        format!("{}|{}|{:e}|{}{exec}", self.topo, self.algo, self.size, self.env)
     }
 
     /// FNV-1a of [`Self::key`], reported in the JSONL rows.
@@ -93,6 +99,11 @@ pub struct ScenarioGrid {
     /// Algorithm spec strings; empty = all applicable registry defaults.
     pub algos: Vec<String>,
     pub env: EnvKind,
+    /// Sizes at or below this many floats also run the executed backend
+    /// as a spot check ([`Scenario::exec`]); `0.0` disables spot checks.
+    /// Keep it small — the executor allocates `n_servers × size` real
+    /// floats per scenario.
+    pub exec_spot_cap: f64,
 }
 
 impl ScenarioGrid {
@@ -109,6 +120,7 @@ impl ScenarioGrid {
             sizes: vec![1e6, 1e7, 3.2e7, 1e8, 3.2e8],
             algos: Vec::new(),
             env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
         }
     }
 
@@ -125,6 +137,23 @@ impl ScenarioGrid {
             sizes: vec![1e6],
             algos: Vec::new(),
             env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
+        }
+    }
+
+    /// The ROADMAP's GPU follow-up at CI scale: the §5.2 GPU-pod
+    /// parameter environment over a small GPU pod and a single-switch
+    /// rack, with **executed-backend spot-check rows** on the smallest
+    /// size — the real data plane verifies (against the exact oracle) a
+    /// sample of what the analytic/simulated backends price.
+    pub fn gpu_smoke() -> ScenarioGrid {
+        ScenarioGrid {
+            name: "gpu-smoke".into(),
+            topos: ["single:4", "gpu:2,4"].iter().map(|s| s.to_string()).collect(),
+            sizes: vec![1e5, 1e6],
+            algos: Vec::new(),
+            env: EnvKind::Gpu,
+            exec_spot_cap: 1e5,
         }
     }
 
@@ -133,8 +162,11 @@ impl ScenarioGrid {
         match name.trim().to_ascii_lowercase().as_str() {
             "fig11" => Ok(ScenarioGrid::fig11()),
             "smoke" => Ok(ScenarioGrid::smoke()),
+            "gpu-smoke" | "gpu_smoke" => Ok(ScenarioGrid::gpu_smoke()),
             _ => Err(ApiError::BadRequest {
-                reason: format!("unknown campaign grid {name:?} (known: fig11, smoke)"),
+                reason: format!(
+                    "unknown campaign grid {name:?} (known: fig11, smoke, gpu-smoke)"
+                ),
             }),
         }
     }
@@ -156,6 +188,9 @@ impl ScenarioGrid {
             text.push('|');
         }
         text.push_str(&self.env.to_string());
+        if self.exec_spot_cap > 0.0 {
+            text.push_str(&format!("|exec<={:e}", self.exec_spot_cap));
+        }
         fnv1a(text.as_bytes())
     }
 
@@ -205,6 +240,7 @@ impl ScenarioGrid {
                         algo: algo.clone(),
                         size,
                         env: self.env,
+                        exec: size <= self.exec_spot_cap,
                     };
                     if seen.insert(sc.key()) {
                         out.push(sc);
@@ -275,6 +311,7 @@ mod tests {
             sizes: vec![1e5],
             algos: vec!["ring".into(), "rhd".into()], // rhd inapplicable on 6
             env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
         };
         let scenarios = grid.expand().unwrap();
         assert_eq!(scenarios.len(), 1);
@@ -303,6 +340,7 @@ mod tests {
             sizes: vec![1e5],
             algos: vec!["rhd".into()], // needs a power-of-two server count
             env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
         };
         match grid.expand() {
             Err(ApiError::BadRequest { reason }) => {
@@ -318,6 +356,31 @@ mod tests {
         assert_eq!(sc.key(), sc.clone().key());
         assert_eq!(sc.hash(), sc.hash());
         assert!(sc.key().contains(&sc.topo));
+    }
+
+    #[test]
+    fn gpu_smoke_grid_carries_exec_spot_checks() {
+        let grid = ScenarioGrid::gpu_smoke();
+        assert_eq!(ScenarioGrid::named("gpu-smoke").unwrap().fingerprint(), grid.fingerprint());
+        let scenarios = grid.expand().unwrap();
+        assert!(
+            (10..=60).contains(&scenarios.len()),
+            "gpu-smoke should stay CI-sized, got {}",
+            scenarios.len()
+        );
+        // Exactly the at-or-below-cap sizes carry the exec spot check,
+        // and the flag is part of the memo key.
+        for sc in &scenarios {
+            assert_eq!(sc.exec, sc.size <= grid.exec_spot_cap, "{}", sc.key());
+            assert_eq!(sc.key().ends_with("|exec"), sc.exec);
+            assert_eq!(sc.env, EnvKind::Gpu);
+        }
+        assert!(scenarios.iter().any(|s| s.exec));
+        assert!(scenarios.iter().any(|s| !s.exec));
+        // Spot checks change the grid identity (different artifacts).
+        let mut no_exec = grid.clone();
+        no_exec.exec_spot_cap = 0.0;
+        assert_ne!(no_exec.fingerprint(), grid.fingerprint());
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!   message-size ladder, algorithm sets from the `api` registry, the
 //!   parameter environment) expanded into a deduplicated scenario list;
 //!   presets [`ScenarioGrid::fig11`] (the paper's six evaluation
-//!   topologies, ≥ 200 scenarios) and [`ScenarioGrid::smoke`] (CI-sized).
+//!   topologies, ≥ 200 scenarios), [`ScenarioGrid::smoke`] (CI-sized),
+//!   and [`ScenarioGrid::gpu_smoke`] (the §5.2 GPU environment with
+//!   executed-backend spot-check rows).
 //! * [`runner`] — a `std::thread::scope` worker pool sweeping the grid
 //!   through the analytic and simulated backends, streaming JSONL,
 //!   memoizing by scenario hash (interrupted campaigns resume), and
@@ -34,4 +36,4 @@ pub mod select;
 
 pub use grid::{EnvKind, Scenario, ScenarioGrid};
 pub use runner::{evaluate_scenario, load_rows, run_campaign, CampaignRow, RunConfig, RunSummary};
-pub use select::{table_from_entries, Choice, Metric, SelectionTable};
+pub use select::{table_from_choices, table_from_entries, Boundary, Choice, Metric, SelectionTable};

@@ -91,6 +91,7 @@ mod tests {
             env: "paper".into(),
             model_s: Some(sim_s * 0.98),
             sim_s: Some(sim_s),
+            exec_s: None,
             error: None,
         }
     }

@@ -9,7 +9,9 @@
 //! rewritten in canonical scenario order through a temp-file rename, so a
 //! finished campaign's JSONL is **byte-identical whatever the worker
 //! count** — resumed, 1-thread, and 16-thread runs all converge to the
-//! same artifact.
+//! same artifact. (Exec spot-check rows carry wall-clock `exec_s`
+//! timings, so *re-evaluating* one from scratch re-times it; within one
+//! artifact's lifetime resume memoization keeps rows stable.)
 
 use std::fs;
 use std::io::Write as _;
@@ -76,6 +78,12 @@ pub struct CampaignRow {
     pub model_s: Option<f64>,
     /// Flow-level simulation in seconds.
     pub sim_s: Option<f64>,
+    /// Executed-backend wall seconds for spot-check scenarios
+    /// ([`Scenario::exec`]): the real data plane ran the plan and
+    /// verified the result against the exact oracle. `None` for
+    /// model/sim-only rows (wall time is machine-dependent, so selection
+    /// metrics never read this column — it is a correctness witness).
+    pub exec_s: Option<f64>,
     /// Evaluation failure, when the backends could not run.
     pub error: Option<String>,
 }
@@ -93,6 +101,7 @@ impl CampaignRow {
                     .map(|s| Json::Str(s.clone()))
                     .unwrap_or(Json::Null),
             ),
+            ("exec_s", opt(self.exec_s)),
             ("hash", Json::str(&self.hash)),
             ("key", Json::str(&self.key)),
             ("model_s", opt(self.model_s)),
@@ -135,6 +144,7 @@ impl CampaignRow {
             env: s("env")?,
             model_s: opt_f("model_s")?,
             sim_s: opt_f("sim_s")?,
+            exec_s: opt_f("exec_s")?,
             error: opt_s("error")?,
         })
     }
@@ -209,9 +219,11 @@ fn load_resume_memo(path: &Path) -> Result<(Vec<CampaignRow>, bool), ApiError> {
     Ok((rows, torn_tail))
 }
 
-/// Evaluate one scenario through the analytic and simulated backends.
-/// Failures become rows carrying `error`, not panics — a campaign keeps
-/// sweeping past individual bad scenarios.
+/// Evaluate one scenario through the analytic and simulated backends —
+/// plus, for [`Scenario::exec`] spot checks, the executed backend (real
+/// buffers through the scalar data plane, verified against the exact
+/// oracle). Failures become rows carrying `error`, not panics — a
+/// campaign keeps sweeping past individual bad scenarios.
 pub fn evaluate_scenario(sc: &Scenario) -> CampaignRow {
     let mut row = CampaignRow {
         key: sc.key(),
@@ -224,18 +236,25 @@ pub fn evaluate_scenario(sc: &Scenario) -> CampaignRow {
         env: sc.env.to_string(),
         model_s: None,
         sim_s: None,
+        exec_s: None,
         error: None,
     };
-    let outcome = (|| -> Result<(f64, f64), ApiError> {
+    let outcome = (|| -> Result<(f64, f64, Option<f64>), ApiError> {
         let topo = parse_topology(&sc.topo)?;
         let engine = Engine::new(topo, sc.env.environment());
         let evs = engine.compare(&sc.algo, sc.size, &[Backend::Analytic, Backend::Simulated])?;
-        Ok((evs[0].seconds, evs[1].seconds))
+        let exec_s = if sc.exec {
+            Some(engine.evaluate(&sc.algo, sc.size, Backend::Executed)?.seconds)
+        } else {
+            None
+        };
+        Ok((evs[0].seconds, evs[1].seconds, exec_s))
     })();
     match outcome {
-        Ok((model, sim)) => {
+        Ok((model, sim, exec)) => {
             row.model_s = Some(model);
             row.sim_s = Some(sim);
+            row.exec_s = exec;
         }
         Err(e) => row.error = Some(e.to_string()),
     }
@@ -373,7 +392,28 @@ mod tests {
             sizes: vec![1e5],
             algos: vec!["cps".into(), "ring".into()],
             env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
         }
+    }
+
+    #[test]
+    fn exec_spot_check_fills_exec_s_and_verifies() {
+        let mut grid = tiny_grid();
+        grid.exec_spot_cap = 1e5; // both sizes qualify
+        let sc = &grid.expand().unwrap()[0];
+        assert!(sc.exec, "{}", sc.key());
+        let row = evaluate_scenario(sc);
+        assert!(row.error.is_none(), "{:?}", row.error);
+        assert!(row.exec_s.unwrap() > 0.0, "spot check must time the real run");
+        // The exec flag is part of the row identity and survives JSON.
+        let back = CampaignRow::from_json(&row.to_json()).unwrap();
+        assert_eq!(back, row);
+        assert!(back.key.ends_with("|exec"));
+        // Without the spot check the same scenario has a different key
+        // and no exec timing.
+        let plain = evaluate_scenario(&tiny_grid().expand().unwrap()[0]);
+        assert!(plain.exec_s.is_none());
+        assert_ne!(plain.key, row.key);
     }
 
     #[test]

@@ -71,6 +71,24 @@ impl Choice {
     }
 }
 
+/// A winner-change boundary of one topology class: growing a payload
+/// into `bucket` switches the routed algorithm. The batcher consults
+/// these (via [`SelectionTable::boundaries_for`]) to decide whether a
+/// fuse is worth breaking at the boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Boundary {
+    /// First table cell of the *new* winner.
+    pub bucket: u32,
+    /// The departed cell's runner-up margin ([`Choice::margin`]) — a
+    /// lower bound on the slowdown of fusing a departed-size payload
+    /// through to the far side's winner.
+    pub margin: f64,
+    /// The algorithm taking over at `bucket`, so consumers can tell a
+    /// genuine winner change across a multi-bucket jump from a flip
+    /// that lands back on the same winner.
+    pub winner: String,
+}
+
 /// Winner per (topology class, size bucket), plus the metric that picked
 /// the winners. Serialization is canonical (sorted maps) so equal tables
 /// are byte-equal.
@@ -149,22 +167,55 @@ impl SelectionTable {
         self.classes.iter().map(|(k, v)| (k.as_str(), v))
     }
 
+    /// The cell map of `class`, matched exactly first, then
+    /// case-insensitively — the one class resolution every per-class
+    /// query shares.
+    fn cells_for(&self, class: &str) -> Option<&BTreeMap<u32, Choice>> {
+        self.classes.get(class).or_else(|| {
+            let lower = class.to_ascii_lowercase();
+            self.classes
+                .iter()
+                .find(|(k, _)| k.to_ascii_lowercase() == lower)
+                .map(|(_, v)| v)
+        })
+    }
+
     /// The winner for a payload of `s` floats on topology class `class`:
     /// the entry of the nearest bucket at-or-below `s`'s bucket, else the
     /// nearest above (sizes beyond the swept ladder reuse the edge
     /// winner). Class matching is case-insensitive.
     pub fn lookup(&self, class: &str, s: usize) -> Option<&Choice> {
-        let cells = self
-            .classes
-            .get(class)
-            .or_else(|| {
-                let lower = class.to_ascii_lowercase();
-                self.classes
-                    .iter()
-                    .find(|(k, _)| k.to_ascii_lowercase() == lower)
-                    .map(|(_, v)| v)
-            })?;
+        let cells = self.cells_for(class)?;
         crate::coordinator::router::nearest_bucket(cells, PlanRouter::bucket(s))
+    }
+
+    /// The winner-change boundaries of `class`, bucket-ascending: one
+    /// [`Boundary`] per adjacent cell pair whose winners differ, carrying
+    /// the departed cell's margin. This is the margin query the
+    /// selection-aware batcher distills into its split points
+    /// (`coordinator::batcher::SplitPoints::from_table`); a class with
+    /// one winner everywhere (or unknown to the table) has none.
+    pub fn boundaries_for(&self, class: &str) -> Vec<Boundary> {
+        let Some(cells) = self.cells_for(class) else {
+            return Vec::new();
+        };
+        cells
+            .iter()
+            .zip(cells.iter().skip(1))
+            .filter(|((_, prev), (_, next))| prev.algo != next.algo)
+            .map(|((_, prev), (&bucket, next))| Boundary {
+                bucket,
+                margin: prev.margin(),
+                winner: next.algo.clone(),
+            })
+            .collect()
+    }
+
+    /// Whether `class` resolves (same resolution as [`Self::lookup`] and
+    /// [`Self::rules_for`] — exact first, then case-insensitive) to a
+    /// non-empty cell map.
+    pub fn has_class(&self, class: &str) -> bool {
+        self.cells_for(class).is_some_and(|cells| !cells.is_empty())
     }
 
     /// The bucket → parsed-algorithm routing rules for one class — what
@@ -172,13 +223,7 @@ impl SelectionTable {
     /// if a stored algorithm string no longer parses against the
     /// registry (a stale table).
     pub fn rules_for(&self, class: &str) -> Result<BTreeMap<u32, AlgoSpec>, ApiError> {
-        let lower = class.to_ascii_lowercase();
-        let Some(cells) = self
-            .classes
-            .iter()
-            .find(|(k, _)| k.to_ascii_lowercase() == lower)
-            .map(|(_, v)| v)
-        else {
+        let Some(cells) = self.cells_for(class) else {
             return Ok(BTreeMap::new());
         };
         cells
@@ -285,14 +330,28 @@ pub fn table_from_entries(
     metric: Metric,
     entries: &[(&str, u32, &str)],
 ) -> SelectionTable {
+    let full: Vec<(&str, u32, &str, f64, f64)> = entries
+        .iter()
+        .map(|&(class, bucket, algo)| (class, bucket, algo, 0.0, f64::INFINITY))
+        .collect();
+    table_from_choices(metric, &full)
+}
+
+/// Build a table from full `(class, bucket, algo, seconds, runner_up)`
+/// cells — the margin-carrying sibling of [`table_from_entries`], so
+/// boundary/margin queries are exercisable without running a sweep.
+pub fn table_from_choices(
+    metric: Metric,
+    entries: &[(&str, u32, &str, f64, f64)],
+) -> SelectionTable {
     let mut classes: BTreeMap<String, BTreeMap<u32, Choice>> = BTreeMap::new();
-    for &(class, bucket, algo) in entries {
+    for &(class, bucket, algo, seconds, runner_up) in entries {
         classes.entry(class.to_string()).or_default().insert(
             bucket,
             Choice {
                 algo: algo.to_string(),
-                seconds: 0.0,
-                runner_up: f64::INFINITY,
+                seconds,
+                runner_up,
             },
         );
     }
@@ -315,6 +374,7 @@ mod tests {
             env: "paper".into(),
             model_s: Some(model_s),
             sim_s: Some(model_s * 1.01),
+            exec_s: None,
             error: None,
         }
     }
@@ -407,6 +467,61 @@ mod tests {
         let back = SelectionTable::from_json(&t.to_json()).unwrap();
         assert_eq!(back, t);
         assert_eq!(back.to_json().to_string(), t.to_json().to_string());
+    }
+
+    #[test]
+    fn boundaries_sit_where_the_winner_changes() {
+        let t = table_from_choices(
+            Metric::Model,
+            &[
+                ("ss24", 10, "cps", 0.2, 0.6),  // margin 3.0
+                ("ss24", 14, "cps", 0.4, 0.5),  // same winner: no boundary
+                ("ss24", 17, "ring", 1.0, 1.1), // winner change at 17
+                ("ss24", 20, "gentree", 2.0, 8.0), // winner change at 20
+            ],
+        );
+        let b = t.boundaries_for("ss24");
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].bucket, 17);
+        assert_eq!(b[0].winner, "ring", "the algorithm taking over at 17");
+        // The departed (bucket-14 cps) cell's margin, not the new winner's.
+        assert!((b[0].margin - 0.5 / 0.4).abs() < 1e-12, "{}", b[0].margin);
+        assert_eq!(b[1].bucket, 20);
+        assert_eq!(b[1].winner, "gentree");
+        assert!((b[1].margin - 1.1).abs() < 1e-12);
+        // Case-insensitive like lookup; unknown class has no boundaries.
+        assert_eq!(t.boundaries_for("SS24").len(), 2);
+        assert!(t.boundaries_for("absent").is_empty());
+        assert!(t.has_class("ss24") && t.has_class("SS24"));
+        assert!(!t.has_class("absent"));
+    }
+
+    #[test]
+    fn single_winner_class_has_no_boundaries() {
+        let t = table_from_entries(Metric::Model, &[("x", 10, "ring"), ("x", 20, "ring")]);
+        assert!(t.boundaries_for("x").is_empty());
+    }
+
+    #[test]
+    fn unopposed_departed_winner_yields_infinite_margin() {
+        // table_from_entries leaves runner_up at ∞: the boundary's margin
+        // is ∞ too, so any min_split_margin threshold splits there.
+        let t = table_from_entries(Metric::Model, &[("x", 10, "cps"), ("x", 15, "ring")]);
+        let b = t.boundaries_for("x");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].bucket, 15);
+        assert_eq!(b[0].winner, "ring");
+        assert!(b[0].margin.is_infinite());
+    }
+
+    #[test]
+    fn boundaries_survive_a_json_roundtrip() {
+        let t = table_from_choices(
+            Metric::Model,
+            &[("x", 10, "cps", 0.2, 0.6), ("x", 15, "ring", 1.0, 1.3)],
+        );
+        let back = SelectionTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.boundaries_for("x"), t.boundaries_for("x"));
     }
 
     #[test]

@@ -1,10 +1,42 @@
-//! Gradient bucketing: decide which pending jobs fuse into one round.
+//! Gradient bucketing: decide which pending jobs fuse into one round —
+//! and, when a campaign selection table is in play, *where* a fuse must
+//! stop so the fused payload still routes to the algorithm that wins.
 //!
 //! Pure logic (no threads) so it is directly testable: jobs are taken in
-//! FIFO order; a batch closes when adding the next job would exceed
-//! `bucket_floats`, or when the queue is drained. A single oversized job
-//! always forms its own batch (it cannot be split across rounds — the
-//! plan's block partition already parallelizes it).
+//! FIFO order and every emitted batch reports the [`BatchRule`] that
+//! closed it. A batch closes when
+//!
+//! 1. **`FusedToCap`** — adding the next job would exceed
+//!    [`BatchPolicy::bucket_floats`] (DDP's bucket_cap behavior);
+//! 2. **`SplitAtBucket`** — adding the next job would drag the fused
+//!    size across a router bucket boundary ([`PlanRouter::bucket`])
+//!    where the selection table's winner *changes*, and the departed
+//!    winner's runner-up margin is at least
+//!    [`BatchPolicy::min_split_margin`] (default
+//!    [`DEFAULT_MIN_SPLIT_MARGIN`] = 1.25). The margin test is the
+//!    fuse-vs-split tiebreak: a 1.05× winner is not worth breaking a
+//!    fuse for, a 3× winner is. The departed bucket's margin is a
+//!    *lower bound* on the slowdown of fusing through: the fused batch
+//!    routes to the far side's (different) winner, which at the departed
+//!    size is at best that bucket's runner-up.
+//! 3. **`Drained`** — the queue is exhausted (the flush window closed).
+//!
+//! A single job larger than the cap always forms its own batch
+//! (**`Oversized`** — it cannot be split across rounds; the plan's block
+//! partition already parallelizes it). Without split points (or with
+//! every boundary below the margin threshold) the emitted partition is
+//! identical to the original cap-only policy.
+
+use std::fmt;
+use std::ops::RangeInclusive;
+
+use crate::campaign::SelectionTable;
+
+use super::router::PlanRouter;
+
+/// Default [`BatchPolicy::min_split_margin`]: a boundary's winner must
+/// beat its runner-up by ≥ 25% before the batcher breaks a fuse for it.
+pub const DEFAULT_MIN_SPLIT_MARGIN: f64 = 1.25;
 
 /// One pending job's metadata.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -14,11 +46,170 @@ pub struct PendingJob {
     pub floats: usize,
 }
 
+/// Why a batch was closed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchRule {
+    /// Adding the next job would have exceeded the size cap.
+    FusedToCap,
+    /// Closed early so the fused payload stays in `bucket`, below a
+    /// boundary where the selection winner changes with margin ≥ the
+    /// policy's `min_split_margin`.
+    SplitAtBucket { bucket: u32, margin: f64 },
+    /// A single job larger than the cap, alone in its batch.
+    Oversized,
+    /// The queue drained (flush window closed) with the batch open.
+    Drained,
+}
+
+impl BatchRule {
+    /// Stable metric/report key for the rule family.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchRule::FusedToCap => "fused-to-cap",
+            BatchRule::SplitAtBucket { .. } => "split-at-bucket",
+            BatchRule::Oversized => "oversized",
+            BatchRule::Drained => "drained",
+        }
+    }
+}
+
+impl fmt::Display for BatchRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BatchRule::SplitAtBucket { bucket, margin } => {
+                write!(f, "split-at-bucket(2^{bucket}, {margin:.2}x)")
+            }
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+/// One emitted batch: the fused jobs plus the rule that closed it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedBatch {
+    pub jobs: Vec<PendingJob>,
+    pub rule: BatchRule,
+}
+
+impl PlannedBatch {
+    /// Fused payload size of the batch in floats.
+    pub fn fused_floats(&self) -> usize {
+        self.jobs.iter().map(|j| j.floats).sum()
+    }
+}
+
+/// The winner-change boundaries of one topology class, distilled from a
+/// campaign [`SelectionTable`] into exactly what the batcher consults on
+/// the hot path: `(first bucket of the new winner, departed winner's
+/// margin)`, bucket-sorted — plus (when built [`from_table`]) the winner
+/// of each segment, so a fuse that jumps several boundaries and lands
+/// back on the *same* winner (A→B→A) is not split for nothing.
+///
+/// [`from_table`]: Self::from_table
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SplitPoints {
+    points: Vec<(u32, f64)>,
+    /// Winner of the segment starting at the same-index boundary in
+    /// `points`; empty when built from raw points (no winner info — any
+    /// crossed boundary then counts as a winner change).
+    winners: Vec<String>,
+    /// Winner below the first boundary (`None` for raw points).
+    base_winner: Option<String>,
+}
+
+impl SplitPoints {
+    /// Build from raw `(bucket, margin)` pairs; duplicates keep the
+    /// strongest margin so the batcher never under-reports a boundary.
+    /// Raw points carry no winner identity, so every crossed boundary is
+    /// conservatively treated as a winner change — prefer
+    /// [`Self::from_table`] when a table is available.
+    pub fn new(mut points: Vec<(u32, f64)>) -> SplitPoints {
+        points.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        points.dedup_by_key(|p| p.0);
+        SplitPoints {
+            points,
+            winners: Vec::new(),
+            base_winner: None,
+        }
+    }
+
+    /// Distill `table`'s winner-change boundaries for `class` (see
+    /// [`SelectionTable::boundaries_for`]), keeping each segment's
+    /// winner so [`Self::winner_changes`] can see through A→B→A flips.
+    pub fn from_table(table: &SelectionTable, class: &str) -> SplitPoints {
+        // boundaries_for is bucket-ascending with unique buckets, so the
+        // points arrive already in `new`'s canonical order.
+        let boundaries = table.boundaries_for(class);
+        SplitPoints {
+            points: boundaries.iter().map(|b| (b.bucket, b.margin)).collect(),
+            winners: boundaries.into_iter().map(|b| b.winner).collect(),
+            base_winner: table.lookup(class, 1).map(|c| c.algo.clone()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// The first boundary a fuse crosses when its payload grows through
+    /// `buckets` (a [`PlanRouter::bucket_range`]): the lowest boundary
+    /// strictly above the range's start and at-or-below its end. Its
+    /// margin belongs to the *departed* segment — the lower bound on
+    /// what fusing through costs the jobs already in the batch, and the
+    /// only margin the split decision weighs (an interior segment's
+    /// margin is irrelevant: neither emitted batch routes its winner).
+    pub fn first_crossed(&self, buckets: RangeInclusive<u32>) -> Option<(u32, f64)> {
+        self.points
+            .iter()
+            .copied()
+            .find(|&(b, _)| *buckets.start() < b && b <= *buckets.end())
+    }
+
+    /// The winning algorithm governing `bucket` — the last boundary at
+    /// or below it, else the base winner. `None` without winner info.
+    fn winner_at(&self, bucket: u32) -> Option<&str> {
+        let mut winner = self.base_winner.as_deref();
+        for (i, &(b, _)) in self.points.iter().enumerate() {
+            if b > bucket {
+                break;
+            }
+            winner = self.winners.get(i).map(String::as_str);
+        }
+        winner
+    }
+
+    /// Whether the routed winner actually differs between the `from` and
+    /// `to` buckets. Raw points (no winner info) always report a change,
+    /// matching the conservative pre-winner-aware behavior.
+    pub fn winner_changes(&self, from: u32, to: u32) -> bool {
+        if self.winners.len() != self.points.len() || self.winners.is_empty() {
+            return true;
+        }
+        self.winner_at(from) != self.winner_at(to)
+    }
+}
+
 /// Batching configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BatchPolicy {
     /// Target fused payload size (floats). Mirrors DDP's bucket_cap.
     pub bucket_floats: usize,
+    /// Minimum selection margin that justifies breaking a fuse at a
+    /// winner-change boundary; weaker winners fuse through. See the
+    /// module docs ([`DEFAULT_MIN_SPLIT_MARGIN`] = 1.25).
+    pub min_split_margin: f64,
+    /// Winner-change boundaries from a selection table. `None` (or an
+    /// empty set): cap-only fusing, byte-identical to the pre-selection
+    /// policy.
+    pub selection: Option<SplitPoints>,
 }
 
 impl Default for BatchPolicy {
@@ -26,27 +217,87 @@ impl Default for BatchPolicy {
         // 25 MB of f32 — the ubiquitous DDP default bucket.
         BatchPolicy {
             bucket_floats: 25 * (1 << 20) / 4,
+            min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
+            selection: None,
         }
     }
 }
 
-/// Split the FIFO queue into batches under the policy.
-pub fn plan_batches(queue: &[PendingJob], policy: &BatchPolicy) -> Vec<Vec<PendingJob>> {
-    let mut out = Vec::new();
+impl BatchPolicy {
+    /// Cap-only policy (the historical constructor).
+    pub fn with_cap(bucket_floats: usize) -> BatchPolicy {
+        BatchPolicy {
+            bucket_floats,
+            ..BatchPolicy::default()
+        }
+    }
+
+    /// Consult `table`'s winner-change boundaries for `class` when
+    /// deciding where a fuse must stop.
+    pub fn with_table(mut self, table: &SelectionTable, class: &str) -> BatchPolicy {
+        self.selection = Some(SplitPoints::from_table(table, class));
+        self
+    }
+}
+
+/// Split the FIFO queue into batches under the policy. Every batch
+/// reports the [`BatchRule`] that closed it.
+pub fn plan_batches(queue: &[PendingJob], policy: &BatchPolicy) -> Vec<PlannedBatch> {
+    let mut out: Vec<PlannedBatch> = Vec::new();
     let mut cur: Vec<PendingJob> = Vec::new();
     let mut cur_floats = 0usize;
+    let mut close = |cur: &mut Vec<PendingJob>, cur_floats: &mut usize, trigger: BatchRule| {
+        let rule = if cur.len() == 1 && cur[0].floats > policy.bucket_floats {
+            BatchRule::Oversized
+        } else {
+            trigger
+        };
+        out.push(PlannedBatch {
+            jobs: std::mem::take(cur),
+            rule,
+        });
+        *cur_floats = 0;
+    };
     for &j in queue {
-        if !cur.is_empty() && cur_floats + j.floats > policy.bucket_floats {
-            out.push(std::mem::take(&mut cur));
-            cur_floats = 0;
+        if !cur.is_empty() {
+            let fused = cur_floats + j.floats;
+            if fused > policy.bucket_floats {
+                close(&mut cur, &mut cur_floats, BatchRule::FusedToCap);
+            } else if let Some(rule) = boundary_split(policy, cur_floats, fused) {
+                close(&mut cur, &mut cur_floats, rule);
+            }
         }
         cur_floats += j.floats;
         cur.push(j);
     }
     if !cur.is_empty() {
-        out.push(cur);
+        close(&mut cur, &mut cur_floats, BatchRule::Drained);
     }
     out
+}
+
+/// The split rule to apply when fusing the next job would grow the open
+/// batch from `cur` to `fused` floats — `Some` only when that growth
+/// crosses a winner-change boundary decisive enough to break the fuse
+/// AND the winner at the fused size actually differs from the winner at
+/// the current size (a jump that flips A→B→A routes the same algorithm
+/// either way, so splitting would only buy an extra round). The reported
+/// bucket is the one the *emitted* batch lands in.
+fn boundary_split(policy: &BatchPolicy, cur: usize, fused: usize) -> Option<BatchRule> {
+    let selection = policy.selection.as_ref()?;
+    let buckets = PlanRouter::bucket_range(cur, fused);
+    let (_, margin) = selection.first_crossed(buckets.clone())?;
+    if !selection.winner_changes(*buckets.start(), *buckets.end()) {
+        return None;
+    }
+    if margin >= policy.min_split_margin {
+        Some(BatchRule::SplitAtBucket {
+            bucket: PlanRouter::bucket(cur),
+            margin,
+        })
+    } else {
+        None
+    }
 }
 
 /// Offsets of each job inside the fused buffer of a batch.
@@ -63,6 +314,7 @@ pub fn fuse_offsets(batch: &[PendingJob]) -> Vec<(u64, usize, usize)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::campaign::{table_from_choices, Metric};
 
     fn jobs(sizes: &[usize]) -> Vec<PendingJob> {
         sizes
@@ -75,35 +327,55 @@ mod tests {
             .collect()
     }
 
+    fn ids(batches: &[PlannedBatch]) -> Vec<Vec<u64>> {
+        batches
+            .iter()
+            .map(|b| b.jobs.iter().map(|j| j.id).collect())
+            .collect()
+    }
+
     #[test]
     fn small_jobs_fuse() {
         let q = jobs(&[100, 200, 300]);
-        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        let batches = plan_batches(&q, &BatchPolicy::with_cap(1000));
         assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].len(), 3);
+        assert_eq!(batches[0].jobs.len(), 3);
+        assert_eq!(batches[0].rule, BatchRule::Drained);
     }
 
     #[test]
     fn bucket_boundary_splits() {
         let q = jobs(&[600, 600, 600]);
-        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        let batches = plan_batches(&q, &BatchPolicy::with_cap(1000));
         assert_eq!(batches.len(), 3); // 600+600 > 1000 each time
+        assert_eq!(batches[0].rule, BatchRule::FusedToCap);
+        assert_eq!(batches[1].rule, BatchRule::FusedToCap);
+        assert_eq!(batches[2].rule, BatchRule::Drained);
     }
 
     #[test]
     fn oversized_job_alone() {
         let q = jobs(&[5000, 10]);
-        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
+        let batches = plan_batches(&q, &BatchPolicy::with_cap(1000));
         assert_eq!(batches.len(), 2);
-        assert_eq!(batches[0][0].floats, 5000);
+        assert_eq!(batches[0].jobs[0].floats, 5000);
+        assert_eq!(batches[0].rule, BatchRule::Oversized);
+    }
+
+    #[test]
+    fn oversized_at_queue_tail_still_reports_oversized() {
+        let q = jobs(&[10, 5000]);
+        let batches = plan_batches(&q, &BatchPolicy::with_cap(1000));
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].rule, BatchRule::Oversized);
     }
 
     #[test]
     fn fifo_order_preserved() {
         let q = jobs(&[10, 990, 10]);
-        let batches = plan_batches(&q, &BatchPolicy { bucket_floats: 1000 });
-        let ids: Vec<u64> = batches.concat().iter().map(|j| j.id).collect();
-        assert_eq!(ids, vec![0, 1, 2]);
+        let batches = plan_batches(&q, &BatchPolicy::with_cap(1000));
+        let flat: Vec<u64> = ids(&batches).concat();
+        assert_eq!(flat, vec![0, 1, 2]);
     }
 
     #[test]
@@ -116,5 +388,159 @@ mod tests {
     #[test]
     fn empty_queue_no_batches() {
         assert!(plan_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+
+    // ---- selection-aware splitting ------------------------------------
+
+    /// Boundary at bucket 14 (payloads > 2^13 floats), departed-side
+    /// margin as given.
+    fn policy_with_boundary(margin: f64) -> BatchPolicy {
+        BatchPolicy {
+            selection: Some(SplitPoints::new(vec![(14, margin)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        }
+    }
+
+    #[test]
+    fn decisive_boundary_splits_the_fuse() {
+        // 3000 + 3000 stays below 2^13; adding 20000 would cross the
+        // bucket-14 boundary, and a 3.0x winner is worth the split.
+        let q = jobs(&[3000, 3000, 20_000]);
+        let batches = plan_batches(&q, &policy_with_boundary(3.0));
+        assert_eq!(ids(&batches), vec![vec![0, 1], vec![2]]);
+        assert_eq!(
+            batches[0].rule,
+            BatchRule::SplitAtBucket {
+                bucket: PlanRouter::bucket(6000),
+                margin: 3.0
+            }
+        );
+        // The emitted batch's fused size lands inside the claimed bucket.
+        assert_eq!(PlanRouter::bucket(batches[0].fused_floats()), 13);
+        assert_eq!(batches[1].rule, BatchRule::Drained);
+    }
+
+    #[test]
+    fn weak_boundary_fuses_through() {
+        // A 1.05x winner is not worth breaking a fuse: the partition is
+        // identical to the cap-only policy.
+        let q = jobs(&[3000, 3000, 20_000]);
+        let with = plan_batches(&q, &policy_with_boundary(1.05));
+        let without = plan_batches(&q, &BatchPolicy::with_cap(1 << 22));
+        assert_eq!(ids(&with), ids(&without));
+        assert_eq!(ids(&with), vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn cap_takes_precedence_over_boundary() {
+        // Both the cap and a decisive boundary fire on the same job: the
+        // cap rule reports (the partition matches the cap-only policy).
+        let q = jobs(&[3000, 3000, 20_000]);
+        let policy = BatchPolicy {
+            selection: Some(SplitPoints::new(vec![(14, 3.0)])),
+            ..BatchPolicy::with_cap(7000)
+        };
+        let batches = plan_batches(&q, &policy);
+        assert_eq!(ids(&batches), vec![vec![0, 1], vec![2]]);
+        assert_eq!(batches[0].rule, BatchRule::FusedToCap);
+        assert_eq!(batches[1].rule, BatchRule::Oversized);
+    }
+
+    #[test]
+    fn multi_bucket_jump_weighs_the_departed_boundary_margin() {
+        // One large job drags the fuse across two boundaries at once; the
+        // decision (and the reported margin) is the FIRST crossed
+        // boundary's — the departed segment's own winner/runner-up ratio.
+        // An interior segment's stronger margin is irrelevant: neither
+        // emitted batch routes that segment's winner.
+        let q = jobs(&[1000, 200_000]);
+        let policy = BatchPolicy {
+            selection: Some(SplitPoints::new(vec![(12, 1.5), (16, 2.5)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        let batches = plan_batches(&q, &policy);
+        assert_eq!(ids(&batches), vec![vec![0], vec![1]]);
+        assert_eq!(
+            batches[0].rule,
+            BatchRule::SplitAtBucket {
+                bucket: PlanRouter::bucket(1000),
+                margin: 1.5
+            }
+        );
+        // A weak departed margin holds the fuse even when an interior
+        // boundary is decisive — the 5.0x belongs to a winner neither
+        // batch would route.
+        let policy = BatchPolicy {
+            selection: Some(SplitPoints::new(vec![(12, 1.1), (16, 5.0)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        let batches = plan_batches(&q, &policy);
+        assert_eq!(ids(&batches), vec![vec![0, 1]]);
+    }
+
+    #[test]
+    fn winner_flip_back_does_not_split() {
+        // ring → rhd → ring across the size axis: a jump that crosses
+        // BOTH boundaries routes ring on either side, so splitting would
+        // only buy an extra round — the fuse must hold. A jump landing
+        // inside rhd's reign still splits.
+        let table = table_from_choices(
+            Metric::Model,
+            &[
+                ("x", 10, "ring", 1.0, 3.0),
+                ("x", 14, "rhd", 1.0, 3.0),
+                ("x", 17, "ring", 1.0, 2.0),
+            ],
+        );
+        let policy = BatchPolicy {
+            selection: Some(SplitPoints::from_table(&table, "x")),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        // 3000 (bucket 12) + 200_000 → 203_000 (bucket 18): ring → ring.
+        let batches = plan_batches(&jobs(&[3000, 200_000]), &policy);
+        assert_eq!(ids(&batches), vec![vec![0, 1]], "A→B→A jump must fuse");
+        // 3000 + 60_000 → 63_000 (bucket 16): ring → rhd, split.
+        let batches = plan_batches(&jobs(&[3000, 60_000]), &policy);
+        assert_eq!(ids(&batches), vec![vec![0], vec![1]]);
+        assert_eq!(
+            batches[0].rule,
+            BatchRule::SplitAtBucket { bucket: 12, margin: 3.0 }
+        );
+    }
+
+    #[test]
+    fn split_points_distill_from_a_selection_table() {
+        let table = table_from_choices(
+            Metric::Model,
+            &[
+                ("single:8", 10, "ring", 1.0, 3.0),
+                ("single:8", 14, "rhd", 1.0, 2.0),
+            ],
+        );
+        let pts = SplitPoints::from_table(&table, "single:8");
+        assert_eq!(pts.len(), 1);
+        // The boundary sits where rhd takes over; its margin is the
+        // departed (ring) cell's runner-up margin.
+        assert_eq!(pts.first_crossed(13..=14), Some((14, 3.0)));
+        assert_eq!(pts.first_crossed(14..=20), None, "already across");
+        assert!(SplitPoints::from_table(&table, "absent").is_empty());
+    }
+
+    #[test]
+    fn duplicate_points_keep_the_strongest_margin() {
+        let pts = SplitPoints::new(vec![(14, 1.1), (14, 2.0)]);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts.first_crossed(10..=14), Some((14, 2.0)));
+    }
+
+    #[test]
+    fn rule_display_is_stable() {
+        assert_eq!(BatchRule::FusedToCap.to_string(), "fused-to-cap");
+        assert_eq!(
+            BatchRule::SplitAtBucket { bucket: 13, margin: 3.0 }.to_string(),
+            "split-at-bucket(2^13, 3.00x)"
+        );
+        assert_eq!(BatchRule::Oversized.name(), "oversized");
+        assert_eq!(BatchRule::Drained.name(), "drained");
     }
 }

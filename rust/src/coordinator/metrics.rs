@@ -2,6 +2,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::batcher::BatchRule;
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub jobs_submitted: AtomicU64,
@@ -14,6 +16,12 @@ pub struct Metrics {
     /// Times the leader had to fall back to the scalar reducer because
     /// the configured reducer spec failed to build (0 or 1 per leader).
     pub reducer_fallbacks: AtomicU64,
+    /// Batches closed by each [`BatchRule`] — the selection-aware
+    /// batcher's split/fuse decisions, countable per rule family.
+    pub batches_fused_to_cap: AtomicU64,
+    pub batches_split_at_bucket: AtomicU64,
+    pub batches_oversized: AtomicU64,
+    pub batches_drained: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,11 +33,26 @@ pub struct MetricsSnapshot {
     pub reduce_calls: u64,
     pub busy_secs: f64,
     pub reducer_fallbacks: u64,
+    pub batches_fused_to_cap: u64,
+    pub batches_split_at_bucket: u64,
+    pub batches_oversized: u64,
+    pub batches_drained: u64,
 }
 
 impl Metrics {
     pub fn add(&self, field: &AtomicU64, v: u64) {
         field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Count one emitted batch under the rule that closed it.
+    pub fn record_rule(&self, rule: &BatchRule) {
+        let field = match rule {
+            BatchRule::FusedToCap => &self.batches_fused_to_cap,
+            BatchRule::SplitAtBucket { .. } => &self.batches_split_at_bucket,
+            BatchRule::Oversized => &self.batches_oversized,
+            BatchRule::Drained => &self.batches_drained,
+        };
+        self.add(field, 1);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -41,6 +64,10 @@ impl Metrics {
             reduce_calls: self.reduce_calls.load(Ordering::Relaxed),
             busy_secs: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
             reducer_fallbacks: self.reducer_fallbacks.load(Ordering::Relaxed),
+            batches_fused_to_cap: self.batches_fused_to_cap.load(Ordering::Relaxed),
+            batches_split_at_bucket: self.batches_split_at_bucket.load(Ordering::Relaxed),
+            batches_oversized: self.batches_oversized.load(Ordering::Relaxed),
+            batches_drained: self.batches_drained.load(Ordering::Relaxed),
         }
     }
 }
@@ -53,6 +80,21 @@ impl MetricsSnapshot {
         } else {
             self.jobs_completed as f64 / self.batches_flushed as f64
         }
+    }
+
+    /// Per-rule batch counts as `(stable key, count)` rows, in the order
+    /// the rules are documented — one loop serves the CLI report and the
+    /// bench JSON.
+    pub fn rule_counts(&self) -> [(&'static str, u64); 4] {
+        [
+            (BatchRule::FusedToCap.name(), self.batches_fused_to_cap),
+            (
+                BatchRule::SplitAtBucket { bucket: 0, margin: 0.0 }.name(),
+                self.batches_split_at_bucket,
+            ),
+            (BatchRule::Oversized.name(), self.batches_oversized),
+            (BatchRule::Drained.name(), self.batches_drained),
+        ]
     }
 }
 
@@ -77,5 +119,29 @@ mod tests {
     fn empty_snapshot_safe() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.jobs_per_batch(), 0.0);
+    }
+
+    #[test]
+    fn every_rule_lands_in_its_own_counter() {
+        let m = Metrics::default();
+        m.record_rule(&BatchRule::FusedToCap);
+        m.record_rule(&BatchRule::FusedToCap);
+        m.record_rule(&BatchRule::SplitAtBucket { bucket: 13, margin: 2.0 });
+        m.record_rule(&BatchRule::Oversized);
+        m.record_rule(&BatchRule::Drained);
+        let s = m.snapshot();
+        assert_eq!(s.batches_fused_to_cap, 2);
+        assert_eq!(s.batches_split_at_bucket, 1);
+        assert_eq!(s.batches_oversized, 1);
+        assert_eq!(s.batches_drained, 1);
+        assert_eq!(
+            s.rule_counts(),
+            [
+                ("fused-to-cap", 2),
+                ("split-at-bucket", 1),
+                ("oversized", 1),
+                ("drained", 1)
+            ]
+        );
     }
 }

@@ -7,11 +7,17 @@
 //!   per-worker tensors and receive results over channels;
 //! * [`batcher`] — gradient bucketing: small tensors from concurrent jobs
 //!   fuse into one AllReduce round (amortizing the α term — exactly the
-//!   trade GenModel prices), flushed on size or time;
+//!   trade GenModel prices), flushed on size or time. With a campaign
+//!   selection table wired in ([`ServiceConfig::with_selection_table`]),
+//!   the batcher is **selection-aware**: a fuse stops at a router bucket
+//!   boundary where the table's winner changes decisively (margin ≥
+//!   `min_split_margin`), and every emitted batch reports the
+//!   [`batcher::BatchRule`] that closed it;
 //! * [`router`] — plan cache: routes any registered `api::AlgoSpec`
 //!   (GenTree by default), cached per `(algorithm, payload-size bucket)`
 //!   and shared as `Arc<RoutedPlan>` on the hot path;
-//! * [`metrics`] — atomic counters exposed for the CLI and benches.
+//! * [`metrics`] — atomic counters exposed for the CLI and benches,
+//!   including per-[`batcher::BatchRule`] split/fuse counts.
 //!
 //! Threads + channels stand in for an async runtime (tokio is not in the
 //! vendored dependency closure; the control flow is identical).
@@ -21,6 +27,10 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use batcher::{
+    plan_batches, BatchPolicy, BatchRule, PendingJob, PlannedBatch, SplitPoints,
+    DEFAULT_MIN_SPLIT_MARGIN,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
 pub use service::{AllReduceService, JobResult, ServiceConfig};

@@ -106,6 +106,14 @@ impl PlanRouter {
         (1u64 << bucket) as f64
     }
 
+    /// Every bucket a payload sweeps while growing from `lo` to `hi`
+    /// floats (inclusive) — the boundary-iteration primitive the
+    /// selection-aware batcher walks when deciding whether a fuse
+    /// crosses a winner-change boundary.
+    pub fn bucket_range(lo: usize, hi: usize) -> std::ops::RangeInclusive<u32> {
+        Self::bucket(lo)..=Self::bucket(hi.max(lo))
+    }
+
     /// Routed plan for `algo` at a payload of `s` floats, cached per
     /// `(algo, bucket)`. One lock acquisition; misses build inside the
     /// lock (single-leader access pattern — contention-free in practice,
@@ -182,6 +190,28 @@ mod tests {
         assert_eq!(PlanRouter::bucket(1025), 11);
         assert_eq!(PlanRouter::bucket(1 << 20), 20);
         assert_eq!(PlanRouter::bucket_size(10), 1024.0);
+    }
+
+    #[test]
+    fn bucket_bounds_tile_the_size_axis() {
+        // Pins the boundary semantics bucket_range (and the batcher's
+        // split points) rely on: bucket b spans (2^(b-1), 2^b], with the
+        // clamp bucket 2^10 reaching down to 1 float.
+        for b in 10u32..=24 {
+            let floor = if b == 10 { 1 } else { (1usize << (b - 1)) + 1 };
+            let cap = 1usize << b;
+            assert_eq!(PlanRouter::bucket(floor), b, "floor of bucket {b}");
+            assert_eq!(PlanRouter::bucket(cap), b, "cap of bucket {b}");
+            assert_eq!(PlanRouter::bucket(cap + 1), b + 1, "past cap of {b}");
+        }
+    }
+
+    #[test]
+    fn bucket_range_sweeps_inclusively() {
+        assert_eq!(PlanRouter::bucket_range(1000, 1000), 10..=10);
+        assert_eq!(PlanRouter::bucket_range(1000, 26_000), 10..=15);
+        // Degenerate hi < lo clamps to a single bucket, never panics.
+        assert_eq!(PlanRouter::bucket_range(5000, 100), 13..=13);
     }
 
     #[test]

@@ -20,12 +20,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::api::{AlgoSpec, ApiError};
+use crate::campaign::SelectionTable;
 use crate::exec::execute_plan;
 use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
 use crate::topo::Topology;
 
-use super::batcher::{fuse_offsets, plan_batches, BatchPolicy, PendingJob};
+use super::batcher::{
+    fuse_offsets, plan_batches, BatchPolicy, BatchRule, PendingJob, PlannedBatch,
+};
 use super::metrics::Metrics;
 use super::router::{PlanRouter, SelectionRules};
 
@@ -39,6 +42,10 @@ pub struct JobResult {
     /// The algorithm the router picked for this job's batch (selection
     /// rules may route different sizes to different algorithms).
     pub algo: String,
+    /// The batcher rule that closed this job's batch — whether the fuse
+    /// ran to the cap, was split at a selection boundary (and at what
+    /// margin), stood alone oversized, or flushed on queue drain.
+    pub rule: BatchRule,
 }
 
 struct Job {
@@ -69,6 +76,35 @@ impl Default for ServiceConfig {
             algo: AlgoSpec::GenTree { rearrange: true },
             selection: SelectionRules::new(),
         }
+    }
+}
+
+impl ServiceConfig {
+    /// Wire one campaign [`SelectionTable`] into BOTH consumers at once:
+    /// the router routes every batch to the table's per-bucket winner for
+    /// `class`, and the batcher stops fuses at the table's winner-change
+    /// boundaries whose margin is at least `min_split_margin` — closing
+    /// the campaign → selection → batcher → router loop so the batcher
+    /// can no longer fuse a job past the boundary where the routed
+    /// algorithm stops winning. Errors when the table has no entries for
+    /// `class` (a typoed class would otherwise silently disable selection)
+    /// or when a stored algorithm string no longer parses against the
+    /// registry (a stale table).
+    pub fn with_selection_table(
+        mut self,
+        table: &SelectionTable,
+        class: &str,
+        min_split_margin: f64,
+    ) -> Result<ServiceConfig, ApiError> {
+        self.selection = table.rules_for(class)?;
+        if self.selection.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!("selection table has no entries for topology class {class:?}"),
+            });
+        }
+        self.policy.min_split_margin = min_split_margin;
+        self.policy = self.policy.with_table(table, class);
+        Ok(self)
     }
 }
 
@@ -235,20 +271,25 @@ fn leader_loop(
         let mut jobs: std::collections::HashMap<u64, Job> =
             queue.drain(..).map(|j| (j.id, j)).collect();
         for batch in batches {
+            // Flush accounting happens here — not in run_batch — so the
+            // per-rule counters and batches_flushed stay consistent even
+            // when routing fails before execution.
+            metrics.add(&metrics.batches_flushed, 1);
+            metrics.record_rule(&batch.rule);
             run_batch(&batch, &mut jobs, &router, &reducer, &metrics);
         }
     }
 }
 
 fn run_batch(
-    batch: &[PendingJob],
+    batch: &PlannedBatch,
     jobs: &mut std::collections::HashMap<u64, Job>,
     router: &PlanRouter,
     reducer: &Reducer,
     metrics: &Arc<Metrics>,
 ) {
-    let offsets = fuse_offsets(batch);
-    let total: usize = batch.iter().map(|j| j.floats).sum();
+    let offsets = fuse_offsets(&batch.jobs);
+    let total: usize = batch.fused_floats();
     let n_workers = router.topo().n_servers();
     // Route first: a routing failure (misconfigured default algo, or a
     // selection rule naming an algorithm this topology rejects) fails the
@@ -275,7 +316,6 @@ fn run_batch(
     let t0 = Instant::now();
     let outcome = execute_plan(&routed.plan, &fused, reducer);
     let elapsed = t0.elapsed();
-    metrics.add(&metrics.batches_flushed, 1);
     metrics.add(&metrics.busy_nanos, elapsed.as_nanos() as u64);
     match outcome {
         Ok(out) => {
@@ -288,9 +328,10 @@ fn run_batch(
                 metrics.add(&metrics.jobs_completed, 1);
                 let _ = job.respond.send(Ok(JobResult {
                     reduced: result[off..off + len].to_vec(),
-                    batch_jobs: batch.len(),
+                    batch_jobs: batch.jobs.len(),
                     plan_name: routed.plan.name.clone(),
                     algo: routed.algo.to_string(),
+                    rule: batch.rule,
                 }));
             }
         }
@@ -317,9 +358,7 @@ mod tests {
             Environment::paper(),
             ReducerSpec::Scalar,
             ServiceConfig {
-                policy: BatchPolicy {
-                    bucket_floats: bucket,
-                },
+                policy: BatchPolicy::with_cap(bucket),
                 flush_after: Duration::from_millis(1),
                 ..ServiceConfig::default()
             },
@@ -488,7 +527,7 @@ mod tests {
             Environment::paper(),
             ReducerSpec::Scalar,
             ServiceConfig {
-                policy: BatchPolicy { bucket_floats: 1 }, // no cross-job fusing
+                policy: BatchPolicy::with_cap(1), // no cross-job fusing
                 flush_after: Duration::from_millis(1),
                 selection,
                 ..ServiceConfig::default()
@@ -525,7 +564,7 @@ mod tests {
             Environment::paper(),
             ReducerSpec::Scalar,
             ServiceConfig {
-                policy: BatchPolicy { bucket_floats: 1 },
+                policy: BatchPolicy::with_cap(1),
                 flush_after: Duration::from_millis(1),
                 selection,
                 ..ServiceConfig::default()
@@ -538,6 +577,75 @@ mod tests {
         // The leader is still alive and the Ring bucket still works.
         let res = svc.allreduce(tensors(6, 100_000, 2)).unwrap();
         assert_eq!(res.algo, "ring");
+    }
+
+    #[test]
+    fn job_result_reports_the_batch_rule() {
+        let svc = make_service(3, 1 << 20);
+        // A lone small job flushes on queue drain.
+        let res = svc.allreduce(tensors(3, 64, 1)).unwrap();
+        assert_eq!(res.rule, BatchRule::Drained);
+        // A job bigger than the cap stands alone as Oversized.
+        let svc = make_service(2, 100);
+        let res = svc.allreduce(tensors(2, 400, 2)).unwrap();
+        assert_eq!(res.rule, BatchRule::Oversized);
+        assert_eq!(svc.metrics.snapshot().batches_oversized, 1);
+    }
+
+    #[test]
+    fn selection_table_wires_router_and_batcher_together() {
+        use crate::campaign::{table_from_choices, Metric};
+        // Two-cell table on single:8 — cps below, ring from bucket 17 up,
+        // with a decisive (3x) margin at the boundary.
+        let table = table_from_choices(
+            Metric::Model,
+            &[
+                ("single:8", 10, "cps", 1.0, 3.0),
+                ("single:8", 17, "ring", 1.0, 2.0),
+            ],
+        );
+        let cfg = ServiceConfig {
+            policy: BatchPolicy::with_cap(1 << 22),
+            flush_after: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        }
+        .with_selection_table(&table, "single:8", 1.25)
+        .unwrap();
+        // Router rules and batcher split points both came from the table.
+        assert_eq!(cfg.selection.len(), 2);
+        let pts = cfg.policy.selection.as_ref().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts.first_crossed(10..=17), Some((17, 3.0)));
+
+        let svc = AllReduceService::start(
+            single_switch(8),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            cfg,
+        );
+        // A small job routes the small bucket's winner, a big one the
+        // big bucket's — through the one table the config was built from.
+        let small = svc.allreduce(tensors(8, 1000, 1)).unwrap();
+        assert_eq!(small.algo, "cps");
+        let big = svc.allreduce(tensors(8, 100_000, 2)).unwrap();
+        assert_eq!(big.algo, "ring");
+    }
+
+    #[test]
+    fn stale_selection_table_is_a_typed_config_error() {
+        use crate::campaign::{table_from_entries, Metric};
+        let stale = table_from_entries(Metric::Model, &[("single:8", 10, "warpdrive")]);
+        assert!(matches!(
+            ServiceConfig::default().with_selection_table(&stale, "single:8", 1.25),
+            Err(ApiError::UnknownAlgo { .. })
+        ));
+        // A class the table does not know is an error too — not a silent
+        // no-op config that ignores the table.
+        let ok = table_from_entries(Metric::Model, &[("single:8", 10, "ring")]);
+        match ServiceConfig::default().with_selection_table(&ok, "ss99", 1.25) {
+            Err(ApiError::BadRequest { reason }) => assert!(reason.contains("ss99"), "{reason}"),
+            other => panic!("expected BadRequest, got {:?}", other.map(|_| ())),
+        }
     }
 
     #[test]

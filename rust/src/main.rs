@@ -28,7 +28,7 @@
 use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
 use genmodel::campaign::{self, Metric, RunConfig, ScenarioGrid, SelectionTable};
-use genmodel::coordinator::{AllReduceService, SelectionRules, ServiceConfig};
+use genmodel::coordinator::{AllReduceService, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN};
 use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
 use genmodel::model::params::Environment;
@@ -51,7 +51,10 @@ USAGE: repro <subcommand> [options]
   run        [--servers 8] [--size 100000] [--algo gentree] [--scalar]
   serve      [--servers 8] [--jobs 64] [--tensor 4096] [--algo gentree] [--scalar]
              [--selection table.json] [--class <topo-class>]
-  campaign   run    [--grid fig11|smoke] [--topos s1,s2] [--sizes 1e6,1e8]
+             [--min-split-margin 1.25] [--bench-out BENCH_campaign.json]
+             (--min-split-margin: break a fuse at a selection boundary only
+              when the departed winner beats its runner-up by ≥ this ratio)
+  campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
                     [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
   campaign   report --in campaign.jsonl
@@ -328,47 +331,54 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let topo = genmodel::topo::builders::single_switch(servers);
     algo.applicable(&topo)?;
-    // Optional campaign selection table: route each size bucket to its
-    // precomputed winner. The topology class defaults to this rack's
-    // spec spellings (`single:N`, `ssN`).
-    let selection: SelectionRules = match args.opt("selection") {
-        Some(path) => {
-            let table = SelectionTable::load(std::path::Path::new(path))?;
-            let classes: Vec<String> = match args.opt("class") {
-                Some(c) => vec![c.to_string()],
-                None => vec![format!("single:{servers}"), format!("ss{servers}")],
-            };
-            let rules = classes
-                .iter()
-                .map(|c| table.rules_for(c))
-                .collect::<Result<Vec<_>, _>>()?
-                .into_iter()
-                .find(|r| !r.is_empty())
-                .unwrap_or_default();
-            anyhow::ensure!(
-                !rules.is_empty(),
+    // Optional campaign selection table, wired into BOTH consumers: the
+    // router routes each size bucket to its precomputed winner, and the
+    // batcher stops fuses at decisive winner-change boundaries (margin ≥
+    // --min-split-margin). The topology class defaults to this rack's
+    // spec spellings (`single:N`, `ssN`). Both selection-only flags are
+    // read inside this branch, so passing them without --selection fails
+    // the unused-option check instead of being silently ignored.
+    let mut cfg = ServiceConfig {
+        algo,
+        ..ServiceConfig::default()
+    };
+    if let Some(path) = args.opt("selection") {
+        let min_split_margin: f64 =
+            args.opt_parse_or("min-split-margin", DEFAULT_MIN_SPLIT_MARGIN)?;
+        anyhow::ensure!(
+            min_split_margin >= 1.0,
+            "--min-split-margin is a winner/runner-up ratio and must be ≥ 1.0, \
+             got {min_split_margin}"
+        );
+        let table = SelectionTable::load(std::path::Path::new(path))?;
+        let classes: Vec<String> = match args.opt("class") {
+            Some(c) => vec![c.to_string()],
+            None => vec![format!("single:{servers}"), format!("ss{servers}")],
+        };
+        // Cheap presence probe first (the table's own class resolution,
+        // no algo parsing); the single rules_for parse — and any
+        // stale-algo error — happens inside with_selection_table.
+        let class = classes.iter().find(|c| table.has_class(c));
+        let Some(class) = class else {
+            anyhow::bail!(
                 "selection table {path} has no entries for class(es) {classes:?} \
                  (pass --class to name the topology class explicitly)"
             );
-            println!(
-                "selection table: {} bucket rule(s) from {path} ({} metric)",
-                rules.len(),
-                table.metric
-            );
-            rules
-        }
-        None => SelectionRules::new(),
-    };
-    let svc = AllReduceService::start(
-        topo,
-        Environment::paper(),
-        spec,
-        ServiceConfig {
-            algo,
-            selection,
-            ..ServiceConfig::default()
-        },
-    );
+        };
+        cfg = cfg.with_selection_table(&table, class, min_split_margin)?;
+        let decisive = table
+            .boundaries_for(&class)
+            .iter()
+            .filter(|b| b.margin >= min_split_margin)
+            .count();
+        println!(
+            "selection table: {} bucket rule(s) for class {class:?} from {path} ({} metric); \
+             {decisive} split boundar(ies) at margin ≥ {min_split_margin}x",
+            cfg.selection.len(),
+            table.metric
+        );
+    }
+    let svc = AllReduceService::start(topo, Environment::paper(), spec, cfg);
     println!("coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats");
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
@@ -387,6 +397,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("  jobs completed   : {}", m.jobs_completed);
     println!("  batches flushed  : {}", m.batches_flushed);
     println!("  jobs per batch   : {:.2}", m.jobs_per_batch());
+    for (rule, count) in m.rule_counts() {
+        println!("  batch rule       : {rule:<15} × {count}");
+    }
     println!("  floats reduced   : {}", m.floats_reduced);
     println!("  reduce calls     : {}", m.reduce_calls);
     println!("  leader busy      : {:.4} s", m.busy_secs);
@@ -394,7 +407,47 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  throughput       : {:.2} Mfloat/s reduced",
         m.floats_reduced as f64 / wall / 1e6
     );
+    // --bench-out: merge the serve-side counters into the (campaign)
+    // bench record, so one JSON accumulates the whole CI smoke story —
+    // sweep throughput AND batch split/fuse counts.
+    if let Some(bench_out) = args.opt("bench-out") {
+        use genmodel::util::json::Json;
+        let mut entries = vec![
+            ("serve_jobs_completed".to_string(), Json::num(m.jobs_completed as f64)),
+            ("serve_batches_flushed".to_string(), Json::num(m.batches_flushed as f64)),
+            ("serve_wall_secs".to_string(), Json::num(wall)),
+        ];
+        for (rule, count) in m.rule_counts() {
+            entries.push((
+                format!("serve_batches_{}", rule.replace('-', "_")),
+                Json::num(count as f64),
+            ));
+        }
+        merge_bench_json(bench_out, entries)?;
+        println!("  bench record     → {bench_out}");
+    }
     Ok(())
+}
+
+/// Merge `entries` into the JSON object at `path`, creating the file when
+/// absent (or not a JSON object). Both `campaign run` and `serve` write
+/// bench records through this, so re-running either step updates its own
+/// keys without erasing the other's.
+fn merge_bench_json(
+    path: &str,
+    entries: Vec<(String, genmodel::util::json::Json)>,
+) -> anyhow::Result<()> {
+    use genmodel::util::json::Json;
+    let p = std::path::Path::new(path);
+    let mut obj = match std::fs::read_to_string(p).ok().and_then(|t| Json::parse(&t).ok()) {
+        Some(Json::Obj(existing)) => existing,
+        _ => Default::default(),
+    };
+    for (k, v) in entries {
+        obj.insert(k, v);
+    }
+    std::fs::write(p, format!("{}\n", Json::Obj(obj)))
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
 }
 
 fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
@@ -461,15 +514,17 @@ fn cmd_campaign_run(args: &Args) -> anyhow::Result<()> {
         grid.algos = algos;
         custom = true;
     }
-    if let Some(env) = args.opt("env") {
-        grid.env = campaign::EnvKind::parse(env)?;
-    }
     // The grid name decides the default artifact path; every override
     // must change it (content fingerprint included, so two *different*
     // custom sweeps never share — and the run never refuses over — one
-    // default file).
-    if grid.env == campaign::EnvKind::Gpu {
-        grid.name = format!("{}-gpu", grid.name);
+    // default file). A preset whose default env already matches (e.g.
+    // gpu-smoke with --env gpu) keeps its name.
+    if let Some(env) = args.opt("env") {
+        let kind = campaign::EnvKind::parse(env)?;
+        if kind != grid.env {
+            grid.env = kind;
+            grid.name = format!("{}-{kind}", grid.name);
+        }
     }
     if custom {
         grid.name = format!("{}-custom-{:08x}", grid.name, grid.fingerprint() as u32);
@@ -501,16 +556,17 @@ fn cmd_campaign_run(args: &Args) -> anyhow::Result<()> {
     println!("  throughput       : {:.2} scenarios/s", summary.scenarios_per_sec());
     if let Some(bench_out) = args.opt("bench-out") {
         use genmodel::util::json::Json;
-        let j = Json::obj(vec![
-            ("grid", Json::str(grid.name.clone())),
-            ("scenarios_evaluated", Json::num(summary.evaluated as f64)),
-            ("scenarios_per_sec", Json::num(summary.scenarios_per_sec())),
-            ("scenarios_total", Json::num(summary.total as f64)),
-            ("threads", Json::num(threads.max(1) as f64)),
-            ("wall_secs", Json::num(summary.wall_secs)),
-        ]);
-        std::fs::write(bench_out, format!("{j}\n"))
-            .map_err(|e| anyhow::anyhow!("writing {bench_out}: {e}"))?;
+        merge_bench_json(
+            bench_out,
+            vec![
+                ("grid".to_string(), Json::str(grid.name.clone())),
+                ("scenarios_evaluated".to_string(), Json::num(summary.evaluated as f64)),
+                ("scenarios_per_sec".to_string(), Json::num(summary.scenarios_per_sec())),
+                ("scenarios_total".to_string(), Json::num(summary.total as f64)),
+                ("threads".to_string(), Json::num(threads.max(1) as f64)),
+                ("wall_secs".to_string(), Json::num(summary.wall_secs)),
+            ],
+        )?;
         println!("  bench record     → {bench_out}");
     }
     anyhow::ensure!(

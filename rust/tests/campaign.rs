@@ -5,8 +5,9 @@
 use std::fs;
 use std::path::PathBuf;
 
+use genmodel::api::AlgoSpec;
 use genmodel::campaign::{
-    load_rows, run_campaign, Metric, RunConfig, ScenarioGrid, SelectionTable,
+    load_rows, run_campaign, table_from_choices, Metric, RunConfig, ScenarioGrid, SelectionTable,
 };
 use genmodel::coordinator::{AllReduceService, PlanRouter, ServiceConfig};
 use genmodel::model::params::Environment;
@@ -28,6 +29,7 @@ fn test_grid() -> ScenarioGrid {
         sizes: vec![1e3, 1e7],
         algos: Vec::new(),
         env: genmodel::campaign::EnvKind::Paper,
+        exec_spot_cap: 0.0,
     }
 }
 
@@ -98,6 +100,7 @@ fn campaign_to_selection_to_service_end_to_end() {
         sizes: vec![1e3, 1e7],
         algos: Vec::new(),
         env: genmodel::campaign::EnvKind::Paper,
+        exec_spot_cap: 0.0,
     };
     run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
     let table = SelectionTable::from_rows(&load_rows(&out).unwrap(), Metric::Model);
@@ -128,6 +131,72 @@ fn campaign_to_selection_to_service_end_to_end() {
 }
 
 #[test]
+fn gpu_smoke_grid_expands_dedupes_and_selects_deterministically() {
+    let grid = ScenarioGrid::gpu_smoke();
+    let keys: Vec<String> = grid.expand().unwrap().iter().map(|s| s.key()).collect();
+    let again: Vec<String> = grid.expand().unwrap().iter().map(|s| s.key()).collect();
+    assert_eq!(keys, again, "expansion order is deterministic");
+    let unique: std::collections::BTreeSet<&String> = keys.iter().collect();
+    assert_eq!(unique.len(), keys.len(), "expansion is deduplicated");
+
+    let out = tmp("gpu_smoke");
+    let _ = fs::remove_file(&out);
+    let summary = run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
+    assert_eq!(summary.failed, 0, "gpu-smoke must sweep cleanly");
+    let rows = load_rows(&out).unwrap();
+    assert_eq!(rows.len(), keys.len());
+    // Exactly the spot-check scenarios carry an executed-backend wall
+    // time (the real data plane verified them against the oracle).
+    assert!(rows.iter().any(|r| r.exec_s.is_some()), "no exec spot-check rows ran");
+    for r in &rows {
+        assert_eq!(r.exec_s.is_some(), r.key.ends_with("|exec"), "{}", r.key);
+    }
+    // Selection is deterministic whatever the row order — exec wall
+    // times (machine-dependent) never influence the winners.
+    let t1 = SelectionTable::from_rows(&rows, Metric::Model);
+    let mut reversed = rows.clone();
+    reversed.reverse();
+    let t2 = SelectionTable::from_rows(&reversed, Metric::Model);
+    assert_eq!(t1.to_json().to_string(), t2.to_json().to_string());
+    assert!(!t1.is_empty());
+    let _ = fs::remove_file(&out);
+}
+
+/// The table the coordinator e2e tests serve with, checked byte-for-byte
+/// against `rust/tests/fixtures/selection_two_cell.json` so the
+/// `SelectionTable` on-disk schema cannot drift silently.
+#[test]
+fn selection_table_golden_file_roundtrip() {
+    let table = table_from_choices(
+        Metric::Model,
+        &[
+            ("single:8", 10, "ring", 1.0, 3.0),
+            ("single:8", 17, "rhd", 1.0, 2.0),
+        ],
+    );
+    let golden = include_str!("fixtures/selection_two_cell.json");
+    let path = tmp("golden").with_extension("json");
+    table.save(&path).unwrap();
+    let written = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        written, golden,
+        "SelectionTable serialization drifted from the checked-in fixture \
+         rust/tests/fixtures/selection_two_cell.json — if the schema change \
+         is intentional, update the fixture in the same commit"
+    );
+    // Reloading the fixture reproduces the table, its boundaries, and
+    // routing rules that still parse against the registry.
+    let loaded = SelectionTable::load(&path).unwrap();
+    assert_eq!(loaded, table);
+    assert_eq!(loaded.boundaries_for("single:8"), table.boundaries_for("single:8"));
+    let rules = loaded.rules_for("single:8").unwrap();
+    assert_eq!(rules.len(), 2);
+    assert_eq!(rules[&10], AlgoSpec::Ring);
+    assert_eq!(rules[&17], AlgoSpec::Rhd);
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
 fn selection_roundtrips_through_disk_and_feeds_the_router() {
     let out = tmp("disk");
     let table_path = out.with_extension("selection.json");
@@ -138,6 +207,7 @@ fn selection_roundtrips_through_disk_and_feeds_the_router() {
         sizes: vec![1e4],
         algos: vec!["cps".into(), "ring".into(), "gentree".into()],
         env: genmodel::campaign::EnvKind::Paper,
+        exec_spot_cap: 0.0,
     };
     run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
     let table = SelectionTable::from_rows(&load_rows(&out).unwrap(), Metric::Sim);

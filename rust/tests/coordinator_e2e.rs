@@ -1,9 +1,15 @@
-//! Coordinator end-to-end: the service over the real PJRT data plane.
+//! Coordinator end-to-end: the service over the real PJRT data plane,
+//! including the campaign selection table driving BOTH the router (which
+//! algorithm serves each batch) and the batcher (where a fuse must stop
+//! so the routed algorithm still wins).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use genmodel::coordinator::{batcher::BatchPolicy, AllReduceService, ServiceConfig};
+use genmodel::campaign::{table_from_choices, Metric, SelectionTable};
+use genmodel::coordinator::{
+    AllReduceService, BatchPolicy, BatchRule, PlanRouter, ServiceConfig,
+};
 use genmodel::exec;
 use genmodel::model::params::Environment;
 use genmodel::runtime::ReducerSpec;
@@ -12,9 +18,7 @@ use genmodel::util::rng::Rng;
 
 fn cfg(bucket: usize) -> ServiceConfig {
     ServiceConfig {
-        policy: BatchPolicy {
-            bucket_floats: bucket,
-        },
+        policy: BatchPolicy::with_cap(bucket),
         flush_after: Duration::from_millis(1),
         ..ServiceConfig::default()
     }
@@ -95,6 +99,107 @@ fn hierarchical_topology_service() {
     let res = svc.allreduce(ts).unwrap();
     check(&res.reduced, &want);
     assert!(res.plan_name.contains("GenTree"));
+}
+
+// ---- selection-aware batching, end to end ------------------------------
+
+/// Two-cell table for an 8-server rack: `ring` wins the small buckets,
+/// `rhd` wins from bucket 17 (> 65536 floats) up. `margin` is the small
+/// (departed) cell's winner/runner-up ratio — the number the batcher
+/// weighs against `min_split_margin` at the boundary. The same table is
+/// pinned byte-for-byte by the golden-file test in `campaign.rs`.
+fn two_cell_table(margin: f64) -> SelectionTable {
+    table_from_choices(
+        Metric::Model,
+        &[
+            ("single:8", 10, "ring", 1.0, margin),
+            ("single:8", 17, "rhd", 1.0, 2.0),
+        ],
+    )
+}
+
+/// Service wired to `two_cell_table(margin)` with a flush window wide
+/// enough (1 s against a burst submitted in microseconds) that one burst
+/// of sequential submissions lands in a single batch-planning cycle even
+/// on a heavily loaded CI machine.
+fn selection_service(margin: f64) -> AllReduceService {
+    let cfg = ServiceConfig {
+        policy: BatchPolicy::with_cap(1 << 22),
+        flush_after: Duration::from_secs(1),
+        ..ServiceConfig::default()
+    }
+    .with_selection_table(&two_cell_table(margin), "single:8", 1.25)
+    .unwrap();
+    AllReduceService::start(single_switch(8), Environment::paper(), ReducerSpec::Scalar, cfg)
+}
+
+/// A burst straddling the bucket-17 boundary: two 1000-float jobs (which
+/// fuse to 2000) and one 100_000-float job. Returns the three results in
+/// submission order.
+fn straddling_burst(svc: &AllReduceService) -> Vec<genmodel::coordinator::JobResult> {
+    let mut pending = Vec::new();
+    let mut wants = Vec::new();
+    for (len, seed) in [(1000usize, 1u64), (1000, 2), (100_000, 3)] {
+        let ts = tensors(8, len, seed);
+        wants.push(ts.clone());
+        pending.push(svc.submit(ts).unwrap());
+    }
+    let results: Vec<_> = pending
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    for (res, want) in results.iter().zip(&wants) {
+        check(&res.reduced, want);
+    }
+    results
+}
+
+#[test]
+fn decisive_margin_splits_the_fuse_and_every_job_routes_its_winner() {
+    // A 3.0x margin at the boundary clears min_split_margin = 1.25: the
+    // batcher must stop the fuse at 2000 floats instead of dragging the
+    // small jobs into the rhd bucket.
+    let table = two_cell_table(3.0);
+    let svc = selection_service(3.0);
+    let results = straddling_burst(&svc);
+    // Each JobResult.algo is exactly the table's winner for the batch
+    // the job actually rode in — small pair on ring, large job on rhd.
+    assert_eq!(results[0].algo, table.lookup("single:8", 2000).unwrap().algo);
+    assert_eq!(results[0].algo, "ring");
+    assert_eq!(results[1].algo, "ring");
+    assert_eq!(results[2].algo, table.lookup("single:8", 100_000).unwrap().algo);
+    assert_eq!(results[2].algo, "rhd");
+    // The split is visible in the reported rule: the small pair's batch
+    // closed at the boundary, inside its claimed bucket, at the table's
+    // margin.
+    assert_eq!(results[0].batch_jobs, 2, "burst did not fuse in one cycle");
+    match results[0].rule {
+        BatchRule::SplitAtBucket { bucket, margin } => {
+            assert_eq!(bucket, PlanRouter::bucket(2000));
+            assert!((margin - 3.0).abs() < 1e-9, "margin {margin}");
+        }
+        other => panic!("expected SplitAtBucket, got {other:?}"),
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.batches_split_at_bucket, 1);
+    assert_eq!(m.jobs_completed, 3);
+}
+
+#[test]
+fn weak_margin_fuses_through_like_the_cap_only_policy() {
+    // The same burst under a 1.05x boundary: not worth breaking the
+    // fuse, so all three jobs ride one batch — which crosses into the
+    // rhd bucket, exactly what the cap-only policy would have done.
+    let svc = selection_service(1.05);
+    let results = straddling_burst(&svc);
+    for res in &results {
+        assert_eq!(res.batch_jobs, 3, "burst did not fuse in one cycle");
+        assert_eq!(res.algo, "rhd", "fused batch must route the big bucket's winner");
+        assert_eq!(res.rule, BatchRule::Drained);
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.batches_split_at_bucket, 0, "no boundary was decisive");
+    assert_eq!(m.batches_flushed, 1);
 }
 
 #[test]

@@ -1,0 +1,174 @@
+//! Property tests for the selection-aware batcher: random FIFO queues
+//! and random policies (with and without selection split points) must
+//! never lose, duplicate, or reorder a job; must respect the size cap
+//! except for lone oversized jobs; and every split decision must land
+//! the emitted batch inside the bucket it claims, at a margin that
+//! clears the policy threshold.
+
+use genmodel::coordinator::{
+    plan_batches, BatchPolicy, BatchRule, PendingJob, PlanRouter, PlannedBatch, SplitPoints,
+};
+use genmodel::util::rng::Rng;
+
+fn random_queue(rng: &mut Rng, max_len: usize) -> Vec<PendingJob> {
+    let len = rng.gen_range(0, max_len);
+    (0..len)
+        .map(|i| PendingJob {
+            id: i as u64,
+            // Spans several router buckets on either side of typical caps.
+            floats: rng.gen_range(1, 300_000),
+        })
+        .collect()
+}
+
+/// A random policy; `margin_range` bounds the split-point margins, so
+/// callers can force all-weak or all-strong boundaries.
+fn random_policy(rng: &mut Rng, with_table: bool, margin_range: (f64, f64)) -> BatchPolicy {
+    let mut policy = BatchPolicy::with_cap(rng.gen_range(1_000, 2_000_000));
+    policy.min_split_margin = 1.25;
+    if with_table {
+        let (lo, hi) = margin_range;
+        let points: Vec<(u32, f64)> = (0..rng.gen_range(1, 4))
+            .map(|_| {
+                (
+                    rng.gen_range(11, 20) as u32,
+                    lo + rng.next_f64() * (hi - lo),
+                )
+            })
+            .collect();
+        policy.selection = Some(SplitPoints::new(points));
+    }
+    policy
+}
+
+fn flatten(batches: &[PlannedBatch]) -> Vec<PendingJob> {
+    batches.iter().flat_map(|b| b.jobs.iter().copied()).collect()
+}
+
+#[test]
+fn no_job_lost_duplicated_or_reordered() {
+    let mut rng = Rng::new(0xBA7C4E5);
+    for case in 0..400 {
+        let queue = random_queue(&mut rng, 40);
+        let policy = random_policy(&mut rng, case % 2 == 0, (1.0, 4.0));
+        let batches = plan_batches(&queue, &policy);
+        assert_eq!(flatten(&batches), queue, "case {case}: {policy:?}");
+        assert!(
+            batches.iter().all(|b| !b.jobs.is_empty()),
+            "case {case}: empty batch emitted"
+        );
+    }
+}
+
+#[test]
+fn cap_respected_unless_single_oversized() {
+    let mut rng = Rng::new(0xCA9F00D);
+    for case in 0..400 {
+        let queue = random_queue(&mut rng, 40);
+        let policy = random_policy(&mut rng, case % 2 == 0, (1.0, 4.0));
+        for b in plan_batches(&queue, &policy) {
+            if b.fused_floats() > policy.bucket_floats {
+                assert_eq!(b.jobs.len(), 1, "case {case}: multi-job batch over cap");
+                assert_eq!(b.rule, BatchRule::Oversized, "case {case}");
+            } else {
+                assert_ne!(b.rule, BatchRule::Oversized, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn split_decisions_land_inside_the_claimed_bucket() {
+    let mut rng = Rng::new(0x59117B0);
+    let mut splits_seen = 0usize;
+    // One crafted must-split case (3000+3000 stopped before 20_000 drags
+    // the fuse across a decisive bucket-14 boundary) guarantees the
+    // sweep exercises the rule even if the random draw is unlucky.
+    let crafted_queue: Vec<PendingJob> = [3000usize, 3000, 20_000]
+        .iter()
+        .enumerate()
+        .map(|(i, &floats)| PendingJob { id: i as u64, floats })
+        .collect();
+    let mut crafted_policy = BatchPolicy::with_cap(1 << 22);
+    crafted_policy.selection = Some(SplitPoints::new(vec![(14, 3.0)]));
+    for case in 0..=400 {
+        let (queue, policy) = if case == 400 {
+            (crafted_queue.clone(), crafted_policy.clone())
+        } else {
+            let queue = random_queue(&mut rng, 40);
+            let policy = random_policy(&mut rng, true, (1.0, 4.0));
+            (queue, policy)
+        };
+        for b in plan_batches(&queue, &policy) {
+            if let BatchRule::SplitAtBucket { bucket, margin } = b.rule {
+                splits_seen += 1;
+                assert_eq!(
+                    PlanRouter::bucket(b.fused_floats()),
+                    bucket,
+                    "case {case}: batch of {} floats claims bucket {bucket}",
+                    b.fused_floats()
+                );
+                assert!(
+                    margin >= policy.min_split_margin,
+                    "case {case}: split at margin {margin} < {}",
+                    policy.min_split_margin
+                );
+            }
+        }
+    }
+    assert!(splits_seen > 0, "the sweep never exercised a split");
+}
+
+#[test]
+fn drained_closes_only_the_final_batch() {
+    let mut rng = Rng::new(0xD8A1AED);
+    for case in 0..400 {
+        let queue = random_queue(&mut rng, 40);
+        let policy = random_policy(&mut rng, case % 2 == 0, (1.0, 4.0));
+        let batches = plan_batches(&queue, &policy);
+        for (i, b) in batches.iter().enumerate() {
+            if i + 1 < batches.len() {
+                assert_ne!(b.rule, BatchRule::Drained, "case {case}: batch {i}");
+            } else {
+                assert!(
+                    matches!(b.rule, BatchRule::Drained | BatchRule::Oversized),
+                    "case {case}: final batch closed by {:?}",
+                    b.rule
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn below_threshold_margins_reproduce_the_cap_only_partition() {
+    // The acceptance regression: when every boundary margin is below
+    // min_split_margin, the selection-aware batcher is byte-identical to
+    // the historical cap-only policy — batches, rules, everything.
+    let mut rng = Rng::new(0x0E64E55);
+    for case in 0..300 {
+        let queue = random_queue(&mut rng, 40);
+        let weak = random_policy(&mut rng, true, (1.0, 1.2499));
+        let cap_only = BatchPolicy::with_cap(weak.bucket_floats);
+        assert_eq!(
+            plan_batches(&queue, &weak),
+            plan_batches(&queue, &cap_only),
+            "case {case}: weak boundaries changed the partition"
+        );
+    }
+}
+
+#[test]
+fn empty_split_points_behave_like_no_table() {
+    let mut rng = Rng::new(0xE66);
+    for _ in 0..100 {
+        let queue = random_queue(&mut rng, 30);
+        let cap = rng.gen_range(1_000, 2_000_000);
+        let mut with_empty = BatchPolicy::with_cap(cap);
+        with_empty.selection = Some(SplitPoints::new(Vec::new()));
+        assert_eq!(
+            plan_batches(&queue, &with_empty),
+            plan_batches(&queue, &BatchPolicy::with_cap(cap))
+        );
+    }
+}

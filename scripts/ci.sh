@@ -36,7 +36,11 @@ step cargo clippy --workspace --all-targets -- \
     -A clippy::needless_range_loop \
     -A clippy::too_many_arguments
 
-# 3. Tier-1: release build + tests (ROADMAP.md's verify line).
+# 3. Tier-1: release build + tests (ROADMAP.md's verify line). The test
+#    pass includes the coordinator-path pins: rust/tests/prop_batcher.rs
+#    (batcher invariants), the selection-aware e2e in coordinator_e2e.rs,
+#    and the campaign golden-file test that fails on any SelectionTable
+#    schema drift against rust/tests/fixtures/.
 step cargo build --release
 step cargo test -q
 
@@ -54,5 +58,13 @@ step cargo run --release -p genmodel --quiet -- campaign run --grid smoke --thre
 step cargo run --release -p genmodel --quiet -- campaign select --in target/campaign_smoke.jsonl \
     --out target/selection_smoke.json --by model
 step cargo run --release -p genmodel --quiet -- campaign report --in target/campaign_smoke.jsonl
+
+# 6. Serve smoke through the freshly derived selection table: the
+#    selection-aware batcher's split/fuse counts merge into
+#    BENCH_campaign.json (serve_batches_* keys) next to the sweep
+#    throughput, so one JSON carries the whole smoke story.
+step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 32 --tensor 2048 \
+    --scalar --selection target/selection_smoke.json --class single:4 \
+    --bench-out BENCH_campaign.json
 
 exit $fail
