@@ -101,6 +101,23 @@ impl Engine {
         spec.build(&self.topo, &self.env, s)
     }
 
+    /// Analytic (GenModel) seconds of `spec` at the representative
+    /// payload of a router size bucket — `2^bucket` floats, the size
+    /// `coordinator::PlanRouter::bucket_size` generates plans for. This
+    /// is the predicted per-round service time the telemetry scorer
+    /// joins observed batch latency against, and the fallback prediction
+    /// for cells no campaign artifact swept.
+    pub fn predict_bucket(&self, spec: &AlgoSpec, bucket: u32) -> Result<f64, ApiError> {
+        if bucket >= 63 {
+            return Err(ApiError::BadRequest {
+                reason: format!("size bucket 2^{bucket} is out of range (max 2^62)"),
+            });
+        }
+        Ok(self
+            .evaluate(spec, (1u64 << bucket) as f64, Backend::Analytic)?
+            .seconds)
+    }
+
     /// Evaluate `spec` at payload `s` floats on one backend.
     pub fn evaluate(
         &self,
@@ -299,6 +316,23 @@ mod tests {
         assert!(matches!(
             engine(4).parse_algo("nope"),
             Err(ApiError::UnknownAlgo { .. })
+        ));
+    }
+
+    #[test]
+    fn predict_bucket_prices_the_representative_size() {
+        let e = engine(8);
+        let algo = e.parse_algo("cps").unwrap();
+        let via_bucket = e.predict_bucket(&algo, 20).unwrap();
+        let direct = e
+            .evaluate(&algo, (1u64 << 20) as f64, Backend::Analytic)
+            .unwrap()
+            .seconds;
+        assert_eq!(via_bucket, direct);
+        assert!(via_bucket > 0.0);
+        assert!(matches!(
+            e.predict_bucket(&algo, 63),
+            Err(ApiError::BadRequest { .. })
         ));
     }
 

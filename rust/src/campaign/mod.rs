@@ -22,12 +22,17 @@
 //!   any worker count.
 //! * [`select`] — the [`SelectionTable`] reducer: winner per (topology
 //!   class, payload-size bucket), serialized as JSON, convertible into
-//!   the bucket→algorithm rules `coordinator::PlanRouter` routes by.
+//!   the bucket→algorithm rules `coordinator::PlanRouter` routes by —
+//!   plus [`select::table_from_model`], the analytic rebuild the
+//!   telemetry calibrator uses to re-derive winners under freshly
+//!   fitted parameters without re-sweeping.
 //! * [`report`] — the Fig. 11-style winners table with GenTree-vs-best-
-//!   baseline ratios.
+//!   baseline ratios, and the Fig. 8-style served-accuracy table
+//!   ([`report::accuracy_table`]) over scored telemetry cells.
 //!
 //! CLI: `repro campaign run|select|report` (see `repro` usage); the
-//! serving side consumes tables via `repro serve --selection <file>`.
+//! serving side consumes tables via `repro serve --selection <file>` and
+//! closes the loop with `repro score` / `repro calibrate`.
 
 pub mod grid;
 pub mod report;
@@ -36,4 +41,7 @@ pub mod select;
 
 pub use grid::{EnvKind, Scenario, ScenarioGrid};
 pub use runner::{evaluate_scenario, load_rows, run_campaign, CampaignRow, RunConfig, RunSummary};
-pub use select::{table_from_choices, table_from_entries, Boundary, Choice, Metric, SelectionTable};
+pub use select::{
+    table_from_choices, table_from_entries, table_from_model, Boundary, Choice, Metric,
+    SelectionTable,
+};

@@ -1,9 +1,11 @@
 //! Table-driven campaign reports: the Fig. 11-style per-(topology, size)
-//! winner view, with the GenTree-vs-best-baseline ratio the paper's §5.4
-//! headline (1.2–7.4×) is quoted from.
+//! winner view with the GenTree-vs-best-baseline ratio the paper's §5.4
+//! headline (1.2–7.4×) is quoted from, and the Fig. 8-style **accuracy
+//! table** scoring served telemetry against model predictions.
 
 use std::collections::BTreeMap;
 
+use crate::telemetry::ScoredCell;
 use crate::util::table::{secs, speedup, Table};
 
 use super::runner::CampaignRow;
@@ -62,6 +64,37 @@ pub fn winners_table(rows: &[CampaignRow]) -> Table {
     t
 }
 
+/// Render the Fig. 8-style accuracy view of scored telemetry cells:
+/// observed mean/p95 service seconds vs the model's predicted seconds
+/// and the signed relative error per (class, bucket, algorithm) cell.
+/// Callers pass cells in the order `telemetry::score_cells` returns them
+/// — worst offenders first — so drift reads top-down; unmatched cells
+/// render `-` columns rather than disappearing.
+pub fn accuracy_table(cells: &[ScoredCell]) -> Table {
+    let mut t = Table::new(
+        "Served accuracy per (class, bucket, algo) — Fig. 8 view, worst first",
+        &[
+            "class", "bucket", "algo", "batches", "obs mean", "obs p95", "predicted",
+            "rel err",
+        ],
+    );
+    for c in cells {
+        t.row(vec![
+            c.key.class.clone(),
+            format!("2^{}", c.key.bucket),
+            c.key.algo.clone(),
+            c.batches.to_string(),
+            secs(c.observed_mean_s),
+            secs(c.observed_p95_s),
+            c.predicted_s.map(secs).unwrap_or_else(|| "-".into()),
+            c.rel_err()
+                .map(|e| format!("{:+.1}%", e * 100.0))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
 /// The (algorithm, seconds) minimum of one cell under the picked metric;
 /// ties break lexicographically so the report is order-independent.
 fn best_by(
@@ -112,5 +145,29 @@ mod tests {
     fn empty_rows_render_empty_table() {
         let rendered = winners_table(&[]).render();
         assert!(rendered.contains("Campaign winners"));
+    }
+
+    #[test]
+    fn accuracy_table_shows_errors_and_tolerates_unmatched_cells() {
+        use crate::telemetry::{CellKey, ScoredCell};
+        let cell = |algo: &str, predicted: Option<f64>| ScoredCell {
+            key: CellKey {
+                class: "single:8".into(),
+                bucket: 20,
+                algo: algo.into(),
+            },
+            n_workers: 8,
+            batches: 3,
+            mean_floats: 1e6,
+            observed_mean_s: 0.030,
+            observed_p95_s: 0.040,
+            predicted_s: predicted,
+        };
+        let rendered =
+            accuracy_table(&[cell("cps", Some(0.020)), cell("ring", None)]).render();
+        assert!(rendered.contains("+50.0%"), "{rendered}");
+        assert!(rendered.contains("2^20"), "{rendered}");
+        assert!(rendered.contains("ring"), "{rendered}");
+        assert!(rendered.contains('-'), "unmatched cells keep their row");
     }
 }

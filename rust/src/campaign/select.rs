@@ -218,6 +218,24 @@ impl SelectionTable {
         self.cells_for(class).is_some_and(|cells| !cells.is_empty())
     }
 
+    /// The winner's predicted seconds per bucket of `class` — what the
+    /// batcher's **time-aware flushing** consumes
+    /// ([`crate::coordinator::BatchPolicy::flush_window`]): a flush may
+    /// not wait longer than the round it would save. Degenerate stored
+    /// seconds (≤ 0, e.g. hand-authored test tables) are omitted so they
+    /// can never shrink a flush window to zero. Empty for unknown
+    /// classes.
+    pub fn bucket_seconds_for(&self, class: &str) -> BTreeMap<u32, f64> {
+        let Some(cells) = self.cells_for(class) else {
+            return BTreeMap::new();
+        };
+        cells
+            .iter()
+            .filter(|(_, c)| c.seconds.is_finite() && c.seconds > 0.0)
+            .map(|(&b, c)| (b, c.seconds))
+            .collect()
+    }
+
     /// The bucket → parsed-algorithm routing rules for one class — what
     /// [`crate::coordinator::ServiceConfig::selection`] consumes. Errors
     /// if a stored algorithm string no longer parses against the
@@ -335,6 +353,85 @@ pub fn table_from_entries(
         .map(|&(class, bucket, algo)| (class, bucket, algo, 0.0, f64::INFINITY))
         .collect();
     table_from_choices(metric, &full)
+}
+
+/// Rebuild a selection table **analytically** over an explicit (class →
+/// buckets) grid under `env` — the calibration path's table source
+/// (`telemetry::recalibrated_table`): after the telemetry fit produces a
+/// new parameter environment, every grid cell is re-priced through the
+/// analytic backend at its bucket's representative size
+/// ([`PlanRouter::bucket_size`]) and the winners re-reduced through the
+/// same [`SelectionTable::from_rows`] reduction a swept campaign uses —
+/// so margins, tie-breaks, and serialization cannot diverge between
+/// swept and refitted tables.
+///
+/// `algos` lists the candidate algorithms; empty means every applicable
+/// registry default per topology. Candidates inapplicable to a class's
+/// topology are skipped (the Table 7 rule) — but a **class** where no
+/// candidate prices at all is an error naming that class (surfacing the
+/// last evaluation error when there was one), never a table silently
+/// missing the class: a service configured for it would otherwise fall
+/// back to default routing with no sign the calibration skipped it.
+pub fn table_from_model(
+    grid: &BTreeMap<String, std::collections::BTreeSet<u32>>,
+    algos: &[crate::api::AlgoSpec],
+    env: &crate::model::params::Environment,
+) -> Result<SelectionTable, ApiError> {
+    use crate::api::{applicable_specs, Backend, Engine};
+    let mut rows: Vec<CampaignRow> = Vec::new();
+    for (class, buckets) in grid {
+        let mut last_err: Option<ApiError> = None;
+        let topo = crate::bench::workloads::parse_topology(class)?;
+        let candidates: Vec<crate::api::AlgoSpec> = if algos.is_empty() {
+            applicable_specs(&topo)
+        } else {
+            algos
+                .iter()
+                .filter(|a| a.applicable(&topo).is_ok())
+                .cloned()
+                .collect()
+        };
+        let engine = Engine::new(topo, env.clone());
+        let rows_before = rows.len();
+        for &bucket in buckets {
+            let size = PlanRouter::bucket_size(bucket);
+            for algo in &candidates {
+                let key = format!("{class}|{algo}|{size:e}|calibrated");
+                match engine.evaluate(algo, size, Backend::Analytic) {
+                    Ok(ev) => rows.push(CampaignRow {
+                        hash: format!("{:016x}", crate::util::rng::fnv1a(key.as_bytes())),
+                        key,
+                        topo: class.clone(),
+                        topo_name: engine.topo().name.clone(),
+                        n_servers: engine.topo().n_servers(),
+                        algo: algo.to_string(),
+                        size,
+                        env: "calibrated".into(),
+                        model_s: Some(ev.seconds),
+                        sim_s: None,
+                        exec_s: None,
+                        error: None,
+                    }),
+                    Err(e) => last_err = Some(e),
+                }
+            }
+        }
+        if rows.len() == rows_before {
+            return Err(last_err.unwrap_or_else(|| ApiError::BadRequest {
+                reason: format!(
+                    "table rebuild: no candidate algorithm applies to class {class:?} \
+                     — the rebuilt table would silently miss it"
+                ),
+            }));
+        }
+    }
+    let table = SelectionTable::from_rows(&rows, Metric::Model);
+    if table.is_empty() {
+        return Err(ApiError::BadRequest {
+            reason: "table rebuild: the grid lists no (class, bucket) cells".into(),
+        });
+    }
+    Ok(table)
 }
 
 /// Build a table from full `(class, bucket, algo, seconds, runner_up)`
@@ -522,6 +619,87 @@ mod tests {
         );
         let back = SelectionTable::from_json(&t.to_json()).unwrap();
         assert_eq!(back.boundaries_for("x"), t.boundaries_for("x"));
+    }
+
+    #[test]
+    fn bucket_seconds_expose_winner_round_times() {
+        let t = table_from_choices(
+            Metric::Model,
+            &[("ss24", 10, "cps", 0.002, 0.6), ("ss24", 17, "ring", 0.5, 1.1)],
+        );
+        let secs = t.bucket_seconds_for("ss24");
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[&10], 0.002);
+        assert_eq!(secs[&17], 0.5);
+        assert_eq!(t.bucket_seconds_for("SS24").len(), 2, "case-insensitive");
+        assert!(t.bucket_seconds_for("absent").is_empty());
+        // Degenerate stored seconds (hand-authored zero-cost cells) are
+        // omitted, so they can never zero a flush window.
+        let zero = table_from_entries(Metric::Model, &[("x", 10, "cps")]);
+        assert!(zero.bucket_seconds_for("x").is_empty());
+    }
+
+    #[test]
+    fn table_from_model_reprices_the_grid_under_an_environment() {
+        use crate::model::params::{Environment, ModelParams};
+        use std::collections::BTreeSet;
+        let grid: BTreeMap<String, BTreeSet<u32>> =
+            BTreeMap::from([("single:15".to_string(), BTreeSet::from([20u32, 25]))]);
+        let algos = [
+            crate::api::AlgoSpec::Cps,
+            crate::api::AlgoSpec::Hcps { factors: vec![5, 3] },
+        ];
+        // Blind (δ = ε = 0) parameters: CPS strictly dominates HCPS
+        // (fewer rounds, equal bandwidth) — the classic model's verdict.
+        let blind = ModelParams {
+            delta: 0.0,
+            epsilon: 0.0,
+            ..ModelParams::cpu_testbed()
+        };
+        let stale = table_from_model(&grid, &algos, &Environment::uniform(blind)).unwrap();
+        assert_eq!(stale.len(), 2);
+        assert_eq!(stale.lookup("single:15", 1 << 25).unwrap().algo, "cps");
+        // Full GenModel parameters at n = 15 > w_t: incast flips the big
+        // bucket to the hierarchical plan (the paper's §3 point).
+        let full =
+            table_from_model(&grid, &algos, &Environment::uniform(ModelParams::cpu_testbed()))
+                .unwrap();
+        assert_eq!(full.lookup("single:15", 1 << 25).unwrap().algo, "hcps:5x3");
+        // Margins came through the canonical reduction.
+        assert!(full.lookup("single:15", 1 << 25).unwrap().margin() > 1.0);
+    }
+
+    #[test]
+    fn table_from_model_empty_result_is_a_typed_error() {
+        use crate::model::params::Environment;
+        use std::collections::BTreeSet;
+        // RHD on a 6-server class: the only candidate never applies.
+        let grid: BTreeMap<String, BTreeSet<u32>> =
+            BTreeMap::from([("single:6".to_string(), BTreeSet::from([20u32]))]);
+        assert!(matches!(
+            table_from_model(&grid, &[crate::api::AlgoSpec::Rhd], &Environment::paper()),
+            Err(ApiError::BadRequest { .. })
+        ));
+        // A bad class spec surfaces as the topology error.
+        let grid: BTreeMap<String, BTreeSet<u32>> =
+            BTreeMap::from([("sym:16".to_string(), BTreeSet::from([20u32]))]);
+        assert!(matches!(
+            table_from_model(&grid, &[], &Environment::paper()),
+            Err(ApiError::BadTopology { .. })
+        ));
+        // A class no candidate applies to must error even when OTHER
+        // classes price fine — a table silently missing a class would
+        // leave its service falling back to default routing unnoticed.
+        let grid: BTreeMap<String, BTreeSet<u32>> = BTreeMap::from([
+            ("single:6".to_string(), BTreeSet::from([20u32])), // rhd: no
+            ("single:8".to_string(), BTreeSet::from([20u32])), // rhd: ok
+        ]);
+        match table_from_model(&grid, &[crate::api::AlgoSpec::Rhd], &Environment::paper()) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("single:6"), "{reason}");
+            }
+            other => panic!("expected BadRequest naming the class, got {other:?}"),
+        }
     }
 
     #[test]

@@ -27,12 +27,14 @@
 //! every boundary below the margin threshold) the emitted partition is
 //! identical to the original cap-only policy.
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::ops::RangeInclusive;
+use std::time::Duration;
 
 use crate::campaign::SelectionTable;
 
-use super::router::PlanRouter;
+use super::router::{nearest_bucket, PlanRouter};
 
 /// Default [`BatchPolicy::min_split_margin`]: a boundary's winner must
 /// beat its runner-up by ≥ 25% before the batcher breaks a fuse for it.
@@ -197,6 +199,12 @@ impl SplitPoints {
     }
 }
 
+/// Predicted winner seconds per router size bucket, distilled from a
+/// selection table ([`SelectionTable::bucket_seconds_for`]) — what
+/// time-aware flushing consults: holding a fuse open saves at most one
+/// round, so waiting longer than the predicted round time is a net loss.
+pub type BucketSeconds = BTreeMap<u32, f64>;
+
 /// Batching configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchPolicy {
@@ -210,6 +218,9 @@ pub struct BatchPolicy {
     /// empty set): cap-only fusing, byte-identical to the pre-selection
     /// policy.
     pub selection: Option<SplitPoints>,
+    /// Predicted per-bucket round seconds from a selection table. `None`:
+    /// the fixed flush window applies unchanged ([`Self::flush_window`]).
+    pub bucket_seconds: Option<BucketSeconds>,
 }
 
 impl Default for BatchPolicy {
@@ -219,6 +230,7 @@ impl Default for BatchPolicy {
             bucket_floats: 25 * (1 << 20) / 4,
             min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
             selection: None,
+            bucket_seconds: None,
         }
     }
 }
@@ -233,10 +245,35 @@ impl BatchPolicy {
     }
 
     /// Consult `table`'s winner-change boundaries for `class` when
-    /// deciding where a fuse must stop.
+    /// deciding where a fuse must stop, and its per-bucket predicted
+    /// seconds when deciding how long a flush may wait.
     pub fn with_table(mut self, table: &SelectionTable, class: &str) -> BatchPolicy {
         self.selection = Some(SplitPoints::from_table(table, class));
+        self.bucket_seconds = Some(table.bucket_seconds_for(class));
         self
+    }
+
+    /// **Time-aware flushing**: the window the leader may hold an open
+    /// queue of `queued_floats`, given the configured fixed window
+    /// `default`. Holding a fuse saves at most one AllReduce round, so
+    /// the wait is capped at the selection table's predicted round time
+    /// for the queue's current size bucket (nearest bucket, same clamp
+    /// as routing); waiting longer than the round it saves is a strict
+    /// loss. Without bucket seconds (or with a degenerate prediction)
+    /// the fixed window is returned unchanged — byte-identical to the
+    /// pre-telemetry policy.
+    pub fn flush_window(&self, queued_floats: usize, default: Duration) -> Duration {
+        let Some(&secs) = self
+            .bucket_seconds
+            .as_ref()
+            .and_then(|m| nearest_bucket(m, PlanRouter::bucket(queued_floats)))
+        else {
+            return default;
+        };
+        if !(secs.is_finite() && secs > 0.0) {
+            return default;
+        }
+        default.min(Duration::from_secs_f64(secs))
     }
 }
 
@@ -531,6 +568,81 @@ mod tests {
         let pts = SplitPoints::new(vec![(14, 1.1), (14, 2.0)]);
         assert_eq!(pts.len(), 1);
         assert_eq!(pts.first_crossed(10..=14), Some((14, 2.0)));
+    }
+
+    // ---- time-aware flushing ------------------------------------------
+
+    #[test]
+    fn flush_window_falls_back_to_the_fixed_window() {
+        // No bucket seconds: the fixed window comes back untouched —
+        // byte-identical to the pre-telemetry policy.
+        let fixed = Duration::from_millis(2);
+        let policy = BatchPolicy::with_cap(1000);
+        assert_eq!(policy.flush_window(0, fixed), fixed);
+        assert_eq!(policy.flush_window(1 << 20, fixed), fixed);
+        // Degenerate predictions (zero / non-finite) also fall back.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let policy = BatchPolicy {
+                bucket_seconds: Some(BucketSeconds::from([(20, bad)])),
+                ..BatchPolicy::with_cap(1000)
+            };
+            assert_eq!(policy.flush_window(1 << 20, fixed), fixed);
+        }
+    }
+
+    #[test]
+    fn flush_window_caps_at_the_predicted_round_time() {
+        let fixed = Duration::from_millis(2);
+        let policy = BatchPolicy {
+            // Bucket 14's round is predicted at 0.5 ms, bucket 20's at 1 s.
+            bucket_seconds: Some(BucketSeconds::from([(14, 0.0005), (20, 1.0)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        // A queue in bucket 14: don't hold the fuse past the 0.5 ms round
+        // it would save.
+        assert_eq!(
+            policy.flush_window(10_000, fixed),
+            Duration::from_secs_f64(0.0005)
+        );
+        // A queue in bucket 20: the predicted round dwarfs the window, so
+        // the fixed window governs.
+        assert_eq!(policy.flush_window(1 << 20, fixed), fixed);
+        // Sizes between/outside the swept buckets clamp to the nearest
+        // rule, exactly like routing (bucket 16 → nearest-below 14;
+        // bucket 24 → nearest-below 20; bucket 10 → nearest-above 14).
+        assert_eq!(
+            policy.flush_window(1 << 16, fixed),
+            Duration::from_secs_f64(0.0005)
+        );
+        assert_eq!(policy.flush_window(1 << 24, fixed), fixed);
+        assert_eq!(
+            policy.flush_window(100, fixed),
+            Duration::from_secs_f64(0.0005)
+        );
+    }
+
+    #[test]
+    fn with_table_wires_split_points_and_bucket_seconds_together() {
+        let table = table_from_choices(
+            Metric::Model,
+            &[
+                ("x", 10, "cps", 0.0005, 0.6),
+                ("x", 15, "ring", 1.0, 1.3),
+            ],
+        );
+        let policy = BatchPolicy::with_cap(1 << 22).with_table(&table, "x");
+        assert_eq!(policy.selection.as_ref().unwrap().len(), 1);
+        let secs = policy.bucket_seconds.as_ref().unwrap();
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[&10], 0.0005);
+        assert_eq!(secs[&15], 1.0);
+        // The cap bites in the small-bucket regime only.
+        let fixed = Duration::from_millis(2);
+        assert_eq!(
+            policy.flush_window(1000, fixed),
+            Duration::from_secs_f64(0.0005)
+        );
+        assert_eq!(policy.flush_window(1 << 15, fixed), fixed);
     }
 
     #[test]

@@ -1,6 +1,19 @@
-//! Service metrics: lock-free counters + snapshot.
+//! Service metrics: lock-free counters + snapshot, including the
+//! service-wide per-batch latency histogram telemetry builds on.
+//!
+//! **Invariant:** every flushed batch is counted under exactly one
+//! [`BatchRule`], so the per-rule counters sum to `batches_flushed`.
+//! [`Metrics::record_batch`] is the one entry point that maintains it
+//! (bumping `batches_flushed` *before* the rule counter, with
+//! Release/Acquire pairing against the snapshot's loads, so a concurrent
+//! snapshot can momentarily read `rule sum < batches_flushed`, never
+//! more); [`Metrics::snapshot`] debug-asserts the ≤ direction and
+//! [`MetricsSnapshot::rules_consistent`] checks exact equality for
+//! quiescent readers (tests, end-of-run reports).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::telemetry::{HistSnapshot, LatencyHist};
 
 use super::batcher::BatchRule;
 
@@ -17,11 +30,17 @@ pub struct Metrics {
     /// the configured reducer spec failed to build (0 or 1 per leader).
     pub reducer_fallbacks: AtomicU64,
     /// Batches closed by each [`BatchRule`] — the selection-aware
-    /// batcher's split/fuse decisions, countable per rule family.
+    /// batcher's split/fuse decisions, countable per rule family. Summed
+    /// they equal `batches_flushed` (see module docs); keep them in sync
+    /// through [`Metrics::record_batch`].
     pub batches_fused_to_cap: AtomicU64,
     pub batches_split_at_bucket: AtomicU64,
     pub batches_oversized: AtomicU64,
     pub batches_drained: AtomicU64,
+    /// Observed per-batch execution latency (wall-clock, or simulated
+    /// under `ObserveMode::Sim`) — the service-wide distribution behind
+    /// the per-cell telemetry recorder.
+    pub latency: LatencyHist,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,6 +56,7 @@ pub struct MetricsSnapshot {
     pub batches_split_at_bucket: u64,
     pub batches_oversized: u64,
     pub batches_drained: u64,
+    pub latency: HistSnapshot,
 }
 
 impl Metrics {
@@ -44,19 +64,41 @@ impl Metrics {
         field.fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Count one emitted batch under the rule that closed it.
-    pub fn record_rule(&self, rule: &BatchRule) {
-        let field = match rule {
+    /// Count one flushed batch under the rule that closed it — the single
+    /// entry point maintaining the per-rule ↔ `batches_flushed` invariant.
+    /// The flush counter is bumped first with `Release`, and the snapshot
+    /// reads rule counters with `Acquire` before `batches_flushed`: a
+    /// reader that observes a rule increment is therefore guaranteed to
+    /// also observe its flush increment, so a concurrent snapshot can see
+    /// rule sum < `batches_flushed` mid-record, never more.
+    pub fn record_batch(&self, rule: &BatchRule) {
+        self.batches_flushed.fetch_add(1, Ordering::Release);
+        self.rule_counter(rule).fetch_add(1, Ordering::Release);
+    }
+
+    /// The per-rule counter. Callers outside this module should go
+    /// through [`Self::record_batch`]; bumping a rule counter without its
+    /// flush breaks the invariant the snapshot debug-asserts.
+    fn rule_counter(&self, rule: &BatchRule) -> &AtomicU64 {
+        match rule {
             BatchRule::FusedToCap => &self.batches_fused_to_cap,
             BatchRule::SplitAtBucket { .. } => &self.batches_split_at_bucket,
             BatchRule::Oversized => &self.batches_oversized,
             BatchRule::Drained => &self.batches_drained,
-        };
-        self.add(field, 1);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        MetricsSnapshot {
+        // Rule counters are read first with Acquire (pairing with
+        // record_batch's Release stores), then batches_flushed: any rule
+        // increment this snapshot observes carries visibility of its
+        // preceding flush increment, so rule sum ≤ batches_flushed holds
+        // even against a mid-record writer.
+        let batches_fused_to_cap = self.batches_fused_to_cap.load(Ordering::Acquire);
+        let batches_split_at_bucket = self.batches_split_at_bucket.load(Ordering::Acquire);
+        let batches_oversized = self.batches_oversized.load(Ordering::Acquire);
+        let batches_drained = self.batches_drained.load(Ordering::Acquire);
+        let snap = MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
@@ -64,11 +106,20 @@ impl Metrics {
             reduce_calls: self.reduce_calls.load(Ordering::Relaxed),
             busy_secs: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
             reducer_fallbacks: self.reducer_fallbacks.load(Ordering::Relaxed),
-            batches_fused_to_cap: self.batches_fused_to_cap.load(Ordering::Relaxed),
-            batches_split_at_bucket: self.batches_split_at_bucket.load(Ordering::Relaxed),
-            batches_oversized: self.batches_oversized.load(Ordering::Relaxed),
-            batches_drained: self.batches_drained.load(Ordering::Relaxed),
-        }
+            batches_fused_to_cap,
+            batches_split_at_bucket,
+            batches_oversized,
+            batches_drained,
+            latency: self.latency.snapshot(),
+        };
+        debug_assert!(
+            snap.rule_counts_sum() <= snap.batches_flushed,
+            "per-rule batch counters ({}) exceed batches_flushed ({}) — \
+             a rule was recorded without its flush (use record_batch)",
+            snap.rule_counts_sum(),
+            snap.batches_flushed,
+        );
+        snap
     }
 }
 
@@ -96,6 +147,18 @@ impl MetricsSnapshot {
             (BatchRule::Drained.name(), self.batches_drained),
         ]
     }
+
+    /// Sum of the per-rule counters — equals [`Self::batches_flushed`]
+    /// in any quiescent snapshot (the invariant in the module docs).
+    pub fn rule_counts_sum(&self) -> u64 {
+        self.rule_counts().iter().map(|(_, c)| c).sum()
+    }
+
+    /// Whether the per-rule ↔ flushed invariant holds exactly — true for
+    /// every snapshot taken while no batch is mid-record.
+    pub fn rules_consistent(&self) -> bool {
+        self.rule_counts_sum() == self.batches_flushed
+    }
 }
 
 #[cfg(test)]
@@ -107,7 +170,7 @@ mod tests {
         let m = Metrics::default();
         m.add(&m.jobs_submitted, 3);
         m.add(&m.jobs_completed, 3);
-        m.add(&m.batches_flushed, 1);
+        m.record_batch(&BatchRule::Drained);
         m.add(&m.busy_nanos, 2_000_000_000);
         let s = m.snapshot();
         assert_eq!(s.jobs_submitted, 3);
@@ -119,16 +182,18 @@ mod tests {
     fn empty_snapshot_safe() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.jobs_per_batch(), 0.0);
+        assert!(s.rules_consistent());
+        assert_eq!(s.latency.count(), 0);
     }
 
     #[test]
     fn every_rule_lands_in_its_own_counter() {
         let m = Metrics::default();
-        m.record_rule(&BatchRule::FusedToCap);
-        m.record_rule(&BatchRule::FusedToCap);
-        m.record_rule(&BatchRule::SplitAtBucket { bucket: 13, margin: 2.0 });
-        m.record_rule(&BatchRule::Oversized);
-        m.record_rule(&BatchRule::Drained);
+        m.record_batch(&BatchRule::FusedToCap);
+        m.record_batch(&BatchRule::FusedToCap);
+        m.record_batch(&BatchRule::SplitAtBucket { bucket: 13, margin: 2.0 });
+        m.record_batch(&BatchRule::Oversized);
+        m.record_batch(&BatchRule::Drained);
         let s = m.snapshot();
         assert_eq!(s.batches_fused_to_cap, 2);
         assert_eq!(s.batches_split_at_bucket, 1);
@@ -143,5 +208,39 @@ mod tests {
                 ("drained", 1)
             ]
         );
+    }
+
+    #[test]
+    fn record_batch_keeps_rules_and_flushes_in_lockstep() {
+        let m = Metrics::default();
+        m.record_batch(&BatchRule::FusedToCap);
+        m.record_batch(&BatchRule::Oversized);
+        m.record_batch(&BatchRule::Drained);
+        let s = m.snapshot();
+        assert_eq!(s.batches_flushed, 3);
+        assert_eq!(s.rule_counts_sum(), 3);
+        assert!(s.rules_consistent());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "record_batch")]
+    fn orphan_rule_count_trips_the_invariant() {
+        let m = Metrics::default();
+        // A rule bump without its flush — the misuse record_batch exists
+        // to prevent.
+        m.rule_counter(&BatchRule::Drained).fetch_add(1, Ordering::Relaxed);
+        let _ = m.snapshot();
+    }
+
+    #[test]
+    fn latency_histogram_feeds_the_snapshot() {
+        let m = Metrics::default();
+        m.latency.record_secs(0.001);
+        m.latency.record_secs(0.001);
+        m.latency.record_secs(0.1);
+        let s = m.snapshot();
+        assert_eq!(s.latency.count(), 3);
+        assert!(s.latency.p50() < s.latency.p99());
     }
 }

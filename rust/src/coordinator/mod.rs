@@ -17,7 +17,20 @@
 //!   (GenTree by default), cached per `(algorithm, payload-size bucket)`
 //!   and shared as `Arc<RoutedPlan>` on the hot path;
 //! * [`metrics`] — atomic counters exposed for the CLI and benches,
-//!   including per-[`batcher::BatchRule`] split/fuse counts.
+//!   including per-[`batcher::BatchRule`] split/fuse counts (summing to
+//!   `batches_flushed` — the snapshot checks the invariant) and the
+//!   service-wide per-batch latency histogram.
+//!
+//! The serving loop is also a *measurement* loop: each executed batch's
+//! observed seconds (wall-clock, or deterministic flow-simulated under
+//! [`service::ObserveMode::Sim`]) land in the metrics histogram and —
+//! when a [`crate::telemetry::Recorder`] is wired in
+//! ([`ServiceConfig::with_telemetry`]) — in the per-(class, bucket,
+//! algorithm) telemetry cells the `repro score` / `repro calibrate`
+//! loop consumes. With a selection table configured, flushing is
+//! **time-aware**: the flush window is capped per bucket at the
+//! predicted round time the fuse would save
+//! ([`batcher::BatchPolicy::flush_window`]).
 //!
 //! Threads + channels stand in for an async runtime (tokio is not in the
 //! vendored dependency closure; the control flow is identical).
@@ -28,9 +41,9 @@ pub mod router;
 pub mod service;
 
 pub use batcher::{
-    plan_batches, BatchPolicy, BatchRule, PendingJob, PlannedBatch, SplitPoints,
-    DEFAULT_MIN_SPLIT_MARGIN,
+    plan_batches, BatchPolicy, BatchRule, BucketSeconds, PendingJob, PlannedBatch,
+    SplitPoints, DEFAULT_MIN_SPLIT_MARGIN,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
-pub use service::{AllReduceService, JobResult, ServiceConfig};
+pub use service::{AllReduceService, JobResult, ObserveMode, ServiceConfig};

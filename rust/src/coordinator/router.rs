@@ -92,6 +92,12 @@ impl PlanRouter {
         &self.topo
     }
 
+    /// The parameter environment plans are generated (and, under
+    /// `ObserveMode::Sim`, batches are simulated) against.
+    pub fn env(&self) -> &Environment {
+        &self.env
+    }
+
     pub fn default_algo(&self) -> &AlgoSpec {
         &self.default_algo
     }

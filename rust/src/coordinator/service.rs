@@ -24,6 +24,8 @@ use crate::campaign::SelectionTable;
 use crate::exec::execute_plan;
 use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
+use crate::sim::{simulate_plan, SimConfig};
+use crate::telemetry::Recorder;
 use crate::topo::Topology;
 
 use super::batcher::{
@@ -46,6 +48,24 @@ pub struct JobResult {
     /// ran to the cap, was split at a selection boundary (and at what
     /// margin), stood alone oversized, or flushed on queue drain.
     pub rule: BatchRule,
+    /// Observed execution seconds of this job's batch (wall-clock, or
+    /// flow-simulated under [`ObserveMode::Sim`]) — the number telemetry
+    /// scores against the model's prediction.
+    pub observed_secs: f64,
+}
+
+/// Where a batch's *observed* seconds come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObserveMode {
+    /// Wall-clock execution time of the real data plane (production).
+    #[default]
+    Wall,
+    /// The flow simulator's time for the routed plan at the fused size,
+    /// under the service's environment — deterministic, machine-
+    /// independent observations for calibration harnesses (the real data
+    /// plane still executes and verifies every batch; only the *clock*
+    /// is simulated).
+    Sim,
 }
 
 struct Job {
@@ -59,13 +79,24 @@ struct Job {
 pub struct ServiceConfig {
     pub policy: BatchPolicy,
     /// How long the leader waits for more jobs before flushing a
-    /// non-empty queue.
+    /// non-empty queue. With a selection table wired in, the effective
+    /// window is additionally capped per size bucket at the predicted
+    /// round time the fuse would save
+    /// ([`BatchPolicy::flush_window`] — time-aware flushing).
     pub flush_after: Duration,
     /// Which registered algorithm the router serves (default GenTree).
     pub algo: AlgoSpec,
     /// Precomputed per-size-bucket winners (a campaign selection table's
     /// `rules_for` output). Empty: every batch routes `algo`.
     pub selection: SelectionRules,
+    /// Per-(class, bucket, algo) latency recorder the leader feeds one
+    /// observation per executed batch. `None`: no telemetry.
+    pub telemetry: Option<Arc<Recorder>>,
+    /// Topology class key telemetry records under (the campaign topo
+    /// spec). Empty: derived as `single:<n_workers>` at start.
+    pub class: String,
+    /// Clock for observed batch seconds (wall vs simulated).
+    pub observe: ObserveMode,
 }
 
 impl Default for ServiceConfig {
@@ -75,6 +106,9 @@ impl Default for ServiceConfig {
             flush_after: Duration::from_millis(2),
             algo: AlgoSpec::GenTree { rearrange: true },
             selection: SelectionRules::new(),
+            telemetry: None,
+            class: String::new(),
+            observe: ObserveMode::Wall,
         }
     }
 }
@@ -104,7 +138,21 @@ impl ServiceConfig {
         }
         self.policy.min_split_margin = min_split_margin;
         self.policy = self.policy.with_table(table, class);
+        if self.class.is_empty() {
+            self.class = class.to_string();
+        }
         Ok(self)
+    }
+
+    /// Feed per-batch observations into `recorder` under topology class
+    /// `class` (the campaign topo spec string, so recorded cells join
+    /// campaign predictions on equal keys).
+    pub fn with_telemetry(mut self, recorder: Arc<Recorder>, class: &str) -> ServiceConfig {
+        self.telemetry = Some(recorder);
+        if !class.is_empty() {
+            self.class = class.to_string();
+        }
+        self
     }
 }
 
@@ -121,9 +169,14 @@ impl AllReduceService {
         topo: Topology,
         env: Environment,
         reducer: ReducerSpec,
-        cfg: ServiceConfig,
+        mut cfg: ServiceConfig,
     ) -> AllReduceService {
         let n_workers = topo.n_servers();
+        if cfg.class.is_empty() {
+            // The single-switch spec spelling — the default class a
+            // campaign would sweep this rack under.
+            cfg.class = format!("single:{n_workers}");
+        }
         let metrics = Arc::new(Metrics::default());
         let router = PlanRouter::new(topo, env)
             .with_default_algo(cfg.algo.clone())
@@ -243,8 +296,12 @@ fn leader_loop(
             }
         }
         // Accumulate until the flush window closes or the bucket fills.
-        let deadline = Instant::now() + cfg.flush_after;
+        // Time-aware flushing: with a selection table's per-bucket
+        // predicted seconds wired in, the window is capped at the round
+        // time the fuse would save for the queue's current size bucket
+        // (the fixed window applies unchanged otherwise).
         let mut queued_floats: usize = queue.iter().map(|j| j.tensors[0].len()).sum();
+        let deadline = Instant::now() + cfg.policy.flush_window(queued_floats, cfg.flush_after);
         while queued_floats < cfg.policy.bucket_floats {
             let now = Instant::now();
             if now >= deadline {
@@ -273,10 +330,10 @@ fn leader_loop(
         for batch in batches {
             // Flush accounting happens here — not in run_batch — so the
             // per-rule counters and batches_flushed stay consistent even
-            // when routing fails before execution.
-            metrics.add(&metrics.batches_flushed, 1);
-            metrics.record_rule(&batch.rule);
-            run_batch(&batch, &mut jobs, &router, &reducer, &metrics);
+            // when routing fails before execution (record_batch keeps
+            // the rule-sum ↔ batches_flushed invariant).
+            metrics.record_batch(&batch.rule);
+            run_batch(&batch, &mut jobs, &router, &reducer, &cfg, &metrics);
         }
     }
 }
@@ -286,6 +343,7 @@ fn run_batch(
     jobs: &mut std::collections::HashMap<u64, Job>,
     router: &PlanRouter,
     reducer: &Reducer,
+    cfg: &ServiceConfig,
     metrics: &Arc<Metrics>,
 ) {
     let offsets = fuse_offsets(&batch.jobs);
@@ -321,6 +379,29 @@ fn run_batch(
         Ok(out) => {
             metrics.add(&metrics.floats_reduced, out.reduced_floats as u64);
             metrics.add(&metrics.reduce_calls, out.reduce_calls as u64);
+            // Observe this batch's service time: the wall clock, or (for
+            // deterministic calibration harnesses) the flow simulator's
+            // time for the routed plan at the fused size under the
+            // service environment.
+            let observed_secs = match cfg.observe {
+                ObserveMode::Wall => elapsed.as_secs_f64(),
+                ObserveMode::Sim => {
+                    let topo = router.topo();
+                    let cfg_sim = SimConfig::new(topo);
+                    simulate_plan(&routed.plan, total as f64, topo, router.env(), &cfg_sim).total
+                }
+            };
+            metrics.latency.record_secs(observed_secs);
+            if let Some(recorder) = &cfg.telemetry {
+                recorder.record(
+                    &cfg.class,
+                    n_workers,
+                    PlanRouter::bucket(total),
+                    &routed.algo.to_string(),
+                    total,
+                    observed_secs,
+                );
+            }
             // All workers hold the same result; return worker 0's view.
             let result = &out.outputs[0];
             for &(id, off, len) in &offsets {
@@ -332,6 +413,7 @@ fn run_batch(
                     plan_name: routed.plan.name.clone(),
                     algo: routed.algo.to_string(),
                     rule: batch.rule,
+                    observed_secs,
                 }));
             }
         }
@@ -672,5 +754,80 @@ mod tests {
         let svc = make_service(2, 1000);
         svc.allreduce(tensors(2, 10, 0)).unwrap();
         drop(svc); // must not hang
+    }
+
+    #[test]
+    fn job_results_carry_observed_seconds_and_metrics_keep_the_histogram() {
+        let svc = make_service(3, 1 << 20);
+        let res = svc.allreduce(tensors(3, 512, 1)).unwrap();
+        assert!(res.observed_secs > 0.0, "wall clock observed");
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.latency.count(), 1);
+        assert!(m.rules_consistent(), "per-rule counters sum to flushes");
+    }
+
+    #[test]
+    fn telemetry_recorder_sees_each_batch_under_its_cell() {
+        use crate::telemetry::Recorder;
+        let recorder = Arc::new(Recorder::new());
+        let svc = AllReduceService::start(
+            single_switch(4),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy::with_cap(1),
+                flush_after: Duration::from_millis(1),
+                algo: AlgoSpec::Cps,
+                ..ServiceConfig::default()
+            }
+            .with_telemetry(recorder.clone(), ""),
+        );
+        svc.allreduce(tensors(4, 2000, 1)).unwrap();
+        svc.allreduce(tensors(4, 2000, 2)).unwrap();
+        svc.allreduce(tensors(4, 100_000, 3)).unwrap();
+        svc.stop();
+        let snap = recorder.snapshot();
+        // Class defaulted to the rack's spec spelling; cells keyed by
+        // (class, bucket, algo) with the fused payload accumulated.
+        assert_eq!(snap.cells.len(), 2, "{snap:?}");
+        let small = &snap.cells[&crate::telemetry::CellKey {
+            class: "single:4".into(),
+            bucket: PlanRouter::bucket(2000),
+            algo: "cps".into(),
+        }];
+        assert_eq!(small.batches(), 2);
+        assert_eq!(small.n_workers, 4);
+        assert_eq!(small.floats, 4000);
+        assert!(small.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn sim_observation_is_deterministic_and_matches_the_simulator() {
+        use crate::sim::{simulate_plan, SimConfig};
+        let observe = |seed: u64| {
+            let svc = AllReduceService::start(
+                single_switch(4),
+                Environment::paper(),
+                ReducerSpec::Scalar,
+                ServiceConfig {
+                    policy: BatchPolicy::with_cap(1),
+                    flush_after: Duration::from_millis(1),
+                    algo: AlgoSpec::Cps,
+                    observe: ObserveMode::Sim,
+                    ..ServiceConfig::default()
+                },
+            );
+            svc.allreduce(tensors(4, 4096, seed)).unwrap().observed_secs
+        };
+        let a = observe(1);
+        let b = observe(2);
+        assert_eq!(a, b, "simulated clock is input-data independent");
+        // And it is exactly the flow simulator's verdict for the routed
+        // plan at the fused size.
+        let topo = single_switch(4);
+        let env = Environment::paper();
+        let plan = crate::plan::cps::allreduce(4);
+        let want = simulate_plan(&plan, 4096.0, &topo, &env, &SimConfig::new(&topo)).total;
+        assert!((a - want).abs() < 1e-12, "{a} vs {want}");
     }
 }

@@ -30,6 +30,11 @@
 //!   sweeps producing JSONL artifacts and the [`campaign::SelectionTable`]
 //!   that precomputes the best algorithm per (topology class, size
 //!   bucket) for the coordinator's router.
+//! * [`telemetry`] — the serving path measures itself: per-(class,
+//!   bucket, algorithm) latency histograms fed by the coordinator,
+//!   scored against campaign predictions (`repro score`), and refit into
+//!   a recalibrated selection table (`repro calibrate`) — campaign →
+//!   serve → measure → refit → reselect.
 //! * [`bench`] — the harness that regenerates every paper table and figure.
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
@@ -44,5 +49,6 @@ pub mod model;
 pub mod plan;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod topo;
 pub mod util;

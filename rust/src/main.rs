@@ -13,10 +13,16 @@
 //!                 verify against the exact oracle.
 //! * `serve`     — start the coordinator and push a synthetic job stream,
 //!                 reporting service metrics; `--selection` routes each
-//!                 job through a campaign selection table.
+//!                 job through a campaign selection table, and
+//!                 `--telemetry-out` persists per-(class, bucket, algo)
+//!                 latency histograms.
 //! * `campaign`  — parallel scenario sweeps (`run`), the Fig. 11-style
 //!                 winners report (`report`), and the per-(topology,
 //!                 size-bucket) selection table (`select`).
+//! * `score`     — join served telemetry against campaign predictions:
+//!                 the Fig. 8-style accuracy report of the live service.
+//! * `calibrate` — refit GenModel parameters (§3.4) from served
+//!                 telemetry and emit a recalibrated selection table.
 //! * `algos`     — list the algorithm registry (and what applies where).
 //! * `reproduce` — regenerate the paper's tables and figures.
 //!
@@ -28,13 +34,16 @@
 use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
 use genmodel::campaign::{self, Metric, RunConfig, ScenarioGrid, SelectionTable};
-use genmodel::coordinator::{AllReduceService, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN};
+use genmodel::coordinator::{
+    AllReduceService, ObserveMode, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN,
+};
 use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
 use genmodel::model::params::Environment;
 use genmodel::plan::cps;
 use genmodel::runtime::ReducerSpec;
 use genmodel::sim::{simulate_plan, SimConfig};
+use genmodel::telemetry::{self, Recorder, TelemetrySnapshot};
 use genmodel::topo::Topology;
 use genmodel::util::cli::Args;
 use genmodel::util::rng::Rng;
@@ -52,13 +61,24 @@ USAGE: repro <subcommand> [options]
   serve      [--servers 8] [--jobs 64] [--tensor 4096] [--algo gentree] [--scalar]
              [--selection table.json] [--class <topo-class>]
              [--min-split-margin 1.25] [--bench-out BENCH_campaign.json]
+             [--telemetry-out hist.json] [--observe wall|sim]
              (--min-split-margin: break a fuse at a selection boundary only
-              when the departed winner beats its runner-up by ≥ this ratio)
+              when the departed winner beats its runner-up by ≥ this ratio;
+              --observe sim: record flow-simulated batch seconds instead of
+              wall clock — deterministic calibration harness)
   campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
                     [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
   campaign   report --in campaign.jsonl
   campaign   select --in campaign.jsonl [--out selection.json] [--by model|sim]
+  score      --telemetry hist.json [--in campaign.jsonl] [--env paper|gpu]
+             [--bench-out BENCH_campaign.json]
+             (campaign rows predict matching cells; the analytic engine under
+              --env fills cells the artifact never swept)
+  calibrate  --telemetry hist.json [--beta 6.4e-9] [--algos a1,a2]
+             [--out selection_calibrated.json]
+             (refit (α, 2β+γ, δ, ε, w_t) from cps-served cells — ≥ 4 distinct
+              worker counts — then rebuild the selection table under the fit)
   algos      [--topo <spec>]
   reproduce  [--table 3|4|5|6|7] [--fig 3|4|8|9|10] [--all]
 
@@ -134,6 +154,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
         Some("campaign") => cmd_campaign(args),
+        Some("score") => cmd_score(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("algos") => cmd_algos(args),
         Some("reproduce") => cmd_reproduce(args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -342,6 +364,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         algo,
         ..ServiceConfig::default()
     };
+    // Telemetry: record per-(class, bucket, algo) batch latency, under a
+    // wall or flow-simulated clock, and persist the snapshot after the
+    // run. Both flags are read up front so passing them is never a
+    // silent no-op.
+    let telemetry_out = args.opt("telemetry-out").map(String::from);
+    cfg.observe = match args.opt_or("observe", "wall").to_ascii_lowercase().as_str() {
+        "wall" => ObserveMode::Wall,
+        "sim" | "simulated" => ObserveMode::Sim,
+        other => anyhow::bail!("unknown --observe mode {other:?} (known: wall, sim)"),
+    };
+    let recorder = std::sync::Arc::new(Recorder::new());
+    if telemetry_out.is_some() {
+        cfg = cfg.with_telemetry(recorder.clone(), args.opt_or("class", ""));
+    }
     if let Some(path) = args.opt("selection") {
         let min_split_margin: f64 =
             args.opt_parse_or("min-split-margin", DEFAULT_MIN_SPLIT_MARGIN)?;
@@ -407,6 +443,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  throughput       : {:.2} Mfloat/s reduced",
         m.floats_reduced as f64 / wall / 1e6
     );
+    println!(
+        "  batch latency    : p50 {:.2e} s  p95 {:.2e} s  p99 {:.2e} s",
+        m.latency.p50(),
+        m.latency.p95(),
+        m.latency.p99()
+    );
+    if let Some(out) = &telemetry_out {
+        let snap = recorder.snapshot();
+        snap.save(std::path::Path::new(out))?;
+        println!(
+            "  telemetry        : {} (class, bucket, algo) cell(s) → {out}",
+            snap.cells.len()
+        );
+    }
     // --bench-out: merge the serve-side counters into the (campaign)
     // bench record, so one JSON accumulates the whole CI smoke story —
     // sweep throughput AND batch split/fuse counts.
@@ -415,6 +465,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let mut entries = vec![
             ("serve_jobs_completed".to_string(), Json::num(m.jobs_completed as f64)),
             ("serve_batches_flushed".to_string(), Json::num(m.batches_flushed as f64)),
+            ("serve_latency_p95_s".to_string(), Json::num(m.latency.p95())),
             ("serve_wall_secs".to_string(), Json::num(wall)),
         ];
         for (rule, count) in m.rule_counts() {
@@ -574,6 +625,119 @@ fn cmd_campaign_run(args: &Args) -> anyhow::Result<()> {
         "{} scenario(s) recorded evaluation errors (see {out})",
         summary.failed
     );
+    Ok(())
+}
+
+/// `repro score` — the served Fig. 8: join a telemetry snapshot against
+/// campaign predictions (exact cell match first, the analytic engine
+/// under `--env` for unswept cells) and report per-cell relative error,
+/// worst offenders first.
+fn cmd_score(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .opt("telemetry")
+        .ok_or_else(|| anyhow::anyhow!("--telemetry <hist.json> required"))?;
+    let snap = TelemetrySnapshot::load(std::path::Path::new(path))?;
+    anyhow::ensure!(
+        !snap.is_empty(),
+        "telemetry snapshot {path} has no cells (serve with --telemetry-out first)"
+    );
+    let rows = match args.opt("in") {
+        Some(p) => campaign::load_rows(std::path::Path::new(p))?,
+        None => Vec::new(),
+    };
+    let env = campaign::EnvKind::parse(args.opt_or("env", "paper"))?.environment();
+    // Fallback predictor for cells no campaign row covers: the analytic
+    // engine prices the cell's (class, bucket, algo) under --env. Cells
+    // whose class/algo cannot be priced stay unmatched and render `-`.
+    let predict = |class: &str, bucket: u32, algo: &str| -> Option<f64> {
+        let topo = workloads::parse_topology(class).ok()?;
+        let spec = AlgoSpec::parse(algo).ok()?;
+        Engine::new(topo, env.clone()).predict_bucket(&spec, bucket).ok()
+    };
+    let cells = telemetry::score_cells(&snap, &rows, predict);
+    println!("{}", campaign::report::accuracy_table(&cells).render());
+    let s = telemetry::summarize(&cells);
+    let overall = snap.overall_hist();
+    println!("  cells scored     : {} ({} matched a prediction)", s.cells, s.matched);
+    println!("  mean |rel err|   : {:.1}%", s.mean_abs_rel_err * 100.0);
+    println!("  max  |rel err|   : {:.1}%", s.max_abs_rel_err * 100.0);
+    if let Some(worst) = &s.worst {
+        println!("  worst offender   : {worst}");
+    }
+    println!(
+        "  observed latency : p50 {:.2e} s  p95 {:.2e} s  p99 {:.2e} s",
+        overall.p50(),
+        overall.p95(),
+        overall.p99()
+    );
+    if let Some(bench_out) = args.opt("bench-out") {
+        use genmodel::util::json::Json;
+        merge_bench_json(
+            bench_out,
+            vec![
+                ("score_cells".to_string(), Json::num(s.cells as f64)),
+                ("score_matched".to_string(), Json::num(s.matched as f64)),
+                (
+                    "score_mean_abs_rel_err".to_string(),
+                    Json::num(s.mean_abs_rel_err),
+                ),
+                (
+                    "score_max_abs_rel_err".to_string(),
+                    Json::num(s.max_abs_rel_err),
+                ),
+                ("telemetry_p95_s".to_string(), Json::num(overall.p95())),
+            ],
+        )?;
+        println!("  bench record     → {bench_out}");
+    }
+    Ok(())
+}
+
+/// `repro calibrate` — the §3.4 fit, online: refit GenModel parameters
+/// from a telemetry snapshot's cps-served cells and rebuild the
+/// selection table under the fitted parameters (campaign → serve →
+/// measure → refit → reselect).
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .opt("telemetry")
+        .ok_or_else(|| anyhow::anyhow!("--telemetry <hist.json> required"))?;
+    let snap = TelemetrySnapshot::load(std::path::Path::new(path))?;
+    // β is not identifiable from end-to-end times (§3.4 fits 2β+γ); the
+    // deployed link's inverse bandwidth splits the compound. Default:
+    // the paper's 10 Gbps NIC.
+    let beta: f64 = args.opt_parse_or("beta", 6.4e-9)?;
+    let cal = telemetry::calibrate(&snap, beta)?;
+    println!("refit from {} cps-served cell(s):", cal.rows_used);
+    println!("  alpha        = {:.4e} s/round", cal.fitted.alpha);
+    println!("  2*beta+gamma = {:.4e} s/float", cal.fitted.two_beta_plus_gamma);
+    println!("  delta        = {:.4e} s/float", cal.fitted.delta);
+    println!("  epsilon      = {:.4e} s/float/excess", cal.fitted.epsilon);
+    println!("  w_t          = {}", cal.fitted.w_t);
+    println!("  rms residual = {:.3e}", cal.fitted.rms_rel_residual);
+    let algos: Vec<AlgoSpec> = match args.opt_parse_list::<String>("algos")? {
+        Some(list) => list
+            .iter()
+            .map(|a| AlgoSpec::parse(a))
+            .collect::<Result<_, _>>()?,
+        None => Vec::new(), // every applicable registry default
+    };
+    let table = telemetry::recalibrated_table(&snap, &cal, &algos)?;
+    let out = args.opt_or("out", "selection_calibrated.json");
+    table.save(std::path::Path::new(out))?;
+    println!(
+        "recalibrated selection table: {} (topology class, size bucket) cell(s) → {out}",
+        table.len()
+    );
+    for (class, cells) in table.classes() {
+        for (bucket, choice) in cells {
+            println!(
+                "  {class:<12} bucket 2^{bucket:<2} → {:<14} ({:.4}s, margin {:.2}x)",
+                choice.algo,
+                choice.seconds,
+                choice.margin()
+            );
+        }
+    }
     Ok(())
 }
 

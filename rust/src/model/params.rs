@@ -169,18 +169,54 @@ pub fn gpu_server_params() -> ServerParams {
     }
 }
 
+/// Where an environment's per-class link parameters come from: a preset
+/// Table-5-style lookup, or one uniform parameter set for every class —
+/// the shape a §3.4 fit produces (the fit sees one flat testbed, so a
+/// calibrated environment has no per-class structure to offer).
+#[derive(Debug, Clone, Copy)]
+pub enum LinkTable {
+    /// Per-class lookup (the paper presets).
+    Preset(fn(LinkClass) -> LinkParams),
+    /// Every link class carries the same parameters (fitted/calibrated
+    /// environments, [`Environment::uniform`]).
+    Uniform(LinkParams),
+}
+
 /// Full parameter environment for tree topologies: Table 5 rows + server row.
 #[derive(Debug, Clone)]
 pub struct Environment {
-    pub link: fn(LinkClass) -> LinkParams,
+    pub link: LinkTable,
     pub server: ServerParams,
 }
 
 impl Environment {
     pub fn paper() -> Self {
         Environment {
-            link: paper_table5,
+            link: LinkTable::Preset(paper_table5),
             server: paper_server_params(),
+        }
+    }
+
+    /// An environment where **every** link class carries `p`'s
+    /// communication parameters and every server `p`'s compute
+    /// parameters — what a flat `ModelParams` set (hand-written, or
+    /// recovered by the telemetry calibrator / §3.4 fit) means as an
+    /// environment. On a single-switch topology this environment's
+    /// generic evaluator agrees with the Table 2 closed forms under `p`
+    /// exactly ([`Environment::flat`] is the inverse view).
+    pub fn uniform(p: ModelParams) -> Self {
+        Environment {
+            link: LinkTable::Uniform(LinkParams {
+                alpha: p.alpha,
+                beta: p.beta,
+                epsilon: p.epsilon,
+                w_t: p.w_t,
+            }),
+            server: ServerParams {
+                gamma: p.gamma,
+                delta: p.delta,
+                w_t: p.w_t,
+            },
         }
     }
 
@@ -205,7 +241,7 @@ impl Environment {
             }
         }
         Environment {
-            link: gpu_links,
+            link: LinkTable::Preset(gpu_links),
             server: gpu_server_params(),
         }
     }
@@ -222,13 +258,16 @@ impl Environment {
             }
         }
         Environment {
-            link: links_100g,
+            link: LinkTable::Preset(links_100g),
             server: paper_server_params(),
         }
     }
 
     pub fn link_params(&self, class: LinkClass) -> LinkParams {
-        (self.link)(class)
+        match self.link {
+            LinkTable::Preset(f) => f(class),
+            LinkTable::Uniform(p) => p,
+        }
     }
 
     /// Flat single-switch view (for the closed-form expressions) built
@@ -301,5 +340,23 @@ mod tests {
         let flat = env.flat(LinkClass::MiddleSw);
         assert_eq!(flat.beta, 6.4e-9);
         assert_eq!(flat.w_t, 9); // link-level threshold governs
+    }
+
+    #[test]
+    fn uniform_environment_roundtrips_through_flat() {
+        // flat ∘ uniform = identity for any class — the contract the
+        // telemetry calibrator's rebuilt tables rely on.
+        let p = ModelParams::cpu_testbed();
+        let env = Environment::uniform(p);
+        for class in [
+            LinkClass::Server,
+            LinkClass::MiddleSw,
+            LinkClass::RootSw,
+            LinkClass::CrossDc,
+        ] {
+            assert_eq!(env.flat(class), p);
+            assert_eq!(env.link_params(class).alpha, p.alpha);
+        }
+        assert_eq!(env.server.w_t, p.w_t);
     }
 }

@@ -1,0 +1,167 @@
+//! Close the loop: recorded `(n, s, time)` samples → §3.4 parameter fit →
+//! a recalibrated parameter environment → a rebuilt selection table.
+//!
+//! This is the paper's measurement-driven modeling turned into a serving
+//! feature: the coordinator measures itself ([`super::Recorder`]), the
+//! fit toolkit ([`crate::model::fit`]) recovers `(α, 2β+γ, δ, ε, w_t)`
+//! from those measurements exactly as it does from offline benches, and
+//! [`crate::campaign::table_from_model`] re-derives the per-(class,
+//! bucket) winners under the fitted parameters — campaign → serve →
+//! measure → refit → reselect.
+//!
+//! Like the paper's toolkit, the fit reads **Co-located-PS** rows (Table
+//! 2's CPS design row is what identifies the compound `2β + γ`), so only
+//! cells served by `cps` feed the fit; they must span ≥ 4 distinct
+//! worker counts. The β/γ split takes a known link β
+//! ([`crate::model::fit::FittedParams::split_beta_gamma`]) — pass the
+//! deployed NIC's inverse bandwidth, as §3.4 does.
+
+use crate::api::{AlgoSpec, ApiError};
+use crate::campaign::{table_from_model, SelectionTable};
+use crate::model::fit::{fit, BenchRow, FittedParams};
+use crate::model::params::{Environment, ModelParams};
+
+use super::recorder::TelemetrySnapshot;
+
+/// A completed refit: the raw fit output plus the full parameter set it
+/// implies under the supplied β.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub fitted: FittedParams,
+    pub params: ModelParams,
+    /// CPS samples that fed the fit.
+    pub rows_used: usize,
+}
+
+impl Calibration {
+    /// The uniform parameter environment these fitted parameters imply —
+    /// what the rebuilt selection table is priced under.
+    pub fn environment(&self) -> Environment {
+        Environment::uniform(self.params)
+    }
+}
+
+/// Convert a snapshot's CPS cells into fit rows: one [`BenchRow`] per
+/// cell, with `n` = the cell's worker count, `s` = its mean fused payload
+/// and `time` = its mean observed seconds.
+pub fn bench_rows(snap: &TelemetrySnapshot) -> Vec<BenchRow> {
+    snap.cells
+        .iter()
+        .filter(|(k, c)| k.algo == "cps" && c.batches() > 0)
+        .map(|(_, c)| BenchRow {
+            n: c.n_workers,
+            s: c.mean_floats(),
+            time: c.mean_secs(),
+        })
+        .collect()
+}
+
+/// Refit GenModel parameters from a telemetry snapshot. `beta` is the
+/// known link inverse bandwidth (s/float) used to split the fitted
+/// `2β + γ` compound. Too few / too-degenerate CPS cells surface as a
+/// typed error naming what is missing, not a panic.
+pub fn calibrate(snap: &TelemetrySnapshot, beta: f64) -> Result<Calibration, ApiError> {
+    if !(beta.is_finite() && beta > 0.0) {
+        return Err(ApiError::BadRequest {
+            reason: format!("calibration needs a positive link beta (s/float), got {beta}"),
+        });
+    }
+    let rows = bench_rows(snap);
+    let fitted = fit(&rows).map_err(|e| ApiError::BadRequest {
+        reason: format!(
+            "telemetry calibration: {e} (the fit reads cps-served cells; \
+             serve cps traffic on ≥ 4 distinct worker counts)"
+        ),
+    })?;
+    let (beta, gamma) = fitted.split_beta_gamma(beta);
+    let params = ModelParams {
+        alpha: fitted.alpha,
+        beta,
+        gamma,
+        delta: fitted.delta,
+        epsilon: fitted.epsilon,
+        w_t: fitted.w_t,
+    };
+    Ok(Calibration {
+        fitted,
+        params,
+        rows_used: rows.len(),
+    })
+}
+
+/// Rebuild the selection table over the snapshot's observed (class,
+/// bucket) grid under the calibration's fitted parameters. `algos` lists
+/// the candidate algorithms (empty = every applicable registry default
+/// per topology).
+pub fn recalibrated_table(
+    snap: &TelemetrySnapshot,
+    cal: &Calibration,
+    algos: &[AlgoSpec],
+) -> Result<SelectionTable, ApiError> {
+    table_from_model(&snap.buckets_by_class(), algos, &cal.environment())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::expressions::{genmodel, PlanType};
+    use crate::telemetry::Recorder;
+
+    /// A snapshot whose CPS cells carry exact closed-form times under
+    /// `p` — what an ideally-measured service would record.
+    fn synthetic_snapshot(p: &ModelParams) -> TelemetrySnapshot {
+        let rec = Recorder::new();
+        for n in [4usize, 6, 8, 10, 12, 15] {
+            for s in [65_536usize, 1 << 20] {
+                let t = genmodel(&PlanType::ColocatedPs, n, s as f64, p).total();
+                let bucket = crate::coordinator::PlanRouter::bucket(s);
+                rec.record(&format!("single:{n}"), n, bucket, "cps", s, t);
+            }
+        }
+        rec.snapshot()
+    }
+
+    #[test]
+    fn recovers_parameters_from_recorded_cells() {
+        let p = ModelParams::cpu_testbed();
+        let cal = calibrate(&synthetic_snapshot(&p), p.beta).unwrap();
+        assert_eq!(cal.rows_used, 12);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-30);
+        assert!(rel(cal.params.alpha, p.alpha) < 1e-3, "alpha {}", cal.params.alpha);
+        assert!(
+            rel(cal.fitted.two_beta_plus_gamma, p.two_beta_plus_gamma()) < 1e-3,
+            "2b+g"
+        );
+        assert_eq!(cal.params.beta, p.beta, "beta is the supplied split hint");
+        // Histogram nanosecond rounding puts a ~1e-9 s floor on the time
+        // resolution; δ and ε are small terms, so allow a loose band.
+        assert!(rel(cal.params.delta, p.delta) < 0.2, "delta {}", cal.params.delta);
+        assert!(rel(cal.params.epsilon, p.epsilon) < 0.2, "eps {}", cal.params.epsilon);
+    }
+
+    #[test]
+    fn too_few_cps_cells_is_a_typed_error() {
+        let rec = Recorder::new();
+        rec.record("single:4", 4, 16, "cps", 65_536, 0.01);
+        rec.record("single:6", 6, 16, "ring", 65_536, 0.01); // not cps
+        match calibrate(&rec.snapshot(), 6.4e-9) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("cps"), "{reason}");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        assert!(matches!(
+            calibrate(&TelemetrySnapshot::default(), 0.0),
+            Err(ApiError::BadRequest { .. })
+        ));
+    }
+
+    #[test]
+    fn calibration_environment_prices_like_the_fitted_params() {
+        let p = ModelParams::cpu_testbed();
+        let cal = calibrate(&synthetic_snapshot(&p), p.beta).unwrap();
+        let env = cal.environment();
+        let flat = env.flat(crate::model::params::LinkClass::Server);
+        assert_eq!(flat, cal.params);
+    }
+}

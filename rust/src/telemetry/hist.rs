@@ -1,0 +1,338 @@
+//! Fixed-bucket log2 latency histogram: the measurement primitive of the
+//! telemetry subsystem (the paper's §5 methodology — distributions, not
+//! single numbers, because incast makes tail latency the signal).
+//!
+//! Recording is lock-free: 64 power-of-two nanosecond bins held in
+//! `AtomicU64`s (bin `b` covers `[2^b, 2^(b+1))` ns), plus an exact
+//! nanosecond sum for means. Snapshots are plain data — mergeable,
+//! JSON-round-trippable, and quantile-queryable (p50/p95/p99 report the
+//! geometric midpoint of the answering bin, so a quantile is exact to
+//! within one ×√2 half-bin).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::api::ApiError;
+use crate::util::json::Json;
+
+/// Number of log2 bins: `2^0` ns up to `2^63` ns (~292 years) — every
+/// representable latency lands in a bin, no overflow path.
+pub const BINS: usize = 64;
+
+/// Largest total the telemetry artifact stores: `2^53 − 1`, the biggest
+/// integer JSON's f64 number space represents exactly. Accumulating
+/// totals (`sum_nanos`, per-cell float counts) saturate here — ~104
+/// cumulative days of nanoseconds — so serialization never silently
+/// rounds and snapshots round-trip byte-identically.
+pub const MAX_EXACT_TOTAL: u64 = (1 << 53) - 1;
+
+/// Saturating accumulate into a JSON-exact total (see [`MAX_EXACT_TOTAL`]).
+pub(crate) fn saturating_total_add(field: &AtomicU64, v: u64) {
+    let _ = field.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+        Some(cur.saturating_add(v).min(MAX_EXACT_TOTAL))
+    });
+}
+
+/// Lock-free log2 latency histogram (see module docs).
+#[derive(Debug)]
+pub struct LatencyHist {
+    bins: [AtomicU64; BINS],
+    /// Exact sum of recorded nanoseconds (for means; bins only bound).
+    sum_nanos: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            bins: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The bin an observation of `nanos` lands in: `⌊log2(nanos)⌋`, with 0 ns
+/// clamped into bin 0.
+pub fn bin_of(nanos: u64) -> usize {
+    (63 - nanos.max(1).leading_zeros()) as usize
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    /// Record one observation of `nanos` nanoseconds. The nanosecond sum
+    /// saturates at [`MAX_EXACT_TOTAL`] (JSON-exact; no wraparound).
+    pub fn record_nanos(&self, nanos: u64) {
+        self.bins[bin_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        saturating_total_add(&self.sum_nanos, nanos);
+    }
+
+    /// Record one observation of `secs` seconds (negative / non-finite
+    /// observations clamp to zero rather than poisoning the sum).
+    pub fn record_secs(&self, secs: f64) {
+        let nanos = if secs.is_finite() && secs > 0.0 {
+            (secs * 1e9).round() as u64
+        } else {
+            0
+        };
+        self.record_nanos(nanos);
+    }
+
+    /// Plain-data copy of the current counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bins: std::array::from_fn(|i| self.bins[i].load(Ordering::Relaxed)),
+            sum_nanos: self.sum_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A histogram snapshot: mergeable plain data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub bins: [u64; BINS],
+    pub sum_nanos: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot {
+            bins: [0; BINS],
+            sum_nanos: 0,
+        }
+    }
+}
+
+impl HistSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Exact mean in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / n as f64 * 1e-9
+        }
+    }
+
+    /// Fold another snapshot's counts into this one (totals saturate at
+    /// [`MAX_EXACT_TOTAL`], matching the recording path).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.sum_nanos = self
+            .sum_nanos
+            .saturating_add(other.sum_nanos)
+            .min(MAX_EXACT_TOTAL);
+    }
+
+    /// The `q`-quantile (`0 < q ≤ 1`) in seconds: the geometric midpoint
+    /// (`√2 · 2^b` ns) of the lowest bin where the cumulative count
+    /// reaches `⌈q · total⌉`. 0 when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (b as f64).exp2() * std::f64::consts::SQRT_2 * 1e-9;
+            }
+        }
+        unreachable!("cumulative count reaches total");
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Sparse JSON object: `{"<bin>": count}` for non-empty bins only.
+    /// (Keys sort lexicographically in the canonical form — a display
+    /// artifact; parsing indexes by value.)
+    pub fn bins_to_json(&self) -> Json {
+        Json::Obj(
+            self.bins
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(b, &c)| (b.to_string(), Json::num(c as f64)))
+                .collect(),
+        )
+    }
+
+    /// Parse the sparse bins object written by [`Self::bins_to_json`].
+    pub fn bins_from_json(v: &Json, sum_nanos: u64) -> Result<HistSnapshot, ApiError> {
+        let bad = |what: String| ApiError::BadRequest {
+            reason: format!("telemetry histogram: {what}"),
+        };
+        let Json::Obj(m) = v else {
+            return Err(bad("bins are not an object".into()));
+        };
+        let mut out = HistSnapshot {
+            bins: [0; BINS],
+            sum_nanos,
+        };
+        for (k, c) in m {
+            let b: usize = k
+                .parse()
+                .ok()
+                .filter(|&b| b < BINS)
+                .ok_or_else(|| bad(format!("bin {k:?} is not in 0..{BINS}")))?;
+            let c = c
+                .as_f64()
+                .filter(|&c| c >= 0.0 && c.fract() == 0.0 && c <= MAX_EXACT_TOTAL as f64)
+                .ok_or_else(|| {
+                    bad(format!("bin {k} count is not a JSON-exact non-negative integer"))
+                })?;
+            out.bins[b] = c as u64;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_are_log2() {
+        assert_eq!(bin_of(0), 0);
+        assert_eq!(bin_of(1), 0);
+        assert_eq!(bin_of(2), 1);
+        assert_eq!(bin_of(1023), 9);
+        assert_eq!(bin_of(1024), 10);
+        assert_eq!(bin_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let h = LatencyHist::new();
+        // 90 × 1 µs, 9 × 1 ms, 1 × 1 s.
+        for _ in 0..90 {
+            h.record_nanos(1_000);
+        }
+        for _ in 0..9 {
+            h.record_nanos(1_000_000);
+        }
+        h.record_nanos(1_000_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        // p50 lands in the µs bin (2^9 ≤ 1000 < 2^10), p95 in the ms bin,
+        // p99+ in the s bin; geometric midpoints are within ×√2.
+        assert!(s.p50() > 0.4e-6 && s.p50() < 1.5e-6, "{}", s.p50());
+        assert!(s.p95() > 0.4e-3 && s.p95() < 1.6e-3, "{}", s.p95());
+        assert!(s.p99() > 0.4 && s.p99() < 1.6, "{}", s.p99());
+        let mean = s.mean_secs();
+        let want = (90.0 * 1e3 + 9.0 * 1e6 + 1e9) * 1e-9 / 100.0;
+        assert!((mean - want).abs() < 1e-12, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn record_secs_rounds_and_clamps() {
+        let h = LatencyHist::new();
+        h.record_secs(0.002); // 2e6 ns → bin 20
+        h.record_secs(-1.0); // clamped to 0
+        h.record_secs(f64::NAN); // clamped to 0
+        let s = h.snapshot();
+        assert_eq!(s.bins[bin_of(2_000_000)], 1);
+        assert_eq!(s.bins[0], 2);
+        assert_eq!(s.sum_nanos, 2_000_000);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = LatencyHist::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = LatencyHist::new();
+        a.record_nanos(1_000);
+        let b = LatencyHist::new();
+        b.record_nanos(1_000);
+        b.record_nanos(1_000_000);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum_nanos, 1_002_000);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let h = LatencyHist::new();
+        h.record_nanos(1_000);
+        h.record_nanos(1_000);
+        h.record_nanos(123_456_789);
+        let s = h.snapshot();
+        let back = HistSnapshot::bins_from_json(&s.bins_to_json(), s.sum_nanos).unwrap();
+        assert_eq!(back, s);
+        // Schema errors are typed, not panics.
+        assert!(HistSnapshot::bins_from_json(&Json::Null, 0).is_err());
+        assert!(HistSnapshot::bins_from_json(
+            &Json::obj(vec![("99", Json::num(1.0))]),
+            0
+        )
+        .is_err());
+        assert!(HistSnapshot::bins_from_json(
+            &Json::obj(vec![("3", Json::num(1.5))]),
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn totals_saturate_json_exact() {
+        // Totals never exceed 2^53 − 1, so serialization through f64 is
+        // always exact and merge/record agree on the cap.
+        let h = LatencyHist::new();
+        h.record_nanos(u64::MAX);
+        h.record_nanos(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.sum_nanos, MAX_EXACT_TOTAL);
+        let mut m = s;
+        m.merge(&s);
+        assert_eq!(m.sum_nanos, MAX_EXACT_TOTAL);
+        assert_eq!(m.count(), 4);
+        let back = HistSnapshot::bins_from_json(&s.bins_to_json(), s.sum_nanos).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(LatencyHist::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_nanos(1 + t * 1000 + i);
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count(), 4000);
+    }
+}

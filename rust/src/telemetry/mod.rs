@@ -1,0 +1,51 @@
+//! Telemetry & calibration: the serving path measures itself and feeds
+//! the measurements back into the model — the paper's "extensive
+//! measurements" methodology applied to the running coordinator instead
+//! of an offline testbed.
+//!
+//! The paper's core move is measurement-driven modeling: §3 derives the
+//! δ (memory-access) and ε (incast) terms *from measurements* the
+//! classic (α, β, γ) model never takes, §3.4 ships a fitting toolkit
+//! that recovers the parameters from benchmarked CPS runs, and §5 scores
+//! the fitted model against reality (Fig. 8). Each component here
+//! operationalizes one of those steps for the serving loop:
+//!
+//! * [`hist`] — lock-free log2 latency histograms (**§5 methodology**):
+//!   per-bucket service-latency distributions with mergeable snapshots
+//!   and p50/p95/p99, because incast shows up in the tail, not the mean.
+//! * [`recorder`] — per-`(topology class, size bucket, algorithm)`
+//!   observation cells (**§5.4's sweep grid, observed**): the
+//!   coordinator records each batch's fused size and execution seconds
+//!   under exactly the keys campaign artifacts predict, so prediction
+//!   and reality join without translation.
+//! * [`score`] — the **Fig. 8 accuracy study, served** ( `repro score`):
+//!   joins recorder snapshots against campaign predictions and reports
+//!   per-cell relative error, worst offenders first — model drift made
+//!   visible instead of silently routing stale winners.
+//! * [`calibrate`] — the **§3.4 fitting toolkit, online** (`repro
+//!   calibrate`): recorded `(n, s, time)` CPS samples become
+//!   [`crate::model::fit::BenchRow`]s, the fit re-recovers
+//!   `(α, 2β+γ, δ, ε, w_t)`, and [`crate::campaign::table_from_model`]
+//!   rebuilds the [`crate::campaign::SelectionTable`] under the fitted
+//!   parameters — closing campaign → serve → measure → refit →
+//!   reselect.
+//!
+//! Motivated by the imbalanced-arrival result (Proficz, arXiv:1804.05349):
+//! live traffic shifts the effective cost terms, which only online
+//! measurement can catch — a statically fitted table mispredicts.
+//!
+//! Wiring: `coordinator::service` records per-batch seconds (wall-clock,
+//! or flow-simulated via `ObserveMode::Sim` for deterministic harnesses),
+//! `coordinator::metrics` exposes a service-wide latency histogram, and
+//! `repro serve --telemetry-out` persists the snapshot the `score` /
+//! `calibrate` subcommands consume.
+
+pub mod calibrate;
+pub mod hist;
+pub mod recorder;
+pub mod score;
+
+pub use calibrate::{bench_rows, calibrate, recalibrated_table, Calibration};
+pub use hist::{bin_of, HistSnapshot, LatencyHist, BINS, MAX_EXACT_TOTAL};
+pub use recorder::{CellKey, CellSnapshot, Recorder, TelemetrySnapshot, SCHEMA};
+pub use score::{score_cells, summarize, ScoreSummary, ScoredCell};

@@ -1,0 +1,402 @@
+//! Per-cell latency recording: the serving coordinator feeds one
+//! [`Recorder`] its per-batch execution seconds, keyed exactly the way
+//! campaign artifacts and the selection table key their predictions —
+//! `(topology class, router size bucket, algorithm)` — so served reality
+//! and offline prediction join on equal keys (`super::score`).
+//!
+//! The recorder is shared across services (an `Arc` per coordinator):
+//! cells from different topologies (different `n`) accumulate side by
+//! side, which is what gives the calibrator (`super::calibrate`) the
+//! distinct-`n` spread the §3.4 fit needs.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::ApiError;
+use crate::util::json::Json;
+
+use super::hist::{saturating_total_add, HistSnapshot, LatencyHist, MAX_EXACT_TOTAL};
+
+/// Telemetry artifact schema tag (bump on any on-disk format change; the
+/// golden-file test in `rust/tests/telemetry_e2e.rs` pins the bytes).
+pub const SCHEMA: &str = "telemetry/v1";
+
+/// One recorded cell's identity — the join key against predictions.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    /// Topology class: the campaign topo spec string (`single:8`, `ss24`).
+    pub class: String,
+    /// Router size bucket of the fused payload
+    /// ([`crate::coordinator::PlanRouter::bucket`]).
+    pub bucket: u32,
+    /// The algorithm that served the batch (`AlgoSpec` display form).
+    pub algo: String,
+}
+
+impl fmt::Display for CellKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}|2^{}|{}", self.class, self.bucket, self.algo)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Cell {
+    n_workers: AtomicU64,
+    floats: AtomicU64,
+    hist: LatencyHist,
+}
+
+/// Thread-safe per-(class, bucket, algo) latency recorder. The cell map
+/// takes a short lock to resolve the `Arc<Cell>`; the counters inside a
+/// cell are lock-free atomics.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    cells: Mutex<BTreeMap<CellKey, Arc<Cell>>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Record one served batch: `floats` fused floats took `secs` seconds
+    /// on an `n_workers`-server topology of class `class`, served by
+    /// `algo`, landing in router size bucket `bucket`.
+    pub fn record(
+        &self,
+        class: &str,
+        n_workers: usize,
+        bucket: u32,
+        algo: &str,
+        floats: usize,
+        secs: f64,
+    ) {
+        let cell = {
+            let mut cells = self.cells.lock().unwrap();
+            cells
+                .entry(CellKey {
+                    class: class.to_string(),
+                    bucket,
+                    algo: algo.to_string(),
+                })
+                .or_default()
+                .clone()
+        };
+        cell.n_workers.store(n_workers as u64, Ordering::Relaxed);
+        // Saturating at the JSON-exact ceiling, like the histogram's
+        // nanosecond sum (see `hist::MAX_EXACT_TOTAL`).
+        saturating_total_add(&cell.floats, floats as u64);
+        cell.hist.record_secs(secs);
+    }
+
+    /// Plain-data copy of every cell.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let cells = self.cells.lock().unwrap();
+        TelemetrySnapshot {
+            cells: cells
+                .iter()
+                .map(|(k, c)| {
+                    (
+                        k.clone(),
+                        CellSnapshot {
+                            n_workers: c.n_workers.load(Ordering::Relaxed) as usize,
+                            floats: c.floats.load(Ordering::Relaxed),
+                            hist: c.hist.snapshot(),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One cell's accumulated observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSnapshot {
+    /// Worker count of the serving topology (the fit's `n`).
+    pub n_workers: usize,
+    /// Total fused floats across the cell's batches.
+    pub floats: u64,
+    pub hist: HistSnapshot,
+}
+
+impl CellSnapshot {
+    /// Batches observed in this cell.
+    pub fn batches(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Mean fused payload per batch in floats (the fit's `s`).
+    pub fn mean_floats(&self) -> f64 {
+        let n = self.batches();
+        if n == 0 {
+            0.0
+        } else {
+            self.floats as f64 / n as f64
+        }
+    }
+
+    /// Mean observed batch seconds (the fit's `time`).
+    pub fn mean_secs(&self) -> f64 {
+        self.hist.mean_secs()
+    }
+}
+
+/// The on-disk telemetry artifact: every cell, canonically ordered.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetrySnapshot {
+    pub cells: BTreeMap<CellKey, CellSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Observed buckets per class — the cell grid a recalibrated
+    /// selection table is rebuilt over
+    /// ([`crate::campaign::table_from_model`]).
+    pub fn buckets_by_class(&self) -> BTreeMap<String, BTreeSet<u32>> {
+        let mut out: BTreeMap<String, BTreeSet<u32>> = BTreeMap::new();
+        for key in self.cells.keys() {
+            out.entry(key.class.clone()).or_default().insert(key.bucket);
+        }
+        out
+    }
+
+    /// Every cell's histogram folded into one service-wide distribution.
+    pub fn overall_hist(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for cell in self.cells.values() {
+            out.merge(&cell.hist);
+        }
+        out
+    }
+
+    /// Fold another snapshot's cells into this one (same-key cells merge
+    /// their histograms and float counts).
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        for (k, c) in &other.cells {
+            match self.cells.entry(k.clone()) {
+                std::collections::btree_map::Entry::Vacant(v) => {
+                    v.insert(c.clone());
+                }
+                std::collections::btree_map::Entry::Occupied(mut o) => {
+                    let cur = o.get_mut();
+                    cur.floats = cur.floats.saturating_add(c.floats).min(MAX_EXACT_TOTAL);
+                    cur.hist.merge(&c.hist);
+                    cur.n_workers = c.n_workers;
+                }
+            }
+        }
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let cells = self
+            .cells
+            .iter()
+            .map(|(k, c)| {
+                Json::obj(vec![
+                    ("algo", Json::str(&k.algo)),
+                    ("batches", Json::num(c.batches() as f64)),
+                    ("bucket", Json::num(k.bucket as f64)),
+                    ("class", Json::str(&k.class)),
+                    ("floats", Json::num(c.floats as f64)),
+                    ("hist", c.hist.bins_to_json()),
+                    ("n_servers", Json::num(c.n_workers as f64)),
+                    ("sum_nanos", Json::num(c.hist.sum_nanos as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("cells", Json::Arr(cells)),
+            ("schema", Json::str(SCHEMA)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TelemetrySnapshot, ApiError> {
+        let bad = |what: String| ApiError::BadRequest {
+            reason: format!("telemetry snapshot: {what}"),
+        };
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing schema tag".into()))?;
+        if schema != SCHEMA {
+            return Err(bad(format!(
+                "schema {schema:?} is not the supported {SCHEMA:?}"
+            )));
+        }
+        let Some(Json::Arr(cells)) = v.get("cells") else {
+            return Err(bad("missing cells array".into()));
+        };
+        let mut out = BTreeMap::new();
+        for cell in cells {
+            let s = |k: &str| -> Result<String, ApiError> {
+                cell.get(k)
+                    .and_then(Json::as_str)
+                    .map(String::from)
+                    .ok_or_else(|| bad(format!("cell missing string field {k:?}")))
+            };
+            let u = |k: &str| -> Result<u64, ApiError> {
+                cell.get(k)
+                    .and_then(Json::as_f64)
+                    .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXACT_TOTAL as f64)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| bad(format!("cell missing JSON-exact integer field {k:?}")))
+            };
+            let key = CellKey {
+                class: s("class")?,
+                bucket: u("bucket")? as u32,
+                algo: s("algo")?,
+            };
+            let hist = HistSnapshot::bins_from_json(
+                cell.get("hist").ok_or_else(|| bad("cell missing hist".into()))?,
+                u("sum_nanos")?,
+            )?;
+            if hist.count() != u("batches")? {
+                return Err(bad(format!(
+                    "cell {key}: batches field disagrees with histogram count"
+                )));
+            }
+            let snap = CellSnapshot {
+                n_workers: u("n_servers")? as usize,
+                floats: u("floats")?,
+                hist,
+            };
+            if out.insert(key.clone(), snap).is_some() {
+                return Err(bad(format!("duplicate cell {key}")));
+            }
+        }
+        Ok(TelemetrySnapshot { cells: out })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        fs::write(path, format!("{}\n", self.to_json())).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<TelemetrySnapshot, ApiError> {
+        let text = fs::read_to_string(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })?;
+        let v = Json::parse(&text).map_err(|e| ApiError::BadRequest {
+            reason: format!("{}: {e}", path.display()),
+        })?;
+        TelemetrySnapshot::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        rec.record("single:8", 8, 20, "ring", 1_048_576, 0.016);
+        rec.record("single:4", 4, 16, "cps", 65_536, 0.001);
+        rec.snapshot()
+    }
+
+    #[test]
+    fn cells_accumulate_per_key() {
+        let snap = sample();
+        assert_eq!(snap.cells.len(), 3);
+        let cps = &snap.cells[&CellKey {
+            class: "single:8".into(),
+            bucket: 16,
+            algo: "cps".into(),
+        }];
+        assert_eq!(cps.batches(), 2);
+        assert_eq!(cps.n_workers, 8);
+        assert_eq!(cps.floats, 131_072);
+        assert!((cps.mean_floats() - 65_536.0).abs() < 1e-9);
+        assert!((cps.mean_secs() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buckets_by_class_lists_the_observed_grid() {
+        let grid = sample().buckets_by_class();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(
+            grid["single:8"].iter().copied().collect::<Vec<_>>(),
+            vec![16, 20]
+        );
+        assert_eq!(
+            grid["single:4"].iter().copied().collect::<Vec<_>>(),
+            vec![16]
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_is_canonical() {
+        let snap = sample();
+        let back = TelemetrySnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.to_json().to_string(), snap.to_json().to_string());
+    }
+
+    #[test]
+    fn schema_violations_are_typed_errors() {
+        // Wrong schema tag.
+        let mut v = sample().to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("schema".into(), Json::str("telemetry/v0"));
+        }
+        assert!(TelemetrySnapshot::from_json(&v).is_err());
+        // Batches disagreeing with the histogram.
+        let mut v = sample().to_json();
+        if let Json::Obj(m) = &mut v {
+            let Some(Json::Arr(cells)) = m.get_mut("cells") else {
+                panic!()
+            };
+            let Json::Obj(cell) = &mut cells[0] else { panic!() };
+            cell.insert("batches".into(), Json::num(99.0));
+        }
+        match TelemetrySnapshot::from_json(&v) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("disagrees"), "{reason}")
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_folds_same_key_cells() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b);
+        let cps = &a.cells[&CellKey {
+            class: "single:8".into(),
+            bucket: 16,
+            algo: "cps".into(),
+        }];
+        assert_eq!(cps.batches(), 4);
+        assert_eq!(cps.floats, 262_144);
+        assert_eq!(a.overall_hist().count(), 8);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "genmodel_telemetry_{}.json",
+            std::process::id()
+        ));
+        let snap = sample();
+        snap.save(&path).unwrap();
+        let back = TelemetrySnapshot::load(&path).unwrap();
+        assert_eq!(back, snap);
+        let _ = std::fs::remove_file(&path);
+    }
+}

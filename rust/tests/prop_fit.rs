@@ -1,0 +1,148 @@
+//! Property tests for the §3.4 parameter-fitting toolkit
+//! (`model/fit.rs`): synthetic benchmark rows generated from *known*
+//! `(α, 2β+γ, δ, ε, w_t)` must round-trip through `fit` — the recovered
+//! parameters reproduce every row's time, and when the incast threshold
+//! is observable the parameters themselves come back, including at the
+//! piecewise `w_t` scan's edges (the minimum candidate `w_t = 2` and the
+//! "no incast in the data" maximum `w_t = max_n + 1`).
+
+use genmodel::model::expressions::{genmodel, PlanType};
+use genmodel::model::fit::{fit, BenchRow, FittedParams};
+use genmodel::model::params::ModelParams;
+use genmodel::util::prop;
+use genmodel::util::rng::Rng;
+
+fn synth_rows(p: &ModelParams, sizes: &[f64], max_n: usize) -> Vec<BenchRow> {
+    let mut rows = Vec::new();
+    for n in 2..=max_n {
+        for &s in sizes {
+            rows.push(BenchRow {
+                n,
+                s,
+                time: genmodel(&PlanType::ColocatedPs, n, s, p).total(),
+            });
+        }
+    }
+    rows
+}
+
+/// Log-uniform draw in `[lo, hi]` — parameters live on decade scales.
+fn draw(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    (lo.ln() + rng.next_f64() * (hi.ln() - lo.ln())).exp()
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-30)
+}
+
+/// Every row's time must be reproduced by the fitted parameters.
+fn check_prediction_roundtrip(f: &FittedParams, rows: &[BenchRow]) -> Result<(), String> {
+    for r in rows {
+        let pred = f.predict_cps(r.n, r.s);
+        if rel(pred, r.time) > 1e-6 {
+            return Err(format!(
+                "prediction drifted at n={} s={:.2e}: {pred} vs {}",
+                r.n, r.s, r.time
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn fit_roundtrips_known_parameters() {
+    prop::run("fit-roundtrip", 24, |rng| {
+        let max_n = 12 + rng.gen_range(0, 3); // 12..=15 (inclusive draw)
+        // w_t across the whole candidate range, both edges included:
+        // 2 (minimum scanned) ..= max_n + 1 (no incast in the data).
+        let w_t = 2 + rng.gen_range(0, max_n - 1);
+        let p = ModelParams {
+            alpha: draw(rng, 1e-3, 1e-2),
+            beta: draw(rng, 2e-9, 2e-8),
+            gamma: draw(rng, 1e-10, 1e-9),
+            delta: draw(rng, 5e-11, 5e-10),
+            epsilon: draw(rng, 5e-11, 5e-10),
+            w_t,
+        };
+        let rows = synth_rows(&p, &[2e7, 5e7, 1e8], max_n);
+        let f = fit(&rows).map_err(|e| e.to_string())?;
+        // Whatever threshold the scan kept, the fit must reproduce the
+        // data (the piecewise pieces can alias near the edges; times
+        // cannot).
+        check_prediction_roundtrip(&f, &rows)?;
+        if f.rms_rel_residual > 1e-6 {
+            return Err(format!("residual too large: {:.3e}", f.rms_rel_residual));
+        }
+        // With at least one n strictly above the threshold the incast
+        // term is observable: full parameter recovery, threshold
+        // included.
+        if w_t < max_n {
+            if f.w_t != w_t {
+                return Err(format!("w_t: fitted {} vs true {w_t}", f.w_t));
+            }
+            for (name, got, want, tol) in [
+                ("alpha", f.alpha, p.alpha, 1e-4),
+                (
+                    "2b+g",
+                    f.two_beta_plus_gamma,
+                    p.two_beta_plus_gamma(),
+                    1e-4,
+                ),
+                ("delta", f.delta, p.delta, 1e-2),
+                ("epsilon", f.epsilon, p.epsilon, 1e-3),
+            ] {
+                if rel(got, want) > tol {
+                    return Err(format!("{name}: fitted {got:.6e} vs true {want:.6e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn w_t_at_the_minimum_scan_candidate_is_recovered() {
+    // w_t = 2: every n ≥ 3 pays incast — the scan's lowest candidate
+    // must win, not an interior one compensating through ε.
+    let p = ModelParams {
+        w_t: 2,
+        ..ModelParams::cpu_testbed()
+    };
+    let rows = synth_rows(&p, &[2e7, 1e8], 12);
+    let f = fit(&rows).unwrap();
+    assert_eq!(f.w_t, 2, "{f:?}");
+    assert!(rel(f.epsilon, p.epsilon) < 1e-3, "eps {:.3e}", f.epsilon);
+    assert!(rel(f.alpha, p.alpha) < 1e-4);
+    check_prediction_roundtrip(&f, &rows).unwrap();
+}
+
+#[test]
+fn w_t_past_the_data_means_no_observable_incast() {
+    // w_t = max_n + 1: no row carries any incast excess — the scan's
+    // highest candidate. The fit must reproduce the data exactly and
+    // must not hallucinate an incast penalty for the swept range.
+    let max_n = 15;
+    let p = ModelParams {
+        w_t: max_n + 1,
+        ..ModelParams::cpu_testbed()
+    };
+    let rows = synth_rows(&p, &[2e7, 1e8], max_n);
+    let f = fit(&rows).unwrap();
+    assert!(f.rms_rel_residual < 1e-9, "{f:?}");
+    check_prediction_roundtrip(&f, &rows).unwrap();
+    // Either ε fitted to ~0, or the kept threshold charges no row in
+    // the data — both mean "no incast observed".
+    let max_excess = max_n.saturating_sub(f.w_t) as f64;
+    let worst_penalty =
+        2.0 * (max_n as f64 - 1.0) / max_n as f64 * 1e8 * max_excess * f.epsilon;
+    let smallest_time = rows
+        .iter()
+        .map(|r| r.time)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        worst_penalty < smallest_time * 1e-6,
+        "hallucinated incast: penalty {worst_penalty:.3e} (w_t {}, eps {:.3e})",
+        f.w_t,
+        f.epsilon
+    );
+}

@@ -1,0 +1,247 @@
+//! Telemetry & calibration end-to-end: the serving loop measures itself,
+//! the scorer exposes a mis-parameterized model, and the calibrator's
+//! refit re-routes traffic to the algorithm that genuinely wins under
+//! the true parameters — campaign → serve → measure → refit → reselect.
+//!
+//! Also pins the telemetry artifact's on-disk schema byte-for-byte
+//! against `rust/tests/fixtures/telemetry_smoke.json` (mirroring the
+//! selection-table golden in `campaign.rs`), so the format `repro
+//! score`/`repro calibrate` consume cannot drift silently.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use genmodel::api::{AlgoSpec, Engine};
+use genmodel::bench::workloads::parse_topology;
+use genmodel::campaign::table_from_model;
+use genmodel::coordinator::{
+    AllReduceService, BatchPolicy, ObserveMode, PlanRouter, ServiceConfig,
+};
+use genmodel::model::params::{Environment, ModelParams};
+use genmodel::runtime::ReducerSpec;
+use genmodel::telemetry::{self, Recorder, TelemetrySnapshot};
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+fn tensors(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32_vec(len)).collect()
+}
+
+// ---- golden file: the telemetry on-disk schema --------------------------
+
+#[test]
+fn telemetry_snapshot_golden_file_roundtrip() {
+    // Deterministic observations: seconds chosen so the nanosecond
+    // rounding is exact and every derived field is an integer.
+    let rec = Recorder::new();
+    rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+    rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+    rec.record("single:8", 8, 20, "ring", 1_048_576, 0.016);
+    let snap = rec.snapshot();
+
+    let golden = include_str!("fixtures/telemetry_smoke.json");
+    let path = std::env::temp_dir().join(format!(
+        "genmodel_telemetry_golden_{}.json",
+        std::process::id()
+    ));
+    snap.save(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        written, golden,
+        "telemetry snapshot schema drifted from \
+         rust/tests/fixtures/telemetry_smoke.json — if the schema change \
+         is intentional, bump telemetry::SCHEMA and regenerate the fixture"
+    );
+    // And the pinned bytes parse back to the identical snapshot.
+    let back = TelemetrySnapshot::load(&path).unwrap();
+    assert_eq!(back, snap);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- the calibration loop, end to end -----------------------------------
+
+/// The "true" fabric the service actually runs on: the paper's CPU
+/// testbed parameters with a 20× incast slope — a congested fabric whose
+/// ε term dominates at high fan-in, as §3.2 measures.
+fn true_params() -> ModelParams {
+    let p = ModelParams::cpu_testbed();
+    ModelParams {
+        epsilon: p.epsilon * 20.0,
+        ..p
+    }
+}
+
+/// The deliberately mis-parameterized model the stale selection table
+/// was built from: blind to the paper's two new terms (δ = ε = 0) — the
+/// classic (α, β, γ) worldview.
+fn stale_params() -> ModelParams {
+    ModelParams {
+        delta: 0.0,
+        epsilon: 0.0,
+        ..ModelParams::cpu_testbed()
+    }
+}
+
+/// Serve a deterministic CPS workload through sim-backed coordinators on
+/// six worker counts, all feeding one shared recorder — the distinct-`n`
+/// spread the §3.4 fit needs, recorded under the campaign's class keys.
+fn serve_workload(recorder: &Arc<Recorder>) {
+    for n in [4usize, 6, 8, 10, 12, 15] {
+        let cfg = ServiceConfig {
+            policy: BatchPolicy::with_cap(1), // every job its own batch
+            flush_after: Duration::from_millis(1),
+            algo: AlgoSpec::Cps,
+            observe: ObserveMode::Sim, // deterministic observed seconds
+            ..ServiceConfig::default()
+        }
+        .with_telemetry(recorder.clone(), &format!("single:{n}"));
+        let svc = AllReduceService::start(
+            single_switch(n),
+            Environment::uniform(true_params()),
+            ReducerSpec::Scalar,
+            cfg,
+        );
+        for (i, &len) in [65_536usize, 1 << 20].iter().enumerate() {
+            let res = svc
+                .allreduce(tensors(n, len, (n * 10 + i) as u64))
+                .unwrap();
+            assert_eq!(res.algo, "cps");
+            assert!(res.observed_secs > 0.0);
+        }
+        svc.stop();
+    }
+}
+
+#[test]
+fn score_detects_drift_and_calibration_reroutes_the_incast_bucket() {
+    let recorder = Arc::new(Recorder::new());
+    serve_workload(&recorder);
+    let snap = recorder.snapshot();
+    assert_eq!(snap.cells.len(), 12, "6 classes × 2 buckets: {snap:?}");
+    for cell in snap.cells.values() {
+        assert_eq!(cell.batches(), 1);
+    }
+
+    // The stale table: winners derived under the blind parameters over
+    // exactly the served grid. The classic model's verdict is CPS
+    // everywhere (fewest rounds, optimal bandwidth).
+    let grid = snap.buckets_by_class();
+    let algos = [
+        AlgoSpec::Cps,
+        AlgoSpec::Hcps { factors: vec![5, 3] },
+        AlgoSpec::Ring,
+    ];
+    let stale_env = Environment::uniform(stale_params());
+    let stale = table_from_model(&grid, &algos, &stale_env).unwrap();
+    let stale_choice = stale.lookup("single:15", 1 << 20).unwrap().clone();
+    assert_eq!(stale_choice.algo, "cps", "the blind model routes cps");
+
+    // 1. The Scorer detects the mispredicted cells: observed (sim under
+    // the congested fabric) vs predicted (blind model). The incast-heavy
+    // big-n big-bucket cell is the worst offender by far; the
+    // incast-free small-n cells score close.
+    let scored = telemetry::score_cells(&snap, &[], |class, bucket, algo| {
+        let topo = parse_topology(class).ok()?;
+        let spec = AlgoSpec::parse(algo).ok()?;
+        Engine::new(topo, stale_env.clone())
+            .predict_bucket(&spec, bucket)
+            .ok()
+    });
+    let summary = telemetry::summarize(&scored);
+    assert_eq!(summary.matched, 12, "every cell got a prediction");
+    assert!(
+        summary.max_abs_rel_err > 0.5,
+        "the blind model must mispredict the congested fabric badly, \
+         got max |rel err| {:.3}",
+        summary.max_abs_rel_err
+    );
+    assert!(
+        summary.worst.as_deref().unwrap().contains("single:15"),
+        "the worst offender is the highest-fan-in class: {:?}",
+        summary.worst
+    );
+    // score_cells orders worst-first and the incast-free 4-server rack
+    // scores far better than the 15-server one.
+    assert_eq!(scored[0].key.class, "single:15");
+    let small = scored
+        .iter()
+        .find(|c| c.key.class == "single:4" && c.key.bucket == 16)
+        .unwrap();
+    assert!(
+        small.rel_err().unwrap().abs() < 0.3,
+        "incast-free cell should score close: {:?}",
+        small.rel_err()
+    );
+
+    // 2. The Calibrator refits from the served (n, s, time) samples: the
+    // recovered ε must see the congestion the stale model is blind to.
+    let cal = telemetry::calibrate(&snap, true_params().beta).unwrap();
+    assert_eq!(cal.rows_used, 12);
+    assert!(
+        cal.params.epsilon > true_params().epsilon * 0.3,
+        "refit missed the incast slope: ε̂ = {:.3e} vs true {:.3e}",
+        cal.params.epsilon,
+        true_params().epsilon
+    );
+    assert!(
+        cal.params.alpha > 0.0 && cal.fitted.two_beta_plus_gamma > 0.0,
+        "{:?}",
+        cal.fitted
+    );
+
+    // 3. The recalibrated table re-routes the incast-heavy bucket to the
+    // hierarchical plan — a *different* winner than the stale table's...
+    let recal = telemetry::recalibrated_table(&snap, &cal, &algos).unwrap();
+    let recal_choice = recal.lookup("single:15", 1 << 20).unwrap().clone();
+    assert_ne!(
+        recal_choice.algo, stale_choice.algo,
+        "recalibration must change the routed winner for the incast bucket"
+    );
+    assert_eq!(recal_choice.algo, "hcps:5x3", "{recal:?}");
+    // ...that is genuinely cheaper under the true parameters.
+    let truth = Engine::new(single_switch(15), Environment::uniform(true_params()));
+    let new_s = truth
+        .predict_bucket(&AlgoSpec::parse(&recal_choice.algo).unwrap(), 20)
+        .unwrap();
+    let old_s = truth
+        .predict_bucket(&AlgoSpec::parse(&stale_choice.algo).unwrap(), 20)
+        .unwrap();
+    assert!(
+        new_s < old_s,
+        "recalibrated winner must beat the stale one under the true \
+         params: {new_s} vs {old_s}"
+    );
+    // Where the true params do NOT flip the winner (incast-free small
+    // bucket: CPS's two rounds still win), the refit leaves routing
+    // alone — calibration is surgical, not a blanket reroute.
+    assert_eq!(recal.lookup("single:15", 65_536).unwrap().algo, "cps");
+    assert_eq!(recal.lookup("single:4", 1 << 20).unwrap().algo, "cps");
+}
+
+// ---- telemetry keys join the serving path's own bucketing ---------------
+
+#[test]
+fn recorded_buckets_match_router_buckets() {
+    let recorder = Arc::new(Recorder::new());
+    let svc = AllReduceService::start(
+        single_switch(4),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig {
+            policy: BatchPolicy::with_cap(1),
+            flush_after: Duration::from_millis(1),
+            algo: AlgoSpec::Ring,
+            ..ServiceConfig::default()
+        }
+        .with_telemetry(recorder.clone(), "single:4"),
+    );
+    svc.allreduce(tensors(4, 3000, 1)).unwrap();
+    svc.stop();
+    let snap = recorder.snapshot();
+    assert_eq!(snap.cells.len(), 1);
+    let key = snap.cells.keys().next().unwrap();
+    assert_eq!(key.bucket, PlanRouter::bucket(3000));
+    assert_eq!(key.algo, "ring");
+    assert_eq!(key.class, "single:4");
+}

@@ -62,9 +62,19 @@ step cargo run --release -p genmodel --quiet -- campaign report --in target/camp
 # 6. Serve smoke through the freshly derived selection table: the
 #    selection-aware batcher's split/fuse counts merge into
 #    BENCH_campaign.json (serve_batches_* keys) next to the sweep
-#    throughput, so one JSON carries the whole smoke story.
+#    throughput, so one JSON carries the whole smoke story. The serve
+#    also emits its per-(class, bucket, algo) telemetry snapshot.
 step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 32 --tensor 2048 \
     --scalar --selection target/selection_smoke.json --class single:4 \
+    --bench-out BENCH_campaign.json --telemetry-out target/telemetry_smoke.json
+
+# 7. Score served reality against the smoke campaign's predictions:
+#    `repro score` schema-validates the telemetry histogram JSON (it
+#    refuses malformed snapshots) and merges the p95 / accuracy figures
+#    into BENCH_campaign.json (score_*, telemetry_p95_s keys) — the
+#    Fig. 8-style accuracy trajectory accumulates beside throughput.
+step cargo run --release -p genmodel --quiet -- score \
+    --telemetry target/telemetry_smoke.json --in target/campaign_smoke.jsonl \
     --bench-out BENCH_campaign.json
 
 exit $fail
