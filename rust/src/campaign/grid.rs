@@ -8,11 +8,12 @@
 //! list — the unit of work the [`super::runner`] distributes over threads
 //! and memoizes by [`Scenario::hash`].
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 use crate::api::{applicable_specs, AlgoSpec, ApiError};
 use crate::bench::workloads::parse_topology;
+use crate::coordinator::PlanRouter;
 use crate::model::params::Environment;
 use crate::util::rng::fnv1a;
 
@@ -168,6 +169,27 @@ impl ScenarioGrid {
                     "unknown campaign grid {name:?} (known: fig11, smoke, gpu-smoke)"
                 ),
             }),
+        }
+    }
+
+    /// Focus this grid on exactly the given `(topology class → size
+    /// buckets)` cells — the **targeted sub-grid** a drift-triggered
+    /// recalibration re-runs: topologies become the cells' classes and
+    /// the size ladder becomes the representative size of every listed
+    /// bucket ([`PlanRouter::bucket_size`]), while the sweep
+    /// *configuration* (algorithm set, environment, exec spot cap) is
+    /// kept. The size axis is the union across classes (a grid is a
+    /// cross product), so a multi-class restriction may sweep a few
+    /// extra cells — a superset of the offenders, never a subset.
+    pub fn restrict_to(&self, cells: &BTreeMap<String, BTreeSet<u32>>) -> ScenarioGrid {
+        let buckets: BTreeSet<u32> = cells.values().flatten().copied().collect();
+        ScenarioGrid {
+            name: format!("{}-restricted", self.name),
+            topos: cells.keys().cloned().collect(),
+            sizes: buckets.into_iter().map(PlanRouter::bucket_size).collect(),
+            algos: self.algos.clone(),
+            env: self.env,
+            exec_spot_cap: self.exec_spot_cap,
         }
     }
 
@@ -348,6 +370,35 @@ mod tests {
             }
             other => panic!("expected BadRequest, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn restrict_to_focuses_the_grid_on_the_named_cells() {
+        let grid = ScenarioGrid {
+            name: "drift".into(),
+            topos: vec!["single:4".into(), "single:8".into(), "single:15".into()],
+            sizes: vec![1e5, 1e6, 1e8],
+            algos: vec!["cps".into(), "ring".into()],
+            env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
+        };
+        let cells = BTreeMap::from([
+            ("single:15".to_string(), BTreeSet::from([20u32])),
+            ("single:4".to_string(), BTreeSet::from([14u32, 20])),
+        ]);
+        let sub = grid.restrict_to(&cells);
+        assert_eq!(sub.name, "drift-restricted");
+        assert_eq!(sub.topos, vec!["single:15".to_string(), "single:4".into()]);
+        // Sizes are the union of the listed buckets' representative
+        // sizes, ascending and deduplicated.
+        assert_eq!(sub.sizes, vec![(1u64 << 14) as f64, (1u64 << 20) as f64]);
+        // The sweep configuration rides along unchanged.
+        assert_eq!(sub.algos, grid.algos);
+        assert_eq!(sub.env, grid.env);
+        let scenarios = sub.expand().unwrap();
+        assert_eq!(scenarios.len(), 2 /* topos */ * 2 /* sizes */ * 2 /* algos */);
+        // An empty restriction expands to a typed error, not a panic.
+        assert!(grid.restrict_to(&BTreeMap::new()).expand().is_err());
     }
 
     #[test]

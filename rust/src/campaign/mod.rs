@@ -14,7 +14,10 @@
 //!   presets [`ScenarioGrid::fig11`] (the paper's six evaluation
 //!   topologies, ≥ 200 scenarios), [`ScenarioGrid::smoke`] (CI-sized),
 //!   and [`ScenarioGrid::gpu_smoke`] (the §5.2 GPU environment with
-//!   executed-backend spot-check rows).
+//!   executed-backend spot-check rows). [`ScenarioGrid::restrict_to`]
+//!   focuses a grid on an explicit (class → buckets) cell set — the
+//!   drift autopilot's targeted sub-grid, priced in-process by
+//!   [`price_grid`] under a fitted (or the serving) environment.
 //! * [`runner`] — a `std::thread::scope` worker pool sweeping the grid
 //!   through the analytic and simulated backends, streaming JSONL,
 //!   memoizing by scenario hash (interrupted campaigns resume), and
@@ -40,7 +43,9 @@ pub mod runner;
 pub mod select;
 
 pub use grid::{EnvKind, Scenario, ScenarioGrid};
-pub use runner::{evaluate_scenario, load_rows, run_campaign, CampaignRow, RunConfig, RunSummary};
+pub use runner::{
+    evaluate_scenario, load_rows, price_grid, run_campaign, CampaignRow, RunConfig, RunSummary,
+};
 pub use select::{
     table_from_choices, table_from_entries, table_from_model, Boundary, Choice, Metric,
     SelectionTable,

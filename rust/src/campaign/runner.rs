@@ -261,6 +261,49 @@ pub fn evaluate_scenario(sc: &Scenario) -> CampaignRow {
     row
 }
 
+/// Price every scenario of `grid` through the **analytic backend under
+/// an explicit parameter environment**, overriding the grid's `EnvKind`
+/// — the drift autopilot's targeted re-run path
+/// (`coordinator::DriftMonitor`): a recalibration re-prices a
+/// [`ScenarioGrid::restrict_to`] sub-grid under freshly fitted (or the
+/// service's own) parameters, in process, with no JSONL artifact and no
+/// worker pool. Unlike [`evaluate_scenario`] this is strict: any
+/// evaluation failure aborts with the typed error, because a partially
+/// priced recalibration must not be swapped into a serving router.
+/// Rows carry env `"recalibrated"` and feed
+/// [`super::SelectionTable::from_rows`] like any swept artifact.
+pub fn price_grid(
+    grid: &ScenarioGrid,
+    env: &crate::model::params::Environment,
+) -> Result<Vec<CampaignRow>, ApiError> {
+    let mut rows = Vec::new();
+    let mut engine: Option<(String, Engine)> = None; // per-topo reuse
+    for sc in grid.expand()? {
+        if engine.as_ref().map(|(t, _)| t.as_str()) != Some(sc.topo.as_str()) {
+            let topo = parse_topology(&sc.topo)?;
+            engine = Some((sc.topo.clone(), Engine::new(topo, env.clone())));
+        }
+        let (_, eng) = engine.as_ref().expect("engine just set");
+        let ev = eng.evaluate(&sc.algo, sc.size, Backend::Analytic)?;
+        let key = format!("{}|{}|{:e}|recalibrated", sc.topo, sc.algo, sc.size);
+        rows.push(CampaignRow {
+            hash: format!("{:016x}", crate::util::rng::fnv1a(key.as_bytes())),
+            key,
+            topo: sc.topo.clone(),
+            topo_name: sc.topo_name.clone(),
+            n_servers: sc.n_servers,
+            algo: sc.algo.to_string(),
+            size: sc.size,
+            env: "recalibrated".into(),
+            model_s: Some(ev.seconds),
+            sim_s: None,
+            exec_s: None,
+            error: None,
+        });
+    }
+    Ok(rows)
+}
+
 /// Run (or resume) a campaign. See the module docs for the concurrency
 /// and determinism contract.
 pub fn run_campaign(grid: &ScenarioGrid, cfg: &RunConfig) -> Result<RunSummary, ApiError> {
@@ -491,6 +534,48 @@ mod tests {
         }
         assert_eq!(fs::read(&out).unwrap(), before, "artifact must be untouched");
         let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn price_grid_reprices_under_the_explicit_environment() {
+        use crate::model::params::{Environment, ModelParams};
+        // The same grid priced under blind (δ=ε=0) vs full parameters
+        // must produce different analytic seconds — the env override is
+        // real, not the grid's EnvKind.
+        let grid = ScenarioGrid {
+            name: "t".into(),
+            topos: vec!["single:15".into()],
+            sizes: vec![(1u64 << 25) as f64],
+            algos: vec!["cps".into(), "hcps:5x3".into()],
+            env: EnvKind::Paper, // overridden below
+            exec_spot_cap: 0.0,
+        };
+        let blind = ModelParams {
+            delta: 0.0,
+            epsilon: 0.0,
+            ..ModelParams::cpu_testbed()
+        };
+        let a = price_grid(&grid, &Environment::uniform(blind)).unwrap();
+        let b = price_grid(&grid, &Environment::uniform(ModelParams::cpu_testbed())).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.env, "recalibrated");
+            assert!(x.model_s.unwrap() > 0.0);
+            assert!(x.sim_s.is_none() && x.error.is_none());
+        }
+        let t_a = crate::campaign::SelectionTable::from_rows(&a, crate::campaign::Metric::Model);
+        let t_b = crate::campaign::SelectionTable::from_rows(&b, crate::campaign::Metric::Model);
+        // Blind params pick CPS; the full incast-aware params at n=15
+        // flip the big bucket hierarchical (the paper's §3 point — same
+        // expectation as the select.rs table_from_model test).
+        assert_eq!(t_a.lookup("single:15", 1 << 25).unwrap().algo, "cps");
+        assert_eq!(t_b.lookup("single:15", 1 << 25).unwrap().algo, "hcps:5x3");
+        // Strictness: a malformed topology aborts with the typed error.
+        let mut bad = grid.clone();
+        bad.topos = vec!["sym:16".into()];
+        assert!(price_grid(&bad, &Environment::paper()).is_err());
     }
 
     #[test]

@@ -252,6 +252,23 @@ impl SelectionTable {
             .collect()
     }
 
+    /// Overlay `patch`'s cells onto this table — same-(class, bucket)
+    /// cells are replaced, everything else is kept. This is how a
+    /// **targeted** recalibration lands: the drift autopilot re-prices
+    /// only the offending cells and merges them over the active table,
+    /// so buckets that were predicting fine keep their winners (and
+    /// their margins) untouched. Class keys merge by exact spelling; the
+    /// serving lookup resolves exact matches first, so a re-spelled
+    /// class shadows rather than corrupts a differently-cased original.
+    pub fn merge_cells_from(&mut self, patch: &SelectionTable) {
+        for (class, cells) in &patch.classes {
+            let into = self.classes.entry(class.clone()).or_default();
+            for (bucket, choice) in cells {
+                into.insert(*bucket, choice.clone());
+            }
+        }
+    }
+
     // ---- serialization ---------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -700,6 +717,36 @@ mod tests {
             }
             other => panic!("expected BadRequest naming the class, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn merge_cells_from_is_surgical() {
+        let mut active = table_from_choices(
+            Metric::Model,
+            &[
+                ("ss24", 10, "cps", 0.2, 0.6),
+                ("ss24", 20, "cps", 1.0, 1.5),
+                ("single:8", 14, "ring", 0.1, 0.2),
+            ],
+        );
+        let patch = table_from_choices(
+            Metric::Model,
+            &[
+                ("ss24", 20, "gentree", 0.8, 1.1), // replaces the stale cell
+                ("ss24", 25, "ring", 3.0, 4.0),    // adds a new bucket
+            ],
+        );
+        active.merge_cells_from(&patch);
+        assert_eq!(active.len(), 5);
+        // Patched and added cells carry the patch's numbers…
+        let big = active.lookup("ss24", 1 << 20).unwrap();
+        assert_eq!((big.algo.as_str(), big.seconds), ("gentree", 0.8));
+        assert_eq!(active.lookup("ss24", 1 << 25).unwrap().algo, "ring");
+        // …while untouched cells (other buckets, other classes) keep
+        // winner, seconds, and margin.
+        let small = active.lookup("ss24", 1 << 10).unwrap();
+        assert_eq!((small.algo.as_str(), small.seconds, small.runner_up), ("cps", 0.2, 0.6));
+        assert_eq!(active.lookup("single:8", 1 << 14).unwrap().algo, "ring");
     }
 
     #[test]

@@ -40,6 +40,15 @@ use super::router::{nearest_bucket, PlanRouter};
 /// beat its runner-up by ≥ 25% before the batcher breaks a fuse for it.
 pub const DEFAULT_MIN_SPLIT_MARGIN: f64 = 1.25;
 
+/// Default [`BatchPolicy::flush_floor`]: the shortest wait time-aware
+/// flushing may impose. A selection table predicting a microsecond-scale
+/// round for a small bucket would otherwise shrink the flush window to
+/// effectively zero, degenerating the leader into busy-spin flushing of
+/// single-job batches — the fuse never forms, which defeats the α-term
+/// amortization batching exists for. 100 µs is well under any real
+/// AllReduce round while still letting a burst of submissions queue.
+pub const DEFAULT_FLUSH_FLOOR: Duration = Duration::from_micros(100);
+
 /// One pending job's metadata.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PendingJob {
@@ -221,6 +230,12 @@ pub struct BatchPolicy {
     /// Predicted per-bucket round seconds from a selection table. `None`:
     /// the fixed flush window applies unchanged ([`Self::flush_window`]).
     pub bucket_seconds: Option<BucketSeconds>,
+    /// The shortest window time-aware flushing may return
+    /// ([`DEFAULT_FLUSH_FLOOR`]): a tiny predicted round time clamps up
+    /// to this floor instead of busy-spinning single-job flushes. The
+    /// fixed window itself is never inflated — a `flush_after` below the
+    /// floor still governs.
+    pub flush_floor: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -231,6 +246,7 @@ impl Default for BatchPolicy {
             min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
             selection: None,
             bucket_seconds: None,
+            flush_floor: DEFAULT_FLUSH_FLOOR,
         }
     }
 }
@@ -259,9 +275,12 @@ impl BatchPolicy {
     /// the wait is capped at the selection table's predicted round time
     /// for the queue's current size bucket (nearest bucket, same clamp
     /// as routing); waiting longer than the round it saves is a strict
-    /// loss. Without bucket seconds (or with a degenerate prediction)
-    /// the fixed window is returned unchanged — byte-identical to the
-    /// pre-telemetry policy.
+    /// loss. A near-zero prediction cannot shrink the window below
+    /// [`Self::flush_floor`] — busy-spin flushing of single-job batches
+    /// would defeat batching outright — while the fixed window itself is
+    /// never extended by the floor. Without bucket seconds (or with a
+    /// degenerate prediction) the fixed window is returned unchanged —
+    /// byte-identical to the pre-telemetry policy.
     pub fn flush_window(&self, queued_floats: usize, default: Duration) -> Duration {
         let Some(&secs) = self
             .bucket_seconds
@@ -273,7 +292,7 @@ impl BatchPolicy {
         if !(secs.is_finite() && secs > 0.0) {
             return default;
         }
-        default.min(Duration::from_secs_f64(secs))
+        default.min(Duration::from_secs_f64(secs).max(self.flush_floor))
     }
 }
 
@@ -617,6 +636,42 @@ mod tests {
         assert_eq!(policy.flush_window(1 << 24, fixed), fixed);
         assert_eq!(
             policy.flush_window(100, fixed),
+            Duration::from_secs_f64(0.0005)
+        );
+    }
+
+    #[test]
+    fn flush_window_clamps_tiny_predictions_to_the_floor() {
+        // A table predicting a 2 µs round for a small bucket must not
+        // collapse the window into a busy spin: the wait clamps up to
+        // the policy floor (100 µs default), still capped by the fixed
+        // window.
+        let fixed = Duration::from_millis(2);
+        let policy = BatchPolicy {
+            bucket_seconds: Some(BucketSeconds::from([(12, 2e-6)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        assert_eq!(policy.flush_window(3000, fixed), DEFAULT_FLUSH_FLOOR);
+        // The floor is configurable…
+        let policy = BatchPolicy {
+            flush_floor: Duration::from_micros(250),
+            ..policy
+        };
+        assert_eq!(
+            policy.flush_window(3000, fixed),
+            Duration::from_micros(250)
+        );
+        // …and never *extends* a fixed window that is already shorter
+        // than the floor: the operator's flush_after still governs.
+        let tight = Duration::from_micros(50);
+        assert_eq!(policy.flush_window(3000, tight), tight);
+        // Predictions above the floor are untouched by the clamp.
+        let policy = BatchPolicy {
+            bucket_seconds: Some(BucketSeconds::from([(12, 0.0005)])),
+            ..BatchPolicy::with_cap(1 << 22)
+        };
+        assert_eq!(
+            policy.flush_window(3000, fixed),
             Duration::from_secs_f64(0.0005)
         );
     }

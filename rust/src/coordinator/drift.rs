@@ -1,0 +1,455 @@
+//! The drift autopilot: detect when the serving table's predictions no
+//! longer match observed reality, recalibrate, and hot-swap — the
+//! ROADMAP's "drift-triggered campaign re-runs", with no operator in the
+//! loop.
+//!
+//! The paper's Fig. 8 argument is that the (α,β,γ) worldview mispredicts
+//! until the δ/ε terms are fitted to *observed* behavior; PR 4 built the
+//! measure→score→refit loop as CLI steps an operator had to run and then
+//! restart `serve` with the new table. [`DriftMonitor`] closes the loop
+//! inside the leader thread:
+//!
+//! 1. every [`DriftConfig::every`] flushed batches it snapshots the
+//!    service's [`Recorder`] and scores only the **delta since the last
+//!    swap** ([`TelemetrySnapshot::delta`]) against the active table's
+//!    own per-cell predicted seconds (`telemetry::score_cells` — cells
+//!    whose served algorithm is not the table's winner carry no
+//!    prediction and cannot trip the monitor);
+//! 2. when the worst finite |rel err| reaches
+//!    [`DriftConfig::threshold`], it recalibrates: the §3.4 Calibrator
+//!    first (when the recorder holds the multi-`n` CPS spread the fit
+//!    needs — e.g. a shared recorder across services), else a
+//!    **targeted re-price under the service's own environment**; either
+//!    way the work is restricted to the offending (class, bucket) cells
+//!    via [`ScenarioGrid::restrict_to`] + [`price_grid`], and the
+//!    repriced cells are merged *surgically* over the active table
+//!    ([`SelectionTable::merge_cells_from`]) — healthy buckets keep
+//!    their winners;
+//! 3. the rebuilt table swaps in atomically ([`TableHandle::swap`]),
+//!    stale router plans are evicted
+//!    ([`super::PlanRouter::evict_stale`]), and the swap/evict counters
+//!    and new epoch land in [`Metrics`]. Failures (too little data, an
+//!    unpriceable cell) are typed, counted (`drift_failures`), and leave
+//!    the active table serving — the autopilot degrades to the status
+//!    quo, never to a panic or a half-swapped table.
+//!
+//! The monitor runs synchronously in the leader between flush cycles, so
+//! a swap can never interleave with a batch: jobs are neither dropped
+//! nor duplicated across it, and the router rules, batcher split points,
+//! and flush windows all move to the new epoch together (one
+//! [`super::TableView`] per cycle).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::api::{AlgoSpec, ApiError};
+use crate::campaign::{price_grid, EnvKind, Metric, ScenarioGrid, SelectionTable};
+use crate::telemetry::{calibrate, score_cells, summarize, Recorder, TelemetrySnapshot};
+
+use super::handle::TableHandle;
+use super::metrics::Metrics;
+use super::router::PlanRouter;
+
+/// The §3.4 default link inverse bandwidth (the paper's 10 Gbps NIC),
+/// used to split the fitted `2β + γ` compound when the Calibrator path
+/// runs — the same default as `repro calibrate --beta`.
+pub const DEFAULT_LINK_BETA: f64 = 6.4e-9;
+
+/// Autopilot configuration ([`super::ServiceConfig::drift`]).
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Max finite |rel err| that trips a recalibration (0.5 = 50%).
+    pub threshold: f64,
+    /// Check cadence in flushed batches.
+    pub every: u64,
+    /// Link β splitting the Calibrator's `2β + γ` compound.
+    pub beta: f64,
+    /// Candidate algorithms the recalibrated cells choose between
+    /// (empty: every registry default applicable to the topology).
+    pub algos: Vec<AlgoSpec>,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            threshold: 0.5,
+            every: 64,
+            beta: DEFAULT_LINK_BETA,
+            algos: Vec::new(),
+        }
+    }
+}
+
+/// Leader-thread drift monitor (see module docs). Owned by the leader
+/// loop; all methods run between flush cycles.
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    recorder: Arc<Recorder>,
+    handle: Arc<TableHandle>,
+    /// Observations already consumed by the last swap — the delta base.
+    baseline: TelemetrySnapshot,
+    since_check: u64,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig, recorder: Arc<Recorder>, handle: Arc<TableHandle>) -> Self {
+        DriftMonitor {
+            cfg,
+            recorder,
+            handle,
+            baseline: TelemetrySnapshot::default(),
+            since_check: 0,
+        }
+    }
+
+    /// Account `batches` freshly flushed batches; when the check cadence
+    /// is reached, score the fresh observations and recalibrate if the
+    /// drift threshold trips. Returns `true` exactly when a table swap
+    /// happened — the leader then re-derives its per-cycle view.
+    pub fn observe_flush(&mut self, batches: u64, router: &PlanRouter, metrics: &Metrics) -> bool {
+        self.since_check += batches;
+        if self.since_check < self.cfg.every.max(1) {
+            return false;
+        }
+        self.since_check = 0;
+        self.check(router, metrics)
+    }
+
+    fn check(&mut self, router: &PlanRouter, metrics: &Metrics) -> bool {
+        metrics.add(&metrics.drift_checks, 1);
+        let snap = self.recorder.snapshot();
+        let fresh = snap.delta(&self.baseline);
+        if fresh.is_empty() {
+            return false;
+        }
+        let view = self.handle.view();
+        // Predictions come from the ACTIVE table itself: the winner's
+        // stored seconds for the cell's bucket (nearest-rule clamp, the
+        // same resolution routing uses). A cell served by an algorithm
+        // the table no longer routes — e.g. pre-swap traffic — gets no
+        // prediction and cannot trip the monitor again. Deliberate
+        // consequence of the clamp: traffic in a bucket the table never
+        // swept is scored against a different-size cell's seconds and
+        // reads as drift — which it is, in the sense that matters: the
+        // table carries no information at the served size yet routes it
+        // anyway. The triggered recalibration prices the *observed*
+        // bucket and merges the exact cell in, so the loop converges
+        // after one swap instead of clamping forever (pinned by the
+        // off_ladder test below).
+        let table = view.table.clone();
+        let scored = score_cells(&fresh, &[], |class, bucket, algo| {
+            let choice = table.lookup(class, PlanRouter::bucket_size(bucket) as usize)?;
+            (choice.algo == algo && choice.seconds.is_finite() && choice.seconds > 0.0)
+                .then_some(choice.seconds)
+        });
+        let summary = summarize(&scored);
+        if summary.matched == 0 || summary.max_abs_rel_err < self.cfg.threshold {
+            return false;
+        }
+        // The offending cells: everything at or past the threshold.
+        let mut offending: BTreeMap<String, BTreeSet<u32>> = BTreeMap::new();
+        for cell in &scored {
+            if cell
+                .rel_err()
+                .is_some_and(|e| e.abs() >= self.cfg.threshold)
+            {
+                offending
+                    .entry(cell.key.class.clone())
+                    .or_default()
+                    .insert(cell.key.bucket);
+            }
+        }
+        match self.rebuild(&snap, &offending, router) {
+            Ok(patch) => {
+                let mut next = (*view.table).clone();
+                next.merge_cells_from(&patch);
+                match self.handle.swap(next) {
+                    Ok((old, new)) => {
+                        let evicted = router.evict_stale(&old, &new);
+                        metrics.add(&metrics.drift_swaps, 1);
+                        metrics.add(&metrics.drift_evictions, evicted);
+                        metrics.drift_epoch.store(new.epoch, Ordering::Relaxed);
+                        // These observations are spent: the next check
+                        // scores only traffic the new table served.
+                        self.baseline = snap;
+                        eprintln!(
+                            "allreduce-leader: drift {:.0}% ≥ {:.0}% on {} cell(s) \
+                             (worst {}): recalibrated and hot-swapped table to epoch {} \
+                             ({} stale plan(s) evicted)",
+                            summary.max_abs_rel_err * 100.0,
+                            self.cfg.threshold * 100.0,
+                            offending.values().map(BTreeSet::len).sum::<usize>(),
+                            summary.worst.as_deref().unwrap_or("-"),
+                            new.epoch,
+                            evicted,
+                        );
+                        true
+                    }
+                    Err(e) => fail(metrics, &e),
+                }
+            }
+            Err(e) => fail(metrics, &e),
+        }
+    }
+
+    /// Rebuild the offending cells' winners: the Calibrator's fitted
+    /// environment when the observations support the §3.4 fit, else the
+    /// service's own environment — both priced through the same targeted
+    /// sub-grid, so the two paths cannot diverge structurally.
+    fn rebuild(
+        &self,
+        snap: &TelemetrySnapshot,
+        offending: &BTreeMap<String, BTreeSet<u32>>,
+        router: &PlanRouter,
+    ) -> Result<SelectionTable, ApiError> {
+        let env = match calibrate(snap, self.cfg.beta) {
+            Ok(cal) => cal.environment(),
+            // Not enough CPS spread for the fit (the common single-rack
+            // case): re-price under the environment the service itself
+            // plans against.
+            Err(_) => router.env().clone(),
+        };
+        let base = ScenarioGrid {
+            name: "drift".into(),
+            topos: Vec::new(), // replaced by the restriction
+            sizes: Vec::new(),
+            algos: self.cfg.algos.iter().map(ToString::to_string).collect(),
+            env: EnvKind::Paper, // placeholder; price_grid overrides it
+            exec_spot_cap: 0.0,
+        };
+        let rows = price_grid(&base.restrict_to(offending), &env)?;
+        let patch = SelectionTable::from_rows(&rows, Metric::Model);
+        if patch.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: "drift recalibration priced no offending cell".into(),
+            });
+        }
+        Ok(patch)
+    }
+
+}
+
+/// A tripped check whose recalibration or swap could not complete: count
+/// it, say so, and leave the active table serving. The monitor's
+/// baseline is *not* advanced, so the evidence is retried (with more
+/// data) at the next cadence point.
+fn fail(metrics: &Metrics, e: &ApiError) -> bool {
+    metrics.add(&metrics.drift_failures, 1);
+    eprintln!(
+        "allreduce-leader: drift recalibration failed ({e}); \
+         the active table keeps serving"
+    );
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::table_from_model;
+    use crate::model::params::{Environment, ModelParams};
+    use crate::topo::builders::single_switch;
+
+    fn true_params() -> ModelParams {
+        let p = ModelParams::cpu_testbed();
+        ModelParams {
+            epsilon: p.epsilon * 20.0,
+            ..p
+        }
+    }
+
+    fn blind_params() -> ModelParams {
+        ModelParams {
+            delta: 0.0,
+            epsilon: 0.0,
+            ..ModelParams::cpu_testbed()
+        }
+    }
+
+    fn algos() -> Vec<AlgoSpec> {
+        vec![
+            AlgoSpec::Cps,
+            AlgoSpec::Hcps { factors: vec![5, 3] },
+            AlgoSpec::Ring,
+        ]
+    }
+
+    /// A stale (blind-model) table over single:15 buckets 16 and 20.
+    fn stale_table() -> SelectionTable {
+        let grid = BTreeMap::from([(
+            "single:15".to_string(),
+            BTreeSet::from([16u32, 20]),
+        )]);
+        table_from_model(&grid, &algos(), &Environment::uniform(blind_params())).unwrap()
+    }
+
+    /// Feed the recorder what sim-observation under the true (ε×20)
+    /// fabric would record for cps at bucket 20.
+    fn observe_truth(rec: &Recorder, batches: usize) {
+        use crate::model::expressions::{genmodel, PlanType};
+        let s = 1usize << 20;
+        let t = genmodel(&PlanType::ColocatedPs, 15, s as f64, &true_params()).total();
+        for _ in 0..batches {
+            rec.record("single:15", 15, 20, "cps", s, t);
+        }
+    }
+
+    #[test]
+    fn monitor_trips_recalibrates_and_swaps_once() {
+        let recorder = Arc::new(Recorder::new());
+        let handle = Arc::new(TableHandle::new(stale_table(), "single:15").unwrap());
+        let router = PlanRouter::new(
+            single_switch(15),
+            Environment::uniform(true_params()),
+        )
+        .with_table_handle(handle.clone());
+        let metrics = Metrics::default();
+        let mut monitor = DriftMonitor::new(
+            DriftConfig {
+                threshold: 0.5,
+                every: 4,
+                algos: algos(),
+                ..DriftConfig::default()
+            },
+            recorder.clone(),
+            handle.clone(),
+        );
+        // Warm the stale winner's plan so the swap has something to evict.
+        assert_eq!(router.plan_for(1 << 20).unwrap().algo, AlgoSpec::Cps);
+
+        // Below the cadence nothing happens — not even a check.
+        observe_truth(&recorder, 3);
+        assert!(!monitor.observe_flush(3, &router, &metrics));
+        assert_eq!(metrics.snapshot().drift_checks, 0);
+
+        // The 4th batch reaches the cadence: the blind prediction is off
+        // by far more than 50%, the targeted re-price under the (true)
+        // router environment flips bucket 20 hierarchical, and the swap
+        // lands with the stale cps plan evicted.
+        observe_truth(&recorder, 1);
+        assert!(monitor.observe_flush(1, &router, &metrics));
+        let m = metrics.snapshot();
+        assert_eq!((m.drift_checks, m.drift_swaps, m.drift_failures), (1, 1, 0));
+        assert_eq!(m.drift_epoch, 1);
+        assert_eq!(m.drift_evictions, 1);
+        let view = handle.view();
+        assert_eq!(view.epoch, 1);
+        assert_eq!(
+            view.winner_for(20),
+            Some(&AlgoSpec::Hcps { factors: vec![5, 3] })
+        );
+        // The un-offending bucket kept its (blind-priced) winner cell:
+        // the merge is surgical.
+        assert_eq!(view.winner_for(16), Some(&AlgoSpec::Cps));
+        assert_eq!(
+            view.table.lookup("single:15", 1 << 16).unwrap().seconds,
+            stale_table().lookup("single:15", 1 << 16).unwrap().seconds,
+        );
+
+        // Consumed observations do not re-trip: with no fresh traffic the
+        // next cadence point checks and stands down.
+        assert!(!monitor.observe_flush(4, &router, &metrics));
+        let m = metrics.snapshot();
+        assert_eq!((m.drift_checks, m.drift_swaps), (2, 1));
+    }
+
+    #[test]
+    fn off_ladder_bucket_trips_once_then_converges() {
+        // A table swept only at bucket 20 serves traffic fusing to
+        // bucket 14: the clamp scores bucket-14 observations against
+        // bucket-20 seconds (~64x off), which reads as drift — the
+        // table genuinely knows nothing at the served size. The
+        // recalibration prices the OBSERVED bucket and merges the exact
+        // cell in, so the second round of traffic scores against its
+        // own bucket and the loop quiets: one swap, not a swap per
+        // check.
+        let env = Environment::uniform(true_params());
+        let grid = BTreeMap::from([(
+            "single:15".to_string(),
+            BTreeSet::from([20u32]),
+        )]);
+        let honest = table_from_model(&grid, &algos(), &env).unwrap();
+        let recorder = Arc::new(Recorder::new());
+        let handle = Arc::new(TableHandle::new(honest, "single:15").unwrap());
+        let router = PlanRouter::new(single_switch(15), env.clone())
+            .with_table_handle(handle.clone());
+        let metrics = Metrics::default();
+        let mut monitor = DriftMonitor::new(
+            DriftConfig {
+                threshold: 0.5,
+                every: 2,
+                algos: algos(),
+                ..DriftConfig::default()
+            },
+            recorder.clone(),
+            handle.clone(),
+        );
+        // Bucket-14 traffic: routed to the current winner for bucket 14
+        // (the clamp), observed at that algorithm's true time for its
+        // REAL size — what an ideally-measured service would record.
+        let s14 = 1usize << 14;
+        let truth = crate::api::Engine::new(single_switch(15), env.clone());
+        let observe = |k: usize| {
+            let winner = handle.view().winner_for(14).unwrap().clone();
+            let t = truth.predict_bucket(&winner, 14).unwrap();
+            for _ in 0..k {
+                recorder.record("single:15", 15, 14, &winner.to_string(), s14, t);
+            }
+        };
+        observe(2);
+        assert!(
+            monitor.observe_flush(2, &router, &metrics),
+            "off-ladder bucket must trigger one recalibration"
+        );
+        let view = handle.view();
+        assert_eq!(view.epoch, 1);
+        assert!(
+            view.table.lookup("single:15", s14).is_some(),
+            "the swap filled in the observed bucket's exact cell"
+        );
+        // Fresh traffic routes (and is observed at) the new exact cell's
+        // winner, scores against its own bucket, and stands down.
+        observe(2);
+        assert!(!monitor.observe_flush(2, &router, &metrics));
+        let m = metrics.snapshot();
+        assert_eq!((m.drift_checks, m.drift_swaps), (2, 1), "converged after one swap");
+    }
+
+    #[test]
+    fn accurate_predictions_never_trip() {
+        // A table priced under the same environment the observations
+        // come from: rel err ≈ model-vs-model ≈ 0, no swap ever.
+        let grid = BTreeMap::from([(
+            "single:15".to_string(),
+            BTreeSet::from([20u32]),
+        )]);
+        let honest =
+            table_from_model(&grid, &algos(), &Environment::uniform(true_params())).unwrap();
+        let choice = honest.lookup("single:15", 1 << 20).unwrap().clone();
+        let recorder = Arc::new(Recorder::new());
+        for _ in 0..8 {
+            recorder.record("single:15", 15, 20, &choice.algo, 1 << 20, choice.seconds);
+        }
+        let handle = Arc::new(TableHandle::new(honest, "single:15").unwrap());
+        let router = PlanRouter::new(
+            single_switch(15),
+            Environment::uniform(true_params()),
+        )
+        .with_table_handle(handle.clone());
+        let metrics = Metrics::default();
+        let mut monitor = DriftMonitor::new(
+            DriftConfig {
+                threshold: 0.5,
+                every: 4,
+                algos: algos(),
+                ..DriftConfig::default()
+            },
+            recorder,
+            handle.clone(),
+        );
+        assert!(!monitor.observe_flush(8, &router, &metrics));
+        let m = metrics.snapshot();
+        assert_eq!((m.drift_checks, m.drift_swaps, m.drift_failures), (1, 0, 0));
+        assert_eq!(handle.epoch(), 0);
+    }
+}

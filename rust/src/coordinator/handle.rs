@@ -1,0 +1,243 @@
+//! The hot-swappable selection table: one epoch-versioned handle shared
+//! by every consumer of the table, so a recalibration can replace the
+//! routing policy of a *running* service atomically.
+//!
+//! Before the autopilot, the selection table was construction-time
+//! configuration: `ServiceConfig::with_selection_table` froze the
+//! router's bucket rules, the batcher's split points, and the time-aware
+//! flush windows at service start, and recalibrating meant restarting
+//! `serve` with a new file. [`TableHandle`] replaces that frozen copy
+//! with an `RwLock<Arc<TableView>>`:
+//!
+//! * a [`TableView`] bundles **one epoch** with every derived per-class
+//!   view of **one table** — the router's [`SelectionRules`], the
+//!   batcher's [`SplitPoints`], and the flush windows' [`BucketSeconds`]
+//!   are all computed from the same `Arc<SelectionTable>` at swap time,
+//!   so the three consumers cannot observe mixed generations: whoever
+//!   holds a view holds a consistent one;
+//! * [`TableHandle::swap`] validates the incoming table (a stored
+//!   algorithm that no longer parses is a typed error and the active
+//!   table stays in place), then replaces the view in one write-lock
+//!   and bumps the epoch — readers never block on derivation work;
+//! * the coordinator's leader reads the view once per flush cycle, so
+//!   within a cycle routing, splitting, and flushing agree on the epoch,
+//!   and every [`super::JobResult`] reports the epoch that served it.
+//!
+//! Swap-time cache hygiene lives in
+//! [`super::PlanRouter::evict_stale`]: entries whose bucket's winner
+//! changed between the old and new view are dropped, counted by the
+//! `drift_evictions` metric.
+
+use std::sync::{Arc, RwLock};
+
+use crate::api::{AlgoSpec, ApiError};
+use crate::campaign::SelectionTable;
+
+use super::batcher::{BatchPolicy, BucketSeconds, SplitPoints};
+use super::router::{nearest_bucket, SelectionRules};
+
+/// One coherent generation of the selection policy: the epoch, the table
+/// it came from, and every per-class view the serving loop consumes —
+/// derived together, immutable once published.
+#[derive(Debug, Clone)]
+pub struct TableView {
+    /// Swap generation: 0 at service start, +1 per successful swap.
+    pub epoch: u64,
+    /// The topology class the per-class views below are derived for.
+    pub class: String,
+    pub table: Arc<SelectionTable>,
+    /// Router bucket→algorithm rules (`SelectionTable::rules_for`).
+    pub rules: SelectionRules,
+    /// Batcher winner-change boundaries (`SplitPoints::from_table`).
+    pub splits: SplitPoints,
+    /// Per-bucket predicted round seconds for time-aware flushing.
+    pub bucket_seconds: BucketSeconds,
+}
+
+impl TableView {
+    fn derive(epoch: u64, class: &str, table: Arc<SelectionTable>) -> Result<TableView, ApiError> {
+        let rules = table.rules_for(class)?;
+        if rules.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!("selection table has no entries for topology class {class:?}"),
+            });
+        }
+        Ok(TableView {
+            epoch,
+            class: class.to_string(),
+            splits: SplitPoints::from_table(&table, class),
+            bucket_seconds: table.bucket_seconds_for(class),
+            rules,
+            table,
+        })
+    }
+
+    /// The algorithm this view routes a payload in `bucket` to (the
+    /// nearest-rule clamp routing uses). `None` never happens for a
+    /// derived view (rules are non-empty by construction).
+    pub fn winner_for(&self, bucket: u32) -> Option<&AlgoSpec> {
+        nearest_bucket(&self.rules, bucket)
+    }
+
+    /// `base` with this view's split points and bucket seconds overlaid —
+    /// the effective batching policy of this epoch. The cap, margin
+    /// threshold, and flush floor stay the operator's.
+    pub fn overlay(&self, base: &BatchPolicy) -> BatchPolicy {
+        BatchPolicy {
+            selection: Some(self.splits.clone()),
+            bucket_seconds: Some(self.bucket_seconds.clone()),
+            ..base.clone()
+        }
+    }
+}
+
+/// The epoch-versioned, swappable selection table (see module docs).
+#[derive(Debug)]
+pub struct TableHandle {
+    state: RwLock<Arc<TableView>>,
+}
+
+impl TableHandle {
+    /// Wrap `table` at epoch 0, deriving the per-class views for
+    /// `class`. Errors mirror `ServiceConfig::with_selection_table`: an
+    /// unknown class or a stored algorithm the registry no longer parses.
+    pub fn new(table: SelectionTable, class: &str) -> Result<TableHandle, ApiError> {
+        Ok(TableHandle {
+            state: RwLock::new(Arc::new(TableView::derive(0, class, Arc::new(table))?)),
+        })
+    }
+
+    /// The current view — one read-lock, one `Arc` clone. A poisoned
+    /// lock is recovered (views are immutable, so the data is intact).
+    pub fn view(&self) -> Arc<TableView> {
+        self.state
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// The current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.view().epoch
+    }
+
+    /// Atomically replace the table, bumping the epoch. The new view is
+    /// derived (and validated) for the same class as the active one;
+    /// on error the active table keeps serving untouched. Returns the
+    /// `(old, new)` views so the caller can reconcile caches.
+    pub fn swap(
+        &self,
+        table: SelectionTable,
+    ) -> Result<(Arc<TableView>, Arc<TableView>), ApiError> {
+        // Derive outside the write lock — rules_for re-parses every
+        // cell's algorithm string, and readers must not block on that.
+        // Only the epoch assignment and the publish hold the lock, so a
+        // second swapper cannot clash epochs with the first.
+        let class = self.view().class.clone();
+        let derived = TableView::derive(0, &class, Arc::new(table))?;
+        let mut guard = self.state.write().unwrap_or_else(|e| e.into_inner());
+        let new = Arc::new(TableView {
+            epoch: guard.epoch + 1,
+            ..derived
+        });
+        let old = std::mem::replace(&mut *guard, new.clone());
+        Ok((old, new))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{table_from_choices, table_from_entries, Metric};
+
+    fn two_cell_table() -> SelectionTable {
+        table_from_choices(
+            Metric::Model,
+            &[
+                ("single:8", 10, "cps", 0.002, 0.006),
+                ("single:8", 17, "ring", 0.5, 1.1),
+            ],
+        )
+    }
+
+    #[test]
+    fn view_is_coherent_across_all_three_consumers() {
+        // One swap generation = one struct: the rules, split points, and
+        // bucket seconds a view hands out are derived from the same
+        // table at the same epoch — the coherence the acceptance
+        // criterion asks the consumers to observe.
+        let h = TableHandle::new(two_cell_table(), "single:8").unwrap();
+        let v = h.view();
+        assert_eq!(v.epoch, 0);
+        assert_eq!(v.class, "single:8");
+        assert_eq!(v.rules.len(), 2);
+        assert_eq!(v.winner_for(10), Some(&crate::api::AlgoSpec::Cps));
+        assert_eq!(v.winner_for(30), Some(&crate::api::AlgoSpec::Ring));
+        assert_eq!(v.splits.first_crossed(10..=17), Some((17, 3.0)));
+        assert_eq!(v.bucket_seconds[&10], 0.002);
+        assert_eq!(v.bucket_seconds[&17], 0.5);
+    }
+
+    #[test]
+    fn swap_bumps_the_epoch_and_rederives_every_view() {
+        let h = TableHandle::new(two_cell_table(), "single:8").unwrap();
+        let flipped = table_from_choices(
+            Metric::Model,
+            &[
+                ("single:8", 10, "ring", 0.003, 0.009),
+                ("single:8", 17, "cps", 0.4, 0.8),
+            ],
+        );
+        let (old, new) = h.swap(flipped).unwrap();
+        assert_eq!((old.epoch, new.epoch), (0, 1));
+        assert_eq!(h.epoch(), 1);
+        let v = h.view();
+        assert_eq!(v.winner_for(10), Some(&crate::api::AlgoSpec::Ring));
+        assert_eq!(v.winner_for(17), Some(&crate::api::AlgoSpec::Cps));
+        assert_eq!(v.bucket_seconds[&10], 0.003);
+        // Old views stay alive and untouched for holders mid-cycle.
+        assert_eq!(old.winner_for(10), Some(&crate::api::AlgoSpec::Cps));
+    }
+
+    #[test]
+    fn bad_swaps_are_typed_errors_and_keep_the_active_table() {
+        let h = TableHandle::new(two_cell_table(), "single:8").unwrap();
+        // A table that dropped the class entirely.
+        let other = table_from_entries(Metric::Model, &[("ss24", 10, "ring")]);
+        assert!(matches!(
+            h.swap(other),
+            Err(ApiError::BadRequest { .. })
+        ));
+        // A table whose stored algorithm no longer parses.
+        let stale = table_from_entries(Metric::Model, &[("single:8", 10, "warpdrive")]);
+        assert!(matches!(h.swap(stale), Err(ApiError::UnknownAlgo { .. })));
+        // The epoch did not move and the original table still serves.
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.view().winner_for(10), Some(&crate::api::AlgoSpec::Cps));
+    }
+
+    #[test]
+    fn new_validates_like_with_selection_table() {
+        assert!(matches!(
+            TableHandle::new(two_cell_table(), "absent"),
+            Err(ApiError::BadRequest { .. })
+        ));
+        let stale = table_from_entries(Metric::Model, &[("x", 10, "warpdrive")]);
+        assert!(matches!(
+            TableHandle::new(stale, "x"),
+            Err(ApiError::UnknownAlgo { .. })
+        ));
+    }
+
+    #[test]
+    fn overlay_keeps_the_operator_knobs() {
+        let h = TableHandle::new(two_cell_table(), "single:8").unwrap();
+        let base = BatchPolicy::with_cap(12345);
+        let policy = h.view().overlay(&base);
+        assert_eq!(policy.bucket_floats, 12345);
+        assert_eq!(policy.min_split_margin, base.min_split_margin);
+        assert_eq!(policy.flush_floor, base.flush_floor);
+        assert_eq!(policy.selection.as_ref().unwrap().len(), 1);
+        assert_eq!(policy.bucket_seconds.as_ref().unwrap().len(), 2);
+    }
+}

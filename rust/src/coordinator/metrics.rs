@@ -41,6 +41,19 @@ pub struct Metrics {
     /// under `ObserveMode::Sim`) — the service-wide distribution behind
     /// the per-cell telemetry recorder.
     pub latency: LatencyHist,
+    /// Drift autopilot: scoring passes the monitor ran.
+    pub drift_checks: AtomicU64,
+    /// Drift autopilot: successful hot swaps of the selection table.
+    pub drift_swaps: AtomicU64,
+    /// Drift autopilot: router cache entries evicted across all swaps
+    /// (plans whose bucket's winner changed).
+    pub drift_evictions: AtomicU64,
+    /// Drift autopilot: tripped checks whose recalibration or swap
+    /// failed (the active table kept serving).
+    pub drift_failures: AtomicU64,
+    /// The selection-table epoch currently serving (0 until the first
+    /// swap; stays 0 for services without a table handle).
+    pub drift_epoch: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,6 +70,11 @@ pub struct MetricsSnapshot {
     pub batches_oversized: u64,
     pub batches_drained: u64,
     pub latency: HistSnapshot,
+    pub drift_checks: u64,
+    pub drift_swaps: u64,
+    pub drift_evictions: u64,
+    pub drift_failures: u64,
+    pub drift_epoch: u64,
 }
 
 impl Metrics {
@@ -111,6 +129,11 @@ impl Metrics {
             batches_oversized,
             batches_drained,
             latency: self.latency.snapshot(),
+            drift_checks: self.drift_checks.load(Ordering::Relaxed),
+            drift_swaps: self.drift_swaps.load(Ordering::Relaxed),
+            drift_evictions: self.drift_evictions.load(Ordering::Relaxed),
+            drift_failures: self.drift_failures.load(Ordering::Relaxed),
+            drift_epoch: self.drift_epoch.load(Ordering::Relaxed),
         };
         debug_assert!(
             snap.rule_counts_sum() <= snap.batches_flushed,

@@ -30,20 +30,49 @@
 //! loop consumes. With a selection table configured, flushing is
 //! **time-aware**: the flush window is capped per bucket at the
 //! predicted round time the fuse would save
-//! ([`batcher::BatchPolicy::flush_window`]).
+//! ([`batcher::BatchPolicy::flush_window`]), clamped below at
+//! [`batcher::BatchPolicy::flush_floor`] so a tiny prediction can never
+//! degenerate into busy-spin flushing.
+//!
+//! And with `ServiceConfig::drift` set, measurement closes back on the
+//! policy — the **autopilot**:
+//!
+//! * [`handle`] — the selection table behind an epoch-versioned
+//!   [`handle::TableHandle`] instead of frozen construction-time config.
+//!   One [`handle::TableView`] bundles the epoch with all three derived
+//!   consumers (router rules, batcher split points, time-aware flush
+//!   windows); the leader reads the view once per flush cycle, so the
+//!   consumers always observe the same epoch, and every [`JobResult`]
+//!   reports the epoch (`JobResult::epoch`) that served it.
+//! * [`drift`] — the [`drift::DriftMonitor`] runs in the leader between
+//!   flush cycles: it scores the recorder's fresh observations against
+//!   the active table's own predictions, and past
+//!   `serve --drift-threshold` it recalibrates the offending (class,
+//!   bucket) cells (§3.4 Calibrator when the data supports the fit, else
+//!   a targeted re-price under the service's environment), merges them
+//!   over the active table, and swaps atomically —
+//!   [`PlanRouter::evict_stale`] drops cached plans whose winner was
+//!   dethroned, and `drift_*` metrics count checks/swaps/evictions and
+//!   expose the serving epoch. Because the swap happens between cycles
+//!   on the leader thread, no job is ever dropped, duplicated, or served
+//!   by a half-swapped policy.
 //!
 //! Threads + channels stand in for an async runtime (tokio is not in the
 //! vendored dependency closure; the control flow is identical).
 
 pub mod batcher;
+pub mod drift;
+pub mod handle;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
 pub use batcher::{
     plan_batches, BatchPolicy, BatchRule, BucketSeconds, PendingJob, PlannedBatch,
-    SplitPoints, DEFAULT_MIN_SPLIT_MARGIN,
+    SplitPoints, DEFAULT_FLUSH_FLOOR, DEFAULT_MIN_SPLIT_MARGIN,
 };
+pub use drift::{DriftConfig, DriftMonitor, DEFAULT_LINK_BETA};
+pub use handle::{TableHandle, TableView};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
 pub use service::{AllReduceService, JobResult, ObserveMode, ServiceConfig};

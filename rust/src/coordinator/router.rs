@@ -14,6 +14,16 @@
 //! `campaign::SelectionTable::rules_for`): each payload routes to the
 //! campaign's winning algorithm for its size bucket instead of one fixed
 //! default — the paper's offline study becomes the serving hot path.
+//!
+//! With [`PlanRouter::with_table_handle`], the rules are no longer
+//! frozen at construction: every lookup reads the handle's current
+//! [`TableView`], so a drift-triggered recalibration that hot-swaps the
+//! table re-routes the very next batch. [`PlanRouter::algo_for`] returns
+//! an **owned** `AlgoSpec` for exactly this reason — the winning rule
+//! lives behind the handle's lock and may be replaced between calls.
+//! After a swap, [`PlanRouter::evict_stale`] drops cached plans whose
+//! bucket's winner changed, so a long-lived service does not pin every
+//! generation's plans in memory.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
@@ -24,6 +34,8 @@ use crate::model::params::Environment;
 use crate::plan::validate::{validate, Goal};
 use crate::plan::Plan;
 use crate::topo::Topology;
+
+use super::handle::{TableHandle, TableView};
 
 /// One cached routing decision: the plan plus (for GenTree) the
 /// per-switch selections behind it (Table 6 reporting).
@@ -59,6 +71,10 @@ pub struct PlanRouter {
     default_algo: AlgoSpec,
     /// Per-bucket winners; empty = always route `default_algo`.
     selection: SelectionRules,
+    /// Live selection table; when present its current view's rules win
+    /// over the static `selection` set (they are the same rules at epoch
+    /// 0 — the handle is how they stay current across hot swaps).
+    handle: Option<Arc<TableHandle>>,
     cache: Mutex<HashMap<(AlgoSpec, u32), Arc<RoutedPlan>>>,
 }
 
@@ -69,6 +85,7 @@ impl PlanRouter {
             env,
             default_algo: AlgoSpec::GenTree { rearrange: true },
             selection: SelectionRules::new(),
+            handle: None,
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -85,6 +102,14 @@ impl PlanRouter {
     /// back to the default algorithm.
     pub fn with_selection(mut self, rules: SelectionRules) -> Self {
         self.selection = rules;
+        self
+    }
+
+    /// Route by a live, hot-swappable selection table: every lookup reads
+    /// the handle's current view, so a [`TableHandle::swap`] re-routes
+    /// subsequent payloads without rebuilding the router.
+    pub fn with_table_handle(mut self, handle: Arc<TableHandle>) -> Self {
+        self.handle = Some(handle);
         self
     }
 
@@ -126,7 +151,7 @@ impl PlanRouter {
     /// and duplicate generation would cost more than the wait).
     pub fn route(&self, algo: &AlgoSpec, s: usize) -> Result<Arc<RoutedPlan>, ApiError> {
         let bucket = Self::bucket(s);
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(hit) = cache.get(&(algo.clone(), bucket)) {
             return Ok(hit.clone());
         }
@@ -135,11 +160,23 @@ impl PlanRouter {
         Ok(built)
     }
 
-    /// The algorithm a payload of `s` floats routes to: the selection
-    /// rule of the nearest bucket at-or-below `s`'s bucket, else the
-    /// nearest above, else the default algorithm.
-    pub fn algo_for(&self, s: usize) -> &AlgoSpec {
-        nearest_bucket(&self.selection, Self::bucket(s)).unwrap_or(&self.default_algo)
+    /// The algorithm a payload of `s` floats routes to: the live table
+    /// handle's current rule when one is wired in, else the static
+    /// selection rule of the nearest bucket at-or-below `s`'s bucket
+    /// (else the nearest above), else the default algorithm. Returns an
+    /// owned spec — with a handle the winning rule lives behind the
+    /// swap lock and may be replaced between calls.
+    pub fn algo_for(&self, s: usize) -> AlgoSpec {
+        let bucket = Self::bucket(s);
+        if let Some(handle) = &self.handle {
+            let view = handle.view();
+            if let Some(algo) = view.winner_for(bucket) {
+                return algo.clone();
+            }
+        }
+        nearest_bucket(&self.selection, bucket)
+            .cloned()
+            .unwrap_or_else(|| self.default_algo.clone())
     }
 
     /// Routed plan for [`Self::algo_for`]`(s)` (the serve hot path).
@@ -147,7 +184,26 @@ impl PlanRouter {
     /// surfaces as a typed [`ApiError::AlgoTopoMismatch`] — never a
     /// panic mid-route.
     pub fn plan_for(&self, s: usize) -> Result<Arc<RoutedPlan>, ApiError> {
-        self.route(self.algo_for(s), s)
+        self.route(&self.algo_for(s), s)
+    }
+
+    /// Swap-time cache hygiene: drop every cached `(algo, bucket)` plan
+    /// whose bucket routed `algo` under `old` but routes a *different*
+    /// winner under `new` — those entries are unreachable through
+    /// [`Self::plan_for`] from now on and would otherwise pin one plan
+    /// per past generation. Entries still matching their bucket's winner
+    /// (and default-algo entries selection never governed) survive.
+    /// Returns the number evicted (the `drift_evictions` metric).
+    pub fn evict_stale(&self, old: &TableView, new: &TableView) -> u64 {
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        let before = cache.len();
+        cache.retain(|(algo, bucket), _| {
+            match (old.winner_for(*bucket), new.winner_for(*bucket)) {
+                (Some(o), Some(n)) => !(o == algo && n != algo),
+                _ => true,
+            }
+        });
+        (before - cache.len()) as u64
     }
 
     fn build(&self, algo: &AlgoSpec, bucket: u32) -> Result<RoutedPlan, ApiError> {
@@ -180,7 +236,7 @@ impl PlanRouter {
     }
 
     pub fn cached_plans(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -271,11 +327,11 @@ mod tests {
         let r = PlanRouter::new(single_switch(8), Environment::paper())
             .with_selection(rules);
         // Bucket 10 and anything between the rules clamps down to CPS.
-        assert_eq!(*r.algo_for(1000), AlgoSpec::Cps);
-        assert_eq!(*r.algo_for(1 << 15), AlgoSpec::Cps);
+        assert_eq!(r.algo_for(1000), AlgoSpec::Cps);
+        assert_eq!(r.algo_for(1 << 15), AlgoSpec::Cps);
         // Bucket 20 and beyond routes Ring.
-        assert_eq!(*r.algo_for(1 << 20), AlgoSpec::Ring);
-        assert_eq!(*r.algo_for(1 << 28), AlgoSpec::Ring);
+        assert_eq!(r.algo_for(1 << 20), AlgoSpec::Ring);
+        assert_eq!(r.algo_for(1 << 28), AlgoSpec::Ring);
         let small = r.plan_for(1000).unwrap();
         let big = r.plan_for(1 << 20).unwrap();
         assert_eq!(small.algo, AlgoSpec::Cps);
@@ -286,7 +342,57 @@ mod tests {
     fn empty_selection_falls_back_to_default() {
         let r = PlanRouter::new(single_switch(8), Environment::paper())
             .with_selection(SelectionRules::new());
-        assert_eq!(*r.algo_for(4096), AlgoSpec::GenTree { rearrange: true });
+        assert_eq!(r.algo_for(4096), AlgoSpec::GenTree { rearrange: true });
+    }
+
+    #[test]
+    fn table_handle_routes_live_and_swap_reroutes_the_next_lookup() {
+        use crate::campaign::{table_from_entries, Metric};
+        use crate::coordinator::handle::TableHandle;
+        let table = table_from_entries(
+            Metric::Model,
+            &[("single:8", 10, "cps"), ("single:8", 20, "ring")],
+        );
+        let handle = Arc::new(TableHandle::new(table, "single:8").unwrap());
+        let r = PlanRouter::new(single_switch(8), Environment::paper())
+            .with_table_handle(handle.clone());
+        assert_eq!(r.algo_for(1000), AlgoSpec::Cps);
+        assert_eq!(r.algo_for(1 << 20), AlgoSpec::Ring);
+        let flipped = table_from_entries(
+            Metric::Model,
+            &[("single:8", 10, "cps"), ("single:8", 20, "acps")],
+        );
+        handle.swap(flipped).unwrap();
+        // No router rebuild: the very next lookup sees the new winner.
+        assert_eq!(r.algo_for(1 << 20), AlgoSpec::Acps);
+        assert_eq!(r.algo_for(1000), AlgoSpec::Cps);
+    }
+
+    #[test]
+    fn evict_stale_drops_exactly_the_dethroned_winners() {
+        use crate::campaign::{table_from_entries, Metric};
+        use crate::coordinator::handle::TableHandle;
+        let table = table_from_entries(
+            Metric::Model,
+            &[("single:8", 10, "cps"), ("single:8", 20, "ring")],
+        );
+        let handle = Arc::new(TableHandle::new(table, "single:8").unwrap());
+        let r = PlanRouter::new(single_switch(8), Environment::paper())
+            .with_table_handle(handle.clone());
+        r.plan_for(1000).unwrap(); // (cps, 10)
+        r.plan_for(1 << 20).unwrap(); // (ring, 20)
+        assert_eq!(r.cached_plans(), 2);
+        let flipped = table_from_entries(
+            Metric::Model,
+            &[("single:8", 10, "cps"), ("single:8", 20, "acps")],
+        );
+        let (old, new) = handle.swap(flipped).unwrap();
+        // Only the bucket whose winner changed loses its cached plan.
+        assert_eq!(r.evict_stale(&old, &new), 1);
+        assert_eq!(r.cached_plans(), 1);
+        assert_eq!(r.plan_for(1000).unwrap().algo, AlgoSpec::Cps);
+        assert_eq!(r.plan_for(1 << 20).unwrap().algo, AlgoSpec::Acps);
+        assert_eq!(r.cached_plans(), 2);
     }
 
     #[test]

@@ -11,7 +11,16 @@
 //! `Err(ApiError::BadRequest)` immediately, submitting to a stopped
 //! service returns `Err(ApiError::ServiceStopped)`, and per-job results
 //! carry `ApiError::ExecFailed` when the data plane rejects a batch —
-//! no `assert!`/`expect` on the request path.
+//! no `assert!`/`expect` on the request path. That includes lock
+//! poisoning: a submitter thread that panics while holding the queue
+//! lock downgrades *other* submitters to `ServiceStopped` and leaves
+//! [`AllReduceService::stop`] able to drain and join — it can never
+//! cascade into panics on every later request.
+//!
+//! With [`ServiceConfig::drift`] set (and a selection table wired in),
+//! the leader also runs the drift autopilot: see
+//! [`super::drift::DriftMonitor`] and the module docs of
+//! [`super`] for the epoch/hot-swap semantics.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -31,6 +40,8 @@ use crate::topo::Topology;
 use super::batcher::{
     fuse_offsets, plan_batches, BatchPolicy, BatchRule, PendingJob, PlannedBatch,
 };
+use super::drift::{DriftConfig, DriftMonitor};
+use super::handle::TableHandle;
 use super::metrics::Metrics;
 use super::router::{PlanRouter, SelectionRules};
 
@@ -52,6 +63,12 @@ pub struct JobResult {
     /// flow-simulated under [`ObserveMode::Sim`]) — the number telemetry
     /// scores against the model's prediction.
     pub observed_secs: f64,
+    /// The selection-table epoch that served this job's batch: 0 until
+    /// the drift autopilot's first hot swap (and always 0 without a
+    /// table handle). Routing, batch splitting, and flush timing all
+    /// observed this same epoch — the leader reads one table view per
+    /// flush cycle.
+    pub epoch: u64,
 }
 
 /// Where a batch's *observed* seconds come from.
@@ -97,6 +114,15 @@ pub struct ServiceConfig {
     pub class: String,
     /// Clock for observed batch seconds (wall vs simulated).
     pub observe: ObserveMode,
+    /// The full selection table behind `selection` (set by
+    /// [`Self::with_selection_table`]): when present, the service wraps
+    /// it in an epoch-versioned [`TableHandle`] so the drift autopilot
+    /// can hot-swap it mid-serve.
+    pub table: Option<SelectionTable>,
+    /// Drift autopilot configuration; requires a selection table (the
+    /// monitor scores observations against the table's predictions).
+    /// `None`: no monitoring, the PR-4 behavior.
+    pub drift: Option<DriftConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -109,6 +135,8 @@ impl Default for ServiceConfig {
             telemetry: None,
             class: String::new(),
             observe: ObserveMode::Wall,
+            table: None,
+            drift: None,
         }
     }
 }
@@ -138,6 +166,9 @@ impl ServiceConfig {
         }
         self.policy.min_split_margin = min_split_margin;
         self.policy = self.policy.with_table(table, class);
+        // Keep the table itself: the service wraps it in a TableHandle so
+        // the drift autopilot can hot-swap what the rules above froze.
+        self.table = Some(table.clone());
         if self.class.is_empty() {
             self.class = class.to_string();
         }
@@ -160,6 +191,8 @@ pub struct AllReduceService {
     tx: Mutex<Option<Sender<Job>>>,
     leader: Mutex<Option<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
+    /// The hot-swappable selection table, when one was configured.
+    handle: Option<Arc<TableHandle>>,
     n_workers: usize,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -177,10 +210,45 @@ impl AllReduceService {
             // campaign would sweep this rack under.
             cfg.class = format!("single:{n_workers}");
         }
+        // Wrap the configured table in the epoch-versioned handle all
+        // three consumers share. with_selection_table already validated
+        // the (table, class) pair, so a failure here means the config was
+        // hand-assembled inconsistently — degrade loudly to the static
+        // rules (same routing, no hot swap) rather than panic.
+        let handle: Option<Arc<TableHandle>> = cfg.table.as_ref().and_then(|table| {
+            match TableHandle::new(table.clone(), &cfg.class) {
+                Ok(h) => Some(Arc::new(h)),
+                Err(e) => {
+                    eprintln!(
+                        "allreduce-leader: selection table unusable for class \
+                         {:?} ({e}); serving static rules without hot swap",
+                        cfg.class
+                    );
+                    None
+                }
+            }
+        });
+        if cfg.drift.is_some() {
+            if handle.is_none() {
+                eprintln!(
+                    "allreduce-leader: drift monitoring needs a selection table \
+                     (ServiceConfig::with_selection_table); monitor disabled"
+                );
+                cfg.drift = None;
+            } else if cfg.telemetry.is_none() {
+                // The monitor scores recorder cells; give it a private
+                // recorder when the operator did not wire one.
+                cfg.telemetry = Some(Arc::new(Recorder::new()));
+            }
+        }
         let metrics = Arc::new(Metrics::default());
-        let router = PlanRouter::new(topo, env)
+        let mut router = PlanRouter::new(topo, env)
             .with_default_algo(cfg.algo.clone())
             .with_selection(cfg.selection.clone());
+        if let Some(h) = &handle {
+            router = router.with_table_handle(h.clone());
+        }
+        let leader_handle = handle.clone();
         let (tx, rx) = channel::<Job>();
         let m = metrics.clone();
         let leader = std::thread::Builder::new()
@@ -200,13 +268,14 @@ impl AllReduceService {
                     m.add(&m.reducer_fallbacks, 1);
                     Reducer::Scalar
                 });
-                leader_loop(rx, router, reducer, cfg, m)
+                leader_loop(rx, router, reducer, cfg, m, leader_handle)
             })
             .expect("spawn leader");
         AllReduceService {
             tx: Mutex::new(Some(tx)),
             leader: Mutex::new(Some(leader)),
             metrics,
+            handle,
             n_workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
@@ -214,6 +283,13 @@ impl AllReduceService {
 
     pub fn n_workers(&self) -> usize {
         self.n_workers
+    }
+
+    /// The selection-table epoch currently serving (`None` without a
+    /// table): 0 at start, +1 per drift-triggered hot swap. Jobs report
+    /// the epoch that actually served them in [`JobResult::epoch`].
+    pub fn table_epoch(&self) -> Option<u64> {
+        self.handle.as_ref().map(|h| h.epoch())
     }
 
     /// Submit one AllReduce job (one equal-length tensor per worker).
@@ -243,7 +319,10 @@ impl AllReduceService {
         }
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let guard = self.tx.lock().unwrap();
+        // A submitter that panicked while holding this lock poisons it;
+        // mapping the poison to the typed error keeps every *other*
+        // client degrading gracefully instead of cascading panics.
+        let guard = self.tx.lock().map_err(|_| ApiError::ServiceStopped)?;
         let tx = guard.as_ref().ok_or(ApiError::ServiceStopped)?;
         tx.send(Job {
             id,
@@ -264,10 +343,13 @@ impl AllReduceService {
 
     /// Stop accepting jobs and join the leader after it drains the queue.
     /// Idempotent; subsequent [`submit`](Self::submit) calls return
-    /// `Err(ApiError::ServiceStopped)`.
+    /// `Err(ApiError::ServiceStopped)`. Poisoned locks are recovered —
+    /// the guarded data (a sender/handle `Option`) is always intact —
+    /// so shutdown completes even after a client panicked mid-submit.
     pub fn stop(&self) {
-        drop(self.tx.lock().unwrap().take()); // close queue → leader drains and exits
-        if let Some(h) = self.leader.lock().unwrap().take() {
+        // Close queue → leader drains and exits.
+        drop(self.tx.lock().unwrap_or_else(|e| e.into_inner()).take());
+        if let Some(h) = self.leader.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = h.join();
         }
     }
@@ -285,7 +367,26 @@ fn leader_loop(
     reducer: Reducer,
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
+    handle: Option<Arc<TableHandle>>,
 ) {
+    // The per-cycle table view: ONE read per flush cycle, so the batcher
+    // split points, the time-aware flush window, and (via the router,
+    // which reads the same handle) the routing rules all observe the
+    // same epoch within a cycle. Re-derived only when a swap happened.
+    let base_policy = cfg.policy.clone();
+    let mut view = handle.as_ref().map(|h| h.view());
+    let mut policy = match &view {
+        Some(v) => v.overlay(&base_policy),
+        None => base_policy.clone(),
+    };
+    let mut monitor: Option<DriftMonitor> = match (&cfg.drift, &handle, &cfg.telemetry) {
+        (Some(d), Some(h), Some(rec)) => {
+            Some(DriftMonitor::new(d.clone(), rec.clone(), h.clone()))
+        }
+        // start() guarantees drift ⇒ handle + recorder; anything else
+        // was already warned about and disabled there.
+        _ => None,
+    };
     let mut queue: Vec<Job> = Vec::new();
     loop {
         // Wait for work (or a flush deadline when the queue is non-empty).
@@ -301,8 +402,8 @@ fn leader_loop(
         // time the fuse would save for the queue's current size bucket
         // (the fixed window applies unchanged otherwise).
         let mut queued_floats: usize = queue.iter().map(|j| j.tensors[0].len()).sum();
-        let deadline = Instant::now() + cfg.policy.flush_window(queued_floats, cfg.flush_after);
-        while queued_floats < cfg.policy.bucket_floats {
+        let deadline = Instant::now() + policy.flush_window(queued_floats, cfg.flush_after);
+        while queued_floats < policy.bucket_floats {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -324,16 +425,29 @@ fn leader_loop(
                 floats: j.tensors[0].len(),
             })
             .collect();
-        let batches = plan_batches(&meta, &cfg.policy);
+        let batches = plan_batches(&meta, &policy);
         let mut jobs: std::collections::HashMap<u64, Job> =
             queue.drain(..).map(|j| (j.id, j)).collect();
+        let epoch = view.as_ref().map_or(0, |v| v.epoch);
+        let n_batches = batches.len() as u64;
         for batch in batches {
             // Flush accounting happens here — not in run_batch — so the
             // per-rule counters and batches_flushed stay consistent even
             // when routing fails before execution (record_batch keeps
             // the rule-sum ↔ batches_flushed invariant).
             metrics.record_batch(&batch.rule);
-            run_batch(&batch, &mut jobs, &router, &reducer, &cfg, &metrics);
+            run_batch(&batch, &mut jobs, &router, &reducer, &cfg, &metrics, epoch);
+        }
+        // Drift autopilot: between cycles — never mid-batch — so a table
+        // swap can neither drop nor duplicate a job, and the next cycle's
+        // routing/splitting/flushing move to the new epoch together.
+        if let Some(m) = &mut monitor {
+            if m.observe_flush(n_batches, &router, &metrics) {
+                view = handle.as_ref().map(|h| h.view());
+                if let Some(v) = &view {
+                    policy = v.overlay(&base_policy);
+                }
+            }
         }
     }
 }
@@ -345,6 +459,7 @@ fn run_batch(
     reducer: &Reducer,
     cfg: &ServiceConfig,
     metrics: &Arc<Metrics>,
+    epoch: u64,
 ) {
     let offsets = fuse_offsets(&batch.jobs);
     let total: usize = batch.fused_floats();
@@ -414,6 +529,7 @@ fn run_batch(
                     algo: routed.algo.to_string(),
                     rule: batch.rule,
                     observed_secs,
+                    epoch,
                 }));
             }
         }
@@ -754,6 +870,97 @@ mod tests {
         let svc = make_service(2, 1000);
         svc.allreduce(tensors(2, 10, 0)).unwrap();
         drop(svc); // must not hang
+    }
+
+    #[test]
+    fn poisoned_submit_lock_degrades_to_typed_error_not_panic() {
+        // A client thread that panics while holding the queue lock used
+        // to poison it for everyone: every later submit would *panic* on
+        // the unwrap instead of failing typed. Now other submitters get
+        // ServiceStopped and shutdown still drains and joins cleanly.
+        let svc = make_service(2, 1000);
+        svc.allreduce(tensors(2, 10, 0)).unwrap();
+        let svc = std::sync::Arc::new(svc);
+        let poisoner = svc.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.tx.lock().unwrap();
+            panic!("client panics while holding the submit lock");
+        })
+        .join();
+        // Lock is now poisoned: submissions degrade, they never panic.
+        assert_eq!(
+            svc.submit(tensors(2, 10, 1)).err(),
+            Some(ApiError::ServiceStopped)
+        );
+        assert_eq!(
+            svc.allreduce(tensors(2, 10, 2)).err(),
+            Some(ApiError::ServiceStopped)
+        );
+        // stop() recovers the poisoned guards, closes the queue, and
+        // joins the leader — idempotently. Drop must not hang either.
+        svc.stop();
+        svc.stop();
+        drop(svc);
+    }
+
+    #[test]
+    fn jobs_report_epoch_zero_without_a_table() {
+        let svc = make_service(2, 1000);
+        let res = svc.allreduce(tensors(2, 16, 1)).unwrap();
+        assert_eq!(res.epoch, 0);
+        assert_eq!(svc.table_epoch(), None, "no table, no epoch");
+        assert_eq!(svc.metrics.snapshot().drift_epoch, 0);
+    }
+
+    #[test]
+    fn drift_without_a_table_is_disabled_loudly_not_a_panic() {
+        use super::super::drift::DriftConfig;
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                drift: Some(DriftConfig::default()),
+                ..ServiceConfig::default()
+            },
+        );
+        // Jobs still serve; the monitor never runs (no checks counted).
+        let ts = tensors(2, 64, 1);
+        let want = oracle(&ts);
+        let res = svc.allreduce(ts).unwrap();
+        for (a, b) in res.reduced.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        svc.stop();
+        assert_eq!(svc.metrics.snapshot().drift_checks, 0);
+    }
+
+    #[test]
+    fn table_epoch_is_visible_and_jobs_carry_it() {
+        use crate::campaign::{table_from_choices, Metric};
+        let table = table_from_choices(
+            Metric::Model,
+            &[
+                ("single:4", 10, "cps", 1.0, 3.0),
+                ("single:4", 17, "ring", 1.0, 2.0),
+            ],
+        );
+        let cfg = ServiceConfig {
+            policy: BatchPolicy::with_cap(1),
+            flush_after: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        }
+        .with_selection_table(&table, "single:4", 1.25)
+        .unwrap();
+        let svc = AllReduceService::start(
+            single_switch(4),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            cfg,
+        );
+        assert_eq!(svc.table_epoch(), Some(0));
+        let res = svc.allreduce(tensors(4, 1000, 1)).unwrap();
+        assert_eq!((res.algo.as_str(), res.epoch), ("cps", 0));
     }
 
     #[test]

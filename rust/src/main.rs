@@ -35,7 +35,7 @@ use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
 use genmodel::campaign::{self, Metric, RunConfig, ScenarioGrid, SelectionTable};
 use genmodel::coordinator::{
-    AllReduceService, ObserveMode, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN,
+    AllReduceService, DriftConfig, ObserveMode, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN,
 };
 use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
@@ -62,10 +62,17 @@ USAGE: repro <subcommand> [options]
              [--selection table.json] [--class <topo-class>]
              [--min-split-margin 1.25] [--bench-out BENCH_campaign.json]
              [--telemetry-out hist.json] [--observe wall|sim]
+             [--drift-threshold 0.5] [--recalibrate-every 16] [--waves 1]
              (--min-split-margin: break a fuse at a selection boundary only
               when the departed winner beats its runner-up by ≥ this ratio;
               --observe sim: record flow-simulated batch seconds instead of
-              wall clock — deterministic calibration harness)
+              wall clock — deterministic calibration harness;
+              --drift-threshold: autopilot — when served cells mispredict by
+              ≥ this |rel err|, recalibrate the offending cells and hot-swap
+              the selection table mid-serve (requires --selection; checked
+              every --recalibrate-every flushed batches);
+              --waves: split the job burst into N sequential waves so a
+              long-running drift smoke actually cycles the leader)
   campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
                     [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
@@ -414,18 +421,65 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             table.metric
         );
     }
+    // Drift autopilot: score served cells against the active table and
+    // hot-swap a recalibrated one when the worst |rel err| crosses the
+    // threshold. The cadence flag is only read inside this branch, so
+    // passing it without --drift-threshold fails the unused-option check
+    // instead of being silently ignored (same pattern as the selection
+    // flags above).
+    let drift = if let Some(threshold) = args.opt_parse::<f64>("drift-threshold")? {
+        anyhow::ensure!(
+            cfg.table.is_some(),
+            "--drift-threshold needs --selection: the monitor scores served \
+             cells against the active selection table's predictions"
+        );
+        anyhow::ensure!(
+            threshold.is_finite() && threshold > 0.0,
+            "--drift-threshold is a |relative error| and must be a positive \
+             number, got {threshold}"
+        );
+        let every: u64 = args.opt_parse_or("recalibrate-every", 16)?;
+        cfg.drift = Some(DriftConfig {
+            threshold,
+            every: every.max(1),
+            ..DriftConfig::default()
+        });
+        true
+    } else {
+        false
+    };
     let svc = AllReduceService::start(topo, Environment::paper(), spec, cfg);
-    println!("coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats");
+    let waves = args.opt_parse_or::<usize>("waves", 1)?.max(1);
+    println!(
+        "coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats{}",
+        if waves > 1 {
+            format!(" in {waves} waves")
+        } else {
+            String::new()
+        }
+    );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
-    let handles: Vec<_> = (0..jobs)
-        .map(|_| {
-            let tensors: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(tensor)).collect();
-            svc.submit(tensors)
-        })
-        .collect::<Result<_, _>>()?;
-    for h in handles {
-        h.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
+    // --waves > 1 submits the burst in sequential chunks, waiting for
+    // each to complete: every wave is at least one leader flush cycle,
+    // which is what gives the drift monitor its check cadence during a
+    // short smoke run. --waves 1 is byte-identical to the old behavior.
+    let per_wave = jobs.div_ceil(waves);
+    let mut last_epoch = 0u64;
+    let mut remaining = jobs;
+    while remaining > 0 {
+        let chunk = remaining.min(per_wave);
+        remaining -= chunk;
+        let handles: Vec<_> = (0..chunk)
+            .map(|_| {
+                let tensors: Vec<Vec<f32>> = (0..servers).map(|_| rng.f32_vec(tensor)).collect();
+                svc.submit(tensors)
+            })
+            .collect::<Result<_, _>>()?;
+        for h in handles {
+            let res = h.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
+            last_epoch = res.epoch;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics.snapshot();
@@ -449,6 +503,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.latency.p95(),
         m.latency.p99()
     );
+    if drift {
+        println!(
+            "  drift autopilot  : {} check(s), {} swap(s), {} eviction(s), {} failure(s)",
+            m.drift_checks, m.drift_swaps, m.drift_evictions, m.drift_failures
+        );
+        println!(
+            "  table epoch      : {} (last job served at epoch {last_epoch})",
+            svc.table_epoch().unwrap_or(0)
+        );
+    }
     if let Some(out) = &telemetry_out {
         let snap = recorder.snapshot();
         snap.save(std::path::Path::new(out))?;
@@ -473,6 +537,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 format!("serve_batches_{}", rule.replace('-', "_")),
                 Json::num(count as f64),
             ));
+        }
+        if drift {
+            entries.push(("drift_checks".to_string(), Json::num(m.drift_checks as f64)));
+            entries.push(("drift_swaps".to_string(), Json::num(m.drift_swaps as f64)));
+            entries.push((
+                "drift_evictions".to_string(),
+                Json::num(m.drift_evictions as f64),
+            ));
+            entries.push((
+                "drift_failures".to_string(),
+                Json::num(m.drift_failures as f64),
+            ));
+            entries.push(("drift_epoch".to_string(), Json::num(m.drift_epoch as f64)));
         }
         merge_bench_json(bench_out, entries)?;
         println!("  bench record     → {bench_out}");
@@ -658,7 +735,10 @@ fn cmd_score(args: &Args) -> anyhow::Result<()> {
     println!("{}", campaign::report::accuracy_table(&cells).render());
     let s = telemetry::summarize(&cells);
     let overall = snap.overall_hist();
-    println!("  cells scored     : {} ({} matched a prediction)", s.cells, s.matched);
+    println!(
+        "  cells scored     : {} ({} matched a prediction, {} skipped as degenerate)",
+        s.cells, s.matched, s.skipped
+    );
     println!("  mean |rel err|   : {:.1}%", s.mean_abs_rel_err * 100.0);
     println!("  max  |rel err|   : {:.1}%", s.max_abs_rel_err * 100.0);
     if let Some(worst) = &s.worst {
@@ -677,6 +757,7 @@ fn cmd_score(args: &Args) -> anyhow::Result<()> {
             vec![
                 ("score_cells".to_string(), Json::num(s.cells as f64)),
                 ("score_matched".to_string(), Json::num(s.matched as f64)),
+                ("score_skipped".to_string(), Json::num(s.skipped as f64)),
                 (
                     "score_mean_abs_rel_err".to_string(),
                     Json::num(s.mean_abs_rel_err),

@@ -39,6 +39,20 @@
 //! `coordinator::metrics` exposes a service-wide latency histogram, and
 //! `repro serve --telemetry-out` persists the snapshot the `score` /
 //! `calibrate` subcommands consume.
+//!
+//! Since the drift autopilot (`serve --drift-threshold`), the loop also
+//! closes **online**: `coordinator::drift::DriftMonitor` scores the
+//! recorder's fresh observations ([`TelemetrySnapshot::delta`] isolates
+//! traffic served since the last swap) against the *active* selection
+//! table's own predictions, recalibrates the offending (class, bucket)
+//! cells — the Calibrator here when the CPS spread supports the §3.4
+//! fit, else a targeted analytic re-price — and hot-swaps the rebuilt
+//! table into the serving `TableHandle`, bumping the epoch every
+//! `JobResult` reports. The CLI `score`/`calibrate` subcommands remain
+//! the offline, operator-inspectable views of the same machinery.
+//! Degenerate cells (zero/non-finite predicted or observed seconds)
+//! yield no relative error and are reported as `ScoreSummary::skipped`
+//! rather than NaN-sorting into the worst-offender slot.
 
 pub mod calibrate;
 pub mod hist;

@@ -177,6 +177,47 @@ impl TelemetrySnapshot {
         out
     }
 
+    /// The observations present in `self` but not in `baseline`: per-cell
+    /// bin-wise and total-wise subtraction. Recorder cells only ever
+    /// grow, so a later snapshot of the same recorder minus an earlier
+    /// one is exactly the traffic served in between — what the drift
+    /// monitor scores, so observations consumed by one recalibration
+    /// never re-trip the next. Subtraction saturates (a foreign baseline
+    /// cannot underflow; totals pinned at `MAX_EXACT_TOTAL` degrade to a
+    /// conservative delta), and cells with no new batches are omitted.
+    pub fn delta(&self, baseline: &TelemetrySnapshot) -> TelemetrySnapshot {
+        let mut cells = BTreeMap::new();
+        for (key, cur) in &self.cells {
+            let Some(base) = baseline.cells.get(key) else {
+                if cur.batches() > 0 {
+                    cells.insert(key.clone(), cur.clone());
+                }
+                continue;
+            };
+            let mut hist = HistSnapshot::default();
+            for (d, (a, b)) in hist
+                .bins
+                .iter_mut()
+                .zip(cur.hist.bins.iter().zip(&base.hist.bins))
+            {
+                *d = a.saturating_sub(*b);
+            }
+            hist.sum_nanos = cur.hist.sum_nanos.saturating_sub(base.hist.sum_nanos);
+            if hist.count() == 0 {
+                continue;
+            }
+            cells.insert(
+                key.clone(),
+                CellSnapshot {
+                    n_workers: cur.n_workers,
+                    floats: cur.floats.saturating_sub(base.floats),
+                    hist,
+                },
+            );
+        }
+        TelemetrySnapshot { cells }
+    }
+
     /// Fold another snapshot's cells into this one (same-key cells merge
     /// their histograms and float counts).
     pub fn merge(&mut self, other: &TelemetrySnapshot) {
@@ -385,6 +426,32 @@ mod tests {
         assert_eq!(cps.batches(), 4);
         assert_eq!(cps.floats, 262_144);
         assert_eq!(a.overall_hist().count(), 8);
+    }
+
+    #[test]
+    fn delta_isolates_the_traffic_served_since_the_baseline() {
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        let baseline = rec.snapshot();
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.004); // same cell grows
+        rec.record("single:8", 8, 20, "ring", 1_048_576, 0.016); // new cell
+        let fresh = rec.snapshot().delta(&baseline);
+        assert_eq!(fresh.cells.len(), 2);
+        let cps = &fresh.cells[&CellKey {
+            class: "single:8".into(),
+            bucket: 16,
+            algo: "cps".into(),
+        }];
+        // Only the post-baseline observation remains: one batch at 4 ms.
+        assert_eq!(cps.batches(), 1);
+        assert_eq!(cps.floats, 65_536);
+        assert!((cps.mean_secs() - 0.004).abs() < 1e-9, "{}", cps.mean_secs());
+        // Cells that saw no new traffic are omitted entirely.
+        let quiet = rec.snapshot().delta(&rec.snapshot());
+        assert!(quiet.is_empty());
+        // An empty baseline returns the snapshot itself.
+        let all = rec.snapshot();
+        assert_eq!(all.delta(&TelemetrySnapshot::default()), all);
     }
 
     #[test]

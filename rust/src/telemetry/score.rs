@@ -30,14 +30,19 @@ pub struct ScoredCell {
 
 impl ScoredCell {
     /// Signed relative error `(observed − predicted) / predicted`; `None`
-    /// when no prediction matched the cell.
+    /// when no prediction matched the cell **or the error is not a
+    /// finite number** — a zero/NaN prediction or a NaN observation
+    /// (e.g. a zero-sample cell) must not produce a NaN that sorts
+    /// nondeterministically into (or out of) the worst-offender slot.
+    /// Such cells are counted as [`ScoreSummary::skipped`], never
+    /// silently dropped.
     pub fn rel_err(&self) -> Option<f64> {
         let p = self.predicted_s?;
-        if p > 0.0 {
-            Some((self.observed_mean_s - p) / p)
-        } else {
-            None
+        if !(p.is_finite() && p > 0.0) {
+            return None;
         }
+        let err = (self.observed_mean_s - p) / p;
+        err.is_finite().then_some(err)
     }
 }
 
@@ -45,8 +50,13 @@ impl ScoredCell {
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ScoreSummary {
     pub cells: usize,
-    /// Cells with a matched prediction.
+    /// Cells with a matched prediction *and* a finite relative error.
     pub matched: usize,
+    /// Cells whose prediction matched but whose relative error is not a
+    /// finite number (zero/non-finite predicted or observed seconds) —
+    /// excluded from the error aggregates, reported instead of silently
+    /// occupying or vanishing from the worst slot.
+    pub skipped: usize,
     pub mean_abs_rel_err: f64,
     pub max_abs_rel_err: f64,
     /// The worst-offending cell's key (display form), when any matched.
@@ -79,7 +89,7 @@ pub fn score_cells(
                 })
                 .min_by(|a, b| {
                     let d = |r: &CampaignRow| (r.size - mean_floats).abs();
-                    d(a).partial_cmp(&d(b)).unwrap_or(std::cmp::Ordering::Equal)
+                    d(a).total_cmp(&d(b))
                 })
                 .and_then(|r| r.model_s);
             ScoredCell {
@@ -96,12 +106,11 @@ pub fn score_cells(
         .collect();
     out.sort_by(|a, b| {
         let e = |c: &ScoredCell| c.rel_err().map(f64::abs);
-        // Matched before unmatched, then |rel err| descending, then key.
+        // Finite errors before skipped/unmatched, then |rel err|
+        // descending, then key. rel_err only ever returns finite
+        // numbers, so this order is total and deterministic.
         match (e(a), e(b)) {
-            (Some(x), Some(y)) => y
-                .partial_cmp(&x)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| a.key.cmp(&b.key)),
+            (Some(x), Some(y)) => y.total_cmp(&x).then_with(|| a.key.cmp(&b.key)),
             (Some(_), None) => std::cmp::Ordering::Less,
             (None, Some(_)) => std::cmp::Ordering::Greater,
             (None, None) => a.key.cmp(&b.key),
@@ -118,7 +127,15 @@ pub fn summarize(cells: &[ScoredCell]) -> ScoreSummary {
     };
     let mut sum = 0.0;
     for c in cells {
-        let Some(err) = c.rel_err() else { continue };
+        let Some(err) = c.rel_err() else {
+            // A prediction that matched but yields no finite error is
+            // *skipped*, visibly; cells with no prediction at all are
+            // neither matched nor skipped.
+            if c.predicted_s.is_some() {
+                s.skipped += 1;
+            }
+            continue;
+        };
         s.matched += 1;
         sum += err.abs();
         if err.abs() > s.max_abs_rel_err {
@@ -205,6 +222,67 @@ mod tests {
         assert!((ring.rel_err().unwrap() + 0.5).abs() < 1e-9); // observed half
         let cps = cells.iter().find(|c| c.key.algo == "cps").unwrap();
         assert_eq!(cps.predicted_s, Some(0.030), "row matched case-insensitively");
+    }
+
+    #[test]
+    fn degenerate_predictions_are_skipped_not_nan_sorted() {
+        // A zero prediction (hand-authored table cell) and a NaN
+        // observation both used to produce NaN relative errors that
+        // sorted nondeterministically; now they yield None, sort after
+        // every finite cell deterministically, and are counted as
+        // skipped in the summary.
+        let cell = |algo: &str, observed: f64, predicted: Option<f64>| ScoredCell {
+            key: CellKey {
+                class: "single:8".into(),
+                bucket: 20,
+                algo: algo.into(),
+            },
+            n_workers: 8,
+            batches: 1,
+            mean_floats: 1e6,
+            observed_mean_s: observed,
+            observed_p95_s: observed,
+            predicted_s: predicted,
+        };
+        let zero_pred = cell("a-zero", 0.030, Some(0.0));
+        let nan_pred = cell("b-nan", 0.030, Some(f64::NAN));
+        let nan_obs = cell("c-nanobs", f64::NAN, Some(0.020));
+        let fine = cell("d-fine", 0.030, Some(0.020));
+        let unmatched = cell("e-none", 0.030, None);
+        for c in [&zero_pred, &nan_pred, &nan_obs] {
+            assert_eq!(c.rel_err(), None, "{}", c.key.algo);
+        }
+        assert!((fine.rel_err().unwrap() - 0.5).abs() < 1e-9);
+        let s = summarize(&[
+            zero_pred.clone(),
+            nan_pred.clone(),
+            nan_obs.clone(),
+            fine.clone(),
+            unmatched.clone(),
+        ]);
+        assert_eq!((s.cells, s.matched, s.skipped), (5, 1, 3));
+        assert!((s.max_abs_rel_err - 0.5).abs() < 1e-9);
+        assert!(s.worst.as_deref().unwrap().contains("d-fine"), "{:?}", s.worst);
+        // Ordering is deterministic THROUGH score_cells itself: recorded
+        // cells whose predictor returns 0.0 / NaN / a finite value / no
+        // prediction come back with the finite cell first and everything
+        // degenerate after it in key order — no NaN may ever
+        // nondeterministically occupy (or vanish from) the worst slot.
+        let rec = Recorder::new();
+        for algo in ["a-zero", "b-nan", "d-fine", "e-none"] {
+            rec.record("single:8", 8, 20, algo, 1_000_000, 0.030);
+        }
+        let scored = score_cells(&rec.snapshot(), &[], |_, _, algo| match algo {
+            "a-zero" => Some(0.0),
+            "b-nan" => Some(f64::NAN),
+            "d-fine" => Some(0.020),
+            _ => None,
+        });
+        let order: Vec<&str> = scored.iter().map(|c| c.key.algo.as_str()).collect();
+        assert_eq!(order, ["d-fine", "a-zero", "b-nan", "e-none"]);
+        let s = summarize(&scored);
+        assert_eq!((s.cells, s.matched, s.skipped), (4, 1, 2));
+        assert!(s.worst.as_deref().unwrap().contains("d-fine"), "{:?}", s.worst);
     }
 
     #[test]

@@ -77,4 +77,26 @@ step cargo run --release -p genmodel --quiet -- score \
     --telemetry target/telemetry_smoke.json --in target/campaign_smoke.jsonl \
     --bench-out BENCH_campaign.json
 
+# 8. Drift autopilot smoke: serve through an INTENTIONALLY STALE table —
+#    winners priced under the GPU environment while observations are
+#    flow-simulated under the paper fabric — with an aggressive
+#    --drift-threshold. The monitor must trip mid-serve, recalibrate the
+#    offending cells (targeted re-price under the service environment),
+#    and hot-swap the table; drift_swaps / drift_epoch / drift_evictions
+#    merge into BENCH_campaign.json from the serve, and the post-swap
+#    accuracy (score_max_abs_rel_err over the drift run's telemetry,
+#    which the paper-fabric engine now predicts well) lands beside them.
+rm -f target/campaign_drift_stale.jsonl
+step cargo run --release -p genmodel --quiet -- campaign run --grid smoke --env gpu \
+    --threads 2 --out target/campaign_drift_stale.jsonl
+step cargo run --release -p genmodel --quiet -- campaign select \
+    --in target/campaign_drift_stale.jsonl --out target/selection_drift_stale.json --by model
+step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 48 --waves 12 \
+    --tensor 4096 --scalar --observe sim \
+    --selection target/selection_drift_stale.json --class single:4 \
+    --drift-threshold 0.5 --recalibrate-every 4 \
+    --bench-out BENCH_campaign.json --telemetry-out target/telemetry_drift.json
+step cargo run --release -p genmodel --quiet -- score \
+    --telemetry target/telemetry_drift.json --bench-out BENCH_campaign.json
+
 exit $fail
