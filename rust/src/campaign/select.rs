@@ -269,6 +269,29 @@ impl SelectionTable {
         }
     }
 
+    /// Whether `other` routes `class` exactly as this table does: the
+    /// same bucket set with the same winning algorithm per bucket.
+    /// Stored seconds and margins may differ — they are accuracy
+    /// metadata, not routing. This is the fleet push's no-op filter: a
+    /// recalibrated patch that would not change a sibling's *routing*
+    /// is held back rather than swapped in, so an honest rack's epoch
+    /// is not churned (and its router cache not probed) every time some
+    /// other rack drifts. Class resolution matches [`Self::lookup`]
+    /// (exact first, then case-insensitive); a class neither table
+    /// knows trivially agrees.
+    pub fn routing_agrees_for(&self, other: &SelectionTable, class: &str) -> bool {
+        match (self.cells_for(class), other.cells_for(class)) {
+            (None, None) => true,
+            (Some(a), Some(b)) => {
+                a.len() == b.len()
+                    && a.iter()
+                        .zip(b.iter())
+                        .all(|((ba, ca), (bb, cb))| ba == bb && ca.algo == cb.algo)
+            }
+            _ => false,
+        }
+    }
+
     // ---- serialization ---------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -747,6 +770,41 @@ mod tests {
         let small = active.lookup("ss24", 1 << 10).unwrap();
         assert_eq!((small.algo.as_str(), small.seconds, small.runner_up), ("cps", 0.2, 0.6));
         assert_eq!(active.lookup("single:8", 1 << 14).unwrap().algo, "ring");
+    }
+
+    #[test]
+    fn routing_agreement_ignores_seconds_but_not_winners_or_buckets() {
+        let active = table_from_choices(
+            Metric::Model,
+            &[("ss24", 10, "cps", 0.2, 0.6), ("ss24", 20, "cps", 1.0, 2.0)],
+        );
+        // Same winners, different (re-fitted) seconds: routing agrees —
+        // this is the push a fleet monitor holds back.
+        let refit = table_from_choices(
+            Metric::Model,
+            &[("ss24", 10, "cps", 0.21, 0.5), ("ss24", 20, "cps", 1.3, 1.9)],
+        );
+        assert!(active.routing_agrees_for(&refit, "ss24"));
+        // A flipped winner disagrees.
+        let flipped = table_from_choices(
+            Metric::Model,
+            &[("ss24", 10, "cps", 0.2, 0.6), ("ss24", 20, "ring", 0.9, 1.0)],
+        );
+        assert!(!active.routing_agrees_for(&flipped, "ss24"));
+        // An extra (or missing) bucket disagrees: the patch knows a cell
+        // the active table lacks, so the push carries information.
+        let wider = table_from_choices(
+            Metric::Model,
+            &[
+                ("ss24", 10, "cps", 0.2, 0.6),
+                ("ss24", 20, "cps", 1.0, 2.0),
+                ("ss24", 25, "cps", 3.0, 4.0),
+            ],
+        );
+        assert!(!active.routing_agrees_for(&wider, "ss24"));
+        // A class neither side knows trivially agrees; one-sided doesn't.
+        assert!(active.routing_agrees_for(&refit, "absent"));
+        assert!(!active.routing_agrees_for(&table_from_entries(Metric::Model, &[]), "ss24"));
     }
 
     #[test]

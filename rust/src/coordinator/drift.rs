@@ -9,12 +9,15 @@
 //! restart `serve` with the new table. [`DriftMonitor`] closes the loop
 //! inside the leader thread:
 //!
-//! 1. every [`DriftConfig::every`] flushed batches it snapshots the
-//!    service's [`Recorder`] and scores only the **delta since the last
-//!    swap** ([`TelemetrySnapshot::delta`]) against the active table's
-//!    own per-cell predicted seconds (`telemetry::score_cells` — cells
-//!    whose served algorithm is not the table's winner carry no
-//!    prediction and cannot trip the monitor);
+//! 1. every [`DriftConfig::every`] flushed batches it peeks its private
+//!    [`TelemetryCursor`] over the service's [`Recorder`] and scores
+//!    only the **delta since the last swap** against the active table's
+//!    own per-cell predicted seconds
+//!    (`telemetry::score_against_table` — cells whose served algorithm
+//!    is not the table's winner carry no prediction and cannot trip the
+//!    monitor). The cursor is per-consumer state ([`Recorder::cursor`]):
+//!    a fleet monitor sharing the recorder holds its own and the two
+//!    never double-consume;
 //! 2. when the worst finite |rel err| reaches
 //!    [`DriftConfig::threshold`], it recalibrates: the §3.4 Calibrator
 //!    first (when the recorder holds the multi-`n` CPS spread the fit
@@ -45,7 +48,9 @@ use std::sync::Arc;
 
 use crate::api::{AlgoSpec, ApiError};
 use crate::campaign::{price_grid, EnvKind, Metric, ScenarioGrid, SelectionTable};
-use crate::telemetry::{calibrate, score_cells, summarize, Recorder, TelemetrySnapshot};
+use crate::telemetry::{
+    calibrate, score_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
+};
 
 use super::handle::TableHandle;
 use super::metrics::Metrics;
@@ -85,10 +90,12 @@ impl Default for DriftConfig {
 /// loop; all methods run between flush cycles.
 pub struct DriftMonitor {
     cfg: DriftConfig,
-    recorder: Arc<Recorder>,
     handle: Arc<TableHandle>,
-    /// Observations already consumed by the last swap — the delta base.
-    baseline: TelemetrySnapshot,
+    /// This monitor's private delta cursor over the (possibly shared)
+    /// recorder: a fleet-level monitor or operator scorer on the same
+    /// recorder holds its own cursor, so neither consumer's swaps
+    /// starve or re-trip the other ([`Recorder::cursor`]).
+    cursor: TelemetryCursor,
     since_check: u64,
 }
 
@@ -96,9 +103,8 @@ impl DriftMonitor {
     pub fn new(cfg: DriftConfig, recorder: Arc<Recorder>, handle: Arc<TableHandle>) -> Self {
         DriftMonitor {
             cfg,
-            recorder,
             handle,
-            baseline: TelemetrySnapshot::default(),
+            cursor: recorder.cursor(),
             since_check: 0,
         }
     }
@@ -118,31 +124,26 @@ impl DriftMonitor {
 
     fn check(&mut self, router: &PlanRouter, metrics: &Metrics) -> bool {
         metrics.add(&metrics.drift_checks, 1);
-        let snap = self.recorder.snapshot();
-        let fresh = snap.delta(&self.baseline);
+        let (snap, fresh) = self.cursor.peek();
         if fresh.is_empty() {
             return false;
         }
         let view = self.handle.view();
         // Predictions come from the ACTIVE table itself: the winner's
         // stored seconds for the cell's bucket (nearest-rule clamp, the
-        // same resolution routing uses). A cell served by an algorithm
-        // the table no longer routes — e.g. pre-swap traffic — gets no
-        // prediction and cannot trip the monitor again. Deliberate
-        // consequence of the clamp: traffic in a bucket the table never
-        // swept is scored against a different-size cell's seconds and
-        // reads as drift — which it is, in the sense that matters: the
-        // table carries no information at the served size yet routes it
-        // anyway. The triggered recalibration prices the *observed*
-        // bucket and merges the exact cell in, so the loop converges
-        // after one swap instead of clamping forever (pinned by the
-        // off_ladder test below).
-        let table = view.table.clone();
-        let scored = score_cells(&fresh, &[], |class, bucket, algo| {
-            let choice = table.lookup(class, PlanRouter::bucket_size(bucket) as usize)?;
-            (choice.algo == algo && choice.seconds.is_finite() && choice.seconds > 0.0)
-                .then_some(choice.seconds)
-        });
+        // same resolution routing uses — `score_against_table`). A cell
+        // served by an algorithm the table no longer routes — e.g.
+        // pre-swap traffic — gets no prediction and cannot trip the
+        // monitor again. Deliberate consequence of the clamp: traffic
+        // in a bucket the table never swept is scored against a
+        // different-size cell's seconds and reads as drift — which it
+        // is, in the sense that matters: the table carries no
+        // information at the served size yet routes it anyway. The
+        // triggered recalibration prices the *observed* bucket and
+        // merges the exact cell in, so the loop converges after one
+        // swap instead of clamping forever (pinned by the off_ladder
+        // test below).
+        let scored = score_against_table(&fresh, &view.table);
         let summary = summarize(&scored);
         if summary.matched == 0 || summary.max_abs_rel_err < self.cfg.threshold {
             return false;
@@ -172,7 +173,7 @@ impl DriftMonitor {
                         metrics.drift_epoch.store(new.epoch, Ordering::Relaxed);
                         // These observations are spent: the next check
                         // scores only traffic the new table served.
-                        self.baseline = snap;
+                        self.cursor.consume(snap);
                         eprintln!(
                             "allreduce-leader: drift {:.0}% ≥ {:.0}% on {} cell(s) \
                              (worst {}): recalibrated and hot-swapped table to epoch {} \
@@ -231,9 +232,9 @@ impl DriftMonitor {
 }
 
 /// A tripped check whose recalibration or swap could not complete: count
-/// it, say so, and leave the active table serving. The monitor's
-/// baseline is *not* advanced, so the evidence is retried (with more
-/// data) at the next cadence point.
+/// it, say so, and leave the active table serving. The monitor's cursor
+/// is *not* advanced, so the evidence is retried (with more data) at the
+/// next cadence point.
 fn fail(metrics: &Metrics, e: &ApiError) -> bool {
     metrics.add(&metrics.drift_failures, 1);
     eprintln!(

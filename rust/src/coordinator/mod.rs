@@ -57,6 +57,15 @@
 //!   on the leader thread, no job is ever dropped, duplicated, or served
 //!   by a half-swapped policy.
 //!
+//! The handle is also the service's **external control surface**: an
+//! outside controller holding [`AllReduceService::table_handle`] — the
+//! [`crate::fleet`] registry is the in-tree consumer — may swap a
+//! recalibrated table in at any time. The leader probes the handle's
+//! epoch at the top of every flush cycle, so a cross-rack push lands
+//! with exactly the same guarantees as a local drift swap: stale plans
+//! evicted, consumers re-derived together, epochs reported, zero
+//! dropped jobs.
+//!
 //! Threads + channels stand in for an async runtime (tokio is not in the
 //! vendored dependency closure; the control flow is identical).
 

@@ -292,6 +292,18 @@ impl AllReduceService {
         self.handle.as_ref().map(|h| h.epoch())
     }
 
+    /// The live selection-table handle (`None` without a table) — the
+    /// fleet registry hook. An external controller holding this handle
+    /// may [`TableHandle::swap`] a recalibrated table in at any time:
+    /// the leader probes the epoch at the top of every flush cycle and
+    /// re-derives its per-cycle view (routing rules, split points,
+    /// flush windows, reported epoch move together), evicting the plans
+    /// the push stranded. Routing itself reads the handle live, so a
+    /// push takes effect no later than the next flush cycle.
+    pub fn table_handle(&self) -> Option<Arc<TableHandle>> {
+        self.handle.clone()
+    }
+
     /// Submit one AllReduce job (one equal-length tensor per worker).
     /// Returns the receiver for the result, or a typed error when the
     /// request is malformed or the service is stopped.
@@ -415,6 +427,25 @@ fn leader_loop(
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Pick up tables swapped in from OUTSIDE this leader (a fleet
+        // controller pushing a sibling rack's recalibration into our
+        // handle): if the epoch moved while we were waiting, re-derive
+        // the per-cycle view now — before planning — so batch splitting,
+        // the reported epoch, and (already-live) routing cross into the
+        // new epoch together, and evict the plans the push stranded.
+        // The leader's own monitor swaps below, synchronously, and
+        // updates the view there; this probe only ever fires for
+        // external swaps.
+        if let (Some(h), Some(v)) = (&handle, &view) {
+            if h.epoch() != v.epoch {
+                let new = h.view();
+                let evicted = router.evict_stale(v, &new);
+                metrics.add(&metrics.drift_evictions, evicted);
+                metrics.drift_epoch.store(new.epoch, Ordering::Relaxed);
+                policy = new.overlay(&base_policy);
+                view = Some(new);
             }
         }
         // Flush everything queued, batch by batch.

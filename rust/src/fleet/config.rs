@@ -1,0 +1,279 @@
+//! Fleet configuration: which topology classes to serve, each class's
+//! drift budget, and which classes start from a deliberately stale
+//! table (harness / demo mode).
+//!
+//! Two front doors produce the same [`FleetConfig`]: the compact CLI
+//! spec grammar (`repro fleet --classes`) and a `fleet/v1` JSON file
+//! (`repro fleet --config`). Both reject duplicate classes up front —
+//! the controller would reject the second registration anyway
+//! ([`crate::fleet::FleetController::register`]), but a config typo
+//! should fail before any service spawns.
+
+use std::collections::BTreeSet;
+
+use crate::api::{applicable_specs, AlgoSpec, ApiError};
+use crate::topo::Topology;
+use crate::util::json::Json;
+
+/// Schema tag of the fleet config file format.
+pub const FLEET_SCHEMA: &str = "fleet/v1";
+
+/// One topology class the fleet serves.
+///
+/// CLI grammar: `class[@threshold][!stale]` — e.g. `single:15@0.4!stale`
+/// serves the 15-worker rack under a 40% drift budget starting from a
+/// stale (δ=ε=0) table, `single:8` serves the 8-worker rack under the
+/// fleet-wide default budget starting honest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSpec {
+    /// Topology class key (`parse_topology` grammar, e.g. `single:15`).
+    pub class: String,
+    /// Per-class drift budget; `None` inherits [`FleetConfig::threshold`].
+    pub threshold: Option<f64>,
+    /// Start this class from a blind-model (δ=ε=0) table instead of one
+    /// priced under the serving environment — the drift the fleet
+    /// monitor exists to catch, made reproducible.
+    pub stale: bool,
+}
+
+impl ClassSpec {
+    pub fn parse(spec: &str) -> Result<ClassSpec, ApiError> {
+        let mut rest = spec.trim();
+        let stale = if let Some(s) = rest.strip_suffix("!stale") {
+            rest = s;
+            true
+        } else {
+            false
+        };
+        let threshold = match rest.split_once('@') {
+            Some((class, thr)) => {
+                let t: f64 = thr.parse().map_err(|_| ApiError::BadRequest {
+                    reason: format!("class spec {spec:?}: bad threshold {thr:?}"),
+                })?;
+                if !(t.is_finite() && t > 0.0) {
+                    return Err(ApiError::BadRequest {
+                        reason: format!("class spec {spec:?}: threshold must be finite and > 0"),
+                    });
+                }
+                rest = class;
+                Some(t)
+            }
+            None => None,
+        };
+        if rest.is_empty() {
+            return Err(ApiError::BadRequest {
+                reason: format!("class spec {spec:?}: empty class"),
+            });
+        }
+        Ok(ClassSpec {
+            class: rest.to_string(),
+            threshold,
+            stale,
+        })
+    }
+}
+
+/// The fleet's declarative input (see [`ClassSpec`] for the per-class
+/// grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    pub classes: Vec<ClassSpec>,
+    /// Fleet-wide default drift budget for classes without their own.
+    pub threshold: f64,
+}
+
+impl FleetConfig {
+    /// Parse the CLI `--classes` grammar: comma-separated [`ClassSpec`]s.
+    pub fn parse_classes(spec: &str, threshold: f64) -> Result<FleetConfig, ApiError> {
+        let classes = spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(ClassSpec::parse)
+            .collect::<Result<Vec<_>, _>>()?;
+        FleetConfig { classes, threshold }.validated()
+    }
+
+    /// Load a `fleet/v1` JSON config:
+    ///
+    /// ```json
+    /// {"schema": "fleet/v1", "threshold": 0.5,
+    ///  "classes": [{"class": "single:15", "threshold": 0.4, "stale": true},
+    ///              {"class": "single:8"}]}
+    /// ```
+    pub fn from_json(text: &str) -> Result<FleetConfig, ApiError> {
+        let v = Json::parse(text).map_err(|e| ApiError::BadRequest {
+            reason: format!("fleet config: {e}"),
+        })?;
+        match v.get("schema").and_then(Json::as_str) {
+            Some(FLEET_SCHEMA) => {}
+            other => {
+                return Err(ApiError::BadRequest {
+                    reason: format!(
+                        "fleet config: schema {:?}, expected {FLEET_SCHEMA:?}",
+                        other.unwrap_or("<missing>")
+                    ),
+                })
+            }
+        }
+        let threshold = v
+            .get("threshold")
+            .map(|t| {
+                t.as_f64().ok_or_else(|| ApiError::BadRequest {
+                    reason: "fleet config: threshold must be a number".into(),
+                })
+            })
+            .transpose()?
+            .unwrap_or(0.5);
+        let classes = v
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ApiError::BadRequest {
+                reason: "fleet config: missing \"classes\" array".into(),
+            })?
+            .iter()
+            .map(|c| {
+                let class = c
+                    .get("class")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ApiError::BadRequest {
+                        reason: "fleet config: class entry missing \"class\"".into(),
+                    })?
+                    .to_string();
+                Ok(ClassSpec {
+                    class,
+                    threshold: c.get("threshold").and_then(Json::as_f64),
+                    stale: c.get("stale") == Some(&Json::Bool(true)),
+                })
+            })
+            .collect::<Result<Vec<_>, ApiError>>()?;
+        FleetConfig { classes, threshold }.validated()
+    }
+
+    fn validated(self) -> Result<FleetConfig, ApiError> {
+        if self.classes.len() < 2 {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "a fleet needs at least 2 topology classes, got {} — \
+                     one rack is `repro serve`",
+                    self.classes.len()
+                ),
+            });
+        }
+        let mut seen = BTreeSet::new();
+        for c in &self.classes {
+            if !seen.insert(c.class.as_str()) {
+                return Err(ApiError::BadRequest {
+                    reason: format!("duplicate topology class {:?} in fleet config", c.class),
+                });
+            }
+        }
+        Ok(self)
+    }
+}
+
+/// The fleet's default candidate algorithms for one class: the CPS
+/// family and its nearby baselines (ring, hierarchical CPS), i.e. the
+/// applicable registry defaults restricted to families the §3.4
+/// Calibrator can learn from. An unrestricted candidate set would route
+/// near-everything to GenTree, the recorder would hold no CPS-served
+/// cells, and the fleet's pooled fit could never fire — the operator
+/// can still override per-fleet with `--algos`.
+pub fn default_candidates(topo: &Topology) -> Vec<AlgoSpec> {
+    applicable_specs(topo)
+        .into_iter()
+        .filter(|a| matches!(a.family(), "cps" | "ring" | "hcps"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::single_switch;
+
+    #[test]
+    fn class_spec_grammar_round_trips() {
+        assert_eq!(
+            ClassSpec::parse("single:15@0.4!stale").unwrap(),
+            ClassSpec {
+                class: "single:15".into(),
+                threshold: Some(0.4),
+                stale: true,
+            }
+        );
+        assert_eq!(
+            ClassSpec::parse("single:8").unwrap(),
+            ClassSpec {
+                class: "single:8".into(),
+                threshold: None,
+                stale: false,
+            }
+        );
+        assert_eq!(
+            ClassSpec::parse("single:6!stale").unwrap(),
+            ClassSpec {
+                class: "single:6".into(),
+                threshold: None,
+                stale: true,
+            }
+        );
+        assert!(ClassSpec::parse("single:15@zero").is_err());
+        assert!(ClassSpec::parse("single:15@-1").is_err());
+        assert!(ClassSpec::parse("@0.5").is_err());
+    }
+
+    #[test]
+    fn classes_spec_rejects_duplicates_and_singletons() {
+        let cfg = FleetConfig::parse_classes("single:15!stale,single:8@0.3", 0.5).unwrap();
+        assert_eq!(cfg.classes.len(), 2);
+        assert_eq!(cfg.threshold, 0.5);
+
+        match FleetConfig::parse_classes("single:15,single:8,single:15", 0.5) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("single:15"), "{reason}")
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        assert!(FleetConfig::parse_classes("single:15", 0.5).is_err());
+    }
+
+    #[test]
+    fn json_config_parses_and_validates() {
+        let cfg = FleetConfig::from_json(
+            r#"{"schema": "fleet/v1", "threshold": 0.4,
+                "classes": [{"class": "single:15", "stale": true},
+                            {"class": "single:8", "threshold": 0.6}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.threshold, 0.4);
+        assert_eq!(cfg.classes[0].class, "single:15");
+        assert!(cfg.classes[0].stale);
+        assert_eq!(cfg.classes[1].threshold, Some(0.6));
+
+        assert!(FleetConfig::from_json("{\"schema\": \"fleet/v2\", \"classes\": []}").is_err());
+        assert!(FleetConfig::from_json("not json").is_err());
+        let dup = r#"{"schema": "fleet/v1",
+                      "classes": [{"class": "single:8"}, {"class": "single:8"}]}"#;
+        match FleetConfig::from_json(dup) {
+            Err(ApiError::BadRequest { reason }) => assert!(reason.contains("single:8")),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn default_candidates_are_calibratable_families() {
+        let specs = default_candidates(&single_switch(15));
+        assert!(specs.contains(&AlgoSpec::Cps));
+        assert!(specs.contains(&AlgoSpec::Ring));
+        assert!(specs
+            .iter()
+            .any(|a| matches!(a, AlgoSpec::Hcps { .. })));
+        assert!(
+            !specs.iter().any(|a| matches!(a, AlgoSpec::GenTree { .. })),
+            "gentree would win every cell and starve the CPS fit"
+        );
+        // A prime rack simply has no balanced HCPS split; cps/ring remain.
+        let specs = default_candidates(&single_switch(7));
+        assert!(specs.contains(&AlgoSpec::Cps));
+        assert!(!specs.iter().any(|a| matches!(a, AlgoSpec::Hcps { .. })));
+    }
+}

@@ -1,0 +1,296 @@
+//! The fleet controller: one [`AllReduceService`] per topology class,
+//! all recording into one shared [`Recorder`], all hot-swappable
+//! through the controller's registry of epoch-versioned
+//! [`TableHandle`]s.
+//!
+//! Registration is the fleet's one write path: it parses the class into
+//! a topology, wires the shared recorder and the class's selection
+//! table into a [`ServiceConfig`], spawns the service, and captures its
+//! live table handle. A class can be registered once — a second
+//! registration is a typed [`ApiError::BadRequest`] naming the class,
+//! because two services recording under one class key would corrupt the
+//! pooled telemetry both the per-class scores and the §3.4 fit read.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::{AlgoSpec, ApiError};
+use crate::bench::workloads::parse_topology;
+use crate::campaign::SelectionTable;
+use crate::coordinator::{
+    AllReduceService, BatchPolicy, ObserveMode, ServiceConfig, TableHandle,
+};
+use crate::model::params::Environment;
+use crate::runtime::ReducerSpec;
+use crate::telemetry::Recorder;
+
+use super::config::default_candidates;
+use super::monitor::{FleetCheck, FleetMonitor};
+
+/// Everything needed to spawn one class's service under the fleet.
+#[derive(Clone)]
+pub struct FleetSpec {
+    /// Topology class key (`parse_topology` grammar); also the
+    /// telemetry class and the selection table's row key.
+    pub class: String,
+    /// This class's drift budget (max finite |rel err| before it trips).
+    pub threshold: f64,
+    /// The selection table the class starts serving.
+    pub table: SelectionTable,
+    /// The serving environment (fabric reality for `ObserveMode::Sim`,
+    /// and the fallback re-price environment when the pooled fit is
+    /// under-determined).
+    pub env: Environment,
+    /// Candidate algorithms recalibrated cells choose between; empty
+    /// resolves to [`default_candidates`] for the class's topology.
+    pub candidates: Vec<AlgoSpec>,
+    pub policy: BatchPolicy,
+    pub flush_after: Duration,
+    pub observe: ObserveMode,
+    pub reducer: ReducerSpec,
+    /// Batcher split-margin floor ([`ServiceConfig::with_selection_table`]).
+    pub min_split_margin: f64,
+}
+
+/// One registered class: its running service, live table handle, and
+/// the recalibration inputs the fleet monitor prices with.
+pub struct FleetEntry {
+    pub class: String,
+    pub n_workers: usize,
+    pub threshold: f64,
+    pub env: Environment,
+    pub candidates: Vec<AlgoSpec>,
+    pub service: AllReduceService,
+    pub handle: Arc<TableHandle>,
+}
+
+/// N services, one telemetry plane, one monitor (see module docs).
+pub struct FleetController {
+    recorder: Arc<Recorder>,
+    entries: BTreeMap<String, FleetEntry>,
+    monitor: FleetMonitor,
+}
+
+impl FleetController {
+    /// `beta`: the link β splitting the Calibrator's fitted `2β + γ`
+    /// compound ([`crate::coordinator::DEFAULT_LINK_BETA`] is the
+    /// paper's 10 Gbps default).
+    pub fn new(beta: f64) -> FleetController {
+        let recorder = Arc::new(Recorder::new());
+        let monitor = FleetMonitor::new(&recorder, beta);
+        FleetController {
+            recorder,
+            entries: BTreeMap::new(),
+            monitor,
+        }
+    }
+
+    /// The shared telemetry plane every registered service records into.
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.recorder
+    }
+
+    /// Spawn and register one class's service. Errors (typed, no service
+    /// left running) on a duplicate class, an unparsable topology, or a
+    /// table without entries for the class.
+    pub fn register(&mut self, spec: FleetSpec) -> Result<(), ApiError> {
+        if self.entries.contains_key(&spec.class) {
+            return Err(ApiError::BadRequest {
+                reason: format!(
+                    "topology class {:?} is already registered with this fleet",
+                    spec.class
+                ),
+            });
+        }
+        let topo = parse_topology(&spec.class)?;
+        let n_workers = topo.n_servers();
+        let candidates = if spec.candidates.is_empty() {
+            default_candidates(&topo)
+        } else {
+            spec.candidates.clone()
+        };
+        let cfg = ServiceConfig {
+            policy: spec.policy.clone(),
+            flush_after: spec.flush_after,
+            observe: spec.observe,
+            ..ServiceConfig::default()
+        }
+        .with_selection_table(&spec.table, &spec.class, spec.min_split_margin)?
+        .with_telemetry(self.recorder.clone(), &spec.class);
+        let service = AllReduceService::start(topo, spec.env.clone(), spec.reducer.clone(), cfg);
+        let handle = match service.table_handle() {
+            Some(h) => h,
+            // with_selection_table validated the (table, class) pair, so
+            // the service wrapping the same pair cannot have refused it;
+            // keep the error typed anyway rather than panic.
+            None => {
+                service.stop();
+                return Err(ApiError::BadRequest {
+                    reason: format!(
+                        "class {:?}: service started without a live table handle",
+                        spec.class
+                    ),
+                });
+            }
+        };
+        self.entries.insert(
+            spec.class.clone(),
+            FleetEntry {
+                class: spec.class,
+                n_workers,
+                threshold: spec.threshold,
+                env: spec.env,
+                candidates,
+                service,
+                handle,
+            },
+        );
+        Ok(())
+    }
+
+    /// Registered entries, keyed and iterated by class.
+    pub fn entries(&self) -> &BTreeMap<String, FleetEntry> {
+        &self.entries
+    }
+
+    pub fn entry(&self, class: &str) -> Option<&FleetEntry> {
+        self.entries.get(class)
+    }
+
+    /// The fleet monitor's accumulated state (stats, per-class trips,
+    /// last per-class scores).
+    pub fn monitor(&self) -> &FleetMonitor {
+        &self.monitor
+    }
+
+    /// One monitor pass over the pooled fresh telemetry: per-class
+    /// scoring under per-class budgets, pooled §3.4 recalibration when
+    /// any class trips, pushes through every handle whose routing would
+    /// change. See [`FleetMonitor::check`].
+    pub fn check(&mut self) -> FleetCheck {
+        self.monitor.check(&self.entries)
+    }
+
+    /// Stop every registered service (drains queues; idempotent).
+    pub fn stop(&self) {
+        for entry in self.entries.values() {
+            entry.service.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    use crate::campaign::table_from_model;
+    use crate::model::params::ModelParams;
+
+    fn spec_for(class: &str, n: usize) -> FleetSpec {
+        let topo = parse_topology(class).unwrap();
+        assert_eq!(topo.n_servers(), n, "fixture class/worker-count drift");
+        let grid = BTreeMap::from([(class.to_string(), BTreeSet::from([16u32]))]);
+        let env = Environment::uniform(ModelParams::cpu_testbed());
+        let table = table_from_model(&grid, &default_candidates(&topo), &env).unwrap();
+        FleetSpec {
+            class: class.to_string(),
+            threshold: 0.5,
+            table,
+            env,
+            candidates: Vec::new(),
+            policy: BatchPolicy::with_cap(1),
+            flush_after: Duration::from_millis(1),
+            observe: ObserveMode::Sim,
+            reducer: ReducerSpec::Scalar,
+            min_split_margin: 1.25,
+        }
+    }
+
+    #[test]
+    fn duplicate_class_registration_is_a_typed_error_naming_the_class() {
+        let mut fleet = FleetController::new(crate::coordinator::DEFAULT_LINK_BETA);
+        fleet.register(spec_for("single:4", 4)).unwrap();
+        match fleet.register(spec_for("single:4", 4)) {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.contains("single:4"), "{reason}");
+                assert!(reason.contains("already registered"), "{reason}");
+            }
+            other => panic!("expected BadRequest naming the class, got {other:?}"),
+        }
+        // The fleet still serves: the rejected registration neither
+        // replaced nor wedged the original service.
+        let e = fleet.entry("single:4").unwrap();
+        let res = e
+            .service
+            .allreduce(vec![vec![1.0f32; 64]; 4])
+            .unwrap();
+        assert_eq!(res.reduced[0], 4.0);
+        fleet.stop();
+    }
+
+    #[test]
+    fn registered_services_share_one_recorder_under_their_own_classes() {
+        let mut fleet = FleetController::new(crate::coordinator::DEFAULT_LINK_BETA);
+        fleet.register(spec_for("single:4", 4)).unwrap();
+        fleet.register(spec_for("single:6", 6)).unwrap();
+        fleet
+            .entry("single:4")
+            .unwrap()
+            .service
+            .allreduce(vec![vec![1.0f32; 64]; 4])
+            .unwrap();
+        fleet
+            .entry("single:6")
+            .unwrap()
+            .service
+            .allreduce(vec![vec![1.0f32; 64]; 6])
+            .unwrap();
+        fleet.stop();
+        let snap = fleet.recorder().snapshot();
+        let classes: BTreeSet<&str> = snap.cells.keys().map(|k| k.class.as_str()).collect();
+        assert_eq!(classes, BTreeSet::from(["single:4", "single:6"]));
+    }
+
+    #[test]
+    fn registration_validates_table_and_topology_up_front() {
+        let mut fleet = FleetController::new(crate::coordinator::DEFAULT_LINK_BETA);
+        // Table priced for a different class: typed, nothing registered.
+        let mut bad = spec_for("single:6", 6);
+        bad.table = spec_for("single:4", 4).table;
+        assert!(matches!(
+            fleet.register(bad),
+            Err(ApiError::BadRequest { .. })
+        ));
+        assert!(fleet.entries().is_empty());
+        // Unparsable topology spec: typed, nothing registered.
+        let mut garbled = spec_for("single:4", 4);
+        garbled.class = "mesh:banana".into();
+        assert!(fleet.register(garbled).is_err());
+        assert!(fleet.entries().is_empty());
+    }
+
+    #[test]
+    fn empty_candidates_resolve_to_calibratable_defaults() {
+        let mut fleet = FleetController::new(crate::coordinator::DEFAULT_LINK_BETA);
+        fleet.register(spec_for("single:4", 4)).unwrap();
+        let e = fleet.entry("single:4").unwrap();
+        assert!(e.candidates.contains(&AlgoSpec::Cps));
+        assert!(!e
+            .candidates
+            .iter()
+            .any(|a| matches!(a, AlgoSpec::GenTree { .. })));
+        assert_eq!(e.n_workers, 4);
+        fleet.stop();
+    }
+
+    #[test]
+    fn fixture_tables_carry_finite_predictions() {
+        // A Choice must carry finite positive seconds or the fleet
+        // scorer could never match a prediction against it.
+        let t = spec_for("single:4", 4).table;
+        let c = t.lookup("single:4", 1 << 16).unwrap();
+        assert!(c.seconds.is_finite() && c.seconds > 0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Fleet serving: N topology-class services behind one telemetry plane,
+//! with cross-rack calibration — the layer above the single-service
+//! coordinator.
+//!
+//! ## Why a fleet is where the §3.4 Calibrator finally fires
+//!
+//! The paper's §3.4 fit recovers `(α, 2β+γ, δ, ε, w_t)` from benched
+//! CPS runs, and it is only identifiable when the observations span
+//! **≥ 4 distinct worker counts** (`model::fit`, surfaced as the typed
+//! error in [`crate::telemetry::calibrate`]). One rack is one `n`: a
+//! single [`crate::coordinator::AllReduceService`]'s drift autopilot
+//! (PR 5) therefore almost always falls back to the targeted per-cell
+//! re-price — correct, but it can only re-price under parameters it
+//! already believes. A *fleet* of services over different topology
+//! classes sharing one fabric records into one shared
+//! [`crate::telemetry::Recorder`], and that pooled telemetry is exactly
+//! the multi-`n` spread the fit needs: one rack's drift detection turns
+//! into a true parameter refit, and the refit improves **every** rack's
+//! table — including racks whose own traffic never tripped a budget
+//! (their stale cells simply weren't being exercised hard enough to
+//! notice). Heterogeneity across racks is also where cost models drift
+//! in the first place (cf. Proficz, arXiv:1804.05349, on rack-level
+//! skew reordering allreduce algorithm rankings).
+//!
+//! ## How it rides on the PR 5 epoch/handle design
+//!
+//! Every registered service already serves through an epoch-versioned
+//! [`crate::coordinator::TableHandle`]; the controller keeps a registry
+//! of those handles (one per class — duplicate registration is a typed
+//! error naming the class). The [`monitor::FleetMonitor`] generalizes
+//! the per-service `DriftMonitor`:
+//!
+//! * it holds its **own** [`crate::telemetry::TelemetryCursor`] over
+//!   the shared recorder, so it and any per-service scorer consume
+//!   fresh observations independently — neither starves nor re-trips
+//!   the other;
+//! * it scores each class's fresh cells against that class's *active*
+//!   table under a **per-class drift budget**
+//!   ([`crate::telemetry::score_against_table`] — the same trip
+//!   definition the per-service monitor uses);
+//! * when any class trips, it runs the §3.4 Calibrator on the **pooled**
+//!   snapshot; on a successful fit it re-prices every registered
+//!   class's grid under the fitted environment and pushes surgically
+//!   merged tables ([`crate::campaign::SelectionTable::merge_cells_from`])
+//!   through every handle whose *routing* would actually change
+//!   ([`crate::campaign::SelectionTable::routing_agrees_for`] filters
+//!   no-op pushes, so honest racks' epochs are not churned);
+//! * only when the pooled fit is still under-determined does it fall
+//!   back to PR 5's targeted re-price, and then only for the tripped
+//!   classes, under their own serving environments.
+//!
+//! A pushed swap lands mid-serve: each leader probes its handle's epoch
+//! at the top of every flush cycle
+//! ([`crate::coordinator::AllReduceService::table_handle`]), re-derives
+//! its per-cycle view, and evicts stranded plans — jobs are never
+//! dropped across a push, and their [`crate::coordinator::JobResult`]s
+//! report the bumped epoch.
+//!
+//! Surfaced as `repro fleet` (spawn from `--classes spec[,spec...]` or
+//! a `fleet/v1` config file; one report sweeping per-class drift state,
+//! epoch, swap/eviction counts, and p95 latency; `--bench-out` merges
+//! `fleet_*` keys).
+
+pub mod config;
+pub mod controller;
+pub mod monitor;
+pub mod report;
+
+pub use config::{default_candidates, ClassSpec, FleetConfig, FLEET_SCHEMA};
+pub use controller::{FleetController, FleetEntry, FleetSpec};
+pub use monitor::{ClassCheck, FleetCheck, FleetMonitor, FleetStats};
+pub use report::{ClassReport, FleetReport};

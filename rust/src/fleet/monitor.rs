@@ -1,0 +1,551 @@
+//! The fleet monitor: per-class drift scoring under per-class budgets,
+//! pooled §3.4 recalibration, cross-rack table pushes.
+//!
+//! Generalizes [`crate::coordinator::DriftMonitor`] from one service to
+//! the registry: where the per-service monitor can only re-price under
+//! parameters it already believes (one rack = one `n`, never enough
+//! spread for the fit), the fleet monitor pools observations across
+//! every class sharing the recorder, so one rack's drift turns into a
+//! true parameter refit whose tables push to **every** registered
+//! handle — see [`crate::fleet`] module docs for the full argument.
+//!
+//! Push discipline: a tripped class is always pushed (even when the
+//! refit keeps its winners — the push refreshes the predicted seconds
+//! the scorer reads, otherwise the class would re-trip forever on
+//! stale predictions). An untripped class is pushed only when the
+//! refit would actually change its routing
+//! ([`SelectionTable::routing_agrees_for`]); agreeing pushes are held,
+//! so honest racks' epochs are not churned by their neighbors' drift.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::api::ApiError;
+use crate::campaign::{table_from_model, SelectionTable};
+use crate::model::params::Environment;
+use crate::telemetry::{
+    calibrate, score_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
+};
+
+use super::controller::FleetEntry;
+
+/// Lifetime counters of one fleet monitor.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Monitor passes run ([`FleetMonitor::check`]).
+    pub checks: u64,
+    /// Per-class budget trips, summed over classes and checks.
+    pub trips: u64,
+    /// Pooled snapshots the §3.4 Calibrator successfully fitted.
+    pub calibrator_fits: u64,
+    /// Tripped classes recalibrated by the fallback targeted re-price
+    /// (pooled fit under-determined).
+    pub repricements: u64,
+    /// Tables pushed (hot-swapped) through registered handles.
+    pub pushes: u64,
+    /// Refits whose routing agreed with the active table — held, no
+    /// epoch churn.
+    pub holds: u64,
+    /// Recalibrations or swaps that failed (the affected class keeps
+    /// serving its active table; the evidence is retried next check).
+    pub failures: u64,
+}
+
+/// One class's scoring outcome within one [`FleetMonitor::check`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassCheck {
+    pub class: String,
+    /// Scored cells with a matched table prediction and finite error.
+    pub matched: usize,
+    /// Worst finite |rel err| (0.0 when nothing matched).
+    pub worst_abs_rel_err: f64,
+    /// Whether the class's drift budget tripped this check.
+    pub tripped: bool,
+}
+
+/// The outcome of one [`FleetMonitor::check`] pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetCheck {
+    /// Per-class scoring, class-ascending (empty when no fresh traffic).
+    pub classes: Vec<ClassCheck>,
+    /// The pooled §3.4 fit succeeded this check.
+    pub fitted: bool,
+    /// Classes whose handle received a pushed table (epoch bumped).
+    pub pushed: Vec<String>,
+    /// Classes whose refit agreed with their active routing (no push).
+    pub held: Vec<String>,
+    /// Tripped classes recalibrated by the fallback re-price.
+    pub repriced: Vec<String>,
+    /// Per-class recalibration/swap failures (`class: reason`).
+    pub failed: Vec<String>,
+}
+
+impl FleetCheck {
+    /// Classes that tripped their budget this check.
+    pub fn tripped(&self) -> impl Iterator<Item = &ClassCheck> {
+        self.classes.iter().filter(|c| c.tripped)
+    }
+}
+
+/// The fleet's drift/recalibration loop (one instance per
+/// [`super::FleetController`]); see module docs.
+pub struct FleetMonitor {
+    /// Link β splitting the Calibrator's fitted `2β + γ` compound.
+    beta: f64,
+    /// Private delta cursor over the shared recorder — independent of
+    /// any per-service scorer's cursor on the same stream.
+    cursor: TelemetryCursor,
+    stats: FleetStats,
+    trips_by_class: BTreeMap<String, u64>,
+    /// Latest scoring per class (the report's drift column).
+    last_check: BTreeMap<String, ClassCheck>,
+}
+
+impl FleetMonitor {
+    pub fn new(recorder: &Arc<Recorder>, beta: f64) -> FleetMonitor {
+        FleetMonitor {
+            beta,
+            cursor: recorder.cursor(),
+            stats: FleetStats::default(),
+            trips_by_class: BTreeMap::new(),
+            last_check: BTreeMap::new(),
+        }
+    }
+
+    pub fn stats(&self) -> FleetStats {
+        self.stats
+    }
+
+    /// Lifetime budget trips of one class.
+    pub fn trips_for(&self, class: &str) -> u64 {
+        self.trips_by_class.get(class).copied().unwrap_or(0)
+    }
+
+    /// The most recent [`ClassCheck`] that scored `class`.
+    pub fn last_for(&self, class: &str) -> Option<&ClassCheck> {
+        self.last_check.get(class)
+    }
+
+    /// One monitor pass: score every class's fresh observations against
+    /// its active table under its own budget; when any class trips, run
+    /// the pooled §3.4 fit (fallback: targeted per-class re-price) and
+    /// push/hold per the discipline in the module docs. The cursor is
+    /// consumed only when the pass acted without failures, so partial
+    /// evidence is retried with more data rather than dropped.
+    pub fn check(&mut self, entries: &BTreeMap<String, FleetEntry>) -> FleetCheck {
+        self.stats.checks += 1;
+        let mut out = FleetCheck::default();
+        let (snap, fresh) = self.cursor.peek();
+        if fresh.is_empty() {
+            return out;
+        }
+        for (class, entry) in entries {
+            let view = entry.handle.view();
+            let scored = score_against_table(&fresh.restrict_class(class), &view.table);
+            let summary = summarize(&scored);
+            let tripped = summary.matched > 0 && summary.max_abs_rel_err >= entry.threshold;
+            if tripped {
+                self.stats.trips += 1;
+                *self.trips_by_class.entry(class.clone()).or_default() += 1;
+            }
+            let cc = ClassCheck {
+                class: class.clone(),
+                matched: summary.matched,
+                worst_abs_rel_err: if summary.matched > 0 {
+                    summary.max_abs_rel_err
+                } else {
+                    0.0
+                },
+                tripped,
+            };
+            self.last_check.insert(class.clone(), cc.clone());
+            out.classes.push(cc);
+        }
+        let tripped: Vec<String> = out.tripped().map(|c| c.class.clone()).collect();
+        if tripped.is_empty() {
+            return out;
+        }
+        let mut failed = Vec::new();
+        match calibrate(&snap, self.beta) {
+            Ok(cal) => {
+                // The pooled fit fired: the fitted environment re-prices
+                // EVERY registered class, tripped or not — the whole
+                // point of pooling (a sibling's drift fixed this rack's
+                // table before its own traffic ever noticed).
+                self.stats.calibrator_fits += 1;
+                out.fitted = true;
+                let fitted = cal.environment();
+                for (class, entry) in entries {
+                    let is_tripped = tripped.contains(class);
+                    match push_entry(entry, &fitted, &snap, is_tripped) {
+                        Ok(true) => {
+                            self.stats.pushes += 1;
+                            out.pushed.push(class.clone());
+                        }
+                        Ok(false) => {
+                            self.stats.holds += 1;
+                            out.held.push(class.clone());
+                        }
+                        Err(e) => failed.push(format!("{class}: {e}")),
+                    }
+                }
+            }
+            Err(fit_err) => {
+                // Under-determined pool (not enough distinct worker
+                // counts in CPS-served cells): fall back to the PR 5
+                // targeted re-price, per tripped class, under its own
+                // serving environment.
+                for class in &tripped {
+                    let entry = &entries[class.as_str()];
+                    match push_entry(entry, &entry.env, &snap, true) {
+                        Ok(true) => {
+                            self.stats.repricements += 1;
+                            self.stats.pushes += 1;
+                            out.repriced.push(class.clone());
+                            out.pushed.push(class.clone());
+                        }
+                        Ok(false) => unreachable!("tripped classes always push"),
+                        Err(e) => failed.push(format!("{class}: {e} (pooled fit: {fit_err})")),
+                    }
+                }
+            }
+        }
+        self.stats.failures += failed.len() as u64;
+        if failed.is_empty() {
+            // Acted on everything: these observations are spent. The
+            // next check scores only traffic the pushed tables served.
+            self.cursor.consume(snap);
+        } else {
+            for f in &failed {
+                eprintln!("fleet-monitor: recalibration failed ({f}); active table keeps serving");
+            }
+        }
+        out.failed = failed;
+        out
+    }
+}
+
+/// Re-price one class's grid (its active buckets ∪ its observed
+/// buckets) under `env`, merge surgically over the active table, and
+/// swap — unless the class is untripped and the refit would not change
+/// its routing, in which case hold. Returns whether a push happened.
+fn push_entry(
+    entry: &FleetEntry,
+    env: &Environment,
+    snap: &TelemetrySnapshot,
+    tripped: bool,
+) -> Result<bool, ApiError> {
+    let view = entry.handle.view();
+    let mut buckets = view
+        .table
+        .classes()
+        .find(|(c, _)| *c == entry.class)
+        .map(|(_, cells)| cells.keys().copied().collect::<std::collections::BTreeSet<u32>>())
+        .unwrap_or_default();
+    if let Some(observed) = snap.buckets_by_class().get(&entry.class) {
+        buckets.extend(observed);
+    }
+    if buckets.is_empty() {
+        return Err(ApiError::BadRequest {
+            reason: format!("class {:?}: no buckets to re-price", entry.class),
+        });
+    }
+    let grid = BTreeMap::from([(entry.class.clone(), buckets)]);
+    let patch = table_from_model(&grid, &entry.candidates, env)?;
+    let mut next: SelectionTable = (*view.table).clone();
+    next.merge_cells_from(&patch);
+    if !tripped && next.routing_agrees_for(&view.table, &entry.class) {
+        return Ok(false);
+    }
+    entry.handle.swap(next)?;
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::campaign::table_from_model;
+    use crate::coordinator::{BatchPolicy, ObserveMode, PlanRouter, DEFAULT_LINK_BETA};
+    use crate::fleet::{default_candidates, FleetController, FleetSpec};
+    use crate::model::expressions::{genmodel, PlanType};
+    use crate::model::params::ModelParams;
+    use crate::runtime::ReducerSpec;
+    use crate::topo::builders::single_switch;
+
+    /// The "true" fabric: the paper's CPU testbed with a 20× incast slope.
+    fn true_params() -> ModelParams {
+        let p = ModelParams::cpu_testbed();
+        ModelParams {
+            epsilon: p.epsilon * 20.0,
+            ..p
+        }
+    }
+
+    /// The classic (α,β,γ) worldview the stale rack's table was priced
+    /// under.
+    fn stale_params() -> ModelParams {
+        ModelParams {
+            delta: 0.0,
+            epsilon: 0.0,
+            ..ModelParams::cpu_testbed()
+        }
+    }
+
+    fn spec(class: &str, bucket: u32, params: ModelParams) -> FleetSpec {
+        let topo = crate::bench::workloads::parse_topology(class).unwrap();
+        let grid = BTreeMap::from([(class.to_string(), std::collections::BTreeSet::from([bucket]))]);
+        let table =
+            table_from_model(&grid, &default_candidates(&topo), &Environment::uniform(params))
+                .unwrap();
+        FleetSpec {
+            class: class.to_string(),
+            threshold: 0.5,
+            table,
+            env: Environment::uniform(true_params()),
+            candidates: Vec::new(),
+            policy: BatchPolicy::with_cap(1),
+            flush_after: Duration::from_millis(1),
+            observe: ObserveMode::Sim,
+            reducer: ReducerSpec::Scalar,
+            min_split_margin: 1.25,
+        }
+    }
+
+    /// What an ideally-measured service on the true fabric records for
+    /// CPS at (n, bucket) — the drift_e2e observation idiom.
+    fn true_cps_secs(n: usize, bucket: u32) -> f64 {
+        let s = PlanRouter::bucket_size(bucket);
+        genmodel(&PlanType::ColocatedPs, n, s, &true_params()).total()
+    }
+
+    /// Record healthy traffic for an honest class: its own winner at the
+    /// table's exact predicted seconds (rel err 0 — never trips), plus a
+    /// CPS cell at the true fabric's time when CPS is not the winner, so
+    /// the pooled fit still sees this rack's worker count.
+    fn observe_honest(fleet: &FleetController, class: &str, n: usize, bucket: u32, batches: usize) {
+        let entry = fleet.entry(class).unwrap();
+        let view = entry.handle.view();
+        let s = PlanRouter::bucket_size(bucket) as usize;
+        let choice = view.table.lookup(class, s).unwrap().clone();
+        for _ in 0..batches {
+            fleet
+                .recorder()
+                .record(class, n, bucket, &choice.algo, s, choice.seconds);
+        }
+        if choice.algo != "cps" {
+            for _ in 0..batches {
+                fleet
+                    .recorder()
+                    .record(class, n, bucket, "cps", s, true_cps_secs(n, bucket));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_fit_pushes_tripped_class_and_holds_honest_siblings() {
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        // The congested rack: blind (δ=ε=0) table serving the incast-
+        // dominated bucket on the ε×20 fabric.
+        fleet.register(spec("single:15", 20, stale_params())).unwrap();
+        // Honest racks: truth-priced tables, four more worker counts —
+        // together the ≥4 distinct n the §3.4 fit needs.
+        for n in [4usize, 6, 8, 10] {
+            fleet
+                .register(spec(&format!("single:{n}"), 16, true_params()))
+                .unwrap();
+        }
+        let stale_winner = fleet
+            .entry("single:15")
+            .unwrap()
+            .handle
+            .view()
+            .table
+            .lookup("single:15", 1 << 20)
+            .unwrap()
+            .algo
+            .clone();
+        assert_eq!(stale_winner, "cps", "the blind model routes cps");
+
+        // The congested rack serves CPS at the true fabric's (much
+        // slower) time; honest racks serve healthily.
+        for _ in 0..4 {
+            fleet
+                .recorder()
+                .record("single:15", 15, 20, "cps", 1 << 20, true_cps_secs(15, 20));
+        }
+        for n in [4usize, 6, 8, 10] {
+            observe_honest(&fleet, &format!("single:{n}"), n, 16, 2);
+        }
+
+        let check = fleet.check();
+        // Only the congested rack tripped its budget...
+        let tripped: Vec<&str> = check.tripped().map(|c| c.class.as_str()).collect();
+        assert_eq!(tripped, ["single:15"]);
+        // ...and the POOLED fit fired (5 distinct worker counts of CPS
+        // cells), not the single-rack fallback.
+        assert!(check.fitted, "pooled telemetry must support the §3.4 fit");
+        assert!(check.repriced.is_empty());
+        // The tripped class was pushed; its winner moved off the blind
+        // choice toward the congestion-aware one.
+        assert!(check.pushed.contains(&"single:15".to_string()), "{check:?}");
+        let entry = fleet.entry("single:15").unwrap();
+        assert_eq!(entry.handle.epoch(), 1);
+        let new_winner = entry
+            .handle
+            .view()
+            .table
+            .lookup("single:15", 1 << 20)
+            .unwrap()
+            .algo
+            .clone();
+        assert_ne!(new_winner, "cps", "refit must flip the incast-blind winner");
+        // Honest racks held: routing agreed, epochs unchurned.
+        for n in [4usize, 6, 8, 10] {
+            let class = format!("single:{n}");
+            assert!(check.held.contains(&class), "{check:?}");
+            assert_eq!(fleet.entry(&class).unwrap().handle.epoch(), 0);
+            assert_eq!(fleet.monitor().trips_for(&class), 0);
+        }
+        let stats = fleet.monitor().stats();
+        assert_eq!(stats.calibrator_fits, 1);
+        assert_eq!(stats.pushes, 1);
+        assert_eq!(stats.holds, 4);
+        assert_eq!(stats.failures, 0);
+        assert_eq!(fleet.monitor().trips_for("single:15"), 1);
+
+        // The acted-on evidence was consumed: a second check with no
+        // fresh traffic scores nothing and stands down.
+        let quiet = fleet.check();
+        assert!(quiet.classes.is_empty());
+        assert!(quiet.pushed.is_empty() && quiet.failed.is_empty());
+        assert_eq!(fleet.monitor().stats().checks, 2);
+        fleet.stop();
+    }
+
+    #[test]
+    fn underdetermined_pool_falls_back_to_targeted_reprice() {
+        // Two racks only — two worker counts can never satisfy the fit,
+        // so a trip takes the PR 5 fallback: re-price the tripped class
+        // under its own serving environment, push it alone.
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        fleet.register(spec("single:15", 20, stale_params())).unwrap();
+        fleet.register(spec("single:8", 16, true_params())).unwrap();
+        for _ in 0..4 {
+            fleet
+                .recorder()
+                .record("single:15", 15, 20, "cps", 1 << 20, true_cps_secs(15, 20));
+        }
+        observe_honest(&fleet, "single:8", 8, 16, 2);
+
+        let check = fleet.check();
+        assert!(!check.fitted, "two worker counts cannot fit §3.4");
+        assert_eq!(check.repriced, ["single:15".to_string()]);
+        assert_eq!(check.pushed, ["single:15".to_string()]);
+        assert!(check.failed.is_empty());
+        // The fallback re-price runs under the entry's true serving env,
+        // so it still lands the congestion-aware winner.
+        let entry = fleet.entry("single:15").unwrap();
+        assert_eq!(entry.handle.epoch(), 1);
+        assert_ne!(
+            entry
+                .handle
+                .view()
+                .table
+                .lookup("single:15", 1 << 20)
+                .unwrap()
+                .algo,
+            "cps"
+        );
+        // The untripped sibling was not touched at all on this path.
+        assert_eq!(fleet.entry("single:8").unwrap().handle.epoch(), 0);
+        let stats = fleet.monitor().stats();
+        assert_eq!((stats.calibrator_fits, stats.repricements, stats.pushes), (0, 1, 1));
+        fleet.stop();
+    }
+
+    #[test]
+    fn healthy_fleet_never_recalibrates() {
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        for n in [4usize, 6, 8, 10] {
+            fleet
+                .register(spec(&format!("single:{n}"), 16, true_params()))
+                .unwrap();
+        }
+        for n in [4usize, 6, 8, 10] {
+            observe_honest(&fleet, &format!("single:{n}"), n, 16, 3);
+        }
+        let check = fleet.check();
+        assert_eq!(check.tripped().count(), 0);
+        assert!(!check.fitted);
+        assert!(check.pushed.is_empty() && check.held.is_empty());
+        let stats = fleet.monitor().stats();
+        assert_eq!((stats.trips, stats.pushes, stats.calibrator_fits), (0, 0, 0));
+        for n in [4usize, 6, 8, 10] {
+            assert_eq!(fleet.entry(&format!("single:{n}")).unwrap().handle.epoch(), 0);
+        }
+        fleet.stop();
+    }
+
+    #[test]
+    fn tripped_class_with_unchanged_routing_still_pushes_fresh_seconds() {
+        // A rack whose table routes the RIGHT winner under WRONG seconds
+        // (magnitude-only drift): the push discipline must swap anyway,
+        // or the scorer would re-trip on the stale predictions forever.
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        // Price single:8 under a fabric 10× slower in alpha only: the
+        // winner ordering at one bucket is unlikely to change, but every
+        // predicted second is far off.
+        let slow_alpha = ModelParams {
+            alpha: ModelParams::cpu_testbed().alpha * 10.0,
+            ..true_params()
+        };
+        fleet.register(spec("single:8", 16, slow_alpha)).unwrap();
+        fleet.register(spec("single:4", 16, true_params())).unwrap();
+        let entry = fleet.entry("single:8").unwrap();
+        let old = entry.handle.view();
+        let old_choice = old.table.lookup("single:8", 1 << 16).unwrap().clone();
+        // Serve the winner at its TRUE time (true fabric, not slow-alpha).
+        let truth = crate::api::Engine::new(single_switch(8), Environment::uniform(true_params()));
+        let algo = crate::api::AlgoSpec::parse(&old_choice.algo).unwrap();
+        let t = truth.predict_bucket(&algo, 16).unwrap();
+        // Only meaningful if the mispricing actually exceeds the budget.
+        assert!(
+            ((t - old_choice.seconds) / old_choice.seconds).abs() >= 0.5,
+            "fixture must misprice by ≥ threshold"
+        );
+        for _ in 0..4 {
+            fleet
+                .recorder()
+                .record("single:8", 8, 16, &old_choice.algo, 1 << 16, t);
+        }
+        observe_honest(&fleet, "single:4", 4, 16, 2);
+
+        let check = fleet.check();
+        assert!(check.pushed.contains(&"single:8".to_string()), "{check:?}");
+        let entry = fleet.entry("single:8").unwrap();
+        assert_eq!(entry.handle.epoch(), 1, "tripped class swaps even when routing holds");
+        // And the refreshed seconds quiet the monitor: same traffic
+        // pattern again scores against the repriced cell and stands down
+        // (no second push).
+        let view = entry.handle.view();
+        let new_choice = view.table.lookup("single:8", 1 << 16).unwrap().clone();
+        let algo2 = crate::api::AlgoSpec::parse(&new_choice.algo).unwrap();
+        let t2 = truth.predict_bucket(&algo2, 16).unwrap();
+        for _ in 0..4 {
+            fleet
+                .recorder()
+                .record("single:8", 8, 16, &new_choice.algo, 1 << 16, t2);
+        }
+        observe_honest(&fleet, "single:4", 4, 16, 2);
+        let second = fleet.check();
+        assert_eq!(
+            second.tripped().count(),
+            0,
+            "refreshed predictions must not re-trip: {second:?}"
+        );
+        assert_eq!(fleet.entry("single:8").unwrap().handle.epoch(), 1);
+        fleet.stop();
+    }
+}

@@ -1,0 +1,255 @@
+//! The fleet report: one sweep over every registered class — drift
+//! state, serving epoch, swap/eviction counts, and latency tails in a
+//! single table — plus the `fleet_*` bench-JSON entries `repro fleet
+//! --bench-out` merges into the CI record.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::controller::FleetController;
+use super::monitor::FleetStats;
+
+/// One registered class's end-of-run state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    pub class: String,
+    pub n_workers: usize,
+    /// Serving epoch of the class's table handle (0 = never swapped).
+    pub epoch: u64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub batches_flushed: u64,
+    /// Lifetime budget trips ([`super::FleetMonitor::trips_for`]).
+    pub trips: u64,
+    /// Worst finite |rel err| of the latest check that scored this
+    /// class (`None`: never scored a matched cell).
+    pub worst_abs_rel_err: Option<f64>,
+    /// Per-class p95 batch latency (observed seconds).
+    pub p95_s: f64,
+    /// Router plans evicted by swaps this class's leader observed.
+    pub evictions: u64,
+}
+
+impl ClassReport {
+    /// Jobs submitted but never completed — must be 0: neither a fleet
+    /// push nor a local swap is allowed to drop work.
+    pub fn dropped(&self) -> u64 {
+        self.jobs_submitted.saturating_sub(self.jobs_completed)
+    }
+}
+
+/// The whole fleet's end-of-run state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub classes: Vec<ClassReport>,
+    pub stats: FleetStats,
+}
+
+impl FleetReport {
+    /// Snapshot every registered class and the monitor's counters.
+    /// Quiesce the fleet first (wait for submitted jobs) if exact
+    /// counter equality matters.
+    pub fn collect(fleet: &FleetController) -> FleetReport {
+        let classes = fleet
+            .entries()
+            .values()
+            .map(|entry| {
+                let m = entry.service.metrics.snapshot();
+                ClassReport {
+                    class: entry.class.clone(),
+                    n_workers: entry.n_workers,
+                    epoch: entry.handle.epoch(),
+                    jobs_submitted: m.jobs_submitted,
+                    jobs_completed: m.jobs_completed,
+                    batches_flushed: m.batches_flushed,
+                    trips: fleet.monitor().trips_for(&entry.class),
+                    worst_abs_rel_err: fleet
+                        .monitor()
+                        .last_for(&entry.class)
+                        .filter(|c| c.matched > 0)
+                        .map(|c| c.worst_abs_rel_err),
+                    p95_s: m.latency.p95(),
+                    evictions: m.drift_evictions,
+                }
+            })
+            .collect();
+        FleetReport {
+            classes,
+            stats: fleet.monitor().stats(),
+        }
+    }
+
+    /// Total jobs dropped across the fleet (see [`ClassReport::dropped`]).
+    pub fn dropped_jobs(&self) -> u64 {
+        self.classes.iter().map(ClassReport::dropped).sum()
+    }
+
+    /// Worst per-class p95 batch latency across the fleet.
+    pub fn worst_p95_s(&self) -> f64 {
+        self.classes.iter().map(|c| c.p95_s).fold(0.0, f64::max)
+    }
+
+    /// The one-table sweep `repro fleet` prints.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "fleet",
+            &[
+                "class", "n", "epoch", "jobs", "batches", "trips", "worst err", "p95 (s)",
+                "evicted",
+            ],
+        );
+        for c in &self.classes {
+            t.row(vec![
+                c.class.clone(),
+                c.n_workers.to_string(),
+                c.epoch.to_string(),
+                c.jobs_completed.to_string(),
+                c.batches_flushed.to_string(),
+                c.trips.to_string(),
+                c.worst_abs_rel_err
+                    .map(|e| format!("{:.0}%", e * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2e}", c.p95_s),
+                c.evictions.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "monitor: {} check(s), {} trip(s), {} fit(s), {} re-price(s), \
+             {} push(es), {} hold(s), {} failure(s); {} dropped job(s)\n",
+            self.stats.checks,
+            self.stats.trips,
+            self.stats.calibrator_fits,
+            self.stats.repricements,
+            self.stats.pushes,
+            self.stats.holds,
+            self.stats.failures,
+            self.dropped_jobs(),
+        ));
+        out
+    }
+
+    /// The `fleet_*` keys merged into the bench JSON record.
+    pub fn bench_entries(&self) -> Vec<(String, Json)> {
+        vec![
+            ("fleet_classes".into(), Json::num(self.classes.len() as f64)),
+            ("fleet_checks".into(), Json::num(self.stats.checks as f64)),
+            ("fleet_trips".into(), Json::num(self.stats.trips as f64)),
+            (
+                "fleet_calibrator_fits".into(),
+                Json::num(self.stats.calibrator_fits as f64),
+            ),
+            (
+                "fleet_repricements".into(),
+                Json::num(self.stats.repricements as f64),
+            ),
+            ("fleet_swaps".into(), Json::num(self.stats.pushes as f64)),
+            ("fleet_holds".into(), Json::num(self.stats.holds as f64)),
+            ("fleet_failures".into(), Json::num(self.stats.failures as f64)),
+            (
+                "fleet_jobs_completed".into(),
+                Json::num(self.classes.iter().map(|c| c.jobs_completed).sum::<u64>() as f64),
+            ),
+            (
+                "fleet_dropped_jobs".into(),
+                Json::num(self.dropped_jobs() as f64),
+            ),
+            ("fleet_p95_s".into(), Json::num(self.worst_p95_s())),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::time::Duration;
+
+    use crate::campaign::table_from_model;
+    use crate::coordinator::{BatchPolicy, ObserveMode, DEFAULT_LINK_BETA};
+    use crate::fleet::{default_candidates, FleetSpec};
+    use crate::model::params::{Environment, ModelParams};
+    use crate::runtime::ReducerSpec;
+
+    fn tiny_fleet() -> FleetController {
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        for n in [4usize, 6] {
+            let class = format!("single:{n}");
+            let topo = crate::bench::workloads::parse_topology(&class).unwrap();
+            let env = Environment::uniform(ModelParams::cpu_testbed());
+            let grid = BTreeMap::from([(class.clone(), BTreeSet::from([16u32]))]);
+            let table = table_from_model(&grid, &default_candidates(&topo), &env).unwrap();
+            fleet
+                .register(FleetSpec {
+                    class,
+                    threshold: 0.5,
+                    table,
+                    env,
+                    candidates: Vec::new(),
+                    policy: BatchPolicy::with_cap(1),
+                    flush_after: Duration::from_millis(1),
+                    observe: ObserveMode::Sim,
+                    reducer: ReducerSpec::Scalar,
+                    min_split_margin: 1.25,
+                })
+                .unwrap();
+        }
+        fleet
+    }
+
+    #[test]
+    fn report_sweeps_every_class_with_zero_drops() {
+        let fleet = tiny_fleet();
+        for (n, class) in [(4usize, "single:4"), (6, "single:6")] {
+            let e = fleet.entry(class).unwrap();
+            for _ in 0..2 {
+                e.service
+                    .allreduce(vec![vec![1.0f32; 1 << 16]; n])
+                    .unwrap();
+            }
+        }
+        fleet.stop();
+        let report = FleetReport::collect(&fleet);
+        assert_eq!(report.classes.len(), 2);
+        assert_eq!(report.dropped_jobs(), 0);
+        for c in &report.classes {
+            assert_eq!(c.jobs_completed, 2);
+            assert_eq!(c.epoch, 0);
+            assert_eq!(c.trips, 0);
+            assert!(c.worst_abs_rel_err.is_none(), "no check ran");
+        }
+        assert!(report.worst_p95_s() > 0.0, "sim clock recorded latencies");
+        let text = report.render();
+        assert!(text.contains("single:4") && text.contains("single:6"), "{text}");
+        assert!(text.contains("0 dropped job(s)"), "{text}");
+    }
+
+    #[test]
+    fn bench_entries_cover_the_ci_contract() {
+        let fleet = tiny_fleet();
+        fleet.stop();
+        let report = FleetReport::collect(&fleet);
+        let entries = report.bench_entries();
+        let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+        // The CI smoke asserts on exactly these keys — renaming one
+        // breaks scripts/ci.sh step 9.
+        for key in [
+            "fleet_classes",
+            "fleet_swaps",
+            "fleet_calibrator_fits",
+            "fleet_holds",
+            "fleet_trips",
+            "fleet_dropped_jobs",
+        ] {
+            assert!(keys.contains(&key), "missing {key} in {keys:?}");
+        }
+        assert_eq!(
+            entries
+                .iter()
+                .find(|(k, _)| k == "fleet_classes")
+                .unwrap()
+                .1,
+            Json::num(2.0)
+        );
+    }
+}

@@ -35,6 +35,10 @@
 //!   scored against campaign predictions (`repro score`), and refit into
 //!   a recalibrated selection table (`repro calibrate`) — campaign →
 //!   serve → measure → refit → reselect.
+//! * [`fleet`] — N topology-class services behind one telemetry plane
+//!   (`repro fleet`): a controller registry of epoch-versioned table
+//!   handles and a fleet monitor that pools cross-class observations
+//!   into the §3.4 fit and pushes recalibrated tables to every rack.
 //! * [`bench`] — the harness that regenerates every paper table and figure.
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
@@ -44,6 +48,7 @@ pub mod bench;
 pub mod campaign;
 pub mod coordinator;
 pub mod exec;
+pub mod fleet;
 pub mod gentree;
 pub mod model;
 pub mod plan;

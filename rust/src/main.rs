@@ -16,6 +16,10 @@
 //!                 job through a campaign selection table, and
 //!                 `--telemetry-out` persists per-(class, bucket, algo)
 //!                 latency histograms.
+//! * `fleet`     — run N topology-class coordinators behind one shared
+//!                 telemetry plane: fleet-level drift monitoring pools
+//!                 cross-class observations into the §3.4 fit and pushes
+//!                 recalibrated tables to every rack's serving handle.
 //! * `campaign`  — parallel scenario sweeps (`run`), the Fig. 11-style
 //!                 winners report (`report`), and the per-(topology,
 //!                 size-bucket) selection table (`select`).
@@ -33,13 +37,15 @@
 
 use genmodel::api::{AlgoSpec, Backend, Engine, Evaluation};
 use genmodel::bench::{self, workloads};
-use genmodel::campaign::{self, Metric, RunConfig, ScenarioGrid, SelectionTable};
+use genmodel::campaign::{self, table_from_model, Metric, RunConfig, ScenarioGrid, SelectionTable};
 use genmodel::coordinator::{
-    AllReduceService, DriftConfig, ObserveMode, ServiceConfig, DEFAULT_MIN_SPLIT_MARGIN,
+    AllReduceService, BatchPolicy, DriftConfig, ObserveMode, PlanRouter, ServiceConfig,
+    DEFAULT_LINK_BETA, DEFAULT_MIN_SPLIT_MARGIN,
 };
+use genmodel::fleet::{default_candidates, FleetConfig, FleetController, FleetReport, FleetSpec};
 use genmodel::model::cost::ModelKind;
 use genmodel::model::fit::{fit, BenchRow};
-use genmodel::model::params::Environment;
+use genmodel::model::params::{Environment, ModelParams};
 use genmodel::plan::cps;
 use genmodel::runtime::ReducerSpec;
 use genmodel::sim::{simulate_plan, SimConfig};
@@ -73,6 +79,21 @@ USAGE: repro <subcommand> [options]
               every --recalibrate-every flushed batches);
               --waves: split the job burst into N sequential waves so a
               long-running drift smoke actually cycles the leader)
+  fleet      --classes 'single:15!stale,single:4,single:6' | --config fleet.json
+             [--jobs 2] [--waves 2] [--tensor 1048576] [--calib-tensor 65536]
+             [--congest 20] [--drift-threshold 0.5] [--beta 6.4e-9]
+             [--algos a1,a2] [--min-split-margin 1.25] [--observe sim|wall]
+             [--scalar] [--bench-out BENCH_campaign.json]
+             [--expect-fit] [--expect-swap c1,c2] [--expect-hold c1,c2]
+             (N topology-class coordinators behind ONE telemetry plane; a
+              class spec is class[@threshold][!stale] — !stale starts that
+              class from a blind δ=ε=0 table; --congest scales the serving
+              fabric's incast slope ε; stale classes serve --tensor floats,
+              honest classes --calib-tensor; after each wave the fleet
+              monitor scores every class under its own drift budget, pools
+              cross-class cps cells into the §3.4 fit, and pushes
+              recalibrated tables to every rack whose routing changes;
+              --expect-* turn the run's claims into exit-code assertions)
   campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
                     [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
@@ -160,6 +181,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("campaign") => cmd_campaign(args),
         Some("score") => cmd_score(args),
         Some("calibrate") => cmd_calibrate(args),
@@ -553,6 +575,242 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         merge_bench_json(bench_out, entries)?;
         println!("  bench record     → {bench_out}");
+    }
+    Ok(())
+}
+
+/// `repro fleet`: N topology-class services behind one telemetry plane,
+/// with cross-rack calibration (see `genmodel::fleet`).
+///
+/// The smoke's physics, and why there are two tensor sizes: classes
+/// marked `!stale` start from a table priced under the classic δ=ε=0
+/// worldview and serve `--tensor` floats — big enough to be
+/// incast-dominated, so on a congested fabric their drift budget trips.
+/// Honest classes start truth-priced and serve `--calib-tensor` floats —
+/// small enough that CPS wins their bucket, so their traffic yields the
+/// cps-served cells at distinct worker counts the pooled §3.4 fit needs.
+/// One tensor size cannot do both jobs (big: honest winners stop being
+/// cps and the fit starves; small: incast never bites and nothing
+/// trips) — needing both kinds of rack at once is exactly why the
+/// calibration plane is fleet-level.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let threshold: f64 = args.opt_parse_or("drift-threshold", 0.5)?;
+    anyhow::ensure!(
+        threshold.is_finite() && threshold > 0.0,
+        "--drift-threshold is a |relative error| and must be a positive \
+         number, got {threshold}"
+    );
+    let config = match (args.opt("classes"), args.opt("config")) {
+        (Some(spec), None) => FleetConfig::parse_classes(spec, threshold)?,
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            FleetConfig::from_json(&text)?
+        }
+        (Some(_), Some(_)) => anyhow::bail!("--classes and --config are mutually exclusive"),
+        (None, None) => anyhow::bail!(
+            "--classes or --config required \
+             (e.g. --classes 'single:15!stale,single:4,single:6,single:8,single:10')"
+        ),
+    };
+    let jobs = args.opt_parse_or::<usize>("jobs", 2)?.max(1);
+    let waves = args.opt_parse_or::<usize>("waves", 2)?.max(1);
+    let tensor: usize = args.opt_parse_or("tensor", 1 << 20)?;
+    let calib_tensor: usize = args.opt_parse_or("calib-tensor", 1 << 16)?;
+    anyhow::ensure!(
+        tensor > 0 && calib_tensor > 0,
+        "--tensor and --calib-tensor are float counts and must be positive"
+    );
+    let congest: f64 = args.opt_parse_or("congest", 1.0)?;
+    anyhow::ensure!(
+        congest.is_finite() && congest >= 1.0,
+        "--congest multiplies the fabric's incast slope ε and must be ≥ 1, got {congest}"
+    );
+    let beta: f64 = args.opt_parse_or("beta", DEFAULT_LINK_BETA)?;
+    let min_split_margin: f64 = args.opt_parse_or("min-split-margin", DEFAULT_MIN_SPLIT_MARGIN)?;
+    anyhow::ensure!(
+        min_split_margin >= 1.0,
+        "--min-split-margin is a winner/runner-up ratio and must be ≥ 1.0, \
+         got {min_split_margin}"
+    );
+    // Fleet scoring compares observed seconds against model predictions,
+    // so the default clock is the flow-simulated one: wall seconds of the
+    // in-process scalar executor measure this host, not the modeled fabric.
+    let observe = match args.opt_or("observe", "sim").to_ascii_lowercase().as_str() {
+        "wall" => ObserveMode::Wall,
+        "sim" | "simulated" => ObserveMode::Sim,
+        other => anyhow::bail!("unknown --observe mode {other:?} (known: wall, sim)"),
+    };
+    let reducer = if args.flag("scalar") {
+        ReducerSpec::Scalar
+    } else {
+        ReducerSpec::Auto
+    };
+    let algos: Option<Vec<AlgoSpec>> = args
+        .opt("algos")
+        .map(|list| {
+            list.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(AlgoSpec::parse)
+                .collect::<Result<Vec<_>, _>>()
+        })
+        .transpose()?;
+
+    // The serving fabric: the paper's CPU testbed with its incast slope ε
+    // scaled --congest×. Honest classes' tables are priced under this true
+    // environment; stale classes' under the classic δ=ε=0 worldview that
+    // ignores incast and in-switch compute entirely.
+    let base = ModelParams::cpu_testbed();
+    let true_env = Environment::uniform(ModelParams {
+        epsilon: base.epsilon * congest,
+        ..base
+    });
+    let stale_env = Environment::uniform(ModelParams {
+        delta: 0.0,
+        epsilon: 0.0,
+        ..base
+    });
+
+    let stale_n = config.classes.iter().filter(|c| c.stale).count();
+    let mut fleet = FleetController::new(beta);
+    for cs in &config.classes {
+        let topo = workloads::parse_topology(&cs.class)?;
+        let candidates = match &algos {
+            Some(list) => {
+                let fit: Vec<AlgoSpec> = list
+                    .iter()
+                    .filter(|a| a.applicable(&topo).is_ok())
+                    .cloned()
+                    .collect();
+                anyhow::ensure!(!fit.is_empty(), "none of --algos apply to class {:?}", cs.class);
+                fit
+            }
+            None => default_candidates(&topo),
+        };
+        let served = if cs.stale { tensor } else { calib_tensor };
+        let grid = BTreeMap::from([(
+            cs.class.clone(),
+            BTreeSet::from([PlanRouter::bucket(served)]),
+        )]);
+        let pricing = if cs.stale { &stale_env } else { &true_env };
+        let table = table_from_model(&grid, &candidates, pricing)?;
+        fleet.register(FleetSpec {
+            class: cs.class.clone(),
+            threshold: cs.threshold.unwrap_or(config.threshold),
+            table,
+            env: true_env.clone(),
+            candidates,
+            policy: BatchPolicy::with_cap(1),
+            flush_after: std::time::Duration::from_millis(1),
+            observe,
+            reducer: reducer.clone(),
+            min_split_margin,
+        })?;
+    }
+    println!(
+        "fleet up: {} class(es) behind one telemetry plane ({stale_n} stale); \
+         {jobs} job(s)/class/wave × {waves} wave(s); incast ε ×{congest}",
+        config.classes.len()
+    );
+
+    let mut rng = Rng::new(7);
+    let mut last_epoch: BTreeMap<String, u64> = BTreeMap::new();
+    for wave in 1..=waves {
+        // Submit the whole wave before waiting so every class's traffic
+        // lands in the same monitor window.
+        let mut pending = Vec::new();
+        for cs in &config.classes {
+            let entry = fleet.entry(&cs.class).expect("registered above");
+            let served = if cs.stale { tensor } else { calib_tensor };
+            for _ in 0..jobs {
+                let tensors: Vec<Vec<f32>> =
+                    (0..entry.n_workers).map(|_| rng.f32_vec(served)).collect();
+                pending.push((cs.class.clone(), entry.service.submit(tensors)?));
+            }
+        }
+        for (class, rx) in pending {
+            let res = rx.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
+            last_epoch.insert(class, res.epoch);
+        }
+        let check = fleet.check();
+        let tripped: Vec<&str> = check.tripped().map(|c| c.class.as_str()).collect();
+        if !tripped.is_empty() {
+            println!(
+                "wave {wave}: tripped [{}] → {}; pushed [{}], held [{}], re-priced [{}]{}",
+                tripped.join(", "),
+                if check.fitted {
+                    "pooled §3.4 fit"
+                } else {
+                    "fit under-determined, targeted re-price"
+                },
+                check.pushed.join(", "),
+                check.held.join(", "),
+                check.repriced.join(", "),
+                if check.failed.is_empty() {
+                    String::new()
+                } else {
+                    format!("; FAILED [{}]", check.failed.join("; "))
+                },
+            );
+        }
+    }
+    fleet.stop();
+
+    let report = FleetReport::collect(&fleet);
+    print!("{}", report.render());
+    if let Some(bench_out) = args.opt("bench-out") {
+        merge_bench_json(bench_out, report.bench_entries())?;
+        println!("bench record → {bench_out}");
+    }
+    anyhow::ensure!(
+        report.dropped_jobs() == 0,
+        "{} job(s) dropped across the fleet — a push or swap lost work",
+        report.dropped_jobs()
+    );
+    // Self-assertions: the CI smoke states its claims as flags so a
+    // regression fails the run instead of silently printing a quiet table.
+    if args.flag("expect-fit") {
+        anyhow::ensure!(
+            report.stats.calibrator_fits >= 1,
+            "--expect-fit: the pooled §3.4 fit never fired ({} check(s), {} trip(s)) — \
+             does the fleet span ≥ 4 distinct worker counts serving cps?",
+            report.stats.checks,
+            report.stats.trips
+        );
+    }
+    for (flag, want_swap) in [("expect-swap", true), ("expect-hold", false)] {
+        if let Some(list) = args.opt(flag) {
+            for class in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let entry = fleet
+                    .entry(class)
+                    .ok_or_else(|| anyhow::anyhow!("--{flag}: unknown class {class:?}"))?;
+                let epoch = entry.handle.epoch();
+                if want_swap {
+                    anyhow::ensure!(
+                        epoch >= 1,
+                        "--expect-swap: class {class:?} never swapped (epoch 0)"
+                    );
+                    // With a wave after the push, the leader must also have
+                    // observed it: its last JobResult reports the new epoch.
+                    if waves > 1 {
+                        anyhow::ensure!(
+                            last_epoch.get(class).copied().unwrap_or(0) >= 1,
+                            "--expect-swap: class {class:?} swapped (epoch {epoch}) but its \
+                             last served job still reported epoch 0 — the leader never \
+                             observed the push"
+                        );
+                    }
+                } else {
+                    anyhow::ensure!(
+                        epoch == 0,
+                        "--expect-hold: class {class:?} was pushed to epoch {epoch}"
+                    );
+                }
+            }
+        }
     }
     Ok(())
 }

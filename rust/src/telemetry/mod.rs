@@ -50,6 +50,14 @@
 //! table into the serving `TableHandle`, bumping the epoch every
 //! `JobResult` reports. The CLI `score`/`calibrate` subcommands remain
 //! the offline, operator-inspectable views of the same machinery.
+//!
+//! A recorder may be **shared** by several services (the fleet plane,
+//! `crate::fleet`): each consumer of fresh observations holds its own
+//! [`TelemetryCursor`] ([`Recorder::cursor`]) — per-consumer delta
+//! state, so a per-service drift monitor and a fleet-level monitor
+//! consuming the same stream never starve or re-trip one another, and
+//! [`TelemetrySnapshot::restrict_class`] slices one class's cells out
+//! of the pooled stream for per-class scoring.
 //! Degenerate cells (zero/non-finite predicted or observed seconds)
 //! yield no relative error and are reported as `ScoreSummary::skipped`
 //! rather than NaN-sorting into the worst-offender slot.
@@ -61,5 +69,5 @@ pub mod score;
 
 pub use calibrate::{bench_rows, calibrate, recalibrated_table, Calibration};
 pub use hist::{bin_of, HistSnapshot, LatencyHist, BINS, MAX_EXACT_TOTAL};
-pub use recorder::{CellKey, CellSnapshot, Recorder, TelemetrySnapshot, SCHEMA};
-pub use score::{score_cells, summarize, ScoreSummary, ScoredCell};
+pub use recorder::{CellKey, CellSnapshot, Recorder, TelemetryCursor, TelemetrySnapshot, SCHEMA};
+pub use score::{score_against_table, score_cells, summarize, ScoreSummary, ScoredCell};

@@ -93,6 +93,20 @@ impl Recorder {
         cell.hist.record_secs(secs);
     }
 
+    /// A per-consumer delta cursor over this recorder. Every consumer
+    /// that wants "observations since I last looked" — a per-service
+    /// [`crate::coordinator::DriftMonitor`], a fleet-level monitor, an
+    /// operator scorer — holds its **own** cursor: the consumed-up-to
+    /// baseline lives in the cursor, not in the recorder, so one
+    /// consumer's [`TelemetryCursor::consume`] can neither starve a
+    /// sibling of fresh cells nor make spent observations re-trip it.
+    pub fn cursor(self: &Arc<Self>) -> TelemetryCursor {
+        TelemetryCursor {
+            recorder: self.clone(),
+            baseline: TelemetrySnapshot::default(),
+        }
+    }
+
     /// Plain-data copy of every cell.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let cells = self.cells.lock().unwrap();
@@ -111,6 +125,53 @@ impl Recorder {
                 })
                 .collect(),
         }
+    }
+}
+
+/// One consumer's view of "what's new since I last consumed" over a
+/// shared [`Recorder`] ([`Recorder::cursor`]).
+///
+/// [`TelemetrySnapshot::delta`] itself is a pure subtraction; what made
+/// it effectively single-consumer was the *baseline ownership*: the one
+/// monitor that held the baseline advanced it, and any second consumer
+/// diffing against the same recorder either re-saw consumed traffic
+/// (re-tripping on spent evidence) or — had the baseline lived in the
+/// recorder — saw nothing at all (starved by whoever consumed first).
+/// The cursor moves the baseline to the consumer: `peek` reads without
+/// consuming (so a failed recalibration retries on the same evidence
+/// with more data), `consume` marks a snapshot spent for *this* cursor
+/// only.
+#[derive(Debug)]
+pub struct TelemetryCursor {
+    recorder: Arc<Recorder>,
+    baseline: TelemetrySnapshot,
+}
+
+impl TelemetryCursor {
+    /// Snapshot the recorder now and return `(full, fresh)`: the full
+    /// snapshot (calibration input — fits want all history) and the
+    /// delta since this cursor's baseline (scoring input). Consumes
+    /// nothing: pass `full` back to [`Self::consume`] once acted upon.
+    pub fn peek(&self) -> (TelemetrySnapshot, TelemetrySnapshot) {
+        let snap = self.recorder.snapshot();
+        let fresh = snap.delta(&self.baseline);
+        (snap, fresh)
+    }
+
+    /// Mark everything in `upto` (a snapshot returned by [`Self::peek`])
+    /// consumed: future `peek`/`take` deltas exclude it. Only this
+    /// cursor advances — sibling cursors on the same recorder still see
+    /// the same observations as fresh.
+    pub fn consume(&mut self, upto: TelemetrySnapshot) {
+        self.baseline = upto;
+    }
+
+    /// One-step peek-and-consume: the fresh delta since the baseline,
+    /// with the baseline advanced past it.
+    pub fn take(&mut self) -> TelemetrySnapshot {
+        let (snap, fresh) = self.peek();
+        self.baseline = snap;
+        fresh
     }
 }
 
@@ -166,6 +227,21 @@ impl TelemetrySnapshot {
             out.entry(key.class.clone()).or_default().insert(key.bucket);
         }
         out
+    }
+
+    /// Only the cells of one topology class — how a fleet-level monitor
+    /// splits a shared recorder's pooled delta back into per-class
+    /// slices for scoring under per-class drift budgets. Exact key
+    /// match (fleet classes are registered spellings, not user input).
+    pub fn restrict_class(&self, class: &str) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            cells: self
+                .cells
+                .iter()
+                .filter(|(k, _)| k.class == class)
+                .map(|(k, c)| (k.clone(), c.clone()))
+                .collect(),
+        }
     }
 
     /// Every cell's histogram folded into one service-wide distribution.
@@ -452,6 +528,68 @@ mod tests {
         // An empty baseline returns the snapshot itself.
         let all = rec.snapshot();
         assert_eq!(all.delta(&TelemetrySnapshot::default()), all);
+    }
+
+    #[test]
+    fn two_cursors_consume_independently() {
+        // The satellite regression: a fleet monitor and a per-service
+        // scorer share one recorder through separate cursors. Consuming
+        // on one must neither starve the other of those observations
+        // nor let its own spent observations re-trip it.
+        let rec = Arc::new(Recorder::new());
+        let mut fleet = rec.cursor();
+        let mut scorer = rec.cursor();
+
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        let (snap_a, fresh_a) = fleet.peek();
+        assert_eq!(fresh_a.overall_hist().count(), 1);
+        fleet.consume(snap_a);
+
+        // The sibling cursor still sees the SAME observation as fresh —
+        // the fleet's consume did not starve it.
+        let fresh_b = scorer.take();
+        assert_eq!(fresh_b.overall_hist().count(), 1, "sibling not starved");
+
+        // Neither cursor re-sees what it consumed.
+        assert!(fleet.peek().1.is_empty(), "fleet's spent evidence is gone");
+        assert!(scorer.peek().1.is_empty());
+
+        // New traffic is fresh to both again, and each consumes its own.
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.004);
+        rec.record("single:4", 4, 16, "cps", 65_536, 0.001);
+        let fleet_fresh = fleet.take();
+        let scorer_fresh = scorer.take();
+        assert_eq!(fleet_fresh.overall_hist().count(), 2);
+        assert_eq!(scorer_fresh, fleet_fresh, "both saw the same delta");
+        // Per-cell means are delta-local: the fleet cursor's fresh cps
+        // cell holds only the 4 ms batch, not the consumed 2 ms one.
+        let cps = &fleet_fresh.cells[&CellKey {
+            class: "single:8".into(),
+            bucket: 16,
+            algo: "cps".into(),
+        }];
+        assert_eq!(cps.batches(), 1);
+        assert!((cps.mean_secs() - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        // A tripped check whose recalibration fails must retry on the
+        // same evidence: peek leaves the baseline untouched.
+        let rec = Arc::new(Recorder::new());
+        let cursor = rec.cursor();
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        assert_eq!(cursor.peek().1.overall_hist().count(), 1);
+        assert_eq!(cursor.peek().1.overall_hist().count(), 1, "still fresh");
+    }
+
+    #[test]
+    fn restrict_class_slices_exactly() {
+        let snap = sample();
+        let eights = snap.restrict_class("single:8");
+        assert_eq!(eights.cells.len(), 2);
+        assert!(eights.cells.keys().all(|k| k.class == "single:8"));
+        assert!(snap.restrict_class("single:999").is_empty());
     }
 
     #[test]

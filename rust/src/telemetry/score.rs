@@ -119,6 +119,26 @@ pub fn score_cells(
     out
 }
 
+/// Score observed cells against a **serving table's own predictions**:
+/// the winner's stored seconds at the cell's bucket, under the same
+/// nearest-bucket clamp routing uses. A cell served by an algorithm the
+/// table does not currently route carries no prediction (it cannot trip
+/// a drift monitor — e.g. pre-swap traffic under a dethroned winner);
+/// degenerate stored seconds (zero/non-finite) likewise yield none.
+/// This is the one definition of "does serving match the active table"
+/// shared by the per-service [`crate::coordinator::DriftMonitor`] and
+/// the fleet monitor, so their trip decisions cannot diverge.
+pub fn score_against_table(
+    fresh: &TelemetrySnapshot,
+    table: &crate::campaign::SelectionTable,
+) -> Vec<ScoredCell> {
+    score_cells(fresh, &[], |class, bucket, algo| {
+        let choice = table.lookup(class, PlanRouter::bucket_size(bucket) as usize)?;
+        (choice.algo == algo && choice.seconds.is_finite() && choice.seconds > 0.0)
+            .then_some(choice.seconds)
+    })
+}
+
 /// Reduce scored cells to the headline accuracy numbers.
 pub fn summarize(cells: &[ScoredCell]) -> ScoreSummary {
     let mut s = ScoreSummary {

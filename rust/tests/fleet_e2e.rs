@@ -1,0 +1,207 @@
+//! Fleet serving end-to-end: one rack's drift fixes another rack's
+//! table. Rack A (`single:15`) serves incast-heavy traffic under a
+//! blind δ=ε=0 table on an ε×20 congested fabric and trips its budget;
+//! rack B (`single:12`) serves only incast-free traffic under an
+//! equally stale table and never trips its own budget — yet after A's
+//! trip drives the pooled §3.4 refit, B's table is pushed too, and B's
+//! big-bucket winner (which B never exercised) is verifiably cheaper
+//! under the true parameters than the blind choice it replaced. Honest
+//! racks hold (no epoch churn), every result is numerically verified
+//! against the oracle, and no job is dropped across the pushes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use genmodel::api::{AlgoSpec, Engine};
+use genmodel::campaign::table_from_model;
+use genmodel::coordinator::{BatchPolicy, JobResult, ObserveMode, DEFAULT_LINK_BETA};
+use genmodel::fleet::{default_candidates, FleetController, FleetReport, FleetSpec};
+use genmodel::model::params::{Environment, ModelParams};
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::single_switch;
+use genmodel::util::rng::Rng;
+
+const BIG: usize = 1 << 20; // bucket 20: incast-dominated on the congested fabric
+const SMALL: usize = 65_536; // bucket 16: incast-free, stays honest
+
+fn tensors(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32_vec(len)).collect()
+}
+
+/// The "true" fabric: the paper's CPU testbed with a 20× incast slope.
+fn true_params() -> ModelParams {
+    let p = ModelParams::cpu_testbed();
+    ModelParams {
+        epsilon: p.epsilon * 20.0,
+        ..p
+    }
+}
+
+/// The classic (α,β,γ) worldview the stale racks' tables were priced
+/// under.
+fn stale_params() -> ModelParams {
+    ModelParams {
+        delta: 0.0,
+        epsilon: 0.0,
+        ..ModelParams::cpu_testbed()
+    }
+}
+
+fn spec(class: &str, buckets: &[u32], pricing: ModelParams, threshold: f64) -> FleetSpec {
+    let topo = genmodel::bench::workloads::parse_topology(class).unwrap();
+    let grid: BTreeMap<String, BTreeSet<u32>> =
+        BTreeMap::from([(class.to_string(), buckets.iter().copied().collect())]);
+    let table = table_from_model(
+        &grid,
+        &default_candidates(&topo),
+        &Environment::uniform(pricing),
+    )
+    .unwrap();
+    FleetSpec {
+        class: class.to_string(),
+        threshold,
+        table,
+        env: Environment::uniform(true_params()), // the fabric reality
+        candidates: Vec::new(),
+        policy: BatchPolicy::with_cap(1), // every job its own batch
+        flush_after: Duration::from_millis(1),
+        observe: ObserveMode::Sim, // deterministic observed seconds
+        reducer: ReducerSpec::Scalar,
+        min_split_margin: 1.25,
+    }
+}
+
+/// Submit one verified job: the result must match the exact oracle sum.
+fn serve_one(fleet: &FleetController, class: &str, len: usize, seed: u64) -> JobResult {
+    let entry = fleet.entry(class).unwrap();
+    let ts = tensors(entry.n_workers, len, seed);
+    let want = genmodel::exec::oracle_sum(&ts);
+    let res = entry.service.allreduce(ts).unwrap();
+    for (a, b) in res.reduced.iter().zip(&want) {
+        assert!(
+            (a - b).abs() < 1e-3 * b.abs().max(1.0),
+            "{class}: {a} vs {b}"
+        );
+    }
+    res
+}
+
+#[test]
+fn one_racks_drift_recalibrates_every_racks_table() {
+    let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+    // Rack A: stale table over its one served bucket — the tripwire.
+    fleet
+        .register(spec("single:15", &[20], stale_params(), 0.5))
+        .unwrap();
+    // Rack B: equally stale table over BOTH buckets, but it only ever
+    // serves the incast-free one — its own traffic can't expose the lie.
+    fleet
+        .register(spec("single:12", &[16, 20], stale_params(), 0.5))
+        .unwrap();
+    // Honest racks: truth-priced; their cps traffic at four more worker
+    // counts is what gives the pooled fit its multi-n spread.
+    for n in [4usize, 6, 8, 10] {
+        fleet
+            .register(spec(&format!("single:{n}"), &[16], true_params(), 0.5))
+            .unwrap();
+    }
+    // Sanity: the blind model routes cps in the incast bucket on both
+    // stale racks.
+    for class in ["single:15", "single:12"] {
+        let view = fleet.entry(class).unwrap().handle.view();
+        assert_eq!(view.table.lookup(class, BIG).unwrap().algo, "cps");
+    }
+
+    // Wave 1 — every rack serves real verified traffic at epoch 0.
+    for (i, seed) in (0..2u64).enumerate() {
+        let res = serve_one(&fleet, "single:15", BIG, seed);
+        assert_eq!((res.algo.as_str(), res.epoch), ("cps", 0), "A job {i}");
+        let res = serve_one(&fleet, "single:12", SMALL, 10 + seed);
+        assert_eq!((res.algo.as_str(), res.epoch), ("cps", 0), "B job {i}");
+    }
+    for n in [4usize, 6, 8, 10] {
+        let res = serve_one(&fleet, &format!("single:{n}"), SMALL, 20 + n as u64);
+        assert_eq!((res.algo.as_str(), res.epoch), ("cps", 0));
+    }
+
+    // The fleet check: only A trips, the pooled snapshot spans six
+    // worker counts of cps-served cells, so the §3.4 fit fires — and the
+    // fitted environment re-prices BOTH stale racks while the honest
+    // racks' routing survives the refit untouched.
+    let check = fleet.check();
+    let tripped: Vec<&str> = check.tripped().map(|c| c.class.as_str()).collect();
+    assert_eq!(tripped, ["single:15"], "{check:?}");
+    assert!(check.fitted, "pooled fit must fire: {check:?}");
+    assert!(check.failed.is_empty(), "{check:?}");
+    assert_eq!(check.pushed, ["single:12", "single:15"], "{check:?}");
+    assert_eq!(
+        check.held,
+        ["single:10", "single:4", "single:6", "single:8"],
+        "{check:?}"
+    );
+    assert_eq!(fleet.monitor().trips_for("single:15"), 1);
+    assert_eq!(
+        fleet.monitor().trips_for("single:12"),
+        0,
+        "B never tripped its own budget — the push was cross-rack"
+    );
+
+    // B's pushed table: the big bucket it never served now routes a
+    // winner that is genuinely cheaper under the true parameters than
+    // the blind cps choice — while its served small bucket keeps cps
+    // (the merge is surgical).
+    let b = fleet.entry("single:12").unwrap();
+    assert_eq!(b.handle.epoch(), 1);
+    let b_view = b.handle.view();
+    let b_choice = b_view.table.lookup("single:12", BIG).unwrap().clone();
+    assert_ne!(b_choice.algo, "cps", "{b_choice:?}");
+    let truth = Engine::new(single_switch(12), Environment::uniform(true_params()));
+    let new_s = truth
+        .predict_bucket(&AlgoSpec::parse(&b_choice.algo).unwrap(), 20)
+        .unwrap();
+    let old_s = truth.predict_bucket(&AlgoSpec::Cps, 20).unwrap();
+    assert!(
+        new_s < old_s,
+        "the cross-rack push must improve B under the true params: \
+         {} at {new_s} vs cps at {old_s}",
+        b_choice.algo
+    );
+    assert_eq!(b_view.table.lookup("single:12", SMALL).unwrap().algo, "cps");
+    for n in [4usize, 6, 8, 10] {
+        let e = fleet.entry(&format!("single:{n}")).unwrap();
+        assert_eq!(e.handle.epoch(), 0, "honest racks' epochs are not churned");
+    }
+
+    // Wave 2 — the pushed racks' leaders observe the new epoch on their
+    // very next served jobs; A routes the recalibrated winner; nothing
+    // fails and the honest racks keep serving at epoch 0.
+    let res = serve_one(&fleet, "single:15", BIG, 40);
+    assert_eq!(res.epoch, 1, "A's leader observed the swap");
+    assert_ne!(res.algo, "cps", "A routes the recalibrated winner");
+    let res = serve_one(&fleet, "single:12", SMALL, 41);
+    assert_eq!(res.epoch, 1, "B's leader observed the cross-rack push");
+    assert_eq!(res.algo, "cps", "B's served bucket kept its winner");
+    for n in [4usize, 6, 8, 10] {
+        let res = serve_one(&fleet, &format!("single:{n}"), SMALL, 50 + n as u64);
+        assert_eq!(res.epoch, 0);
+    }
+    let check2 = fleet.check();
+    assert!(check2.failed.is_empty(), "{check2:?}");
+    assert!(
+        !check2.tripped().any(|c| c.class != "single:15"),
+        "only A's fit-residual cell may ever re-trip: {check2:?}"
+    );
+
+    fleet.stop();
+    let report = FleetReport::collect(&fleet);
+    assert_eq!(report.dropped_jobs(), 0, "no job dropped across the pushes");
+    assert_eq!(report.stats.failures, 0);
+    assert!(report.stats.calibrator_fits >= 1);
+    assert!(report.stats.holds >= 4, "{:?}", report.stats);
+    // A's swap stranded its cached blind plan; the leader evicted it.
+    let a_metrics = fleet.entry("single:15").unwrap().service.metrics.snapshot();
+    assert!(a_metrics.drift_evictions >= 1, "{a_metrics:?}");
+    let text = report.render();
+    assert!(text.contains("single:12") && text.contains("0 dropped job(s)"), "{text}");
+}

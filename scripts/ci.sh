@@ -99,4 +99,22 @@ step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 48 --wa
 step cargo run --release -p genmodel --quiet -- score \
     --telemetry target/telemetry_drift.json --bench-out BENCH_campaign.json
 
+# 9. Fleet smoke: one stale rack and four honest racks behind ONE
+#    telemetry plane on an ε×20 congested fabric. The stale rack serves
+#    the incast-dominated bucket and must trip; the honest racks serve
+#    the incast-free bucket, providing the 4 extra worker counts the
+#    pooled §3.4 fit needs (a 2-class fleet cannot satisfy the fit's
+#    ≥4-distinct-n requirement — that under-determined case is pinned in
+#    rust/src/fleet/monitor.rs instead). --expect-* make the claims
+#    hard: the fit fires (fleet_calibrator_fits ≥ 1 lands in
+#    BENCH_campaign.json via --bench-out), the stale rack swaps, and no
+#    honest rack's epoch is churned.
+step cargo run --release -p genmodel --quiet -- fleet \
+    --classes 'single:15!stale,single:4,single:6,single:8,single:10' \
+    --congest 20 --jobs 2 --waves 2 --observe sim --scalar \
+    --drift-threshold 0.5 \
+    --expect-fit --expect-swap single:15 \
+    --expect-hold single:4,single:6,single:8,single:10 \
+    --bench-out BENCH_campaign.json
+
 exit $fail
