@@ -85,7 +85,7 @@ pub fn accuracy_table(cells: &[ScoredCell]) -> Table {
             c.key.algo.clone(),
             c.batches.to_string(),
             secs(c.observed_mean_s),
-            secs(c.observed_p95_s),
+            c.observed_p95_s.map(secs).unwrap_or_else(|| "-".into()),
             c.predicted_s.map(secs).unwrap_or_else(|| "-".into()),
             c.rel_err()
                 .map(|e| format!("{:+.1}%", e * 100.0))
@@ -160,7 +160,7 @@ mod tests {
             batches: 3,
             mean_floats: 1e6,
             observed_mean_s: 0.030,
-            observed_p95_s: 0.040,
+            observed_p95_s: Some(0.040),
             predicted_s: predicted,
         };
         let rendered =

@@ -48,9 +48,12 @@ use std::sync::Arc;
 
 use crate::api::{AlgoSpec, ApiError};
 use crate::campaign::{price_grid, EnvKind, Metric, ScenarioGrid, SelectionTable};
+use crate::sim::report::term_breakdown;
 use crate::telemetry::{
-    calibrate, score_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
+    calibrate, score_against_table, summarize, Recorder, ScoredCell, TelemetryCursor,
+    TelemetrySnapshot,
 };
+use crate::trace::{Span, SpanKind, Term, TermAttribution, TraceRecorder};
 
 use super::handle::TableHandle;
 use super::metrics::Metrics;
@@ -97,6 +100,10 @@ pub struct DriftMonitor {
     /// starve or re-trip the other ([`Recorder::cursor`]).
     cursor: TelemetryCursor,
     since_check: u64,
+    /// Flight recorder for check/swap/eviction events (`None`: no
+    /// tracing). Swap events carry the waterfall term attribution of the
+    /// worst offending cell — *which* GenModel term tripped the monitor.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl DriftMonitor {
@@ -106,7 +113,14 @@ impl DriftMonitor {
             handle,
             cursor: recorder.cursor(),
             since_check: 0,
+            trace: None,
         }
+    }
+
+    /// Emit check/swap/eviction events (with term attribution) to `trace`.
+    pub fn with_trace(mut self, trace: Arc<TraceRecorder>) -> Self {
+        self.trace = Some(trace);
+        self
     }
 
     /// Account `batches` freshly flushed batches; when the check cadence
@@ -124,6 +138,12 @@ impl DriftMonitor {
 
     fn check(&mut self, router: &PlanRouter, metrics: &Metrics) -> bool {
         metrics.add(&metrics.drift_checks, 1);
+        if let Some(tr) = self.trace.as_ref().filter(|t| t.enabled()) {
+            let mut sp = Span::new(SpanKind::DriftCheck);
+            sp.epoch = self.handle.epoch();
+            sp.ts_ns = tr.now_ns();
+            tr.record(&sp);
+        }
         let (snap, fresh) = self.cursor.peek();
         if fresh.is_empty() {
             return false;
@@ -174,14 +194,46 @@ impl DriftMonitor {
                         // These observations are spent: the next check
                         // scores only traffic the new table served.
                         self.cursor.consume(snap);
+                        // Which GenModel term was eating the round: the
+                        // waterfall attribution of the worst cell's gap
+                        // (`None` only when the cell can no longer be
+                        // priced — the swap still proceeds).
+                        let blamed = attribute_worst(&scored, router);
+                        if let Some((_, term, _)) = &blamed {
+                            metrics.set_drift_term(*term);
+                        }
+                        if let Some(tr) = self.trace.as_ref().filter(|t| t.enabled()) {
+                            let mut sp = Span::new(SpanKind::DriftSwap);
+                            if let Some((attr, _, cell)) = &blamed {
+                                sp = sp.with_attr(attr);
+                                sp.class = tr.intern(&cell.key.class);
+                                sp.algo = tr.intern(&cell.key.algo);
+                            }
+                            sp.epoch = new.epoch;
+                            sp.floats =
+                                offending.values().map(BTreeSet::len).sum::<usize>() as u64;
+                            sp.ts_ns = tr.now_ns();
+                            tr.record(&sp);
+                            if evicted > 0 {
+                                let mut ev = Span::new(SpanKind::DriftEviction);
+                                ev.epoch = new.epoch;
+                                ev.floats = evicted;
+                                ev.ts_ns = tr.now_ns();
+                                tr.record(&ev);
+                            }
+                        }
                         eprintln!(
                             "allreduce-leader: drift {:.0}% ≥ {:.0}% on {} cell(s) \
-                             (worst {}): recalibrated and hot-swapped table to epoch {} \
-                             ({} stale plan(s) evicted)",
+                             (worst {}, blamed term: {}): recalibrated and hot-swapped \
+                             table to epoch {} ({} stale plan(s) evicted)",
                             summary.max_abs_rel_err * 100.0,
                             self.cfg.threshold * 100.0,
                             offending.values().map(BTreeSet::len).sum::<usize>(),
                             summary.worst.as_deref().unwrap_or("-"),
+                            blamed
+                                .as_ref()
+                                .map(|(_, t, _)| t.name())
+                                .unwrap_or("unattributed"),
                             new.epoch,
                             evicted,
                         );
@@ -229,6 +281,39 @@ impl DriftMonitor {
         Ok(patch)
     }
 
+}
+
+/// Waterfall-attribute the worst-erring scored cell's gap to the
+/// GenModel term the stale prediction failed to price: re-price the
+/// cell's served (algo, size) under the router's environment and consume
+/// the table's predicted seconds against the breakdown in α → wire →
+/// mem → incast order ([`TermAttribution::deviation`]). `None` when no
+/// cell carries a prediction or the served algorithm no longer builds
+/// for this topology — attribution never blocks a swap. Shared with the
+/// fleet monitor's `fleet_trip` events ([`crate::fleet`]).
+pub(crate) fn attribute_worst<'a>(
+    scored: &'a [ScoredCell],
+    router: &PlanRouter,
+) -> Option<(TermAttribution, Term, &'a ScoredCell)> {
+    let worst = scored
+        .iter()
+        .filter(|c| c.rel_err().is_some())
+        .max_by(|a, b| {
+            let ea = a.rel_err().map_or(0.0, f64::abs);
+            let eb = b.rel_err().map_or(0.0, f64::abs);
+            ea.partial_cmp(&eb).unwrap_or(std::cmp::Ordering::Equal)
+        })?;
+    let predicted = worst.predicted_s?;
+    let spec = AlgoSpec::parse(&worst.key.algo).ok()?;
+    let routed = router.route(&spec, worst.mean_floats.max(1.0) as usize).ok()?;
+    let bd = term_breakdown(
+        &routed.plan,
+        worst.mean_floats,
+        router.topo(),
+        router.env(),
+    );
+    let attr = TermAttribution::deviation(&bd, predicted, worst.observed_mean_s);
+    Some((attr, attr.dominant(), worst))
 }
 
 /// A tripped check whose recalibration or swap could not complete: count
@@ -352,6 +437,55 @@ mod tests {
         assert!(!monitor.observe_flush(4, &router, &metrics));
         let m = metrics.snapshot();
         assert_eq!((m.drift_checks, m.drift_swaps), (2, 1));
+    }
+
+    #[test]
+    fn swap_blames_the_incast_term_and_traces_the_events() {
+        // The ε×20 fabric against a δ=ε=0 table: the gap the blind
+        // prediction cannot price is overwhelmingly the incast
+        // surcharge, and the swap must say so — in the drift_term
+        // metric, the swap log, and the traced DriftSwap attribution.
+        let recorder = Arc::new(Recorder::new());
+        let trace = Arc::new(TraceRecorder::new());
+        let handle = Arc::new(TableHandle::new(stale_table(), "single:15").unwrap());
+        let router = PlanRouter::new(
+            single_switch(15),
+            Environment::uniform(true_params()),
+        )
+        .with_table_handle(handle.clone());
+        let metrics = Metrics::default();
+        let mut monitor = DriftMonitor::new(
+            DriftConfig {
+                threshold: 0.5,
+                every: 4,
+                algos: algos(),
+                ..DriftConfig::default()
+            },
+            recorder.clone(),
+            handle.clone(),
+        )
+        .with_trace(trace.clone());
+        let _ = router.plan_for(1 << 20).unwrap();
+        observe_truth(&recorder, 4);
+        assert!(monitor.observe_flush(4, &router, &metrics));
+        let m = metrics.snapshot();
+        assert_eq!(m.drift_term, Term::Incast.code(), "metric names the term");
+        let snap = trace.snapshot();
+        assert_eq!(snap.of_kind(SpanKind::DriftCheck).count(), 1);
+        let swap = snap
+            .of_kind(SpanKind::DriftSwap)
+            .next()
+            .expect("swap traced");
+        let attr = swap.attribution().expect("swap carries attribution");
+        assert_eq!(attr.dominant(), Term::Incast);
+        assert!(
+            attr.dominant_share() > 0.5,
+            "incast must dominate the gap: {attr:?}"
+        );
+        assert_eq!(snap.name(swap.span.class), "single:15");
+        assert_eq!(snap.name(swap.span.algo), "cps");
+        assert_eq!(swap.span.epoch, 1);
+        assert_eq!(snap.of_kind(SpanKind::DriftEviction).count(), 1);
     }
 
     #[test]

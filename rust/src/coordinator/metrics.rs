@@ -11,9 +11,11 @@
 //! [`MetricsSnapshot::rules_consistent`] checks exact equality for
 //! quiescent readers (tests, end-of-run reports).
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::telemetry::{HistSnapshot, LatencyHist};
+use crate::trace::{Term, TermAttribution};
 
 use super::batcher::BatchRule;
 
@@ -54,6 +56,16 @@ pub struct Metrics {
     /// The selection-table epoch currently serving (0 until the first
     /// swap; stays 0 for services without a table handle).
     pub drift_epoch: AtomicU64,
+    /// The GenModel term the drift monitor blamed for the *latest* trip
+    /// ([`Term::code`]: 1=α 2=wire 3=mem 4=incast 5=unexplained; 0 when
+    /// no trip has been attributed yet).
+    pub drift_term: AtomicU64,
+    /// Cumulative attributed nanoseconds per GenModel term across every
+    /// attributed execution span, indexed by [`Term::ALL`] order
+    /// (α, wire, mem, incast, unexplained). The unexplained slot
+    /// accumulates |unexplained| since the residual is signed. Only fed
+    /// when tracing is enabled — all-zero otherwise.
+    pub attr_ns: [AtomicU64; 5],
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -75,6 +87,9 @@ pub struct MetricsSnapshot {
     pub drift_evictions: u64,
     pub drift_failures: u64,
     pub drift_epoch: u64,
+    pub drift_term: u64,
+    /// Cumulative attributed nanoseconds in [`Term::ALL`] order.
+    pub attr_ns: [u64; 5],
 }
 
 impl Metrics {
@@ -92,6 +107,26 @@ impl Metrics {
     pub fn record_batch(&self, rule: &BatchRule) {
         self.batches_flushed.fetch_add(1, Ordering::Release);
         self.rule_counter(rule).fetch_add(1, Ordering::Release);
+    }
+
+    /// Fold one execution span's term attribution into the cumulative
+    /// per-term gauges (called by the leader only when tracing is on).
+    /// Each term contributes its non-negative seconds; the signed
+    /// unexplained residual contributes its magnitude.
+    pub fn record_attribution(&self, attr: &TermAttribution) {
+        for (slot, term) in self.attr_ns.iter().zip(Term::ALL) {
+            let secs = match term {
+                Term::Unexplained => attr.term(term).abs(),
+                _ => attr.term(term).max(0.0),
+            };
+            slot.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record which GenModel term the drift monitor blamed for its
+    /// latest trip.
+    pub fn set_drift_term(&self, term: Term) {
+        self.drift_term.store(term.code(), Ordering::Relaxed);
     }
 
     /// The per-rule counter. Callers outside this module should go
@@ -134,6 +169,14 @@ impl Metrics {
             drift_evictions: self.drift_evictions.load(Ordering::Relaxed),
             drift_failures: self.drift_failures.load(Ordering::Relaxed),
             drift_epoch: self.drift_epoch.load(Ordering::Relaxed),
+            drift_term: self.drift_term.load(Ordering::Relaxed),
+            attr_ns: {
+                let mut ns = [0u64; 5];
+                for (dst, src) in ns.iter_mut().zip(&self.attr_ns) {
+                    *dst = src.load(Ordering::Relaxed);
+                }
+                ns
+            },
         };
         debug_assert!(
             snap.rule_counts_sum() <= snap.batches_flushed,
@@ -181,6 +224,132 @@ impl MetricsSnapshot {
     /// every snapshot taken while no batch is mid-record.
     pub fn rules_consistent(&self) -> bool {
         self.rule_counts_sum() == self.batches_flushed
+    }
+
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (`# TYPE` headers, `_total` counters, labelled gauges) for
+    /// `repro serve --metrics-text`. Latency quantiles are emitted only
+    /// when the histogram has observations — an idle service exports the
+    /// count at 0 rather than a fabricated 0-second p99.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            "allreduce_jobs_submitted_total",
+            "Jobs accepted by the coordinator queue.",
+            self.jobs_submitted,
+        );
+        counter(
+            "allreduce_jobs_completed_total",
+            "Jobs whose batch finished executing.",
+            self.jobs_completed,
+        );
+        counter(
+            "allreduce_batches_flushed_total",
+            "Batches the size-bucketing batcher closed.",
+            self.batches_flushed,
+        );
+        counter(
+            "allreduce_floats_reduced_total",
+            "Elements reduced across all batches.",
+            self.floats_reduced,
+        );
+        counter(
+            "allreduce_reduce_calls_total",
+            "Fan-in-k reducer invocations.",
+            self.reduce_calls,
+        );
+        counter(
+            "allreduce_reducer_fallbacks_total",
+            "Leaders that fell back to the scalar reducer.",
+            self.reducer_fallbacks,
+        );
+        counter(
+            "allreduce_drift_checks_total",
+            "Drift autopilot scoring passes.",
+            self.drift_checks,
+        );
+        counter(
+            "allreduce_drift_swaps_total",
+            "Selection-table hot swaps.",
+            self.drift_swaps,
+        );
+        counter(
+            "allreduce_drift_evictions_total",
+            "Router cache entries evicted by swaps.",
+            self.drift_evictions,
+        );
+        counter(
+            "allreduce_drift_failures_total",
+            "Tripped checks whose recalibration failed.",
+            self.drift_failures,
+        );
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_busy_seconds_total Wall-clock seconds spent executing plans."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_busy_seconds_total counter");
+        let _ = writeln!(out, "allreduce_busy_seconds_total {}", self.busy_secs);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_batches_by_rule_total Batches closed per batcher rule."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_batches_by_rule_total counter");
+        for (rule, count) in self.rule_counts() {
+            let _ = writeln!(out, "allreduce_batches_by_rule_total{{rule=\"{rule}\"}} {count}");
+        }
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_latency_seconds Per-batch execution latency quantiles."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_latency_seconds summary");
+        for (q, v) in [
+            ("0.5", self.latency.p50()),
+            ("0.95", self.latency.p95()),
+            ("0.99", self.latency.p99()),
+        ] {
+            if let Some(v) = v {
+                let _ = writeln!(out, "allreduce_latency_seconds{{quantile=\"{q}\"}} {v}");
+            }
+        }
+        let _ = writeln!(out, "allreduce_latency_seconds_count {}", self.latency.count());
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_drift_epoch Selection-table epoch currently serving."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_drift_epoch gauge");
+        let _ = writeln!(out, "allreduce_drift_epoch {}", self.drift_epoch);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_drift_term GenModel term blamed for the latest drift trip \
+             (0=none 1=alpha 2=wire 3=mem 4=incast 5=unexplained)."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_drift_term gauge");
+        let _ = writeln!(out, "allreduce_drift_term {}", self.drift_term);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_attr_seconds_total Attributed execution seconds per GenModel term."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_attr_seconds_total counter");
+        for (term, ns) in Term::ALL.iter().zip(self.attr_ns) {
+            let _ = writeln!(
+                out,
+                "allreduce_attr_seconds_total{{term=\"{}\"}} {}",
+                term.name(),
+                ns as f64 * 1e-9
+            );
+        }
+        out
     }
 }
 
@@ -264,6 +433,53 @@ mod tests {
         m.latency.record_secs(0.1);
         let s = m.snapshot();
         assert_eq!(s.latency.count(), 3);
-        assert!(s.latency.p50() < s.latency.p99());
+        assert!(s.latency.p50().unwrap() < s.latency.p99().unwrap());
+    }
+
+    #[test]
+    fn attribution_accumulates_per_term() {
+        let m = Metrics::default();
+        let attr = TermAttribution {
+            alpha_s: 0.5,
+            wire_s: 0.25,
+            incast_s: 1.5,
+            mem_s: 0.125,
+            unexplained_s: -0.375,
+        };
+        m.record_attribution(&attr);
+        m.record_attribution(&attr);
+        let s = m.snapshot();
+        // Term::ALL order: alpha, wire, mem, incast, unexplained; the
+        // signed residual lands as its magnitude.
+        assert_eq!(s.attr_ns, [1_000_000_000, 500_000_000, 250_000_000, 3_000_000_000, 750_000_000]);
+    }
+
+    #[test]
+    fn prometheus_text_has_counters_quantiles_and_terms() {
+        let m = Metrics::default();
+        m.add(&m.jobs_submitted, 7);
+        m.record_batch(&BatchRule::Drained);
+        m.latency.record_secs(0.002);
+        m.set_drift_term(Term::Incast);
+        m.record_attribution(&TermAttribution {
+            incast_s: 1.0,
+            ..TermAttribution::default()
+        });
+        let text = m.snapshot().render_prometheus();
+        assert!(text.contains("allreduce_jobs_submitted_total 7"));
+        assert!(text.contains("allreduce_batches_by_rule_total{rule=\"drained\"} 1"));
+        assert!(text.contains("allreduce_latency_seconds{quantile=\"0.95\"}"));
+        assert!(text.contains("allreduce_latency_seconds_count 1"));
+        assert!(text.contains("allreduce_drift_term 4"));
+        assert!(text.contains("allreduce_attr_seconds_total{term=\"incast\"} 1"));
+        // Every exposition family declares its TYPE.
+        assert!(text.contains("# TYPE allreduce_latency_seconds summary"));
+    }
+
+    #[test]
+    fn idle_prometheus_text_omits_fabricated_quantiles() {
+        let text = Metrics::default().snapshot().render_prometheus();
+        assert!(!text.contains("allreduce_latency_seconds{quantile"));
+        assert!(text.contains("allreduce_latency_seconds_count 0"));
     }
 }

@@ -31,11 +31,13 @@ use std::time::{Duration, Instant};
 use crate::api::{AlgoSpec, ApiError};
 use crate::campaign::SelectionTable;
 use crate::exec::execute_plan;
+use crate::model::cost::{CostModel, ModelKind};
 use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
 use crate::sim::{simulate_plan, SimConfig};
 use crate::telemetry::Recorder;
 use crate::topo::Topology;
+use crate::trace::{Span, SpanKind, TermAttribution, TraceRecorder};
 
 use super::batcher::{
     fuse_offsets, plan_batches, BatchPolicy, BatchRule, PendingJob, PlannedBatch,
@@ -123,6 +125,11 @@ pub struct ServiceConfig {
     /// monitor scores observations against the table's predictions).
     /// `None`: no monitoring, the PR-4 behavior.
     pub drift: Option<DriftConfig>,
+    /// Flight recorder the service feeds phase-level spans
+    /// (enqueue/flush/exec/phase/epoch, plus the drift monitor's
+    /// trip/swap/eviction events). `None`: no tracing; when set but
+    /// disabled, every span site costs one atomic load.
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Default for ServiceConfig {
@@ -137,6 +144,7 @@ impl Default for ServiceConfig {
             observe: ObserveMode::Wall,
             table: None,
             drift: None,
+            trace: None,
         }
     }
 }
@@ -185,6 +193,13 @@ impl ServiceConfig {
         }
         self
     }
+
+    /// Feed phase-level spans into `trace` (shareable across services —
+    /// the fleet wires every rack into one recorder).
+    pub fn with_trace(mut self, trace: Arc<TraceRecorder>) -> ServiceConfig {
+        self.trace = Some(trace);
+        self
+    }
 }
 
 pub struct AllReduceService {
@@ -193,6 +208,8 @@ pub struct AllReduceService {
     pub metrics: Arc<Metrics>,
     /// The hot-swappable selection table, when one was configured.
     handle: Option<Arc<TableHandle>>,
+    /// Flight recorder + this service's interned class id, when tracing.
+    trace: Option<(Arc<TraceRecorder>, u32)>,
     n_workers: usize,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -241,6 +258,10 @@ impl AllReduceService {
                 cfg.telemetry = Some(Arc::new(Recorder::new()));
             }
         }
+        let trace = cfg
+            .trace
+            .as_ref()
+            .map(|t| (t.clone(), t.intern(&cfg.class)));
         let metrics = Arc::new(Metrics::default());
         let mut router = PlanRouter::new(topo, env)
             .with_default_algo(cfg.algo.clone())
@@ -276,6 +297,7 @@ impl AllReduceService {
             leader: Mutex::new(Some(leader)),
             metrics,
             handle,
+            trace,
             n_workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
@@ -343,6 +365,18 @@ impl AllReduceService {
         })
         .map_err(|_| ApiError::ServiceStopped)?;
         self.metrics.add(&self.metrics.jobs_submitted, 1);
+        // Span site: when tracing is wired but disabled this is exactly
+        // one atomic load (the enabled gate) — nothing is constructed.
+        if let Some((tr, class)) = &self.trace {
+            if tr.enabled() {
+                let mut sp = Span::new(SpanKind::JobEnqueue);
+                sp.class = *class;
+                sp.job = id;
+                sp.floats = len as u64;
+                sp.ts_ns = tr.now_ns();
+                tr.record(&sp);
+            }
+        }
         Ok(rrx)
     }
 
@@ -386,6 +420,9 @@ fn leader_loop(
     // which reads the same handle) the routing rules all observe the
     // same epoch within a cycle. Re-derived only when a swap happened.
     let base_policy = cfg.policy.clone();
+    // Interned once per leader; intern() is idempotent so a fleet of
+    // leaders sharing one recorder agree on the id.
+    let trace_class = cfg.trace.as_ref().map_or(0, |t| t.intern(&cfg.class));
     let mut view = handle.as_ref().map(|h| h.view());
     let mut policy = match &view {
         Some(v) => v.overlay(&base_policy),
@@ -393,7 +430,11 @@ fn leader_loop(
     };
     let mut monitor: Option<DriftMonitor> = match (&cfg.drift, &handle, &cfg.telemetry) {
         (Some(d), Some(h), Some(rec)) => {
-            Some(DriftMonitor::new(d.clone(), rec.clone(), h.clone()))
+            let mut mon = DriftMonitor::new(d.clone(), rec.clone(), h.clone());
+            if let Some(tr) = &cfg.trace {
+                mon = mon.with_trace(tr.clone());
+            }
+            Some(mon)
         }
         // start() guarantees drift ⇒ handle + recorder; anything else
         // was already warned about and disabled there.
@@ -445,6 +486,14 @@ fn leader_loop(
                 metrics.add(&metrics.drift_evictions, evicted);
                 metrics.drift_epoch.store(new.epoch, Ordering::Relaxed);
                 policy = new.overlay(&base_policy);
+                if let Some(tr) = cfg.trace.as_ref().filter(|t| t.enabled()) {
+                    let mut sp = Span::new(SpanKind::EpochObserve);
+                    sp.class = trace_class;
+                    sp.epoch = new.epoch;
+                    sp.floats = evicted;
+                    sp.ts_ns = tr.now_ns();
+                    tr.record(&sp);
+                }
                 view = Some(new);
             }
         }
@@ -467,7 +516,16 @@ fn leader_loop(
             // when routing fails before execution (record_batch keeps
             // the rule-sum ↔ batches_flushed invariant).
             metrics.record_batch(&batch.rule);
-            run_batch(&batch, &mut jobs, &router, &reducer, &cfg, &metrics, epoch);
+            run_batch(
+                &batch,
+                &mut jobs,
+                &router,
+                &reducer,
+                &cfg,
+                &metrics,
+                epoch,
+                trace_class,
+            );
         }
         // Drift autopilot: between cycles — never mid-batch — so a table
         // swap can neither drop nor duplicate a job, and the next cycle's
@@ -483,6 +541,7 @@ fn leader_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     batch: &PlannedBatch,
     jobs: &mut std::collections::HashMap<u64, Job>,
@@ -491,6 +550,7 @@ fn run_batch(
     cfg: &ServiceConfig,
     metrics: &Arc<Metrics>,
     epoch: u64,
+    trace_class: u32,
 ) {
     let offsets = fuse_offsets(&batch.jobs);
     let total: usize = batch.fused_floats();
@@ -509,6 +569,21 @@ fn run_batch(
             return;
         }
     };
+    // One enabled-gate check per batch; all span emission below hangs
+    // off this Option so a disabled recorder costs nothing further.
+    let tracing = cfg.trace.as_ref().filter(|t| t.enabled());
+    let first_job = offsets.first().map_or(0, |&(id, _, _)| id);
+    let algo_id = tracing.map_or(0, |t| t.intern(&routed.algo.to_string()));
+    if let Some(tr) = tracing {
+        let mut sp = Span::new(SpanKind::BatchFlush);
+        sp.class = trace_class;
+        sp.algo = algo_id;
+        sp.job = first_job;
+        sp.floats = total as u64;
+        sp.epoch = epoch;
+        sp.ts_ns = tr.now_ns();
+        tr.record(&sp);
+    }
     // Fuse: one buffer per worker.
     let mut fused: Vec<Vec<f32>> = vec![vec![0f32; total]; n_workers];
     for &(id, off, len) in &offsets {
@@ -529,15 +604,69 @@ fn run_batch(
             // deterministic calibration harnesses) the flow simulator's
             // time for the routed plan at the fused size under the
             // service environment.
-            let observed_secs = match cfg.observe {
-                ObserveMode::Wall => elapsed.as_secs_f64(),
+            let sim_result = match cfg.observe {
+                ObserveMode::Wall => None,
                 ObserveMode::Sim => {
                     let topo = router.topo();
                     let cfg_sim = SimConfig::new(topo);
-                    simulate_plan(&routed.plan, total as f64, topo, router.env(), &cfg_sim).total
+                    Some(simulate_plan(
+                        &routed.plan,
+                        total as f64,
+                        topo,
+                        router.env(),
+                        &cfg_sim,
+                    ))
                 }
             };
+            let observed_secs = match &sim_result {
+                Some(sim) => sim.total,
+                None => elapsed.as_secs_f64(),
+            };
             metrics.latency.record_secs(observed_secs);
+            if let Some(tr) = tracing {
+                // Attribution: price the routed plan with GenModel and
+                // join each phase's predicted terms against what the
+                // phase actually took (simulated clock per phase under
+                // Sim; in-process wall time per phase under Wall).
+                let model = CostModel::new(router.topo(), router.env(), ModelKind::GenModel);
+                let terms = model.phase_terms(&routed.plan, total as f64);
+                let bd = model.plan_cost(&routed.plan, total as f64);
+                let attr = TermAttribution::from_breakdown(&bd, observed_secs);
+                metrics.record_attribution(&attr);
+                let end_ns = tr.now_ns();
+                let dur_ns = (observed_secs.max(0.0) * 1e9) as u64;
+                let start_ns = end_ns.saturating_sub(dur_ns);
+                let mut phase_ts = start_ns;
+                for (i, pt) in terms.iter().enumerate() {
+                    let obs_s = match &sim_result {
+                        Some(sim) => sim.per_phase.get(i).copied().unwrap_or(0.0),
+                        None => out.phases.get(i).map_or(0.0, |p| p.wall_ns as f64 * 1e-9),
+                    };
+                    let mut sp = Span::new(SpanKind::Phase)
+                        .with_attr(&TermAttribution::from_phase(pt, obs_s));
+                    sp.class = trace_class;
+                    sp.algo = algo_id;
+                    sp.job = first_job;
+                    sp.phase = i as u32;
+                    sp.fanin = out.phases.get(i).map_or(0, |p| p.max_fanin as u32);
+                    sp.floats = out.phases.get(i).map_or(0, |p| p.floats_moved as u64);
+                    sp.epoch = epoch;
+                    sp.ts_ns = phase_ts;
+                    sp.dur_ns = (obs_s.max(0.0) * 1e9) as u64;
+                    tr.record(&sp);
+                    phase_ts += sp.dur_ns;
+                }
+                let mut sp = Span::new(SpanKind::BatchExec).with_attr(&attr);
+                sp.class = trace_class;
+                sp.algo = algo_id;
+                sp.job = first_job;
+                sp.fanin = out.max_fanin as u32;
+                sp.floats = total as u64;
+                sp.epoch = epoch;
+                sp.ts_ns = start_ns;
+                sp.dur_ns = dur_ns;
+                tr.record(&sp);
+            }
             if let Some(recorder) = &cfg.telemetry {
                 recorder.record(
                     &cfg.class,
@@ -1037,6 +1166,71 @@ mod tests {
         assert_eq!(small.n_workers, 4);
         assert_eq!(small.floats, 4000);
         assert!(small.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn tracing_records_enqueue_flush_exec_and_phase_spans() {
+        use crate::trace::{SpanKind, TraceRecorder};
+        let trace = Arc::new(TraceRecorder::new());
+        let svc = AllReduceService::start(
+            single_switch(4),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy::with_cap(1),
+                flush_after: Duration::from_millis(1),
+                algo: AlgoSpec::Cps,
+                observe: ObserveMode::Sim,
+                ..ServiceConfig::default()
+            }
+            .with_trace(trace.clone()),
+        );
+        svc.allreduce(tensors(4, 4096, 1)).unwrap();
+        svc.stop();
+        let snap = trace.snapshot();
+        assert_eq!(snap.dropped, 0);
+        assert_eq!(snap.of_kind(SpanKind::JobEnqueue).count(), 1);
+        assert_eq!(snap.of_kind(SpanKind::BatchFlush).count(), 1);
+        assert_eq!(snap.attributed_execs(), 1);
+        let exec = snap.of_kind(SpanKind::BatchExec).next().unwrap();
+        let attr = exec.attribution().unwrap();
+        assert!(attr.explained_s() > 0.0, "{attr:?}");
+        // Sim clock: observed IS the model-driven simulator's verdict,
+        // so the model explains (almost) all of it.
+        assert!(
+            attr.unexplained_s.abs() < 0.5 * exec.span.dur_ns as f64 * 1e-9,
+            "{attr:?}"
+        );
+        assert_eq!(snap.name(exec.span.class), "single:4");
+        assert_eq!(snap.name(exec.span.algo), "cps");
+        // One phase span per plan phase, nested inside the exec window.
+        let phases: Vec<_> = snap.of_kind(SpanKind::Phase).collect();
+        assert_eq!(phases.len(), 2, "CPS = reduce + broadcast");
+        assert!(phases.iter().all(|p| p.span.ts_ns >= exec.span.ts_ns));
+        assert!(phases.iter().all(|p| p.attribution().is_some()));
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        use crate::trace::TraceRecorder;
+        let trace = Arc::new(TraceRecorder::new());
+        trace.set_enabled(false);
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy::with_cap(1),
+                flush_after: Duration::from_millis(1),
+                ..ServiceConfig::default()
+            }
+            .with_trace(trace.clone()),
+        );
+        svc.allreduce(tensors(2, 64, 1)).unwrap();
+        svc.stop();
+        let snap = trace.snapshot();
+        assert!(snap.events.is_empty());
+        assert_eq!(snap.dropped, 0);
     }
 
     #[test]

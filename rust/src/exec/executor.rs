@@ -6,6 +6,7 @@
 //! path GenModel reasons about.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -13,6 +14,23 @@ use crate::plan::ir::{Mode, Plan};
 use crate::runtime::Reducer;
 
 use super::worker::WorkerState;
+
+/// Per-phase execution accounting — one entry per plan phase, in phase
+/// order. Feeds the flight recorder's `phase` spans so a trace can
+/// attribute each phase's wall time to GenModel terms.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStat {
+    /// Floats moved by this phase's transfers (moves + copies).
+    pub floats_moved: usize,
+    /// Largest merge fan-in in this phase (0: no reduction happened).
+    pub max_fanin: usize,
+    /// Reducer invocations in this phase.
+    pub reduce_calls: usize,
+    /// Wall-clock nanoseconds this phase took in-process. This measures
+    /// the real memory/reduction path (the δ term's substrate) — the
+    /// wire/incast terms are simulated, not incurred, in-process.
+    pub wall_ns: u64,
+}
 
 /// Execution result.
 pub struct ExecOutcome {
@@ -23,6 +41,8 @@ pub struct ExecOutcome {
     pub reduced_floats: usize,
     /// Max fan-in encountered (sanity vs plan stats).
     pub max_fanin: usize,
+    /// Per-phase accounting, one entry per plan phase in order.
+    pub phases: Vec<PhaseStat>,
 }
 
 /// Execute an AllReduce plan over `inputs` (one vector per worker, equal
@@ -50,8 +70,11 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
     let mut reduce_calls = 0usize;
     let mut reduced_floats = 0usize;
     let mut max_fanin = 0usize;
+    let mut phases: Vec<PhaseStat> = Vec::with_capacity(plan.phases.len());
 
     for (pi, phase) in plan.phases.iter().enumerate() {
+        let phase_start = Instant::now();
+        let mut stat = PhaseStat::default();
         // 1. snapshot sends. A `Move` relinquishes the sender's partial,
         // so the buffer is *taken* (no clone — §Perf: halves executor
         // memcpy); valid plans never move the same partial twice in a
@@ -66,6 +89,7 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
                         .partials
                         .remove(&t.block)
                         .with_context(|| format!("phase {pi}: {t:?} source missing block"))?;
+                    stat.floats_moved += val.len();
                     inbox.entry((t.dst, t.block)).or_default().push(val);
                 }
                 Mode::Copy => {
@@ -74,6 +98,7 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
                         .get(&t.block)
                         .with_context(|| format!("phase {pi}: {t:?} source missing block"))?
                         .clone();
+                    stat.floats_moved += val.len();
                     copies.insert((t.dst, t.block), val);
                 }
             }
@@ -94,6 +119,8 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
                 reduce_calls += 1;
                 reduced_floats += refs.len() * refs[0].len();
                 max_fanin = max_fanin.max(refs.len());
+                stat.reduce_calls += 1;
+                stat.max_fanin = stat.max_fanin.max(refs.len());
                 reducer.reduce(&refs)?
             };
             workers[dst].partials.insert(b, merged);
@@ -102,6 +129,8 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
         for ((dst, b), val) in copies {
             workers[dst].partials.insert(b, val);
         }
+        stat.wall_ns = phase_start.elapsed().as_nanos() as u64;
+        phases.push(stat);
     }
 
     let outputs = workers
@@ -116,6 +145,7 @@ pub fn execute_plan(plan: &Plan, inputs: &[Vec<f32>], reducer: &Reducer) -> Resu
         reduce_calls,
         reduced_floats,
         max_fanin,
+        phases,
     })
 }
 
@@ -204,6 +234,22 @@ mod tests {
         assert_eq!(out.max_fanin, n);
         let out = execute_plan(&ring::allreduce(n), &data, &Reducer::Scalar).unwrap();
         assert_eq!(out.max_fanin, 2);
+    }
+
+    #[test]
+    fn per_phase_stats_cover_every_phase_and_sum_to_the_totals() {
+        let n = 8;
+        let plan = ring::allreduce(n);
+        let data = inputs(n, 64, 9);
+        let out = execute_plan(&plan, &data, &Reducer::Scalar).unwrap();
+        assert_eq!(out.phases.len(), plan.phases.len());
+        let calls: usize = out.phases.iter().map(|p| p.reduce_calls).sum();
+        assert_eq!(calls, out.reduce_calls);
+        let fanin = out.phases.iter().map(|p| p.max_fanin).max().unwrap();
+        assert_eq!(fanin, out.max_fanin);
+        // Every ring phase moves data; reduce-scatter phases also reduce.
+        assert!(out.phases.iter().all(|p| p.floats_moved > 0));
+        assert!(out.phases[0].reduce_calls > 0, "first phase reduce-scatters");
     }
 
     #[test]

@@ -8,5 +8,5 @@
 pub mod executor;
 pub mod worker;
 
-pub use executor::{execute_plan, oracle_sum, verify, ExecOutcome};
+pub use executor::{execute_plan, oracle_sum, verify, ExecOutcome, PhaseStat};
 pub use worker::WorkerState;

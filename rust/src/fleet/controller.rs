@@ -24,6 +24,7 @@ use crate::coordinator::{
 use crate::model::params::Environment;
 use crate::runtime::ReducerSpec;
 use crate::telemetry::Recorder;
+use crate::trace::TraceRecorder;
 
 use super::config::default_candidates;
 use super::monitor::{FleetCheck, FleetMonitor};
@@ -70,6 +71,9 @@ pub struct FleetController {
     recorder: Arc<Recorder>,
     entries: BTreeMap<String, FleetEntry>,
     monitor: FleetMonitor,
+    /// Shared flight recorder wired into every service registered AFTER
+    /// [`Self::set_trace`] (and into the monitor's trip/fit/push events).
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl FleetController {
@@ -83,12 +87,27 @@ impl FleetController {
             recorder,
             entries: BTreeMap::new(),
             monitor,
+            trace: None,
         }
     }
 
     /// The shared telemetry plane every registered service records into.
     pub fn recorder(&self) -> &Arc<Recorder> {
         &self.recorder
+    }
+
+    /// Wire one flight recorder into the whole fleet: every service
+    /// registered from now on feeds its spans into `trace`, and the
+    /// fleet monitor emits trip/fit/push events. Call before
+    /// [`Self::register`].
+    pub fn set_trace(&mut self, trace: Arc<TraceRecorder>) {
+        self.monitor.set_trace(trace.clone());
+        self.trace = Some(trace);
+    }
+
+    /// The fleet's flight recorder, when one was wired in.
+    pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
     }
 
     /// Spawn and register one class's service. Errors (typed, no service
@@ -110,7 +129,7 @@ impl FleetController {
         } else {
             spec.candidates.clone()
         };
-        let cfg = ServiceConfig {
+        let mut cfg = ServiceConfig {
             policy: spec.policy.clone(),
             flush_after: spec.flush_after,
             observe: spec.observe,
@@ -118,6 +137,9 @@ impl FleetController {
         }
         .with_selection_table(&spec.table, &spec.class, spec.min_split_margin)?
         .with_telemetry(self.recorder.clone(), &spec.class);
+        if let Some(trace) = &self.trace {
+            cfg = cfg.with_trace(trace.clone());
+        }
         let service = AllReduceService::start(topo, spec.env.clone(), spec.reducer.clone(), cfg);
         let handle = match service.table_handle() {
             Some(h) => h,

@@ -21,11 +21,15 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::api::ApiError;
+use crate::bench::workloads::parse_topology;
 use crate::campaign::{table_from_model, SelectionTable};
+use crate::coordinator::drift::attribute_worst;
+use crate::coordinator::PlanRouter;
 use crate::model::params::Environment;
 use crate::telemetry::{
     calibrate, score_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
 };
+use crate::trace::{Span, SpanKind, TraceRecorder};
 
 use super::controller::FleetEntry;
 
@@ -99,6 +103,9 @@ pub struct FleetMonitor {
     trips_by_class: BTreeMap<String, u64>,
     /// Latest scoring per class (the report's drift column).
     last_check: BTreeMap<String, ClassCheck>,
+    /// Flight recorder for `fleet_trip`/`fleet_fit`/`fleet_push` events
+    /// ([`FleetMonitor::set_trace`]); `None` = no tracing overhead.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl FleetMonitor {
@@ -109,7 +116,14 @@ impl FleetMonitor {
             stats: FleetStats::default(),
             trips_by_class: BTreeMap::new(),
             last_check: BTreeMap::new(),
+            trace: None,
         }
+    }
+
+    /// Wire a flight recorder in: every subsequent [`Self::check`] emits
+    /// trip (attributed), fit, and push events.
+    pub fn set_trace(&mut self, trace: Arc<TraceRecorder>) {
+        self.trace = Some(trace);
     }
 
     pub fn stats(&self) -> FleetStats {
@@ -147,6 +161,26 @@ impl FleetMonitor {
             if tripped {
                 self.stats.trips += 1;
                 *self.trips_by_class.entry(class.clone()).or_default() += 1;
+                if let Some(tr) = self.trace.as_ref().filter(|t| t.enabled()) {
+                    // Attribute the trip the same way a local drift swap
+                    // would: waterfall the worst cell's gap against a
+                    // GenModel re-price under this class's serving env.
+                    let mut sp = Span::new(SpanKind::FleetTrip);
+                    sp.class = tr.intern(class);
+                    sp.epoch = entry.handle.epoch();
+                    sp.floats = summary.matched as u64;
+                    sp.ts_ns = tr.now_ns();
+                    let router = parse_topology(class)
+                        .ok()
+                        .map(|topo| PlanRouter::new(topo, entry.env.clone()));
+                    if let Some((attr, _, cell)) =
+                        router.as_ref().and_then(|r| attribute_worst(&scored, r))
+                    {
+                        sp.algo = tr.intern(&cell.key.algo);
+                        sp = sp.with_attr(&attr);
+                    }
+                    tr.record(&sp);
+                }
             }
             let cc = ClassCheck {
                 class: class.clone(),
@@ -174,6 +208,12 @@ impl FleetMonitor {
                 // table before its own traffic ever noticed).
                 self.stats.calibrator_fits += 1;
                 out.fitted = true;
+                if let Some(tr) = self.trace.as_ref().filter(|t| t.enabled()) {
+                    let mut sp = Span::new(SpanKind::FleetFit);
+                    sp.floats = tripped.len() as u64;
+                    sp.ts_ns = tr.now_ns();
+                    tr.record(&sp);
+                }
                 let fitted = cal.environment();
                 for (class, entry) in entries {
                     let is_tripped = tripped.contains(class);
@@ -181,6 +221,7 @@ impl FleetMonitor {
                         Ok(true) => {
                             self.stats.pushes += 1;
                             out.pushed.push(class.clone());
+                            self.trace_push(entry);
                         }
                         Ok(false) => {
                             self.stats.holds += 1;
@@ -203,6 +244,7 @@ impl FleetMonitor {
                             self.stats.pushes += 1;
                             out.repriced.push(class.clone());
                             out.pushed.push(class.clone());
+                            self.trace_push(entry);
                         }
                         Ok(false) => unreachable!("tripped classes always push"),
                         Err(e) => failed.push(format!("{class}: {e} (pooled fit: {fit_err})")),
@@ -222,6 +264,17 @@ impl FleetMonitor {
         }
         out.failed = failed;
         out
+    }
+
+    /// Record one `fleet_push` event (post-swap epoch) when tracing.
+    fn trace_push(&self, entry: &FleetEntry) {
+        if let Some(tr) = self.trace.as_ref().filter(|t| t.enabled()) {
+            let mut sp = Span::new(SpanKind::FleetPush);
+            sp.class = tr.intern(&entry.class);
+            sp.epoch = entry.handle.epoch();
+            sp.ts_ns = tr.now_ns();
+            tr.record(&sp);
+        }
     }
 }
 
@@ -422,6 +475,50 @@ mod tests {
         assert!(quiet.pushed.is_empty() && quiet.failed.is_empty());
         assert_eq!(fleet.monitor().stats().checks, 2);
         fleet.stop();
+    }
+
+    #[test]
+    fn monitor_trace_names_the_tripped_class_and_blames_incast() {
+        use crate::trace::Term;
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        let trace = Arc::new(crate::trace::TraceRecorder::new());
+        fleet.set_trace(trace.clone());
+        fleet.register(spec("single:15", 20, stale_params())).unwrap();
+        for n in [4usize, 6, 8, 10] {
+            fleet
+                .register(spec(&format!("single:{n}"), 16, true_params()))
+                .unwrap();
+        }
+        for _ in 0..4 {
+            fleet
+                .recorder()
+                .record("single:15", 15, 20, "cps", 1 << 20, true_cps_secs(15, 20));
+        }
+        for n in [4usize, 6, 8, 10] {
+            observe_honest(&fleet, &format!("single:{n}"), n, 16, 2);
+        }
+        let check = fleet.check();
+        assert!(check.fitted);
+        fleet.stop();
+
+        let snap = trace.snapshot();
+        assert_eq!(trace.dropped(), 0);
+        // Exactly one trip, attributed: the blind table's gap on the
+        // ε×20 fabric is the incast term's, and dominantly so.
+        let trips: Vec<_> = snap.of_kind(SpanKind::FleetTrip).collect();
+        assert_eq!(trips.len(), 1, "{trips:?}");
+        assert_eq!(snap.name(trips[0].span.class), "single:15");
+        assert_eq!(snap.name(trips[0].span.algo), "cps");
+        let attr = trips[0].attribution().unwrap();
+        assert_eq!(attr.dominant(), Term::Incast);
+        assert!(attr.dominant_share() > 0.5, "{attr:?}");
+        // One pooled fit fired, and only the tripped class was pushed
+        // (honest siblings held), at its post-swap epoch.
+        assert_eq!(snap.of_kind(SpanKind::FleetFit).count(), 1);
+        let pushes: Vec<_> = snap.of_kind(SpanKind::FleetPush).collect();
+        assert_eq!(pushes.len(), 1);
+        assert_eq!(snap.name(pushes[0].span.class), "single:15");
+        assert_eq!(pushes[0].span.epoch, 1);
     }
 
     #[test]

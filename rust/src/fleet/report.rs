@@ -24,8 +24,10 @@ pub struct ClassReport {
     /// Worst finite |rel err| of the latest check that scored this
     /// class (`None`: never scored a matched cell).
     pub worst_abs_rel_err: Option<f64>,
-    /// Per-class p95 batch latency (observed seconds).
-    pub p95_s: f64,
+    /// Per-class p95 batch latency (observed seconds); `None` when the
+    /// class never served a batch — the report prints `-` instead of a
+    /// fabricated 0-second tail.
+    pub p95_s: Option<f64>,
     /// Router plans evicted by swaps this class's leader observed.
     pub evictions: u64,
 }
@@ -84,9 +86,13 @@ impl FleetReport {
         self.classes.iter().map(ClassReport::dropped).sum()
     }
 
-    /// Worst per-class p95 batch latency across the fleet.
-    pub fn worst_p95_s(&self) -> f64 {
-        self.classes.iter().map(|c| c.p95_s).fold(0.0, f64::max)
+    /// Worst per-class p95 batch latency across the fleet; `None` when
+    /// no class has served a batch yet.
+    pub fn worst_p95_s(&self) -> Option<f64> {
+        self.classes
+            .iter()
+            .filter_map(|c| c.p95_s)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
     }
 
     /// The one-table sweep `repro fleet` prints.
@@ -109,7 +115,9 @@ impl FleetReport {
                 c.worst_abs_rel_err
                     .map(|e| format!("{:.0}%", e * 100.0))
                     .unwrap_or_else(|| "-".into()),
-                format!("{:.2e}", c.p95_s),
+                c.p95_s
+                    .map(|p| format!("{p:.2e}"))
+                    .unwrap_or_else(|| "-".into()),
                 c.evictions.to_string(),
             ]);
         }
@@ -130,8 +138,11 @@ impl FleetReport {
     }
 
     /// The `fleet_*` keys merged into the bench JSON record.
+    /// `fleet_p95_s` is omitted (not written as a fake zero) when no
+    /// class has served a batch — absence is honest, 0.0 reads as a
+    /// perfect tail.
     pub fn bench_entries(&self) -> Vec<(String, Json)> {
-        vec![
+        let mut entries = vec![
             ("fleet_classes".into(), Json::num(self.classes.len() as f64)),
             ("fleet_checks".into(), Json::num(self.stats.checks as f64)),
             ("fleet_trips".into(), Json::num(self.stats.trips as f64)),
@@ -154,8 +165,11 @@ impl FleetReport {
                 "fleet_dropped_jobs".into(),
                 Json::num(self.dropped_jobs() as f64),
             ),
-            ("fleet_p95_s".into(), Json::num(self.worst_p95_s())),
-        ]
+        ];
+        if let Some(p95) = self.worst_p95_s() {
+            entries.push(("fleet_p95_s".into(), Json::num(p95)));
+        }
+        entries
     }
 }
 
@@ -218,7 +232,10 @@ mod tests {
             assert_eq!(c.trips, 0);
             assert!(c.worst_abs_rel_err.is_none(), "no check ran");
         }
-        assert!(report.worst_p95_s() > 0.0, "sim clock recorded latencies");
+        assert!(
+            report.worst_p95_s().unwrap() > 0.0,
+            "sim clock recorded latencies"
+        );
         let text = report.render();
         assert!(text.contains("single:4") && text.contains("single:6"), "{text}");
         assert!(text.contains("0 dropped job(s)"), "{text}");
@@ -250,6 +267,31 @@ mod tests {
                 .unwrap()
                 .1,
             Json::num(2.0)
+        );
+    }
+
+    #[test]
+    fn never_served_classes_report_dash_not_zero() {
+        let fleet = tiny_fleet();
+        fleet.stop();
+        let report = FleetReport::collect(&fleet);
+        for c in &report.classes {
+            assert_eq!(c.p95_s, None, "{} never served a batch", c.class);
+        }
+        assert_eq!(report.worst_p95_s(), None);
+        let text = report.render();
+        assert!(
+            text.contains('-'),
+            "idle classes render '-' in the p95 column: {text}"
+        );
+        assert!(
+            !text.contains("0.00e0"),
+            "no fabricated zero latency: {text}"
+        );
+        let keys: Vec<String> = report.bench_entries().into_iter().map(|(k, _)| k).collect();
+        assert!(
+            !keys.iter().any(|k| k == "fleet_p95_s"),
+            "fleet_p95_s must be omitted, not zero, when nothing served: {keys:?}"
         );
     }
 }

@@ -39,6 +39,10 @@
 //!   (`repro fleet`): a controller registry of epoch-versioned table
 //!   handles and a fleet monitor that pools cross-class observations
 //!   into the §3.4 fit and pushes recalibrated tables to every rack.
+//! * [`trace`] — phase-level flight recorder (`repro trace`): a bounded
+//!   lock-free span ring fed by the coordinator/fleet, each execution
+//!   span attributed to the GenModel terms (α / wire / incast / memory),
+//!   exported as `trace/v1` JSONL or Chrome trace-event JSON.
 //! * [`bench`] — the harness that regenerates every paper table and figure.
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   JSON, CLI args, stats, PRNG, property testing, a bench harness.
@@ -56,4 +60,5 @@ pub mod runtime;
 pub mod sim;
 pub mod telemetry;
 pub mod topo;
+pub mod trace;
 pub mod util;

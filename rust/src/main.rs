@@ -24,7 +24,11 @@
 //!                 winners report (`report`), and the per-(topology,
 //!                 size-bucket) selection table (`select`).
 //! * `score`     — join served telemetry against campaign predictions:
-//!                 the Fig. 8-style accuracy report of the live service.
+//!                 the Fig. 8-style accuracy report of the live service
+//!                 (`--by-term` adds the per-term deviation waterfall).
+//! * `trace`     — inspect a flight-recorder artifact (or record one via
+//!                 a small traced serve smoke): per-kind event counts,
+//!                 the GenModel term-attribution rollup, Chrome export.
 //! * `calibrate` — refit GenModel parameters (§3.4) from served
 //!                 telemetry and emit a recalibrated selection table.
 //! * `algos`     — list the algorithm registry (and what applies where).
@@ -51,6 +55,7 @@ use genmodel::runtime::ReducerSpec;
 use genmodel::sim::{simulate_plan, SimConfig};
 use genmodel::telemetry::{self, Recorder, TelemetrySnapshot};
 use genmodel::topo::Topology;
+use genmodel::trace::{SpanKind, Term, TermAttribution, TraceRecorder, TraceSnapshot};
 use genmodel::util::cli::Args;
 use genmodel::util::rng::Rng;
 
@@ -69,6 +74,7 @@ USAGE: repro <subcommand> [options]
              [--min-split-margin 1.25] [--bench-out BENCH_campaign.json]
              [--telemetry-out hist.json] [--observe wall|sim]
              [--drift-threshold 0.5] [--recalibrate-every 16] [--waves 1]
+             [--trace-out trace.json] [--metrics-text]
              (--min-split-margin: break a fuse at a selection boundary only
               when the departed winner beats its runner-up by ≥ this ratio;
               --observe sim: record flow-simulated batch seconds instead of
@@ -78,12 +84,16 @@ USAGE: repro <subcommand> [options]
               the selection table mid-serve (requires --selection; checked
               every --recalibrate-every flushed batches);
               --waves: split the job burst into N sequential waves so a
-              long-running drift smoke actually cycles the leader)
+              long-running drift smoke actually cycles the leader;
+              --trace-out: record the round into a flight-recorder artifact
+              (inspect with `repro trace --in`); --metrics-text: print the
+              service counters in Prometheus text exposition format)
   fleet      --classes 'single:15!stale,single:4,single:6' | --config fleet.json
              [--jobs 2] [--waves 2] [--tensor 1048576] [--calib-tensor 65536]
              [--congest 20] [--drift-threshold 0.5] [--beta 6.4e-9]
              [--algos a1,a2] [--min-split-margin 1.25] [--observe sim|wall]
              [--scalar] [--bench-out BENCH_campaign.json]
+             [--trace-out trace.json]
              [--expect-fit] [--expect-swap c1,c2] [--expect-hold c1,c2]
              (N topology-class coordinators behind ONE telemetry plane; a
               class spec is class[@threshold][!stale] — !stale starts that
@@ -100,9 +110,18 @@ USAGE: repro <subcommand> [options]
   campaign   report --in campaign.jsonl
   campaign   select --in campaign.jsonl [--out selection.json] [--by model|sim]
   score      --telemetry hist.json [--in campaign.jsonl] [--env paper|gpu]
-             [--bench-out BENCH_campaign.json]
+             [--bench-out BENCH_campaign.json] [--by-term]
              (campaign rows predict matching cells; the analytic engine under
-              --env fills cells the artifact never swept)
+              --env fills cells the artifact never swept; --by-term waterfalls
+              each matched cell's observed−predicted gap against the GenModel
+              decomposition, naming the term that ate it)
+  trace      [--in trace.json] [--out trace.json] [--chrome chrome.json]
+             [--check] [--servers 4] [--jobs 8] [--tensor 4096] [--algo cps]
+             (inspect a flight-recorder artifact: per-kind event counts and
+              the α/wire/mem/incast attribution rollup; without --in, runs a
+              small traced serve smoke first; --chrome exports Chrome
+              trace-event JSON for chrome://tracing; --check exits non-zero
+              unless the trace has ≥ 1 attributed exec span and 0 drops)
   calibrate  --telemetry hist.json [--beta 6.4e-9] [--algos a1,a2]
              [--out selection_calibrated.json]
              (refit (α, 2β+γ, δ, ε, w_t) from cps-served cells — ≥ 4 distinct
@@ -184,6 +203,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("fleet") => cmd_fleet(args),
         Some("campaign") => cmd_campaign(args),
         Some("score") => cmd_score(args),
+        Some("trace") => cmd_trace(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("algos") => cmd_algos(args),
         Some("reproduce") => cmd_reproduce(args),
@@ -407,6 +427,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if telemetry_out.is_some() {
         cfg = cfg.with_telemetry(recorder.clone(), args.opt_or("class", ""));
     }
+    // Flight recorder: every enqueue/flush/exec/phase/drift event of this
+    // run lands in a bounded ring; the artifact is `repro trace` food.
+    let metrics_text = args.flag("metrics-text");
+    let trace_out = args.opt("trace-out").map(String::from);
+    let trace = trace_out
+        .as_ref()
+        .map(|_| std::sync::Arc::new(TraceRecorder::new()));
+    if let Some(tr) = &trace {
+        cfg = cfg.with_trace(tr.clone());
+    }
     if let Some(path) = args.opt("selection") {
         let min_split_margin: f64 =
             args.opt_parse_or("min-split-margin", DEFAULT_MIN_SPLIT_MARGIN)?;
@@ -520,10 +550,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.floats_reduced as f64 / wall / 1e6
     );
     println!(
-        "  batch latency    : p50 {:.2e} s  p95 {:.2e} s  p99 {:.2e} s",
-        m.latency.p50(),
-        m.latency.p95(),
-        m.latency.p99()
+        "  batch latency    : p50 {} s  p95 {} s  p99 {} s",
+        quantile_or_dash(m.latency.p50()),
+        quantile_or_dash(m.latency.p95()),
+        quantile_or_dash(m.latency.p99())
     );
     if drift {
         println!(
@@ -535,12 +565,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             svc.table_epoch().unwrap_or(0)
         );
     }
+    if metrics_text {
+        print!("{}", m.render_prometheus());
+    }
     if let Some(out) = &telemetry_out {
         let snap = recorder.snapshot();
         snap.save(std::path::Path::new(out))?;
         println!(
             "  telemetry        : {} (class, bucket, algo) cell(s) → {out}",
             snap.cells.len()
+        );
+    }
+    let tsnap = trace.as_ref().map(|tr| tr.snapshot());
+    if let Some((out, tsnap)) = trace_out.as_ref().zip(tsnap.as_ref()) {
+        tsnap.save(std::path::Path::new(out))?;
+        println!(
+            "  trace            : {} event(s) ({} attributed exec(s), {} dropped) → {out}",
+            tsnap.events.len(),
+            tsnap.attributed_execs(),
+            tsnap.dropped
         );
     }
     // --bench-out: merge the serve-side counters into the (campaign)
@@ -551,9 +594,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let mut entries = vec![
             ("serve_jobs_completed".to_string(), Json::num(m.jobs_completed as f64)),
             ("serve_batches_flushed".to_string(), Json::num(m.batches_flushed as f64)),
-            ("serve_latency_p95_s".to_string(), Json::num(m.latency.p95())),
             ("serve_wall_secs".to_string(), Json::num(wall)),
         ];
+        // An idle run has no latency histogram; omit the key rather than
+        // fabricate a 0-second p95.
+        if let Some(p95) = m.latency.p95() {
+            entries.push(("serve_latency_p95_s".to_string(), Json::num(p95)));
+        }
+        if let Some(tsnap) = &tsnap {
+            entries.push(("trace_events".to_string(), Json::num(tsnap.events.len() as f64)));
+            entries.push(("trace_dropped".to_string(), Json::num(tsnap.dropped as f64)));
+            entries.push((
+                "trace_unexplained_frac".to_string(),
+                Json::num(tsnap.unexplained_frac()),
+            ));
+        }
         for (rule, count) in m.rule_counts() {
             entries.push((
                 format!("serve_batches_{}", rule.replace('-', "_")),
@@ -676,6 +731,16 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     let stale_n = config.classes.iter().filter(|c| c.stale).count();
     let mut fleet = FleetController::new(beta);
+    // One shared flight recorder across every class's service plus the
+    // fleet monitor's trip/fit/push events — wired before registration so
+    // no service misses it.
+    let trace_out = args.opt("trace-out").map(String::from);
+    let trace = trace_out
+        .as_ref()
+        .map(|_| std::sync::Arc::new(TraceRecorder::new()));
+    if let Some(tr) = &trace {
+        fleet.set_trace(tr.clone());
+    }
     for cs in &config.classes {
         let topo = workloads::parse_topology(&cs.class)?;
         let candidates = match &algos {
@@ -761,8 +826,31 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     let report = FleetReport::collect(&fleet);
     print!("{}", report.render());
+    let tsnap = trace.as_ref().map(|tr| tr.snapshot());
+    if let Some((out, tsnap)) = trace_out.as_ref().zip(tsnap.as_ref()) {
+        tsnap.save(std::path::Path::new(out))?;
+        let trips = tsnap.of_kind(SpanKind::FleetTrip).count();
+        let pushes = tsnap.of_kind(SpanKind::FleetPush).count();
+        println!(
+            "trace: {} event(s) ({} attributed exec(s), {trips} fleet trip(s), \
+             {pushes} push(es), {} dropped) → {out}",
+            tsnap.events.len(),
+            tsnap.attributed_execs(),
+            tsnap.dropped
+        );
+    }
     if let Some(bench_out) = args.opt("bench-out") {
-        merge_bench_json(bench_out, report.bench_entries())?;
+        let mut entries = report.bench_entries();
+        if let Some(tsnap) = &tsnap {
+            use genmodel::util::json::Json;
+            entries.push(("trace_events".to_string(), Json::num(tsnap.events.len() as f64)));
+            entries.push(("trace_dropped".to_string(), Json::num(tsnap.dropped as f64)));
+            entries.push((
+                "trace_unexplained_frac".to_string(),
+                Json::num(tsnap.unexplained_frac()),
+            ));
+        }
+        merge_bench_json(bench_out, entries)?;
         println!("bench record → {bench_out}");
     }
     anyhow::ensure!(
@@ -813,6 +901,12 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// A latency quantile for humans: `-` when the histogram never recorded
+/// (an empty histogram has no p95 — printing `0.00e0 s` would claim one).
+fn quantile_or_dash(q: Option<f64>) -> String {
+    q.map(|v| format!("{v:.2e}")).unwrap_or_else(|| "-".into())
 }
 
 /// Merge `entries` into the JSON object at `path`, creating the file when
@@ -1003,31 +1097,172 @@ fn cmd_score(args: &Args) -> anyhow::Result<()> {
         println!("  worst offender   : {worst}");
     }
     println!(
-        "  observed latency : p50 {:.2e} s  p95 {:.2e} s  p99 {:.2e} s",
-        overall.p50(),
-        overall.p95(),
-        overall.p99()
+        "  observed latency : p50 {} s  p95 {} s  p99 {} s",
+        quantile_or_dash(overall.p50()),
+        quantile_or_dash(overall.p95()),
+        quantile_or_dash(overall.p99())
     );
+    // --by-term: waterfall each matched cell's observed−predicted gap
+    // against the GenModel decomposition (α → wire → mem → incast, the
+    // drift monitor's attribution), naming the term that ate it.
+    if args.flag("by-term") {
+        use genmodel::sim::report::term_breakdown;
+        println!("\n  per-term deviation (observed − predicted, budget consumed α → wire → mem → incast):");
+        let mut attributed = 0usize;
+        for c in &cells {
+            let Some(predicted) = c.predicted_s else { continue };
+            let Ok(topo) = workloads::parse_topology(&c.key.class) else { continue };
+            let Ok(spec) = AlgoSpec::parse(&c.key.algo) else { continue };
+            let router = PlanRouter::new(topo, env.clone());
+            let Ok(routed) = router.route(&spec, c.mean_floats.max(1.0) as usize) else {
+                continue;
+            };
+            let bd = term_breakdown(&routed.plan, c.mean_floats, router.topo(), router.env());
+            let attr = TermAttribution::deviation(&bd, predicted, c.observed_mean_s);
+            attributed += 1;
+            println!(
+                "    {:<12} 2^{:<2} {:<14} dominant {:<11} α {:+.2e}  wire {:+.2e}  \
+                 mem {:+.2e}  incast {:+.2e}  unexplained {:+.2e}",
+                c.key.class,
+                c.key.bucket,
+                c.key.algo,
+                attr.dominant().name(),
+                attr.alpha_s,
+                attr.wire_s,
+                attr.mem_s,
+                attr.incast_s,
+                attr.unexplained_s
+            );
+        }
+        if attributed == 0 {
+            println!("    (no matched cell could be re-priced under --env)");
+        }
+    }
     if let Some(bench_out) = args.opt("bench-out") {
         use genmodel::util::json::Json;
-        merge_bench_json(
-            bench_out,
-            vec![
-                ("score_cells".to_string(), Json::num(s.cells as f64)),
-                ("score_matched".to_string(), Json::num(s.matched as f64)),
-                ("score_skipped".to_string(), Json::num(s.skipped as f64)),
-                (
-                    "score_mean_abs_rel_err".to_string(),
-                    Json::num(s.mean_abs_rel_err),
-                ),
-                (
-                    "score_max_abs_rel_err".to_string(),
-                    Json::num(s.max_abs_rel_err),
-                ),
-                ("telemetry_p95_s".to_string(), Json::num(overall.p95())),
-            ],
-        )?;
+        let mut entries = vec![
+            ("score_cells".to_string(), Json::num(s.cells as f64)),
+            ("score_matched".to_string(), Json::num(s.matched as f64)),
+            ("score_skipped".to_string(), Json::num(s.skipped as f64)),
+            (
+                "score_mean_abs_rel_err".to_string(),
+                Json::num(s.mean_abs_rel_err),
+            ),
+            (
+                "score_max_abs_rel_err".to_string(),
+                Json::num(s.max_abs_rel_err),
+            ),
+        ];
+        if let Some(p95) = overall.p95() {
+            entries.push(("telemetry_p95_s".to_string(), Json::num(p95)));
+        }
+        merge_bench_json(bench_out, entries)?;
         println!("  bench record     → {bench_out}");
+    }
+    Ok(())
+}
+
+/// `repro trace` — the flight-recorder inspector: per-kind event counts
+/// and the GenModel term-attribution rollup of one recorded round.
+/// `--in` reads a `trace/v1` artifact; without it, a small traced serve
+/// smoke (Sim clock, deterministic) records one fresh. `--out` re-saves
+/// the canonical JSONL, `--chrome` exports Chrome trace-event JSON, and
+/// `--check` turns the CI gate into an exit code: ≥ 1 attributed exec
+/// span and an exact drop count of 0.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let snap = match args.opt("in") {
+        Some(p) => TraceSnapshot::load(std::path::Path::new(p))?,
+        None => {
+            let servers: usize = args.opt_parse_or("servers", 4)?;
+            let jobs: usize = args.opt_parse_or("jobs", 8)?.max(1);
+            let tensor: usize = args.opt_parse_or("tensor", 4096)?;
+            let algo = AlgoSpec::parse(args.opt_or("algo", "cps"))?;
+            let topo = genmodel::topo::builders::single_switch(servers);
+            algo.applicable(&topo)?;
+            let trace = std::sync::Arc::new(TraceRecorder::new());
+            let cfg = ServiceConfig {
+                algo,
+                observe: ObserveMode::Sim,
+                ..ServiceConfig::default()
+            }
+            .with_trace(trace.clone());
+            println!(
+                "no --in: recording a serve smoke ({servers} workers, {jobs} jobs of \
+                 {tensor} floats, sim clock)"
+            );
+            let svc = AllReduceService::start(
+                topo,
+                Environment::paper(),
+                ReducerSpec::Scalar,
+                cfg,
+            );
+            let mut rng = Rng::new(7);
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    let tensors: Vec<Vec<f32>> =
+                        (0..servers).map(|_| rng.f32_vec(tensor)).collect();
+                    svc.submit(tensors)
+                })
+                .collect::<Result<_, _>>()?;
+            for h in handles {
+                h.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
+            }
+            svc.stop();
+            trace.snapshot()
+        }
+    };
+    println!("trace: {} event(s), {} dropped", snap.events.len(), snap.dropped);
+    for kind in SpanKind::ALL {
+        let count = snap.of_kind(kind).count();
+        if count > 0 {
+            println!("  {:<16} × {count}", kind.name());
+        }
+    }
+    // The rollup: summed attributed seconds per term over exec spans —
+    // which term is eating the rounds, fleet-wide.
+    let execs = snap.attributed_execs();
+    if execs > 0 {
+        let mut sums = [0.0f64; 5];
+        let mut observed = 0.0f64;
+        for e in snap.of_kind(SpanKind::BatchExec) {
+            if let Some(a) = e.attribution() {
+                for (slot, term) in sums.iter_mut().zip(Term::ALL) {
+                    *slot += a.term(term);
+                }
+                observed += e.span.dur_ns as f64 * 1e-9;
+            }
+        }
+        println!("attribution over {execs} exec span(s), {observed:.4e} s observed:");
+        for (sum, term) in sums.iter().zip(Term::ALL) {
+            let share = if observed > 0.0 { sum / observed } else { 0.0 };
+            println!("  {:<12} {sum:+.4e} s  ({:+.1}% of observed)", term.name(), share * 100.0);
+        }
+        println!(
+            "  unexplained frac : {:.1}% of observed exec seconds",
+            snap.unexplained_frac() * 100.0
+        );
+    }
+    if let Some(out) = args.opt("out") {
+        snap.save(std::path::Path::new(out))?;
+        println!("trace/v1 artifact → {out}");
+    }
+    if let Some(out) = args.opt("chrome") {
+        let chrome = snap.to_chrome();
+        std::fs::write(out, format!("{chrome}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        println!("chrome trace-event JSON → {out} (load in chrome://tracing)");
+    }
+    if args.flag("check") {
+        anyhow::ensure!(
+            snap.dropped == 0,
+            "--check: {} event(s) were dropped (ring overwrote unread slots)",
+            snap.dropped
+        );
+        anyhow::ensure!(
+            execs >= 1,
+            "--check: no executed batch carries a term attribution"
+        );
+        println!("check: ok ({execs} attributed exec span(s), 0 dropped)");
     }
     Ok(())
 }

@@ -45,6 +45,32 @@ impl CostBreakdown {
     }
 }
 
+/// One phase's per-term split (seconds) — the same five terms as
+/// [`CostBreakdown`], exposed per phase so a tracer can attribute each
+/// executed step, not just the round ([`CostModel::phase_terms`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTerms {
+    pub alpha: f64,
+    /// Pure bandwidth part of the bottleneck communication time.
+    pub beta: f64,
+    /// Incast surcharge (the ε part of β′ on bottleneck links).
+    pub epsilon: f64,
+    pub gamma: f64,
+    pub delta: f64,
+}
+
+impl PhaseTerms {
+    pub fn total(&self) -> f64 {
+        self.alpha + self.beta + self.epsilon + self.gamma + self.delta
+    }
+
+    /// The combined wire time (β + γ) — how attribution groups the two
+    /// classic bandwidth-proportional terms.
+    pub fn wire(&self) -> f64 {
+        self.beta + self.gamma
+    }
+}
+
 /// Which terms the predictor includes — GenModel vs the classic model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
@@ -87,18 +113,43 @@ impl<'a> CostModel<'a> {
             plan.n_servers,
             self.mapping.len()
         );
-        let bs = plan.block_size_f(s);
         let mut out = CostBreakdown::default();
-        for phase in &plan.phases {
-            let (a, b, e, g, d) = self.phase_cost(phase, bs);
-            out.alpha += a;
-            out.beta += b;
-            out.epsilon += e;
-            out.gamma += g;
-            out.delta += d;
-            out.per_phase.push(a + b + e + g + d);
+        for pt in self.phase_terms(plan, s) {
+            out.alpha += pt.alpha;
+            out.beta += pt.beta;
+            out.epsilon += pt.epsilon;
+            out.gamma += pt.gamma;
+            out.delta += pt.delta;
+            out.per_phase.push(pt.total());
         }
         out
+    }
+
+    /// Per-phase term split of a plan moving `s` floats — one
+    /// [`PhaseTerms`] per plan phase, in phase order. [`Self::plan_cost`]
+    /// is exactly the fold of these, so the per-phase split always sums
+    /// to the round's breakdown.
+    pub fn phase_terms(&self, plan: &Plan, s: f64) -> Vec<PhaseTerms> {
+        assert!(
+            plan.n_servers <= self.mapping.len(),
+            "plan has {} servers but mapping has {}",
+            plan.n_servers,
+            self.mapping.len()
+        );
+        let bs = plan.block_size_f(s);
+        plan.phases
+            .iter()
+            .map(|phase| {
+                let (alpha, beta, epsilon, gamma, delta) = self.phase_cost(phase, bs);
+                PhaseTerms {
+                    alpha,
+                    beta,
+                    epsilon,
+                    gamma,
+                    delta,
+                }
+            })
+            .collect()
     }
 
     /// Total cost shortcut.
@@ -354,5 +405,26 @@ mod tests {
         let cost = cm.plan_cost(&plan, 1e7);
         let phase_sum: f64 = cost.per_phase.iter().sum();
         assert!((phase_sum - cost.total()).abs() < 1e-9 * cost.total());
+    }
+
+    #[test]
+    fn phase_terms_fold_exactly_to_the_round_breakdown() {
+        let topo = single_switch(12);
+        let env = Environment::paper();
+        let plan = hcps::allreduce(&[6, 2]);
+        let cm = CostModel::new(&topo, &env, ModelKind::GenModel);
+        let round = cm.plan_cost(&plan, 1e8);
+        let terms = cm.phase_terms(&plan, 1e8);
+        assert_eq!(terms.len(), round.per_phase.len());
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1e-30);
+        assert!(close(terms.iter().map(|t| t.alpha).sum::<f64>(), round.alpha));
+        assert!(close(terms.iter().map(|t| t.beta).sum::<f64>(), round.beta));
+        assert!(close(terms.iter().map(|t| t.epsilon).sum::<f64>(), round.epsilon));
+        assert!(close(terms.iter().map(|t| t.gamma).sum::<f64>(), round.gamma));
+        assert!(close(terms.iter().map(|t| t.delta).sum::<f64>(), round.delta));
+        for (pt, &per) in terms.iter().zip(&round.per_phase) {
+            assert!(close(pt.total(), per));
+            assert!(close(pt.wire(), pt.beta + pt.gamma));
+        }
     }
 }

@@ -133,32 +133,34 @@ impl HistSnapshot {
 
     /// The `q`-quantile (`0 < q ≤ 1`) in seconds: the geometric midpoint
     /// (`√2 · 2^b` ns) of the lowest bin where the cumulative count
-    /// reaches `⌈q · total⌉`. 0 when the histogram is empty.
-    pub fn quantile(&self, q: f64) -> f64 {
+    /// reaches `⌈q · total⌉`. `None` when the histogram is empty — an
+    /// unserved histogram has no quantile, and the old `0.0` sentinel
+    /// leaked into bench JSON as a fake perfect latency.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
         let total = self.count();
         if total == 0 {
-            return 0.0;
+            return None;
         }
         let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (b, &c) in self.bins.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return (b as f64).exp2() * std::f64::consts::SQRT_2 * 1e-9;
+                return Some((b as f64).exp2() * std::f64::consts::SQRT_2 * 1e-9);
             }
         }
         unreachable!("cumulative count reaches total");
     }
 
-    pub fn p50(&self) -> f64 {
+    pub fn p50(&self) -> Option<f64> {
         self.quantile(0.50)
     }
 
-    pub fn p95(&self) -> f64 {
+    pub fn p95(&self) -> Option<f64> {
         self.quantile(0.95)
     }
 
-    pub fn p99(&self) -> f64 {
+    pub fn p99(&self) -> Option<f64> {
         self.quantile(0.99)
     }
 
@@ -237,9 +239,10 @@ mod tests {
         assert_eq!(s.count(), 100);
         // p50 lands in the µs bin (2^9 ≤ 1000 < 2^10), p95 in the ms bin,
         // p99+ in the s bin; geometric midpoints are within ×√2.
-        assert!(s.p50() > 0.4e-6 && s.p50() < 1.5e-6, "{}", s.p50());
-        assert!(s.p95() > 0.4e-3 && s.p95() < 1.6e-3, "{}", s.p95());
-        assert!(s.p99() > 0.4 && s.p99() < 1.6, "{}", s.p99());
+        let (p50, p95, p99) = (s.p50().unwrap(), s.p95().unwrap(), s.p99().unwrap());
+        assert!(p50 > 0.4e-6 && p50 < 1.5e-6, "{p50}");
+        assert!(p95 > 0.4e-3 && p95 < 1.6e-3, "{p95}");
+        assert!(p99 > 0.4 && p99 < 1.6, "{p99}");
         let mean = s.mean_secs();
         let want = (90.0 * 1e3 + 9.0 * 1e6 + 1e9) * 1e-9 / 100.0;
         assert!((mean - want).abs() < 1e-12, "{mean} vs {want}");
@@ -261,8 +264,38 @@ mod tests {
     fn empty_is_safe() {
         let s = LatencyHist::new().snapshot();
         assert_eq!(s.count(), 0);
-        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p50(), None);
         assert_eq!(s.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn empty_quantile_is_none_not_zero() {
+        // The satellite regression: a never-served histogram used to
+        // answer 0.0 for every quantile, which bench JSON then reported
+        // as a (fake) perfect p95.
+        let s = LatencyHist::new().snapshot();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), None, "q={q}");
+        }
+        assert_eq!(s.p95(), None);
+        assert_eq!(s.p99(), None);
+    }
+
+    #[test]
+    fn single_observation_quantile_is_the_bin_midpoint() {
+        // One observation: every quantile answers from its (single) bin,
+        // at the geometric midpoint √2·2^b — never the lower edge, never
+        // zero. 1500 ns lands in bin 10 → midpoint √2·1024 ns.
+        let h = LatencyHist::new();
+        h.record_nanos(1_500);
+        let s = h.snapshot();
+        let want = 1024.0 * std::f64::consts::SQRT_2 * 1e-9;
+        for q in [0.01, 0.5, 0.95, 1.0] {
+            let got = s.quantile(q).unwrap();
+            assert!((got - want).abs() < 1e-18, "q={q}: {got} vs {want}");
+        }
+        // The midpoint brackets the true value within ×√2 on both sides.
+        assert!(want > 1_024e-9 && want < 2_048e-9);
     }
 
     #[test]

@@ -23,7 +23,9 @@ pub struct ScoredCell {
     /// Mean fused payload per batch (floats).
     pub mean_floats: f64,
     pub observed_mean_s: f64,
-    pub observed_p95_s: f64,
+    /// Observed p95 seconds; `None` when the cell's histogram is empty
+    /// (a cell with no batches has no quantile).
+    pub observed_p95_s: Option<f64>,
     /// Predicted seconds, when a campaign row or the fallback had one.
     pub predicted_s: Option<f64>,
 }
@@ -261,7 +263,7 @@ mod tests {
             batches: 1,
             mean_floats: 1e6,
             observed_mean_s: observed,
-            observed_p95_s: observed,
+            observed_p95_s: Some(observed),
             predicted_s: predicted,
         };
         let zero_pred = cell("a-zero", 0.030, Some(0.0));

@@ -1,0 +1,293 @@
+//! Term attribution: splitting an observed duration across the GenModel
+//! decomposition (α / wire / incast / memory), plus the waterfall that
+//! names which term a *stale prediction* failed to price.
+
+use crate::model::cost::{CostBreakdown, PhaseTerms};
+
+/// One of the attribution buckets. `code()` is the stable metric
+/// encoding (`drift_term` gauge): 0 means "none"; terms are 1–5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Term {
+    /// Startup/latency term α.
+    Alpha,
+    /// Wire terms β (bandwidth) + γ (reduction arithmetic).
+    Wire,
+    /// Memory-access term δ (`(f+1)·bs·δ` at the busiest server).
+    Mem,
+    /// Incast surcharge ε (`max(w − w_t, 0)·ε` on bottleneck links).
+    Incast,
+    /// The part neither the model nor the prediction covers.
+    Unexplained,
+}
+
+impl Term {
+    pub const ALL: [Term; 5] = [
+        Term::Alpha,
+        Term::Wire,
+        Term::Mem,
+        Term::Incast,
+        Term::Unexplained,
+    ];
+
+    /// Metric encoding (0 is reserved for "no term recorded").
+    pub fn code(self) -> u64 {
+        match self {
+            Term::Alpha => 1,
+            Term::Wire => 2,
+            Term::Mem => 3,
+            Term::Incast => 4,
+            Term::Unexplained => 5,
+        }
+    }
+
+    pub fn from_code(c: u64) -> Option<Term> {
+        Term::ALL.into_iter().find(|t| t.code() == c)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Term::Alpha => "alpha",
+            Term::Wire => "wire",
+            Term::Mem => "mem",
+            Term::Incast => "incast",
+            Term::Unexplained => "unexplained",
+        }
+    }
+}
+
+impl std::fmt::Display for Term {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An observed duration split across the GenModel terms, in seconds.
+///
+/// Two constructions share the struct:
+/// * [`Self::from_breakdown`] — **absolute** split: each field is that
+///   term's predicted seconds, `unexplained_s` the (signed) residual of
+///   the observation against the full model. This is Fig. 10's per-term
+///   decomposition attached to a live round.
+/// * [`Self::deviation`] — **gap** split: each field is that term's
+///   contribution to `observed − predicted` where `predicted` came from
+///   a (possibly stale) selection table. See the method docs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TermAttribution {
+    pub alpha_s: f64,
+    /// β + γ.
+    pub wire_s: f64,
+    /// ε (the incast surcharge — `CostBreakdown::epsilon`).
+    pub incast_s: f64,
+    /// δ (the memory-access term — `CostBreakdown::delta`).
+    pub mem_s: f64,
+    /// Signed residual (negative when the model over-predicts).
+    pub unexplained_s: f64,
+}
+
+impl TermAttribution {
+    /// Absolute attribution of one observed round against the model's
+    /// per-term split.
+    pub fn from_breakdown(bd: &CostBreakdown, observed_s: f64) -> TermAttribution {
+        TermAttribution {
+            alpha_s: bd.alpha,
+            wire_s: bd.beta + bd.gamma,
+            incast_s: bd.epsilon,
+            mem_s: bd.delta,
+            unexplained_s: observed_s - bd.total(),
+        }
+    }
+
+    /// Absolute attribution of one observed *phase* against its
+    /// [`PhaseTerms`] split ([`crate::model::cost::CostModel::phase_terms`]).
+    pub fn from_phase(pt: &PhaseTerms, observed_s: f64) -> TermAttribution {
+        TermAttribution {
+            alpha_s: pt.alpha,
+            wire_s: pt.wire(),
+            incast_s: pt.epsilon,
+            mem_s: pt.delta,
+            unexplained_s: observed_s - pt.total(),
+        }
+    }
+
+    /// Waterfall attribution of a drift gap: which term does a stale
+    /// `predicted_s` fail to price?
+    ///
+    /// The table's prediction budget is consumed against the current
+    /// model's terms in the order α → wire → mem → incast — the classic
+    /// (α, β, γ) worldview always prices startup and wire, while δ and ε
+    /// are GenModel-only, so whatever the budget cannot cover lands on
+    /// the terms a blind table is actually missing. Each field is the
+    /// uncovered remainder of that term; `unexplained_s` is the part of
+    /// the observation that even the full model does not predict
+    /// (`observed − max(model total, predicted)`, signed). The fields
+    /// sum to `observed_s − predicted_s` whenever the model total is at
+    /// least `predicted_s`.
+    pub fn deviation(bd: &CostBreakdown, predicted_s: f64, observed_s: f64) -> TermAttribution {
+        let mut budget = predicted_s.max(0.0);
+        let mut take = |cost: f64| {
+            let covered = budget.min(cost.max(0.0));
+            budget -= covered;
+            cost.max(0.0) - covered
+        };
+        let alpha_s = take(bd.alpha);
+        let wire_s = take(bd.beta + bd.gamma);
+        let mem_s = take(bd.delta);
+        let incast_s = take(bd.epsilon);
+        TermAttribution {
+            alpha_s,
+            wire_s,
+            incast_s,
+            mem_s,
+            unexplained_s: observed_s - bd.total().max(predicted_s),
+        }
+    }
+
+    /// The model-explained part (everything but the residual).
+    pub fn explained_s(&self) -> f64 {
+        self.alpha_s + self.wire_s + self.incast_s + self.mem_s
+    }
+
+    /// Total (signed) seconds this attribution accounts for.
+    pub fn total_s(&self) -> f64 {
+        self.explained_s() + self.unexplained_s
+    }
+
+    pub fn term(&self, t: Term) -> f64 {
+        match t {
+            Term::Alpha => self.alpha_s,
+            Term::Wire => self.wire_s,
+            Term::Mem => self.mem_s,
+            Term::Incast => self.incast_s,
+            Term::Unexplained => self.unexplained_s,
+        }
+    }
+
+    /// The term with the largest magnitude (ties break in [`Term::ALL`]
+    /// order, so the answer is deterministic).
+    pub fn dominant(&self) -> Term {
+        let mut best = Term::Alpha;
+        let mut worst = self.term(best).abs();
+        for t in Term::ALL {
+            let v = self.term(t).abs();
+            if v > worst {
+                worst = v;
+                best = t;
+            }
+        }
+        best
+    }
+
+    /// `dominant()`'s share of the total magnitude (0 when all zero).
+    pub fn dominant_share(&self) -> f64 {
+        let sum: f64 = Term::ALL.iter().map(|&t| self.term(t).abs()).sum();
+        if sum <= 0.0 {
+            0.0
+        } else {
+            self.term(self.dominant()).abs() / sum
+        }
+    }
+
+    /// Ring encoding order: `[alpha, wire, incast, mem, unexplained]`.
+    pub fn to_array(&self) -> [f64; 5] {
+        [
+            self.alpha_s,
+            self.wire_s,
+            self.incast_s,
+            self.mem_s,
+            self.unexplained_s,
+        ]
+    }
+
+    pub fn from_array(a: [f64; 5]) -> TermAttribution {
+        TermAttribution {
+            alpha_s: a[0],
+            wire_s: a[1],
+            incast_s: a[2],
+            mem_s: a[3],
+            unexplained_s: a[4],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(alpha: f64, beta: f64, gamma: f64, delta: f64, epsilon: f64) -> CostBreakdown {
+        CostBreakdown {
+            alpha,
+            beta,
+            epsilon,
+            gamma,
+            delta,
+            per_phase: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn absolute_attribution_mirrors_the_breakdown() {
+        let b = bd(1.0, 2.0, 0.5, 0.25, 4.0);
+        let a = TermAttribution::from_breakdown(&b, 8.0);
+        assert_eq!(a.alpha_s, 1.0);
+        assert_eq!(a.wire_s, 2.5);
+        assert_eq!(a.incast_s, 4.0);
+        assert_eq!(a.mem_s, 0.25);
+        assert!((a.unexplained_s - 0.25).abs() < 1e-12);
+        assert!((a.total_s() - 8.0).abs() < 1e-12);
+        assert_eq!(a.dominant(), Term::Incast);
+    }
+
+    #[test]
+    fn waterfall_charges_the_terms_the_prediction_never_priced() {
+        // Classic table priced α + wire = 3.5; the fabric also has
+        // mem 0.25 and incast 4.0. The gap must land on incast (and a
+        // little mem), never on α/wire.
+        let b = bd(1.0, 2.0, 0.5, 0.25, 4.0);
+        let a = TermAttribution::deviation(&b, 3.5, 7.9);
+        assert_eq!(a.alpha_s, 0.0);
+        assert_eq!(a.wire_s, 0.0);
+        assert_eq!(a.mem_s, 0.25);
+        assert_eq!(a.incast_s, 4.0);
+        assert!((a.unexplained_s - (7.9 - 7.75)).abs() < 1e-12);
+        // Fields sum to the gap when the model total ≥ predicted.
+        assert!((a.total_s() - (7.9 - 3.5)).abs() < 1e-12);
+        assert_eq!(a.dominant(), Term::Incast);
+        assert!(a.dominant_share() > 0.5);
+    }
+
+    #[test]
+    fn waterfall_with_generous_prediction_leaves_only_residual() {
+        let b = bd(1.0, 2.0, 0.5, 0.25, 0.0);
+        // Prediction covers the whole model; observation matches it.
+        let a = TermAttribution::deviation(&b, 4.0, 4.0);
+        assert_eq!(a.explained_s(), 0.0);
+        assert!((a.unexplained_s - 0.0).abs() < 1e-12);
+        // Over-prediction shows up as a negative residual, not a term.
+        let over = TermAttribution::deviation(&b, 6.0, 4.0);
+        assert_eq!(over.explained_s(), 0.0);
+        assert!((over.unexplained_s - -2.0).abs() < 1e-12);
+        assert_eq!(over.dominant(), Term::Unexplained);
+    }
+
+    #[test]
+    fn codes_roundtrip_and_zero_is_reserved() {
+        for t in Term::ALL {
+            assert_eq!(Term::from_code(t.code()), Some(t));
+            assert!(t.code() >= 1 && t.code() <= 5);
+        }
+        assert_eq!(Term::from_code(0), None);
+        assert_eq!(Term::from_code(6), None);
+    }
+
+    #[test]
+    fn array_roundtrip() {
+        let a = TermAttribution {
+            alpha_s: 0.1,
+            wire_s: 0.2,
+            incast_s: 0.3,
+            mem_s: 0.4,
+            unexplained_s: -0.5,
+        };
+        assert_eq!(TermAttribution::from_array(a.to_array()), a);
+    }
+}

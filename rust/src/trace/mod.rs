@@ -1,0 +1,50 @@
+//! Phase-level tracing with GenModel term attribution: a bounded
+//! lock-free flight recorder plus the `repro trace` exporter.
+//!
+//! The paper's core move is making AllReduce time *attributable*: Eq. 11
+//! decomposes a round into the startup term α, the wire terms β and γ
+//! (bandwidth and reduction arithmetic), the **incast surcharge** ε
+//! (§2/§3: `β′ = β + max(w − w_t, 0)·ε` on bottleneck links — Eq. 10, the
+//! fan-in congestion the classic model misses) and the **memory-access
+//! term** δ (§3: `(f+1)·bs·δ` at the busiest server). The serving stack's
+//! aggregate histograms (`crate::telemetry`) can say a bucket is 60% off
+//! its prediction; they cannot say *which term* drifted. This module adds
+//! the missing layer, mirroring Fig. 8's method (observed vs. predicted,
+//! per decomposition term rather than per total):
+//!
+//! * [`span`] — span kinds for the whole serving lifecycle
+//!   (enqueue → flush → execute → per-phase → drift/fleet control events)
+//!   and their fixed-width 12-word encoding;
+//! * [`ring`] — the [`TraceRecorder`]: a fixed-capacity MPSC seqlock ring
+//!   of `AtomicU64` words (the same atomics idiom as
+//!   [`crate::telemetry::hist`]) — producers never block or allocate on
+//!   the submit/leader hot path, overwrite-oldest, with an exact
+//!   monotonic drop counter and a one-atomic-load enabled gate;
+//! * [`attr`] — [`TermAttribution`]: joins an observed duration against
+//!   [`crate::model::cost::CostModel`]'s per-term split
+//!   ([`crate::model::cost::CostModel::phase_terms`]), absolute
+//!   (`from_breakdown`, a Fig. 10-style split of one round) or as a
+//!   waterfall over a stale prediction (`deviation` — the drift monitor's
+//!   "which term tripped" answer);
+//! * [`export`] — the versioned `trace/v1` JSONL artifact
+//!   ([`TraceSnapshot`]) plus Chrome trace-event JSON
+//!   (`chrome://tracing`: pid = topology class, `"X"` spans for
+//!   executions and phases, `"B"`/`"E"` markers for control events).
+//!
+//! Span kinds map to the paper as follows: `BatchExec`/`Phase` carry the
+//! §2 model terms (attribution fields `alpha_s`, `wire_s` = β+γ,
+//! `incast_s` = ε, `mem_s` = δ); `DriftCheck`/`DriftSwap` and the
+//! `Fleet*` events carry the Fig. 8 accuracy loop's verdicts, with
+//! `DriftSwap`/`FleetTrip` attributing the observed-vs-predicted gap to
+//! the term that ate it (§3's incast and memory measurements are exactly
+//! the two terms a classic-model table cannot have priced).
+
+pub mod attr;
+pub mod export;
+pub mod ring;
+pub mod span;
+
+pub use attr::{Term, TermAttribution};
+pub use export::{TraceSnapshot, SCHEMA};
+pub use ring::{TraceRecorder, DEFAULT_CAPACITY};
+pub use span::{Span, SpanEvent, SpanKind};

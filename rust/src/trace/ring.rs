@@ -1,0 +1,324 @@
+//! The flight recorder: a bounded, lock-free, overwrite-oldest MPSC ring
+//! of [`SpanEvent`]s.
+//!
+//! Same `AtomicU64` discipline as [`crate::telemetry::hist`]: producers
+//! (the submit path, the leader loop, monitors) never block, never
+//! allocate, and never wait for a reader. Each slot is a word-level
+//! seqlock — one stamp word plus [`WORDS`] payload words:
+//!
+//! * writer: claim `seq = head.fetch_add(1)`, target slot
+//!   `seq % capacity`, store stamp `2·seq+1` (odd = writing), store the
+//!   payload words (Release), store stamp `2·seq+2` (even = published);
+//! * reader: accept a slot only if the stamp reads `2·seq+2` both
+//!   before and after copying the payload. A lapping writer publishes
+//!   its odd stamp *before* any payload word and every payload store is
+//!   Release, so a reader that observes a collider's word also observes
+//!   its stamp on the re-check — torn events are rejected, never
+//!   returned.
+//!
+//! Overwriting is the drop policy: once `head` passes the capacity, the
+//! oldest events are gone and [`TraceRecorder::dropped`] counts exactly
+//! how many (`head − capacity`, monotone) — no separate counter to keep
+//! consistent.
+//!
+//! The whole recorder sits behind a single `enabled` flag:
+//! [`TraceRecorder::enabled`] is one atomic load, it is the first thing
+//! [`TraceRecorder::record`] checks, and instrumentation sites gate
+//! payload construction on it — so an enabled-but-idle recorder costs
+//! exactly one atomic load per span site (pinned by
+//! `idle_record_is_a_single_atomic_gate` below and the property tests in
+//! `rust/tests/prop_trace.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::export::TraceSnapshot;
+use super::span::{Span, SpanEvent, WORDS};
+
+/// Default ring capacity (events). ~4096 × 13 words ≈ 425 KiB — enough
+/// to hold the recent history around any drift trip without mattering
+/// next to tensor buffers.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Bounded spin for a slot whose writer is mid-publish (stamp odd for
+/// the exact sequence we want). Writers publish in a handful of
+/// instructions; past this we treat the slot as lost to a stall.
+const READ_SPINS: usize = 64;
+
+struct Slot {
+    stamp: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            stamp: AtomicU64::new(0),
+            words: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// String interner shared by all producers. Interning happens once per
+/// *distinct* string (topology classes, algorithm names — a handful per
+/// process), so the mutex is cold; events store the small ids.
+#[derive(Default)]
+struct Interner {
+    names: Vec<String>,
+    index: std::collections::HashMap<String, u32>,
+}
+
+impl Interner {
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&id) = self.index.get(s) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(s.to_string());
+        self.index.insert(s.to_string(), id);
+        id
+    }
+}
+
+/// The flight recorder (see module docs). Shared as an
+/// `Arc<TraceRecorder>` across the service, its monitors, and the fleet.
+pub struct TraceRecorder {
+    /// 0 = off, 1 = on. The one word every span site loads.
+    enabled: AtomicU64,
+    /// Next sequence number; also the lifetime event count.
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+    interner: Mutex<Interner>,
+    base: Instant,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.recorded())
+            .field("enabled", &self.enabled())
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    /// An enabled recorder with [`DEFAULT_CAPACITY`] slots. Interner id 0
+    /// is pre-seeded as the empty string so unset `class`/`algo` fields
+    /// resolve to `""`.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> TraceRecorder {
+        let capacity = capacity.max(1);
+        let mut interner = Interner::default();
+        interner.intern("");
+        TraceRecorder {
+            enabled: AtomicU64::new(1),
+            head: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Slot::empty()).collect(),
+            interner: Mutex::new(interner),
+            base: Instant::now(),
+        }
+    }
+
+    /// THE hot-path gate: one atomic load. Span sites check this before
+    /// building any payload.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed) != 0
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on as u64, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Lifetime events recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Events lost to overwrite-oldest: exactly
+    /// `recorded − capacity`, monotone, zero until the ring laps.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Nanoseconds since the recorder was created — the timebase every
+    /// span's `ts_ns` is stamped in (call sites stamp, so tests can
+    /// construct events with fixed timestamps).
+    pub fn now_ns(&self) -> u64 {
+        self.base.elapsed().as_nanos() as u64
+    }
+
+    /// Intern a string, returning its stable id. Cold path: hits the
+    /// mutex only for strings (not per event); call sites cache the ids
+    /// they reuse.
+    pub fn intern(&self, s: &str) -> u32 {
+        self.interner.lock().unwrap().intern(s)
+    }
+
+    /// Record one span. Never blocks: a disabled recorder returns after
+    /// one atomic load; an enabled one claims a sequence number and
+    /// publishes into its slot, overwriting the oldest event when full.
+    pub fn record(&self, span: &Span) {
+        if !self.enabled() {
+            return;
+        }
+        let words = span.encode();
+        let seq = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        slot.stamp.store(2 * seq + 1, Ordering::SeqCst);
+        for (w, a) in words.iter().zip(slot.words.iter()) {
+            a.store(*w, Ordering::Release);
+        }
+        slot.stamp.store(2 * seq + 2, Ordering::SeqCst);
+    }
+
+    /// Copy out every currently retained event (sequence-ascending, so
+    /// strictly monotone `seq`), plus the drop count and the interned
+    /// string table. Events whose slot is mid-overwrite by a concurrent
+    /// producer are skipped, never returned torn.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let head = self.recorded();
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        let mut events = Vec::with_capacity((head - start) as usize);
+        for seq in start..head {
+            let slot = &self.slots[(seq % cap) as usize];
+            let want = 2 * seq + 2;
+            let mut spins = 0;
+            loop {
+                let s1 = slot.stamp.load(Ordering::Acquire);
+                if s1 == want {
+                    let mut words = [0u64; WORDS];
+                    for (w, a) in words.iter_mut().zip(slot.words.iter()) {
+                        *w = a.load(Ordering::Acquire);
+                    }
+                    // A lapping writer's stamp only ever moves forward,
+                    // so stamp-unchanged means every word above is the
+                    // publishing writer's.
+                    if slot.stamp.load(Ordering::SeqCst) == want {
+                        if let Some(ev) = SpanEvent::decode(seq, &words) {
+                            events.push(ev);
+                        }
+                    }
+                    break;
+                }
+                // Mid-publish by exactly this event's writer: brief spin.
+                if s1 == want - 1 && spins < READ_SPINS {
+                    spins += 1;
+                    std::hint::spin_loop();
+                    continue;
+                }
+                // Lapped (or stalled): the event is lost; move on.
+                break;
+            }
+        }
+        let strings = self.interner.lock().unwrap().names.clone();
+        TraceSnapshot {
+            events,
+            dropped: start,
+            strings,
+        }
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::SpanKind;
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        let rec = TraceRecorder::with_capacity(8);
+        let class = rec.intern("single:4");
+        let algo = rec.intern("cps");
+        let mut s = Span::new(SpanKind::BatchExec);
+        s.class = class;
+        s.algo = algo;
+        s.job = 42;
+        s.dur_ns = 1_000;
+        s.attr = [0.5, 0.25, 2.0, 0.125, -0.0625];
+        rec.record(&s);
+        let snap = rec.snapshot();
+        assert_eq!(snap.events.len(), 1);
+        assert_eq!(snap.dropped, 0);
+        assert_eq!(snap.events[0].seq, 0);
+        assert_eq!(snap.events[0].span, s);
+        assert_eq!(snap.name(class), "single:4");
+        assert_eq!(snap.name(algo), "cps");
+        assert_eq!(snap.name(999), "");
+    }
+
+    #[test]
+    fn overwrite_oldest_keeps_the_newest_and_counts_drops() {
+        let rec = TraceRecorder::with_capacity(4);
+        for i in 0..10u64 {
+            let mut s = Span::new(SpanKind::JobEnqueue);
+            s.job = i;
+            rec.record(&s);
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.dropped, 6);
+        assert_eq!(rec.dropped(), 6);
+        let jobs: Vec<u64> = snap.events.iter().map(|e| e.span.job).collect();
+        assert_eq!(jobs, vec![6, 7, 8, 9]);
+        let seqs: Vec<u64> = snap.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn idle_record_is_a_single_atomic_gate() {
+        // The pinned hot-path contract: with tracing disabled, record()
+        // bails after the enabled load — no sequence claimed, no slot
+        // touched, no interner growth, nothing for snapshot to see.
+        let rec = TraceRecorder::with_capacity(8);
+        rec.set_enabled(false);
+        assert!(!rec.enabled());
+        for _ in 0..1000 {
+            rec.record(&Span::new(SpanKind::BatchExec));
+        }
+        assert_eq!(rec.recorded(), 0, "disabled record must not claim a seq");
+        assert_eq!(rec.dropped(), 0);
+        assert!(rec.snapshot().events.is_empty());
+        // Re-enabling resumes recording with no lost state.
+        rec.set_enabled(true);
+        rec.record(&Span::new(SpanKind::BatchExec));
+        assert_eq!(rec.recorded(), 1);
+    }
+
+    #[test]
+    fn interner_is_stable_and_deduplicating() {
+        let rec = TraceRecorder::new();
+        assert_eq!(rec.intern(""), 0, "empty string is pre-seeded as id 0");
+        let a = rec.intern("single:8");
+        let b = rec.intern("cps");
+        assert_eq!(rec.intern("single:8"), a);
+        assert_eq!(rec.intern("cps"), b);
+        assert_ne!(a, b);
+        let snap = rec.snapshot();
+        assert_eq!(snap.name(a), "single:8");
+        assert_eq!(snap.name(0), "");
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let rec = TraceRecorder::new();
+        let t0 = rec.now_ns();
+        let t1 = rec.now_ns();
+        assert!(t1 >= t0);
+    }
+}

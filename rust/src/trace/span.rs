@@ -1,0 +1,274 @@
+//! Span kinds and the fixed-width event encoding the flight recorder
+//! stores.
+//!
+//! Every event is exactly [`WORDS`] `u64` payload words so the ring can
+//! hold it in plain atomics (no allocation, no pointers, no torn halves
+//! bigger than a word). Strings (topology class, algorithm) are interned
+//! by the recorder and stored as small ids; the five attribution seconds
+//! travel as `f64::to_bits` words.
+
+use super::attr::TermAttribution;
+
+/// Payload words per event slot (excluding the seqlock stamp).
+pub const WORDS: usize = 12;
+
+/// What one trace event describes. Kinds 1–5 are the serving lifecycle;
+/// 6–8 the per-service drift autopilot; 9–11 the fleet control plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// A job entered the service queue (`job` = job id).
+    JobEnqueue = 1,
+    /// The leader flushed a planned batch (`job` = batch index,
+    /// `floats` = fused floats).
+    BatchFlush = 2,
+    /// One executed batch: `dur_ns` observed, attribution = absolute
+    /// per-term split of the GenModel prediction vs. the observation.
+    BatchExec = 3,
+    /// One plan phase within a batch (`phase` = step index, `floats` =
+    /// floats moved, `fanin` = max reduce fan-in), attributed per-phase.
+    Phase = 4,
+    /// The leader observed an externally pushed table epoch.
+    EpochObserve = 5,
+    /// A drift monitor pass ran (`floats` = matched cells).
+    DriftCheck = 6,
+    /// A drift swap landed; attribution = waterfall deviation naming the
+    /// term that tripped the budget.
+    DriftSwap = 7,
+    /// Stale cached plans evicted after a swap (`floats` = evicted).
+    DriftEviction = 8,
+    /// A fleet class tripped its budget; attributed like [`Self::DriftSwap`].
+    FleetTrip = 9,
+    /// The pooled §3.4 calibrator fit fired.
+    FleetFit = 10,
+    /// A recalibrated table was pushed through a class's handle.
+    FleetPush = 11,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::JobEnqueue,
+        SpanKind::BatchFlush,
+        SpanKind::BatchExec,
+        SpanKind::Phase,
+        SpanKind::EpochObserve,
+        SpanKind::DriftCheck,
+        SpanKind::DriftSwap,
+        SpanKind::DriftEviction,
+        SpanKind::FleetTrip,
+        SpanKind::FleetFit,
+        SpanKind::FleetPush,
+    ];
+
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(c: u8) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| k.code() == c)
+    }
+
+    /// Stable artifact name (`trace/v1` pins these strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::JobEnqueue => "job_enqueue",
+            SpanKind::BatchFlush => "batch_flush",
+            SpanKind::BatchExec => "batch_exec",
+            SpanKind::Phase => "phase",
+            SpanKind::EpochObserve => "epoch_observe",
+            SpanKind::DriftCheck => "drift_check",
+            SpanKind::DriftSwap => "drift_swap",
+            SpanKind::DriftEviction => "drift_eviction",
+            SpanKind::FleetTrip => "fleet_trip",
+            SpanKind::FleetFit => "fleet_fit",
+            SpanKind::FleetPush => "fleet_push",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Kinds whose events carry a meaningful five-term attribution
+    /// payload (the others leave the attr words zero).
+    pub fn attributed(self) -> bool {
+        matches!(
+            self,
+            SpanKind::BatchExec | SpanKind::Phase | SpanKind::DriftSwap | SpanKind::FleetTrip
+        )
+    }
+
+    /// Kinds with a real duration (Chrome `"X"` spans; the rest are
+    /// zero-length markers).
+    pub fn has_duration(self) -> bool {
+        matches!(self, SpanKind::BatchExec | SpanKind::Phase)
+    }
+}
+
+/// One event as a call site builds it (everything but the ring-assigned
+/// sequence number). `class`/`algo` are recorder-interned string ids
+/// ([`super::ring::TraceRecorder::intern`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub class: u32,
+    pub algo: u32,
+    pub job: u64,
+    pub phase: u32,
+    pub fanin: u32,
+    pub epoch: u64,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub floats: u64,
+    /// `[alpha_s, wire_s, incast_s, mem_s, unexplained_s]`
+    /// ([`TermAttribution::to_array`]).
+    pub attr: [f64; 5],
+}
+
+impl Span {
+    /// All-zero span of `kind`; call sites set the fields they mean.
+    pub fn new(kind: SpanKind) -> Span {
+        Span {
+            kind,
+            class: 0,
+            algo: 0,
+            job: 0,
+            phase: 0,
+            fanin: 0,
+            epoch: 0,
+            ts_ns: 0,
+            dur_ns: 0,
+            floats: 0,
+            attr: [0.0; 5],
+        }
+    }
+
+    pub fn with_attr(mut self, attr: &TermAttribution) -> Span {
+        self.attr = attr.to_array();
+        self
+    }
+
+    /// Pack into the ring's word layout:
+    /// `w0 = kind | class<<8 | algo<<32`, `w1 = job`,
+    /// `w2 = phase | fanin<<32`, `w3 = epoch`, `w4 = ts_ns`,
+    /// `w5 = dur_ns`, `w6 = floats`, `w7..w11 = attr bits`.
+    /// (`class` is truncated to 24 bits — interner ids count distinct
+    /// strings, not events, so the bound is never approached.)
+    pub(crate) fn encode(&self) -> [u64; WORDS] {
+        let mut w = [0u64; WORDS];
+        w[0] = self.kind.code() as u64
+            | ((self.class as u64 & 0x00ff_ffff) << 8)
+            | ((self.algo as u64) << 32);
+        w[1] = self.job;
+        w[2] = self.phase as u64 | ((self.fanin as u64) << 32);
+        w[3] = self.epoch;
+        w[4] = self.ts_ns;
+        w[5] = self.dur_ns;
+        w[6] = self.floats;
+        for (i, a) in self.attr.iter().enumerate() {
+            w[7 + i] = a.to_bits();
+        }
+        w
+    }
+}
+
+/// One decoded ring event: a [`Span`] plus its monotone sequence number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub seq: u64,
+    pub span: Span,
+}
+
+impl SpanEvent {
+    /// Decode a slot's words; `None` when the kind byte is not a known
+    /// [`SpanKind`] (a never-written or corrupted slot decodes to
+    /// nothing rather than to garbage).
+    pub(crate) fn decode(seq: u64, w: &[u64; WORDS]) -> Option<SpanEvent> {
+        let kind = SpanKind::from_code((w[0] & 0xff) as u8)?;
+        let mut attr = [0.0f64; 5];
+        for (i, a) in attr.iter_mut().enumerate() {
+            *a = f64::from_bits(w[7 + i]);
+        }
+        Some(SpanEvent {
+            seq,
+            span: Span {
+                kind,
+                class: ((w[0] >> 8) & 0x00ff_ffff) as u32,
+                algo: (w[0] >> 32) as u32,
+                job: w[1],
+                phase: w[2] as u32,
+                fanin: (w[2] >> 32) as u32,
+                epoch: w[3],
+                ts_ns: w[4],
+                dur_ns: w[5],
+                floats: w[6],
+                attr,
+            },
+        })
+    }
+
+    /// The event's attribution, for kinds that carry one.
+    pub fn attribution(&self) -> Option<TermAttribution> {
+        self.span
+            .kind
+            .attributed()
+            .then(|| TermAttribution::from_array(self.span.attr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_codes_and_names_roundtrip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_code(k.code()), Some(k));
+            assert_eq!(SpanKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::from_code(0), None);
+        assert_eq!(SpanKind::from_code(200), None);
+        assert_eq!(SpanKind::from_name("banana"), None);
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_every_field() {
+        let span = Span {
+            kind: SpanKind::Phase,
+            class: 3,
+            algo: 7,
+            job: u64::MAX - 5,
+            phase: 2,
+            fanin: 14,
+            epoch: 9,
+            ts_ns: 123_456_789,
+            dur_ns: 42_000,
+            floats: 1 << 20,
+            attr: [1.5e-3, -0.25, 7.0, f64::MIN_POSITIVE, 0.0],
+        };
+        let back = SpanEvent::decode(17, &span.encode()).unwrap();
+        assert_eq!(back.seq, 17);
+        assert_eq!(back.span, span);
+    }
+
+    #[test]
+    fn unknown_kind_decodes_to_none() {
+        let mut w = Span::new(SpanKind::BatchExec).encode();
+        w[0] = (w[0] & !0xff) | 199;
+        assert_eq!(SpanEvent::decode(0, &w), None);
+        assert_eq!(SpanEvent::decode(0, &[0u64; WORDS]), None);
+    }
+
+    #[test]
+    fn attribution_is_gated_by_kind() {
+        let mut s = Span::new(SpanKind::BatchExec);
+        s.attr = [1.0, 2.0, 3.0, 4.0, -0.5];
+        let ev = SpanEvent { seq: 0, span: s };
+        let attr = ev.attribution().unwrap();
+        assert_eq!(attr.incast_s, 3.0);
+        assert_eq!(attr.unexplained_s, -0.5);
+        let mut plain = Span::new(SpanKind::JobEnqueue);
+        plain.attr = [1.0; 5];
+        assert!(SpanEvent { seq: 0, span: plain }.attribution().is_none());
+    }
+}

@@ -322,7 +322,13 @@ impl<'a> Parser<'a> {
     }
 }
 
-fn escape_into(s: &str, out: &mut String) {
+/// Append `s` as a JSON string literal (quotes + escapes) to `out`.
+///
+/// This is THE string-escaping routine for every hand-assembled JSON
+/// emitter in the crate (artifact writers stream lines into one buffer
+/// rather than building a [`Json`] tree per row) — new emitters call
+/// this, they do not roll their own escaping.
+pub fn escape_into(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -346,7 +352,11 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_json(v: &Json, out: &mut String) {
+/// Serialize `v` into `out` in the crate's canonical form (sorted
+/// object keys, integral f64s printed as integers). [`Json`]'s `Display`
+/// and every streaming emitter (campaign JSONL, `trace/v1`) share this
+/// single writer, so canonical bytes cannot drift between artifacts.
+pub fn write_json(v: &Json, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),

@@ -1,0 +1,248 @@
+//! Property tests for the flight recorder: bounded memory with an exact
+//! drop counter, no torn events under concurrent producers, monotone
+//! sequence numbers in every snapshot, the one-atomic-load idle gate,
+//! a seeded JSONL roundtrip sweep, and the `trace/v1` golden fixture
+//! pinning the artifact's exact bytes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use genmodel::trace::{Span, SpanEvent, SpanKind, TraceRecorder, TraceSnapshot};
+use genmodel::util::rng::Rng;
+
+/// A span whose every variable field is derived from one value, so a
+/// torn read (words from two different writers) is detectable: any
+/// decoded event must satisfy [`coherent`].
+fn stamped(v: u64) -> Span {
+    let mut s = Span::new(SpanKind::BatchExec);
+    s.job = v;
+    s.epoch = v;
+    s.ts_ns = v;
+    s.dur_ns = v;
+    s.floats = v;
+    s.phase = (v & 0xffff) as u32;
+    s.fanin = ((v >> 16) & 0xffff) as u32;
+    s.attr = [v as f64; 5];
+    s
+}
+
+fn coherent(e: &SpanEvent) -> bool {
+    let s = &e.span;
+    let v = s.job;
+    s.epoch == v
+        && s.ts_ns == v
+        && s.dur_ns == v
+        && s.floats == v
+        && s.phase == (v & 0xffff) as u32
+        && s.fanin == ((v >> 16) & 0xffff) as u32
+        && s.attr.iter().all(|a| *a == v as f64)
+}
+
+#[test]
+fn ring_is_bounded_and_counts_drops_exactly() {
+    for (cap, n) in [(1usize, 10u64), (8, 8), (8, 9), (64, 1000), (128, 50)] {
+        let rec = TraceRecorder::with_capacity(cap);
+        for i in 0..n {
+            rec.record(&stamped(i));
+        }
+        let snap = rec.snapshot();
+        let retained = n.min(cap as u64);
+        assert_eq!(snap.events.len() as u64, retained, "cap={cap} n={n}");
+        assert_eq!(snap.dropped, n.saturating_sub(cap as u64), "cap={cap} n={n}");
+        assert_eq!(rec.dropped(), snap.dropped);
+        assert_eq!(rec.recorded(), n);
+        // Exactly the NEWEST events survive, sequence-ascending.
+        let seqs: Vec<u64> = snap.events.iter().map(|e| e.seq).collect();
+        let want: Vec<u64> = (n - retained..n).collect();
+        assert_eq!(seqs, want, "cap={cap} n={n}");
+        for e in &snap.events {
+            assert!(coherent(e), "cap={cap} n={n}: torn single-threaded event {e:?}");
+            assert_eq!(e.seq, e.span.job, "payload tracks its claimed sequence");
+        }
+    }
+}
+
+#[test]
+fn concurrent_producers_never_publish_torn_events() {
+    const THREADS: u64 = 4;
+    const PER_THREAD: u64 = 5_000;
+    // Small ring: producers lap it constantly, so reader/writer collisions
+    // on the same slot are the common case, not the rare one.
+    let rec = Arc::new(TraceRecorder::with_capacity(32));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // A reader hammering snapshots while the writers run: every event it
+    // ever observes must be coherent and every snapshot seq-monotone.
+    let reader = {
+        let rec = rec.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut taken = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = rec.snapshot();
+                let mut last: Option<u64> = None;
+                for e in &snap.events {
+                    assert!(coherent(e), "torn event under contention: {e:?}");
+                    if let Some(prev) = last {
+                        assert!(e.seq > prev, "non-monotone seq {} after {prev}", e.seq);
+                    }
+                    last = Some(e.seq);
+                }
+                taken += 1;
+            }
+            taken
+        })
+    };
+    let writers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let rec = rec.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    // Distinct value per (thread, iteration) — a torn mix
+                    // of two writers can never masquerade as coherent.
+                    rec.record(&stamped(t * PER_THREAD + i));
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let snapshots_taken = reader.join().unwrap();
+    assert!(snapshots_taken > 0, "the reader must actually have contended");
+
+    // Quiescent accounting is exact: every record claimed one sequence.
+    assert_eq!(rec.recorded(), THREADS * PER_THREAD);
+    assert_eq!(rec.dropped(), THREADS * PER_THREAD - 32);
+    let snap = rec.snapshot();
+    assert_eq!(snap.events.len(), 32, "a quiet ring retains exactly capacity");
+    for e in &snap.events {
+        assert!(coherent(e));
+    }
+}
+
+#[test]
+fn disabled_recorder_is_inert_even_under_threads() {
+    // The enabled-but-idle contract's disabled half: record() from many
+    // threads claims nothing, so there is no sequence churn, no drops,
+    // and nothing to snapshot — the whole recorder is one cold load.
+    let rec = Arc::new(TraceRecorder::with_capacity(16));
+    rec.set_enabled(false);
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            let rec = rec.clone();
+            std::thread::spawn(move || {
+                for i in 0..1_000u64 {
+                    rec.record(&stamped(t * 1_000 + i));
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert_eq!(rec.recorded(), 0);
+    assert_eq!(rec.dropped(), 0);
+    assert!(rec.snapshot().events.is_empty());
+}
+
+/// Random spans of every kind survive the JSONL roundtrip semantically:
+/// same kind, resolved names, scalar fields, and (for attributed kinds)
+/// the five term seconds. Ids may be renumbered by the parser's
+/// re-interning, so the comparison goes through resolved names.
+#[test]
+fn jsonl_roundtrip_sweep_preserves_every_field() {
+    let mut rng = Rng::new(0x7ace);
+    let names = ["single:4", "single:15", "sym:2,4", "cps", "ring", "hcps:5x3", ""];
+    for round in 0..50 {
+        let rec = TraceRecorder::with_capacity(64);
+        let n_events = 1 + (rng.next_u64() % 40) as usize;
+        for _ in 0..n_events {
+            let kind = SpanKind::ALL[(rng.next_u64() % SpanKind::ALL.len() as u64) as usize];
+            let mut s = Span::new(kind);
+            s.class = rec.intern(names[(rng.next_u64() % names.len() as u64) as usize]);
+            s.algo = rec.intern(names[(rng.next_u64() % names.len() as u64) as usize]);
+            s.job = rng.next_u64() % (1 << 48);
+            s.phase = (rng.next_u64() % 64) as u32;
+            s.fanin = (rng.next_u64() % 64) as u32;
+            s.epoch = rng.next_u64() % 1024;
+            s.ts_ns = rng.next_u64() % (1 << 50);
+            s.dur_ns = rng.next_u64() % (1 << 40);
+            s.floats = rng.next_u64() % (1 << 40);
+            if kind.attributed() {
+                // Finite, sign-mixed term seconds (unexplained may be
+                // negative — over-prediction).
+                s.attr = [
+                    rng.next_f64(),
+                    rng.next_f64() * 2.0,
+                    -rng.next_f64(),
+                    rng.next_f64() * 0.5,
+                    rng.next_f64() - 0.5,
+                ];
+            }
+            rec.record(&s);
+        }
+        let snap = rec.snapshot();
+        let back = TraceSnapshot::from_jsonl(&snap.to_jsonl()).unwrap();
+        assert_eq!(back.events.len(), snap.events.len(), "round {round}");
+        assert_eq!(back.dropped, snap.dropped);
+        for (a, b) in snap.events.iter().zip(&back.events) {
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.span.kind, b.span.kind);
+            assert_eq!(snap.name(a.span.class), back.name(b.span.class));
+            assert_eq!(snap.name(a.span.algo), back.name(b.span.algo));
+            assert_eq!(a.span.job, b.span.job);
+            assert_eq!(a.span.phase, b.span.phase);
+            assert_eq!(a.span.fanin, b.span.fanin);
+            assert_eq!(a.span.epoch, b.span.epoch);
+            assert_eq!(a.span.ts_ns, b.span.ts_ns);
+            assert_eq!(a.span.dur_ns, b.span.dur_ns);
+            assert_eq!(a.span.floats, b.span.floats);
+            if a.span.kind.attributed() {
+                assert_eq!(a.span.attr, b.span.attr, "round {round}");
+            }
+        }
+        // Canonical form is a fixed point.
+        assert_eq!(back.to_jsonl(), snap.to_jsonl());
+    }
+}
+
+/// The golden fixture: `trace/v1` is an on-disk contract, so its exact
+/// bytes are pinned. Regenerating this file is a schema change — bump
+/// [`genmodel::trace::SCHEMA`] and say so in the commit.
+#[test]
+fn golden_fixture_pins_trace_v1_bytes() {
+    const GOLDEN: &str = include_str!("fixtures/trace_smoke.json");
+
+    // The same deterministic two-event story as the exporter's unit
+    // sample: one flush marker, one attributed exec span, 4 drops.
+    let mut flush = Span::new(SpanKind::BatchFlush);
+    flush.class = 1;
+    flush.job = 3;
+    flush.ts_ns = 500;
+    flush.floats = 4096;
+    let mut exec = Span::new(SpanKind::BatchExec);
+    exec.class = 1;
+    exec.algo = 2;
+    exec.job = 3;
+    exec.epoch = 1;
+    exec.ts_ns = 1_000;
+    exec.dur_ns = 2_500;
+    exec.floats = 4096;
+    exec.fanin = 3;
+    exec.attr = [0.5, 0.25, 1.5, 0.125, -0.375];
+    let snap = TraceSnapshot {
+        events: vec![
+            SpanEvent { seq: 4, span: flush },
+            SpanEvent { seq: 5, span: exec },
+        ],
+        dropped: 4,
+        strings: vec!["".into(), "single:4".into(), "cps".into()],
+    };
+
+    assert_eq!(snap.to_jsonl(), GOLDEN, "trace/v1 byte layout changed");
+    let parsed = TraceSnapshot::from_jsonl(GOLDEN).unwrap();
+    assert_eq!(parsed, snap, "golden fixture no longer parses to the sample");
+    assert_eq!(parsed.attributed_execs(), 1);
+}

@@ -1,0 +1,192 @@
+//! Flight-recorder end-to-end: the drift_e2e scenario with tracing on.
+//!
+//! On the ε×20 congested fabric under a blind δ=ε=0 table, the drift
+//! swap's trace event must *name the incast term* as the dominant eater
+//! of the observed−predicted gap (>50%) — the paper's §2/§3 claim that
+//! the classic model's blind spot is exactly the fan-in surcharge. The
+//! δ=ε=0 control (fabric and table agree) must trip nothing and leave
+//! every executed batch attributed within budget.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use genmodel::api::AlgoSpec;
+use genmodel::campaign::table_from_model;
+use genmodel::coordinator::{
+    AllReduceService, BatchPolicy, DriftConfig, ObserveMode, ServiceConfig,
+};
+use genmodel::model::params::{Environment, ModelParams};
+use genmodel::runtime::ReducerSpec;
+use genmodel::topo::builders::single_switch;
+use genmodel::trace::{SpanKind, Term, TraceRecorder};
+use genmodel::util::rng::Rng;
+
+fn tensors(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32_vec(len)).collect()
+}
+
+/// The "true" fabric: the paper's CPU testbed with a 20× incast slope.
+fn true_params() -> ModelParams {
+    let p = ModelParams::cpu_testbed();
+    ModelParams {
+        epsilon: p.epsilon * 20.0,
+        ..p
+    }
+}
+
+/// The classic (α,β,γ) worldview the stale table was priced under.
+fn stale_params() -> ModelParams {
+    ModelParams {
+        delta: 0.0,
+        epsilon: 0.0,
+        ..ModelParams::cpu_testbed()
+    }
+}
+
+fn candidates() -> Vec<AlgoSpec> {
+    vec![
+        AlgoSpec::Cps,
+        AlgoSpec::Hcps { factors: vec![5, 3] },
+        AlgoSpec::Ring,
+    ]
+}
+
+fn traced_service(
+    table_params: ModelParams,
+    fabric: ModelParams,
+    trace: &Arc<TraceRecorder>,
+) -> AllReduceService {
+    const N: usize = 15;
+    let grid: BTreeMap<String, BTreeSet<u32>> =
+        BTreeMap::from([(format!("single:{N}"), BTreeSet::from([20u32]))]);
+    let table =
+        table_from_model(&grid, &candidates(), &Environment::uniform(table_params)).unwrap();
+    let recorder = Arc::new(genmodel::telemetry::Recorder::new());
+    let cfg = ServiceConfig {
+        policy: BatchPolicy::with_cap(1),
+        flush_after: Duration::from_millis(1),
+        observe: ObserveMode::Sim,
+        drift: Some(DriftConfig {
+            threshold: 0.5,
+            every: 4,
+            algos: candidates(),
+            ..DriftConfig::default()
+        }),
+        ..ServiceConfig::default()
+    }
+    .with_selection_table(&table, "single:15", 1.25)
+    .unwrap()
+    .with_telemetry(recorder, "single:15")
+    .with_trace(trace.clone());
+    AllReduceService::start(
+        single_switch(N),
+        Environment::uniform(fabric),
+        ReducerSpec::Scalar,
+        cfg,
+    )
+}
+
+#[test]
+fn drift_swap_trace_blames_the_incast_term() {
+    const N: usize = 15;
+    const BIG: usize = 1 << 20;
+    let trace = Arc::new(TraceRecorder::new());
+    // Blind table, congested reality: the drift_e2e trip, now recorded.
+    let svc = traced_service(stale_params(), true_params(), &trace);
+    for i in 0..4u64 {
+        let res = svc.allreduce(tensors(N, BIG, i)).unwrap();
+        assert_eq!(res.algo, "cps");
+    }
+    // The 4th flush reached the check cadence and swapped; one post-swap
+    // job runs under the new winner so the trace sees both generations.
+    let res = svc.allreduce(tensors(N, BIG, 9)).unwrap();
+    assert_eq!(res.epoch, 1);
+    svc.stop();
+
+    let snap = trace.snapshot();
+    assert_eq!(snap.dropped, 0, "a short smoke must not lap the ring");
+
+    // The serving lifecycle is fully spanned: one enqueue per job, one
+    // flush + one attributed exec per single-job batch, per-phase spans
+    // underneath each exec.
+    assert_eq!(snap.of_kind(SpanKind::JobEnqueue).count(), 5);
+    assert_eq!(snap.of_kind(SpanKind::BatchFlush).count(), 5);
+    assert_eq!(snap.attributed_execs(), 5);
+    assert!(
+        snap.of_kind(SpanKind::Phase).count() >= 2 * 5,
+        "every AllReduce round has at least reduce + broadcast phases"
+    );
+    for e in snap.of_kind(SpanKind::Phase) {
+        assert!(e.attribution().is_some(), "phase spans carry attributions");
+    }
+    assert!(snap.of_kind(SpanKind::DriftCheck).count() >= 1);
+
+    // THE acceptance pin: the swap event attributes the gap, and the
+    // dominant term is incast — more than half of the total attributed
+    // deviation on a fabric whose only lie was the ε slope.
+    let swaps: Vec<_> = snap.of_kind(SpanKind::DriftSwap).collect();
+    assert_eq!(swaps.len(), 1, "{swaps:?}");
+    let swap = swaps[0];
+    assert_eq!(snap.name(swap.span.class), "single:15");
+    assert_eq!(snap.name(swap.span.algo), "cps", "the stale winner is blamed");
+    assert_eq!(swap.span.epoch, 1);
+    let attr = swap.attribution().expect("swap events are attributed");
+    assert_eq!(attr.dominant(), Term::Incast, "{attr:?}");
+    assert!(
+        attr.dominant_share() > 0.5,
+        "incast must eat >50% of the attributed gap: {attr:?}"
+    );
+    assert!(attr.incast_s > 0.0);
+
+    // The service metric agrees with the trace.
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.drift_term, Term::Incast.code());
+    assert_eq!(m.drift_swaps, 1);
+
+    // The artifact roundtrips losslessly.
+    let back = genmodel::trace::TraceSnapshot::from_jsonl(&snap.to_jsonl()).unwrap();
+    assert_eq!(back.attributed_execs(), 5);
+    assert_eq!(back.events.len(), snap.events.len());
+}
+
+#[test]
+fn honest_control_attributes_within_budget_and_never_trips() {
+    const N: usize = 15;
+    const BIG: usize = 1 << 20;
+    let trace = Arc::new(TraceRecorder::new());
+    // Control: the fabric IS the δ=ε=0 worldview and the table was priced
+    // under it — predictions are honest, nothing should trip.
+    let svc = traced_service(stale_params(), stale_params(), &trace);
+    for i in 0..4u64 {
+        svc.allreduce(tensors(N, BIG, i)).unwrap();
+    }
+    svc.stop();
+
+    let snap = trace.snapshot();
+    assert_eq!(snap.dropped, 0);
+    assert_eq!(snap.of_kind(SpanKind::DriftSwap).count(), 0, "no swap");
+    assert!(snap.of_kind(SpanKind::DriftCheck).count() >= 1, "checked, held");
+    assert_eq!(svc.metrics.snapshot().drift_swaps, 0);
+    assert_eq!(svc.metrics.snapshot().drift_term, 0, "no term ever blamed");
+
+    // Every executed batch is attributed, and the model explains the
+    // round: the unexplained remainder stays within the drift budget the
+    // monitor holds predictions to (50%), fleet-wide and per span.
+    assert_eq!(snap.attributed_execs(), 4);
+    assert!(
+        snap.unexplained_frac() < 0.5,
+        "honest fabric must be mostly explained: {}",
+        snap.unexplained_frac()
+    );
+    for e in snap.of_kind(SpanKind::BatchExec) {
+        let attr = e.attribution().unwrap();
+        let observed = e.span.dur_ns as f64 * 1e-9;
+        assert!(
+            attr.unexplained_s.abs() < 0.5 * observed.max(1e-12),
+            "span unexplained {:+.3e}s vs observed {observed:.3e}s",
+            attr.unexplained_s
+        );
+    }
+}

@@ -117,4 +117,17 @@ step cargo run --release -p genmodel --quiet -- fleet \
     --expect-hold single:4,single:6,single:8,single:10 \
     --bench-out BENCH_campaign.json
 
+# 10. Flight-recorder smoke: the serve smoke again with the trace ring
+#     on. The serve merges trace_events / trace_dropped /
+#     trace_unexplained_frac into BENCH_campaign.json; `repro trace
+#     --check` then re-parses the trace/v1 artifact and exits non-zero
+#     unless it holds at least one attributed exec span with zero ring
+#     drops — the observability gate. The Chrome export is written too,
+#     so the artifact loads in about:tracing / Perfetto.
+step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 32 --tensor 2048 \
+    --scalar --selection target/selection_smoke.json --class single:4 \
+    --trace-out target/trace_smoke.json --bench-out BENCH_campaign.json
+step cargo run --release -p genmodel --quiet -- trace --in target/trace_smoke.json \
+    --check --chrome target/trace_smoke_chrome.json
+
 exit $fail
