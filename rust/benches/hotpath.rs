@@ -1,11 +1,18 @@
 //! Bench: the L3 hot paths themselves (§Perf deliverable) — reducer
 //! throughput vs the memory-bandwidth roofline, executor overhead,
-//! coordinator overhead over raw execution, simulator event rate.
+//! coordinator overhead over raw execution, submit-ingest contention
+//! (sharded lanes vs the single-queue baseline), simulator event rate.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
-use genmodel::coordinator::{batcher::BatchPolicy, AllReduceService, ServiceConfig};
+use genmodel::campaign::table_from_model;
+use genmodel::coordinator::{
+    batcher::BatchPolicy, AllReduceService, IngestLanes, ObserveMode, PlanRouter,
+    ServiceConfig, DEFAULT_LINK_BETA, DEFAULT_MIN_SPLIT_MARGIN,
+};
 use genmodel::exec::execute_plan;
+use genmodel::fleet::{default_candidates, FleetController, FleetSpec};
 use genmodel::model::params::Environment;
 use genmodel::plan::cps;
 use genmodel::runtime::reducer::scalar_reduce;
@@ -85,6 +92,89 @@ fn main() {
     bench("raw_fused_execution_equal_volume", || {
         std::hint::black_box(execute_plan(&raw_plan, &fused, &Reducer::Scalar).unwrap());
     });
+
+    // ---- ingest contention: raw lanes -----------------------------------
+    // 8 producers pinned round-robin over the lanes: with one lane every
+    // push serializes on the same lock (the old front door); with eight,
+    // producers never contend and the drain pays one uncontended lock
+    // per lane sweep.
+    group("ingest: 8 producers × 2048 raw pushes, 1 vs 8 lanes");
+    for lanes in [1usize, 8] {
+        let ing = IngestLanes::<u64>::new(lanes);
+        let name = format!("ingest_push_8x2048_{lanes}lane");
+        bench(&name, || {
+            std::thread::scope(|s| {
+                for t in 0..8usize {
+                    let ing = &ing;
+                    s.spawn(move || {
+                        for i in 0..2048u64 {
+                            ing.push_to(t % ing.lane_count(), i).expect("open");
+                        }
+                    });
+                }
+            });
+            let mut out = Vec::with_capacity(8 * 2048);
+            while ing.drain_into(&mut out) > 0 {}
+            assert_eq!(out.len(), 8 * 2048);
+            std::hint::black_box(out);
+        });
+    }
+
+    // ---- ingest contention: full submit path through a fleet service ----
+    // The end-to-end version of the same comparison: 8 client threads
+    // submit through a FleetController-registered service, once against
+    // the single-queue baseline and once against the sharded front door.
+    group("ingest: 8 producers × 256 submits via fleet service, single vs sharded");
+    for (lanes, name) in [(1usize, "fleet_submit_8x256_single_lane"), (8, "fleet_submit_8x256_sharded")] {
+        let class = "single:8";
+        let topo = genmodel::bench::workloads::parse_topology(class).unwrap();
+        let candidates = default_candidates(&topo);
+        let env = Environment::paper();
+        let grid = BTreeMap::from([(class.to_string(), BTreeSet::from([PlanRouter::bucket(64)]))]);
+        let table = table_from_model(&grid, &candidates, &env).unwrap();
+        let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+        fleet
+            .register(FleetSpec {
+                class: class.to_string(),
+                threshold: 0.5,
+                table,
+                env,
+                candidates,
+                policy: BatchPolicy::with_cap(1 << 20),
+                flush_after: Duration::from_micros(200),
+                observe: ObserveMode::Wall,
+                reducer: ReducerSpec::Scalar,
+                min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
+                ingest_lanes: lanes,
+            })
+            .unwrap();
+        let svc = &fleet.entry(class).unwrap().service;
+        bench(name, || {
+            let recvs: Vec<_> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..8)
+                    .map(|_| {
+                        s.spawn(|| {
+                            (0..256)
+                                .map(|_| {
+                                    let tensors: Vec<Vec<f32>> =
+                                        (0..8).map(|_| vec![1.0f32; 64]).collect();
+                                    svc.submit(tensors).expect("service up")
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("producer panicked"))
+                    .collect()
+            });
+            for rx in recvs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        fleet.stop();
+    }
 
     // ---- simulator event rate -------------------------------------------
     group("simulator: CPS n=64 (4032 flows), single phase pair");

@@ -44,7 +44,8 @@ pub mod select;
 
 pub use grid::{EnvKind, Scenario, ScenarioGrid};
 pub use runner::{
-    evaluate_scenario, load_rows, price_grid, run_campaign, CampaignRow, RunConfig, RunSummary,
+    evaluate_scenario, load_rows, parse_row_views, price_grid, run_campaign, CampaignRow,
+    RowView, RunConfig, RunSummary,
 };
 pub use select::{
     table_from_choices, table_from_entries, table_from_model, Boundary, Choice, Metric,

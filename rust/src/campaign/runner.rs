@@ -13,6 +13,8 @@
 //! timings, so *re-evaluating* one from scratch re-times it; within one
 //! artifact's lifetime resume memoization keeps rows stable.)
 
+use std::borrow::Cow;
+use std::collections::HashMap;
 use std::fs;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -22,7 +24,7 @@ use std::time::Instant;
 
 use crate::api::{ApiError, Backend, Engine};
 use crate::bench::workloads::parse_topology;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonRef};
 
 use super::grid::{Scenario, ScenarioGrid};
 
@@ -113,34 +115,82 @@ impl CampaignRow {
         ])
     }
 
-    /// Parse and schema-check one row.
+    /// Parse and schema-check one row (deep-copying convenience over
+    /// [`RowView::from_json_ref`]).
     pub fn from_json(v: &Json) -> Result<CampaignRow, ApiError> {
+        RowView::from_json_ref(&v.borrowed()).map(RowView::into_owned)
+    }
+}
+
+/// A campaign row **borrowed from the artifact text**: the zero-copy
+/// twin of [`CampaignRow`]. String fields are `Cow::Borrowed` slices of
+/// the JSONL line wherever the literal holds no escape (campaign keys
+/// and algorithm/topology names never do), so resume memoization and
+/// `repro score` parse an artifact without allocating a `String` per
+/// row or per key. [`RowView::into_owned`] is the single deep copy —
+/// paid only by callers that need `'static` rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowView<'a> {
+    pub key: Cow<'a, str>,
+    pub hash: Cow<'a, str>,
+    pub topo: Cow<'a, str>,
+    pub topo_name: Cow<'a, str>,
+    pub n_servers: usize,
+    pub algo: Cow<'a, str>,
+    pub size: f64,
+    pub env: Cow<'a, str>,
+    pub model_s: Option<f64>,
+    pub sim_s: Option<f64>,
+    pub exec_s: Option<f64>,
+    pub error: Option<Cow<'a, str>>,
+}
+
+impl<'a> RowView<'a> {
+    /// Parse and schema-check one row from a borrowed JSON tree. Same
+    /// schema and error text as the owned path — [`CampaignRow::from_json`]
+    /// delegates here, so the two cannot drift.
+    pub fn from_json_ref(v: &JsonRef<'a>) -> Result<RowView<'a>, ApiError> {
+        // Error path only: render via the owned tree (one allocation to
+        // say what went wrong is fine; the happy path allocates nothing).
         let bad = |what: &str| ApiError::BadRequest {
-            reason: format!("campaign row missing/mistyped field {what:?} in {v}"),
+            reason: format!(
+                "campaign row missing/mistyped field {what:?} in {}",
+                v.clone().into_owned()
+            ),
         };
-        let s = |k: &str| -> Result<String, ApiError> {
-            v.get(k).and_then(Json::as_str).map(String::from).ok_or_else(|| bad(k))
+        let s = |k: &str| -> Result<Cow<'a, str>, ApiError> {
+            match v.get(k) {
+                Some(JsonRef::Str(s)) => Ok(s.clone()),
+                _ => Err(bad(k)),
+            }
         };
         let opt_f = |k: &str| -> Result<Option<f64>, ApiError> {
             match v.get(k) {
-                Some(Json::Null) | None => Ok(None),
+                Some(JsonRef::Null) | None => Ok(None),
                 Some(x) => x.as_f64().map(Some).ok_or_else(|| bad(k)),
             }
         };
-        let opt_s = |k: &str| -> Result<Option<String>, ApiError> {
+        let opt_s = |k: &str| -> Result<Option<Cow<'a, str>>, ApiError> {
             match v.get(k) {
-                Some(Json::Null) | None => Ok(None),
-                Some(x) => x.as_str().map(String::from).map(Some).ok_or_else(|| bad(k)),
+                Some(JsonRef::Null) | None => Ok(None),
+                Some(JsonRef::Str(s)) => Ok(Some(s.clone())),
+                Some(_) => Err(bad(k)),
             }
         };
-        Ok(CampaignRow {
+        Ok(RowView {
             key: s("key")?,
             hash: s("hash")?,
             topo: s("topo")?,
             topo_name: s("topo_name")?,
-            n_servers: v.get("n_servers").and_then(Json::as_usize).ok_or_else(|| bad("n_servers"))?,
+            n_servers: v
+                .get("n_servers")
+                .and_then(JsonRef::as_usize)
+                .ok_or_else(|| bad("n_servers"))?,
             algo: s("algo")?,
-            size: v.get("size").and_then(Json::as_f64).ok_or_else(|| bad("size"))?,
+            size: v
+                .get("size")
+                .and_then(JsonRef::as_f64)
+                .ok_or_else(|| bad("size"))?,
             env: s("env")?,
             model_s: opt_f("model_s")?,
             sim_s: opt_f("sim_s")?,
@@ -148,6 +198,43 @@ impl CampaignRow {
             error: opt_s("error")?,
         })
     }
+
+    /// Deep-copy into an owned [`CampaignRow`].
+    pub fn into_owned(self) -> CampaignRow {
+        CampaignRow {
+            key: self.key.into_owned(),
+            hash: self.hash.into_owned(),
+            topo: self.topo.into_owned(),
+            topo_name: self.topo_name.into_owned(),
+            n_servers: self.n_servers,
+            algo: self.algo.into_owned(),
+            size: self.size,
+            env: self.env.into_owned(),
+            model_s: self.model_s,
+            sim_s: self.sim_s,
+            exec_s: self.exec_s,
+            error: self.error.map(Cow::into_owned),
+        }
+    }
+}
+
+/// Parse a whole JSONL artifact into borrowed [`RowView`]s over `text`,
+/// schema-checking every row. `origin` labels per-line errors
+/// (`{origin}:{line}: ...`). Blank lines are skipped.
+pub fn parse_row_views<'a>(text: &'a str, origin: &str) -> Result<Vec<RowView<'a>>, ApiError> {
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = JsonRef::parse(line).map_err(|e| ApiError::BadRequest {
+            reason: format!("{origin}:{}: {e}", i + 1),
+        })?;
+        rows.push(RowView::from_json_ref(&v).map_err(|e| ApiError::BadRequest {
+            reason: format!("{origin}:{}: {e}", i + 1),
+        })?);
+    }
+    Ok(rows)
 }
 
 fn io_err(path: &Path, e: impl std::fmt::Display) -> ApiError {
@@ -160,42 +247,50 @@ fn io_err(path: &Path, e: impl std::fmt::Display) -> ApiError {
 /// Load a completed campaign artifact, schema-checking every row.
 pub fn load_rows(path: &Path) -> Result<Vec<CampaignRow>, ApiError> {
     let text = fs::read_to_string(path).map_err(|e| io_err(path, e))?;
-    let mut rows = Vec::new();
-    for (i, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let v = Json::parse(line).map_err(|e| ApiError::BadRequest {
-            reason: format!("{}:{}: {e}", path.display(), i + 1),
-        })?;
-        rows.push(CampaignRow::from_json(&v).map_err(|e| ApiError::BadRequest {
-            reason: format!("{}:{}: {e}", path.display(), i + 1),
-        })?);
-    }
-    Ok(rows)
+    Ok(parse_row_views(&text, &path.display().to_string())?
+        .into_iter()
+        .map(RowView::into_owned)
+        .collect())
 }
 
-/// Resume loader. Exactly one kind of damage is forgiven: a **torn
-/// final line without a trailing newline** — what an interrupted
-/// `writeln!` leaves behind. Anything else unparseable means the file
-/// is not a campaign artifact of ours, and since `run_campaign` ends by
-/// rewriting the whole file, loading on regardless would destroy it —
-/// so that is a refusal, not a warning. Returns the memoized rows and
-/// whether a torn tail must be newline-terminated before appending.
-fn load_resume_memo(path: &Path) -> Result<(Vec<CampaignRow>, bool), ApiError> {
-    let Ok(text) = fs::read_to_string(path) else {
-        return Ok((Vec::new(), false));
-    };
+/// One memoized artifact line: the raw canonical bytes (re-emitted
+/// verbatim on rewrite — prior runs only ever wrote canonical JSON, so
+/// verbatim IS canonical) plus whether the row records a failure.
+struct MemoLine<'a> {
+    line: &'a str,
+    failed: bool,
+}
+
+/// Resume loader over the artifact text (read once by the caller; every
+/// key and row borrows from it — no per-row String allocation). Exactly
+/// one kind of damage is forgiven: a **torn final line without a
+/// trailing newline** — what an interrupted `writeln!` leaves behind.
+/// Anything else unparseable means the file is not a campaign artifact
+/// of ours, and since `run_campaign` ends by rewriting the whole file,
+/// loading on regardless would destroy it — so that is a refusal, not a
+/// warning. Returns the key → memoized-line map and whether a torn tail
+/// must be newline-terminated before appending.
+fn load_resume_memo<'a>(
+    text: &'a str,
+    path: &Path,
+) -> Result<(HashMap<Cow<'a, str>, MemoLine<'a>>, bool), ApiError> {
     let torn_tail = !text.is_empty() && !text.ends_with('\n');
     let lines: Vec<(usize, &str)> = text
         .lines()
         .enumerate()
         .filter(|(_, l)| !l.trim().is_empty())
         .collect();
-    let mut rows = Vec::new();
+    let mut memo: HashMap<Cow<'a, str>, MemoLine<'a>> = HashMap::new();
     for (pos, &(lineno, line)) in lines.iter().enumerate() {
-        match Json::parse(line).ok().as_ref().map(CampaignRow::from_json) {
-            Some(Ok(row)) => rows.push(row),
+        match JsonRef::parse(line)
+            .ok()
+            .as_ref()
+            .map(RowView::from_json_ref)
+        {
+            Some(Ok(view)) => {
+                let failed = view.error.is_some();
+                memo.insert(view.key, MemoLine { line, failed });
+            }
             _ if torn_tail && pos == lines.len() - 1 => {
                 eprintln!(
                     "campaign: {}:{}: dropping torn final line (interrupted write)",
@@ -216,7 +311,7 @@ fn load_resume_memo(path: &Path) -> Result<(Vec<CampaignRow>, bool), ApiError> {
             }
         }
     }
-    Ok((rows, torn_tail))
+    Ok((memo, torn_tail))
 }
 
 /// Evaluate one scenario through the analytic and simulated backends —
@@ -311,18 +406,28 @@ pub fn run_campaign(grid: &ScenarioGrid, cfg: &RunConfig) -> Result<RunSummary, 
     let threads = cfg.threads.max(1);
 
     // Resume memo: rows already computed for scenarios of this grid.
-    let (memo_rows, torn_tail) = load_resume_memo(&cfg.out)?;
-    let mut memo: std::collections::HashMap<String, CampaignRow> = memo_rows
-        .into_iter()
-        .map(|r| (r.key.clone(), r))
-        .collect();
+    // The artifact is read ONCE into `memo_text`; keys and lines borrow
+    // from it (zero per-row allocation), and resumed lines are later
+    // re-emitted verbatim.
+    let memo_text = fs::read_to_string(&cfg.out).unwrap_or_default();
+    let (mut memo, torn_tail) = load_resume_memo(&memo_text, &cfg.out)?;
+
+    /// A resolved scenario slot: a verbatim memoized artifact line, or a
+    /// freshly evaluated row.
+    #[derive(Clone)]
+    enum Slot<'a> {
+        Resumed(&'a str, bool),
+        Fresh(CampaignRow),
+    }
 
     // Partition: resumed rows land directly in `results`; the rest queue.
-    let mut results: Vec<Option<CampaignRow>> = vec![None; scenarios.len()];
+    let mut results: Vec<Option<Slot<'_>>> = vec![None; scenarios.len()];
     let mut todo: Vec<(usize, &Scenario)> = Vec::new();
     for (i, sc) in scenarios.iter().enumerate() {
-        match memo.remove(&sc.key()) {
-            Some(row) => results[i] = Some(row),
+        // Cow<str>: Borrow<str> lets the borrowed-key map be probed by
+        // the scenario's freshly formatted key without re-wrapping it.
+        match memo.remove(sc.key().as_str()) {
+            Some(m) => results[i] = Some(Slot::Resumed(m.line, m.failed)),
             None => todo.push((i, sc)),
         }
     }
@@ -384,7 +489,7 @@ pub fn run_campaign(grid: &ScenarioGrid, cfg: &RunConfig) -> Result<RunSummary, 
         for (idx, row) in rx {
             writeln!(stream, "{}", row.to_json()).map_err(|e| io_err(&cfg.out, e))?;
             stream.flush().map_err(|e| io_err(&cfg.out, e))?;
-            results[idx] = Some(row);
+            results[idx] = Some(Slot::Fresh(row));
         }
         Ok(())
     })?;
@@ -393,14 +498,25 @@ pub fn run_campaign(grid: &ScenarioGrid, cfg: &RunConfig) -> Result<RunSummary, 
 
     // Canonical rewrite: rows in scenario order, temp file + rename, so
     // the finished artifact is byte-identical for any thread count.
+    // Resumed lines are already canonical bytes and go out verbatim —
+    // no re-parse, no re-serialize.
     let mut canonical = String::new();
     let mut failed = 0usize;
-    for row in results.iter() {
-        let row = row.as_ref().expect("every scenario resolved");
-        if row.error.is_some() {
-            failed += 1;
+    for slot in results.iter() {
+        match slot.as_ref().expect("every scenario resolved") {
+            Slot::Resumed(line, row_failed) => {
+                if *row_failed {
+                    failed += 1;
+                }
+                canonical.push_str(line);
+            }
+            Slot::Fresh(row) => {
+                if row.error.is_some() {
+                    failed += 1;
+                }
+                canonical.push_str(&row.to_json().to_string());
+            }
         }
-        canonical.push_str(&row.to_json().to_string());
         canonical.push('\n');
     }
     let tmp = cfg.out.with_extension("jsonl.tmp");
@@ -498,6 +614,50 @@ mod tests {
         assert_eq!(second.evaluated, 0);
         assert_eq!(fs::read(&out).unwrap(), bytes, "resume must not change the artifact");
         let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn torn_tail_resume_converges_to_the_same_canonical_bytes() {
+        // An interrupted write leaves a half row with no newline; resume
+        // must forgive exactly that, keep every intact row verbatim, and
+        // still converge to the canonical artifact byte-for-byte.
+        let out = tmp_path("torn");
+        let _ = fs::remove_file(&out);
+        let grid = tiny_grid();
+        run_campaign(&grid, &RunConfig { threads: 1, out: out.clone() }).unwrap();
+        let bytes = fs::read(&out).unwrap();
+        let mut text = String::from_utf8(bytes.clone()).unwrap();
+        text.push_str("{\"algo\":\"cps\",\"env\""); // torn mid-write
+        fs::write(&out, &text).unwrap();
+        let second = run_campaign(&grid, &RunConfig { threads: 4, out: out.clone() }).unwrap();
+        assert_eq!(second.resumed, second.total);
+        assert_eq!(second.evaluated, 0);
+        assert_eq!(fs::read(&out).unwrap(), bytes, "torn tail healed, rows verbatim");
+        let _ = fs::remove_file(&out);
+    }
+
+    #[test]
+    fn row_views_borrow_from_the_artifact_text() {
+        let sc = &tiny_grid().expand().unwrap()[0];
+        let row = evaluate_scenario(sc);
+        let text = format!("{}\n{}\n", row.to_json(), row.to_json());
+        let views = parse_row_views(&text, "mem").unwrap();
+        assert_eq!(views.len(), 2);
+        // Canonical rows hold no escapes, so every string field borrows.
+        for v in &views {
+            assert!(matches!(v.key, Cow::Borrowed(_)), "{:?}", v.key);
+            assert!(matches!(v.algo, Cow::Borrowed(_)));
+            assert!(matches!(v.topo, Cow::Borrowed(_)));
+        }
+        assert_eq!(views[0].clone().into_owned(), row);
+        // Per-line error labels still name origin and line number.
+        let bad = format!("{}\nnot json\n", row.to_json());
+        match parse_row_views(&bad, "mem") {
+            Err(ApiError::BadRequest { reason }) => {
+                assert!(reason.starts_with("mem:2:"), "{reason}");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,383 @@
+//! Sharded MPSC ingest lanes: the submit-side fix for the serving
+//! stack's self-inflicted serial term.
+//!
+//! Before this module every `AllReduceService::submit` funneled through
+//! one `Mutex<Option<Sender<Job>>>` held *across the channel send* — a
+//! software analog of the paper's hidden serial terms (the δ
+//! memory-access and ε incast costs the classic model never prices).
+//! Under fleet load that one lock serializes every producer thread and
+//! manufactures exactly the artificial arrival skew Proficz
+//! (arXiv 1804.05349) shows reorders algorithm winners.
+//!
+//! [`IngestLanes`] shards the queue: `L` cache-line-padded lanes, each
+//! its own `Mutex<VecDeque<T>>`, with producers hashed to a lane by
+//! thread id. Producers on **distinct lanes never block each other** —
+//! there is no global lock anywhere on the push path. The only shared
+//! state is three atomics (`pending`, `closed`, `sleeping`) and a
+//! doorbell (`door` + `bell`) the producer touches **only when the
+//! consumer is actually parked**, so the uncontended hot path is one
+//! lane lock + one atomic increment + one relaxed-cost atomic load.
+//!
+//! ## Wakeup protocol (eventcount)
+//!
+//! The consumer parks on the doorbell condvar only after setting
+//! `sleeping = true` (under the door lock) and **re-checking**
+//! `pending`/`closed`. Producers increment `pending` (SeqCst) *before*
+//! loading `sleeping`; the consumer stores `sleeping` *before* loading
+//! `pending`. SeqCst total order makes a missed wakeup impossible: if
+//! the producer's increment isn't seen by the consumer's re-check, then
+//! the consumer's `sleeping = true` store is ordered before the
+//! producer's load, so the producer sees it and rings the bell.
+//!
+//! ## Shutdown: zero dropped jobs
+//!
+//! `close()` sets `closed` (SeqCst) and rings the bell. Producers check
+//! `closed` **under their lane lock** before pushing, so any push that
+//! was accepted is visible to a drain that locks the same lane
+//! afterwards. The consumer, upon observing `Closed`, must keep
+//! sweeping [`IngestLanes::drain_into`] **until a sweep returns 0** —
+//! the mutex release/acquire edges then guarantee every accepted item
+//! is collected, and every producer ordered after the final sweep
+//! observes `closed == true` and receives [`IngestClosed`] (which the
+//! service maps to the typed `ApiError::ServiceStopped`).
+//!
+//! ## Poison isolation
+//!
+//! A producer that panics while holding a *lane* lock poisons only that
+//! lane: pushes to it return [`IngestClosed`], the consumer's drains
+//! recover the inner queue via `into_inner`, and all other lanes keep
+//! serving. This strictly improves on the old single-queue behavior,
+//! where one poisoned submit lock took the whole service down.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Pad each lane to its own cache line so two producers hammering
+/// adjacent lanes don't false-share (same idiom as the telemetry
+/// histogram bins).
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// Typed rejection: the lanes are closed (service stopping/stopped) or
+/// the target lane is poisoned. Callers map this to their own stopped
+/// error; the distinction is deliberately not exposed because the
+/// remedy (stop submitting) is the same.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestClosed;
+
+/// Outcome of [`IngestLanes::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestWait {
+    /// Items are pending — drain now.
+    Ready,
+    /// The deadline passed with nothing pending.
+    TimedOut,
+    /// The lanes are closed. Keep draining until a sweep returns 0,
+    /// then every accepted item has been collected.
+    Closed,
+}
+
+/// Sharded multi-producer queue: `L` independent FIFO lanes plus a
+/// doorbell for the single consumer. See the module docs for the
+/// protocol.
+pub struct IngestLanes<T> {
+    lanes: Box<[CachePadded<Mutex<VecDeque<T>>>]>,
+    /// Items pushed but not yet drained, across all lanes. Incremented
+    /// by producers after a successful push, decremented by the
+    /// consumer after a drain. SeqCst — see the wakeup protocol.
+    pending: AtomicUsize,
+    /// Once true, every push is rejected with [`IngestClosed`].
+    closed: AtomicBool,
+    /// Doorbell: the consumer parks on `bell` under `door`; producers
+    /// take `door` only when `sleeping` says the consumer is parked.
+    door: Mutex<()>,
+    bell: Condvar,
+    sleeping: AtomicBool,
+}
+
+thread_local! {
+    /// Cached per-thread lane token (0 = not yet computed; tokens are
+    /// forced odd so 0 is never a valid token).
+    static LANE_TOKEN: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+impl<T> IngestLanes<T> {
+    /// Build with `lanes` shards (clamped to at least 1; 1 reproduces
+    /// the single-queue baseline for contention benchmarks).
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let lanes: Vec<CachePadded<Mutex<VecDeque<T>>>> = (0..lanes)
+            .map(|_| CachePadded(Mutex::new(VecDeque::new())))
+            .collect();
+        IngestLanes {
+            lanes: lanes.into_boxed_slice(),
+            pending: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            door: Mutex::new(()),
+            bell: Condvar::new(),
+            sleeping: AtomicBool::new(false),
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The lane the calling thread hashes to. Stable for the lifetime
+    /// of the thread (the hash token is cached thread-locally).
+    pub fn lane_for_current_thread(&self) -> usize {
+        let token = LANE_TOKEN.with(|t| {
+            let mut v = t.get();
+            if v == 0 {
+                let mut h = DefaultHasher::new();
+                std::thread::current().id().hash(&mut h);
+                v = h.finish() | 1; // never 0, so the cache slot is unambiguous
+                t.set(v);
+            }
+            v
+        });
+        (token % self.lanes.len() as u64) as usize
+    }
+
+    /// Push onto the calling thread's hashed lane.
+    pub fn push(&self, item: T) -> Result<(), IngestClosed> {
+        self.push_to(self.lane_for_current_thread(), item)
+    }
+
+    /// Push onto an explicit lane (tests and pinned producers).
+    /// Rejects with [`IngestClosed`] if the lanes are closed or the
+    /// lane is poisoned. The closed check happens **under the lane
+    /// lock** — that ordering is what makes the final drain sweep
+    /// complete (see module docs).
+    pub fn push_to(&self, lane: usize, item: T) -> Result<(), IngestClosed> {
+        let slot = &self.lanes[lane % self.lanes.len()];
+        {
+            let mut q = slot.0.lock().map_err(|_| IngestClosed)?;
+            if self.closed.load(Ordering::SeqCst) {
+                return Err(IngestClosed);
+            }
+            q.push_back(item);
+            self.pending.fetch_add(1, Ordering::SeqCst);
+        }
+        // Ring the bell only if the consumer is (or may be) parked.
+        // SeqCst pairs with the consumer's sleeping-store / pending-load.
+        if self.sleeping.load(Ordering::SeqCst) {
+            let _door = self.door.lock().unwrap_or_else(|e| e.into_inner());
+            self.bell.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Close the lanes: every subsequent push is rejected, and the
+    /// parked consumer (if any) is woken. Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _door = self.door.lock().unwrap_or_else(|e| e.into_inner());
+        self.bell.notify_all();
+    }
+
+    /// Whether [`close`](Self::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Drain every lane (in lane-index order, preserving each lane's
+    /// FIFO order) into `out`. Returns the number of items drained.
+    /// Poisoned lanes are recovered — their queued items are still
+    /// collected, so a producer panic never drops accepted jobs.
+    pub fn drain_into(&self, out: &mut Vec<T>) -> usize {
+        let mut n = 0;
+        for slot in self.lanes.iter() {
+            let mut q = slot.0.lock().unwrap_or_else(|e| e.into_inner());
+            n += q.len();
+            out.extend(q.drain(..));
+        }
+        if n > 0 {
+            self.pending.fetch_sub(n, Ordering::SeqCst);
+        }
+        n
+    }
+
+    /// Approximate number of undrained items (consumer-side hint for
+    /// flush accounting; exact only from the consumer thread).
+    pub fn pending_hint(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Consumer-side wait: block until items are pending, the lanes are
+    /// closed, or `deadline` passes (`None` = wait forever). Spurious
+    /// `Ready` returns are possible (another drain may have raced) —
+    /// callers must tolerate a zero-item drain.
+    pub fn wait(&self, deadline: Option<Instant>) -> IngestWait {
+        loop {
+            if self.pending.load(Ordering::SeqCst) > 0 {
+                return IngestWait::Ready;
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return IngestWait::Closed;
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return IngestWait::TimedOut;
+                }
+            }
+            // Park: announce sleeping, then RE-CHECK before waiting —
+            // a producer that missed the announcement is caught by the
+            // re-check; one that saw it will take the door lock and
+            // ring the bell, which we can't miss while holding `door`.
+            let door = self.door.lock().unwrap_or_else(|e| e.into_inner());
+            self.sleeping.store(true, Ordering::SeqCst);
+            if self.pending.load(Ordering::SeqCst) > 0 || self.closed.load(Ordering::SeqCst) {
+                self.sleeping.store(false, Ordering::SeqCst);
+                continue;
+            }
+            let _door = match deadline {
+                None => self.bell.wait(door).unwrap_or_else(|e| e.into_inner()),
+                Some(d) => {
+                    let timeout = d.saturating_duration_since(Instant::now());
+                    let (g, _res) = self
+                        .bell
+                        .wait_timeout(door, timeout)
+                        .unwrap_or_else(|e| e.into_inner());
+                    g
+                }
+            };
+            self.sleeping.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Poison one lane's mutex (a thread panics while holding it) —
+    /// test hook for the poison-isolation guarantees, used by both the
+    /// unit tests here and the crate's integration stress tests. Not
+    /// part of the API surface.
+    #[doc(hidden)]
+    pub fn poison_lane(&self, lane: usize) {
+        let slot = &self.lanes[lane % self.lanes.len()];
+        let res = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _q = slot.0.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("poisoning lane on purpose");
+            })
+            .join()
+        });
+        assert!(res.is_err(), "poisoner thread must have panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn per_lane_fifo_and_no_loss() {
+        let lanes = IngestLanes::new(4);
+        for lane in 0..4usize {
+            for seq in 0..10u64 {
+                lanes.push_to(lane, (lane, seq)).unwrap();
+            }
+        }
+        let mut out = Vec::new();
+        assert_eq!(lanes.drain_into(&mut out), 40);
+        assert_eq!(out.len(), 40);
+        // drain order is lane-index order; within a lane, push order.
+        let mut last: Vec<Option<u64>> = vec![None; 4];
+        for (lane, seq) in &out {
+            if let Some(prev) = last[*lane] {
+                assert!(*seq > prev, "lane {lane} out of order");
+            }
+            last[*lane] = Some(*seq);
+        }
+        assert_eq!(lanes.pending_hint(), 0);
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_accepted_items() {
+        let lanes = IngestLanes::new(2);
+        lanes.push_to(0, 1u32).unwrap();
+        lanes.close();
+        assert_eq!(lanes.push_to(1, 2u32), Err(IngestClosed));
+        assert!(lanes.is_closed());
+        assert_eq!(lanes.wait(None), IngestWait::Closed);
+        let mut out = Vec::new();
+        assert_eq!(lanes.drain_into(&mut out), 1);
+        assert_eq!(out, vec![1]);
+        assert_eq!(lanes.drain_into(&mut out), 0);
+    }
+
+    #[test]
+    fn poisoned_lane_rejects_typed_while_other_lanes_serve() {
+        let lanes = IngestLanes::new(3);
+        lanes.push_to(0, 10u32).unwrap();
+        lanes.poison_lane(0);
+        assert_eq!(lanes.push_to(0, 11u32), Err(IngestClosed));
+        // Other lanes are unaffected.
+        lanes.push_to(1, 20u32).unwrap();
+        lanes.push_to(2, 30u32).unwrap();
+        // Drains recover the poisoned lane — the accepted item survives.
+        let mut out = Vec::new();
+        assert_eq!(lanes.drain_into(&mut out), 3);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    /// THE no-global-lock pin: a producer stalled on (or holding) one
+    /// lane must not block a producer on a different lane. If any
+    /// global lock sneaks back onto the push path this test deadlocks
+    /// (the harness timeout turns that into a failure).
+    #[test]
+    fn producers_on_distinct_lanes_never_block_each_other() {
+        let lanes = IngestLanes::new(2);
+        // Hold lane 0's lock from this thread...
+        let guard = lanes.lanes[0].0.lock().unwrap();
+        // ...while another thread pushes to lane 1. It must complete.
+        std::thread::scope(|s| {
+            let h = s.spawn(|| lanes.push_to(1, 7u32));
+            h.join().unwrap().unwrap();
+        });
+        drop(guard);
+        let mut out = Vec::new();
+        assert_eq!(lanes.drain_into(&mut out), 1);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn wait_deadline_times_out_when_idle() {
+        let lanes = IngestLanes::<u8>::new(1);
+        let d = Instant::now() + Duration::from_millis(20);
+        assert_eq!(lanes.wait(Some(d)), IngestWait::TimedOut);
+        assert!(Instant::now() >= d);
+    }
+
+    #[test]
+    fn parked_consumer_is_woken_by_push_and_by_close() {
+        let lanes = IngestLanes::new(1);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| lanes.wait(None));
+            std::thread::sleep(Duration::from_millis(10));
+            lanes.push_to(0, 1u8).unwrap();
+            assert_eq!(waiter.join().unwrap(), IngestWait::Ready);
+        });
+        let mut out = Vec::new();
+        lanes.drain_into(&mut out);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| lanes.wait(None));
+            std::thread::sleep(Duration::from_millis(10));
+            lanes.close();
+            assert_eq!(waiter.join().unwrap(), IngestWait::Closed);
+        });
+    }
+
+    #[test]
+    fn thread_hashing_is_stable_and_in_range() {
+        let lanes = IngestLanes::<u8>::new(4);
+        let a = lanes.lane_for_current_thread();
+        let b = lanes.lane_for_current_thread();
+        assert_eq!(a, b);
+        assert!(a < 4);
+    }
+}

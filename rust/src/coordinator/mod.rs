@@ -5,6 +5,22 @@
 //!
 //! * [`service`] — leader thread owning the job queue; clients submit
 //!   per-worker tensors and receive results over channels;
+//! * [`ingest`] — the sharded front door. Submits land on per-thread
+//!   hashed MPSC lanes ([`ingest::IngestLanes`]): each lane is its own
+//!   cache-line-padded lock, so producers on distinct lanes never block
+//!   each other and there is **no global lock on the submit hot path**
+//!   (the old single `Mutex<Sender>` serialized every submitter across
+//!   the channel send — a self-inflicted serial term, exactly the δ/ε
+//!   costs the paper says the classic model hides). The leader drains
+//!   lanes in lane-index order (per-lane FIFO preserved), parks on an
+//!   eventcount doorbell producers ring only when it actually sleeps,
+//!   and on close keeps sweeping until a sweep returns empty — zero
+//!   accepted jobs dropped. Draining and the epoch probe compose
+//!   unchanged: the leader still reads one table view per flush cycle
+//!   (top of cycle, after the drain), so hot swaps land between
+//!   cycles with the same guarantees as before sharding. A poisoned
+//!   lane (client panic mid-submit) degrades that lane's submitters to
+//!   `ServiceStopped` while every other lane keeps serving;
 //! * [`batcher`] — gradient bucketing: small tensors from concurrent jobs
 //!   fuse into one AllReduce round (amortizing the α term — exactly the
 //!   trade GenModel prices), flushed on size or time. With a campaign
@@ -72,6 +88,7 @@
 pub mod batcher;
 pub mod drift;
 pub mod handle;
+pub mod ingest;
 pub mod metrics;
 pub mod router;
 pub mod service;
@@ -82,6 +99,7 @@ pub use batcher::{
 };
 pub use drift::{DriftConfig, DriftMonitor, DEFAULT_LINK_BETA};
 pub use handle::{TableHandle, TableView};
+pub use ingest::{IngestClosed, IngestLanes, IngestWait};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
 pub use service::{AllReduceService, JobResult, ObserveMode, ServiceConfig};

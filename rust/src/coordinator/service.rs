@@ -1,20 +1,23 @@
 //! The AllReduce service: leader thread, job queue, fused execution.
 //!
 //! Clients call [`AllReduceService::submit`] with one tensor per worker
-//! and get a channel receiving the reduced result. The leader drains the
-//! queue, fuses jobs into buckets ([`super::batcher`]), routes each batch
-//! to a cached plan ([`super::router`], any registered [`AlgoSpec`] —
-//! GenTree by default), executes it on the real data plane (`exec` +
-//! reducer), and fans results back out.
+//! and get a channel receiving the reduced result. Submits land on
+//! sharded ingest lanes ([`super::ingest`] — no global lock; producers
+//! hash to lanes by thread id). The leader drains the lanes, fuses jobs
+//! into buckets ([`super::batcher`]), routes each batch to a cached
+//! plan ([`super::router`], any registered [`AlgoSpec`] — GenTree by
+//! default), executes it on the real data plane (`exec` + reducer), and
+//! fans results back out.
 //!
 //! Every failure is a typed [`ApiError`]: malformed submissions return
 //! `Err(ApiError::BadRequest)` immediately, submitting to a stopped
 //! service returns `Err(ApiError::ServiceStopped)`, and per-job results
 //! carry `ApiError::ExecFailed` when the data plane rejects a batch —
 //! no `assert!`/`expect` on the request path. That includes lock
-//! poisoning: a submitter thread that panics while holding the queue
-//! lock downgrades *other* submitters to `ServiceStopped` and leaves
-//! [`AllReduceService::stop`] able to drain and join — it can never
+//! poisoning: a submitter thread that panics while holding its ingest
+//! lane's lock poisons only that lane — submitters hashed there degrade
+//! to `ServiceStopped`, every other lane keeps serving, and
+//! [`AllReduceService::stop`] still drains and joins — it can never
 //! cascade into panics on every later request.
 //!
 //! With [`ServiceConfig::drift`] set (and a selection table wired in),
@@ -23,7 +26,7 @@
 //! [`super`] for the epoch/hot-swap semantics.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -44,6 +47,7 @@ use super::batcher::{
 };
 use super::drift::{DriftConfig, DriftMonitor};
 use super::handle::TableHandle;
+use super::ingest::{IngestLanes, IngestWait};
 use super::metrics::Metrics;
 use super::router::{PlanRouter, SelectionRules};
 
@@ -130,6 +134,12 @@ pub struct ServiceConfig {
     /// trip/swap/eviction events). `None`: no tracing; when set but
     /// disabled, every span site costs one atomic load.
     pub trace: Option<Arc<TraceRecorder>>,
+    /// Number of sharded submit lanes ([`IngestLanes`]). `0` (default)
+    /// sizes to the machine (`available_parallelism`, clamped to
+    /// 2..=16); `1` reproduces the old single-queue behavior — the
+    /// contention-bench baseline. Producers hash to a lane by thread
+    /// id, so producers on distinct lanes never block each other.
+    pub ingest_lanes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -145,6 +155,7 @@ impl Default for ServiceConfig {
             table: None,
             drift: None,
             trace: None,
+            ingest_lanes: 0,
         }
     }
 }
@@ -202,8 +213,20 @@ impl ServiceConfig {
     }
 }
 
+/// Closes the ingest lanes when the leader exits — normally (stop) or
+/// by panic — so producers always degrade to the typed stopped error
+/// instead of pushing into a queue nobody will ever drain (the moral
+/// equivalent of the old disconnected-`Sender` semantics).
+struct CloseOnExit(Arc<IngestLanes<Job>>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 pub struct AllReduceService {
-    tx: Mutex<Option<Sender<Job>>>,
+    ingest: Arc<IngestLanes<Job>>,
     leader: Mutex<Option<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
     /// The hot-swappable selection table, when one was configured.
@@ -270,11 +293,20 @@ impl AllReduceService {
             router = router.with_table_handle(h.clone());
         }
         let leader_handle = handle.clone();
-        let (tx, rx) = channel::<Job>();
+        let lanes = match cfg.ingest_lanes {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 16),
+            n => n,
+        };
+        let ingest: Arc<IngestLanes<Job>> = Arc::new(IngestLanes::new(lanes));
+        let leader_ingest = ingest.clone();
         let m = metrics.clone();
         let leader = std::thread::Builder::new()
             .name("allreduce-leader".into())
             .spawn(move || {
+                let _close = CloseOnExit(leader_ingest.clone());
                 // PJRT clients are thread-affine (Rc internally): build
                 // the reducer on the leader thread from the spec. A bad
                 // spec degrades to the scalar oracle path rather than
@@ -289,11 +321,11 @@ impl AllReduceService {
                     m.add(&m.reducer_fallbacks, 1);
                     Reducer::Scalar
                 });
-                leader_loop(rx, router, reducer, cfg, m, leader_handle)
+                leader_loop(leader_ingest, router, reducer, cfg, m, leader_handle)
             })
             .expect("spawn leader");
         AllReduceService {
-            tx: Mutex::new(Some(tx)),
+            ingest,
             leader: Mutex::new(Some(leader)),
             metrics,
             handle,
@@ -353,17 +385,18 @@ impl AllReduceService {
         }
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        // A submitter that panicked while holding this lock poisons it;
-        // mapping the poison to the typed error keeps every *other*
-        // client degrading gracefully instead of cascading panics.
-        let guard = self.tx.lock().map_err(|_| ApiError::ServiceStopped)?;
-        let tx = guard.as_ref().ok_or(ApiError::ServiceStopped)?;
-        tx.send(Job {
-            id,
-            tensors,
-            respond: rtx,
-        })
-        .map_err(|_| ApiError::ServiceStopped)?;
+        // Sharded push: one lane lock (hashed by thread id) + one atomic
+        // — no global lock, so submitters on distinct lanes never block
+        // each other. A closed or poisoned lane degrades to the typed
+        // stopped error, never a panic; a submitter that panicked while
+        // holding its lane lock poisons only that lane.
+        self.ingest
+            .push(Job {
+                id,
+                tensors,
+                respond: rtx,
+            })
+            .map_err(|_| ApiError::ServiceStopped)?;
         self.metrics.add(&self.metrics.jobs_submitted, 1);
         // Span site: when tracing is wired but disabled this is exactly
         // one atomic load (the enabled gate) — nothing is constructed.
@@ -387,14 +420,23 @@ impl AllReduceService {
             .map_err(|_| ApiError::ServiceStopped)?
     }
 
-    /// Stop accepting jobs and join the leader after it drains the queue.
-    /// Idempotent; subsequent [`submit`](Self::submit) calls return
-    /// `Err(ApiError::ServiceStopped)`. Poisoned locks are recovered —
-    /// the guarded data (a sender/handle `Option`) is always intact —
-    /// so shutdown completes even after a client panicked mid-submit.
+    /// Number of sharded submit lanes this service ingests through
+    /// (bench/CI reporting — `ingest_lane_count`).
+    pub fn ingest_lanes(&self) -> usize {
+        self.ingest.lane_count()
+    }
+
+    /// Stop accepting jobs and join the leader after it drains the
+    /// lanes. Idempotent; subsequent [`submit`](Self::submit) calls
+    /// return `Err(ApiError::ServiceStopped)`. Every job accepted
+    /// before the close is still served: the leader keeps sweeping the
+    /// lanes until a sweep comes back empty (see
+    /// [`super::ingest`] for why that suffices), and poisoned lane
+    /// locks are recovered, so shutdown completes even after a client
+    /// panicked mid-submit.
     pub fn stop(&self) {
-        // Close queue → leader drains and exits.
-        drop(self.tx.lock().unwrap_or_else(|e| e.into_inner()).take());
+        // Close lanes → leader drains the accepted backlog and exits.
+        self.ingest.close();
         if let Some(h) = self.leader.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = h.join();
         }
@@ -408,7 +450,7 @@ impl Drop for AllReduceService {
 }
 
 fn leader_loop(
-    rx: Receiver<Job>,
+    ingest: Arc<IngestLanes<Job>>,
     router: PlanRouter,
     reducer: Reducer,
     cfg: ServiceConfig,
@@ -443,10 +485,26 @@ fn leader_loop(
     let mut queue: Vec<Job> = Vec::new();
     loop {
         // Wait for work (or a flush deadline when the queue is non-empty).
+        // Draining never blocks producers globally: each sweep takes the
+        // per-lane locks one at a time, so a producer at worst waits for
+        // its own lane's handoff.
         if queue.is_empty() {
-            match rx.recv() {
-                Ok(j) => queue.push(j),
-                Err(_) => break, // all senders gone
+            match ingest.wait(None) {
+                IngestWait::Ready => {
+                    ingest.drain_into(&mut queue);
+                }
+                IngestWait::Closed => {
+                    // Shutdown: sweep until a sweep comes back empty —
+                    // only then has every job accepted before the close
+                    // been collected (zero dropped jobs).
+                    if ingest.drain_into(&mut queue) == 0 {
+                        break;
+                    }
+                }
+                IngestWait::TimedOut => {}
+            }
+            if queue.is_empty() {
+                continue; // spurious wakeup or racing sweep
             }
         }
         // Accumulate until the flush window closes or the bucket fills.
@@ -457,17 +515,21 @@ fn leader_loop(
         let mut queued_floats: usize = queue.iter().map(|j| j.tensors[0].len()).sum();
         let deadline = Instant::now() + policy.flush_window(queued_floats, cfg.flush_after);
         while queued_floats < policy.bucket_floats {
-            let now = Instant::now();
-            if now >= deadline {
+            if Instant::now() >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => {
-                    queued_floats += j.tensors[0].len();
-                    queue.push(j);
+            match ingest.wait(Some(deadline)) {
+                IngestWait::Ready => {
+                    let start = queue.len();
+                    ingest.drain_into(&mut queue);
+                    queued_floats += queue[start..]
+                        .iter()
+                        .map(|j| j.tensors[0].len())
+                        .sum::<usize>();
                 }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                // Closed: flush what we hold now; the top of the next
+                // cycle runs the drain-until-empty shutdown sweep.
+                IngestWait::TimedOut | IngestWait::Closed => break,
             }
         }
         // Pick up tables swapped in from OUTSIDE this leader (a fleet
@@ -1034,20 +1096,18 @@ mod tests {
 
     #[test]
     fn poisoned_submit_lock_degrades_to_typed_error_not_panic() {
-        // A client thread that panics while holding the queue lock used
-        // to poison it for everyone: every later submit would *panic* on
-        // the unwrap instead of failing typed. Now other submitters get
-        // ServiceStopped and shutdown still drains and joins cleanly.
+        // A client thread that panics while holding the submit-path lock
+        // used to poison it for everyone: every later submit would
+        // *panic* on the unwrap instead of failing typed. With sharded
+        // lanes, poison EVERY lane — the worst case, equivalent to the
+        // old single poisoned queue — and submissions still degrade to
+        // ServiceStopped while shutdown drains and joins cleanly.
         let svc = make_service(2, 1000);
         svc.allreduce(tensors(2, 10, 0)).unwrap();
-        let svc = std::sync::Arc::new(svc);
-        let poisoner = svc.clone();
-        let _ = std::thread::spawn(move || {
-            let _guard = poisoner.tx.lock().unwrap();
-            panic!("client panics while holding the submit lock");
-        })
-        .join();
-        // Lock is now poisoned: submissions degrade, they never panic.
+        for lane in 0..svc.ingest.lane_count() {
+            svc.ingest.poison_lane(lane);
+        }
+        // Locks are now poisoned: submissions degrade, they never panic.
         assert_eq!(
             svc.submit(tensors(2, 10, 1)).err(),
             Some(ApiError::ServiceStopped)
@@ -1056,11 +1116,59 @@ mod tests {
             svc.allreduce(tensors(2, 10, 2)).err(),
             Some(ApiError::ServiceStopped)
         );
-        // stop() recovers the poisoned guards, closes the queue, and
+        // stop() recovers the poisoned lane locks, closes the lanes, and
         // joins the leader — idempotently. Drop must not hang either.
         svc.stop();
         svc.stop();
         drop(svc);
+    }
+
+    #[test]
+    fn poisoned_lane_leaves_other_lanes_serving() {
+        // Poison isolation — the sharded upgrade over the old single
+        // queue: a panicking client takes down its OWN lane only.
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy::with_cap(1000),
+                flush_after: Duration::from_millis(1),
+                ingest_lanes: 4,
+                ..ServiceConfig::default()
+            },
+        );
+        assert_eq!(svc.ingest_lanes(), 4);
+        let mine = svc.ingest.lane_for_current_thread();
+        svc.ingest.poison_lane(mine);
+        // This thread's lane is dead: typed error, no panic.
+        assert_eq!(
+            svc.submit(tensors(2, 10, 1)).err(),
+            Some(ApiError::ServiceStopped)
+        );
+        // Threads hashed to any OTHER lane are still served. Spawned
+        // threads get fresh ids, so a non-colliding one turns up fast
+        // (P(collide) = 1/4 per try).
+        let mut served = false;
+        for i in 0..64u64 {
+            let outcome = std::thread::scope(|s| {
+                s.spawn(|| {
+                    if svc.ingest.lane_for_current_thread() == mine {
+                        return None;
+                    }
+                    Some(svc.allreduce(tensors(2, 16, i)))
+                })
+                .join()
+                .unwrap()
+            });
+            if let Some(res) = outcome {
+                res.unwrap();
+                served = true;
+                break;
+            }
+        }
+        assert!(served, "64 spawned threads all hashed to the poisoned lane");
+        svc.stop();
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct FleetSpec {
     pub reducer: ReducerSpec,
     /// Batcher split-margin floor ([`ServiceConfig::with_selection_table`]).
     pub min_split_margin: f64,
+    /// Submit-side ingest lane count ([`ServiceConfig::ingest_lanes`]):
+    /// `0` = auto-size to the host's parallelism, `1` = a single lane
+    /// (the pre-sharding serialized front door — the contention
+    /// baseline `repro fleet --ingest-burst` compares against).
+    pub ingest_lanes: usize,
 }
 
 /// One registered class: its running service, live table handle, and
@@ -133,6 +138,7 @@ impl FleetController {
             policy: spec.policy.clone(),
             flush_after: spec.flush_after,
             observe: spec.observe,
+            ingest_lanes: spec.ingest_lanes,
             ..ServiceConfig::default()
         }
         .with_selection_table(&spec.table, &spec.class, spec.min_split_margin)?
@@ -227,6 +233,7 @@ mod tests {
             observe: ObserveMode::Sim,
             reducer: ReducerSpec::Scalar,
             min_split_margin: 1.25,
+            ingest_lanes: 0,
         }
     }
 

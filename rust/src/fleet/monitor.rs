@@ -27,7 +27,7 @@ use crate::coordinator::drift::attribute_worst;
 use crate::coordinator::PlanRouter;
 use crate::model::params::Environment;
 use crate::telemetry::{
-    calibrate, score_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
+    calibrate, score_class_against_table, summarize, Recorder, TelemetryCursor, TelemetrySnapshot,
 };
 use crate::trace::{Span, SpanKind, TraceRecorder};
 
@@ -155,7 +155,9 @@ impl FleetMonitor {
         }
         for (class, entry) in entries {
             let view = entry.handle.view();
-            let scored = score_against_table(&fresh.restrict_class(class), &view.table);
+            // Clone-free class slice: filter while scoring instead of
+            // materializing a restricted snapshot per class per check.
+            let scored = score_class_against_table(&fresh, class, &view.table);
             let summary = summarize(&scored);
             let tripped = summary.matched > 0 && summary.max_abs_rel_err >= entry.threshold;
             if tripped {
@@ -363,6 +365,7 @@ mod tests {
             observe: ObserveMode::Sim,
             reducer: ReducerSpec::Scalar,
             min_split_margin: 1.25,
+            ingest_lanes: 0,
         }
     }
 

@@ -205,6 +205,7 @@ mod tests {
                     observe: ObserveMode::Sim,
                     reducer: ReducerSpec::Scalar,
                     min_split_margin: 1.25,
+                    ingest_lanes: 0,
                 })
                 .unwrap();
         }

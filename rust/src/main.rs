@@ -93,8 +93,10 @@ USAGE: repro <subcommand> [options]
              [--congest 20] [--drift-threshold 0.5] [--beta 6.4e-9]
              [--algos a1,a2] [--min-split-margin 1.25] [--observe sim|wall]
              [--scalar] [--bench-out BENCH_campaign.json]
-             [--trace-out trace.json]
+             [--trace-out trace.json] [--ingest-lanes 0]
+             [--ingest-burst 0] [--ingest-burst-jobs 64]
              [--expect-fit] [--expect-swap c1,c2] [--expect-hold c1,c2]
+             [--expect-ingest-speedup]
              (N topology-class coordinators behind ONE telemetry plane; a
               class spec is class[@threshold][!stale] — !stale starts that
               class from a blind δ=ε=0 table; --congest scales the serving
@@ -103,6 +105,13 @@ USAGE: repro <subcommand> [options]
               monitor scores every class under its own drift budget, pools
               cross-class cps cells into the §3.4 fit, and pushes
               recalibrated tables to every rack whose routing changes;
+              --ingest-lanes: submit-lane count per service, 0 = auto,
+              1 = the pre-sharding single-queue baseline;
+              --ingest-burst N: after the waves, N producer threads hammer
+              one class's front door (×--ingest-burst-jobs submits each),
+              once sharded and once single-lane, recording
+              ingest_submits_per_s / ingest_single_lane_submits_per_s /
+              ingest_lane_count under --bench-out;
               --expect-* turn the run's claims into exit-code assertions)
   campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
@@ -690,6 +699,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "--min-split-margin is a winner/runner-up ratio and must be ≥ 1.0, \
          got {min_split_margin}"
     );
+    let ingest_lanes: usize = args.opt_parse_or("ingest-lanes", 0)?;
     // Fleet scoring compares observed seconds against model predictions,
     // so the default clock is the flow-simulated one: wall seconds of the
     // in-process scalar executor measure this host, not the modeled fabric.
@@ -773,6 +783,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             observe,
             reducer: reducer.clone(),
             min_split_margin,
+            ingest_lanes,
         })?;
     }
     println!(
@@ -839,16 +850,46 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             tsnap.dropped
         );
     }
+    // Submit-side contention probe (ci.sh's ingest smoke): T producer
+    // threads hammer one class's front door through a throwaway fleet,
+    // once with the configured lane count and once with the pre-sharding
+    // single lane. The ratio is the tracked evidence that the sharded
+    // ingest actually removed the global-lock serial term.
+    let burst_threads: usize = args.opt_parse_or("ingest-burst", 0)?;
+    let burst_jobs: usize = args.opt_parse_or("ingest-burst-jobs", 64)?.max(1);
+    let burst = if burst_threads > 0 {
+        let class = &config.classes[0].class;
+        let (sharded, lanes_used) =
+            fleet_ingest_burst(class, &true_env, ingest_lanes, burst_threads, burst_jobs)?;
+        let (single, _) = fleet_ingest_burst(class, &true_env, 1, burst_threads, burst_jobs)?;
+        println!(
+            "ingest burst: {burst_threads} producer(s) × {burst_jobs} submit(s) each — \
+             {lanes_used} lane(s): {sharded:.0} submit/s; single lane: {single:.0} submit/s \
+             (×{:.2})",
+            sharded / single.max(1e-9)
+        );
+        Some((sharded, single, lanes_used))
+    } else {
+        None
+    };
     if let Some(bench_out) = args.opt("bench-out") {
+        use genmodel::util::json::Json;
         let mut entries = report.bench_entries();
         if let Some(tsnap) = &tsnap {
-            use genmodel::util::json::Json;
             entries.push(("trace_events".to_string(), Json::num(tsnap.events.len() as f64)));
             entries.push(("trace_dropped".to_string(), Json::num(tsnap.dropped as f64)));
             entries.push((
                 "trace_unexplained_frac".to_string(),
                 Json::num(tsnap.unexplained_frac()),
             ));
+        }
+        if let Some((sharded, single, lanes_used)) = burst {
+            entries.push(("ingest_submits_per_s".to_string(), Json::num(sharded)));
+            entries.push((
+                "ingest_single_lane_submits_per_s".to_string(),
+                Json::num(single),
+            ));
+            entries.push(("ingest_lane_count".to_string(), Json::num(lanes_used as f64)));
         }
         merge_bench_json(bench_out, entries)?;
         println!("bench record → {bench_out}");
@@ -900,7 +941,97 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if args.flag("expect-ingest-speedup") {
+        let Some((sharded, single, lanes_used)) = burst else {
+            anyhow::bail!("--expect-ingest-speedup requires --ingest-burst <threads>");
+        };
+        anyhow::ensure!(
+            lanes_used > 1,
+            "--expect-ingest-speedup: the sharded run resolved to {lanes_used} lane(s); \
+             pass --ingest-lanes 0 (auto) or ≥ 2"
+        );
+        anyhow::ensure!(
+            sharded > single,
+            "--expect-ingest-speedup: sharded ingest ({sharded:.0} submit/s over {lanes_used} \
+             lane(s)) did not beat the single-lane baseline ({single:.0} submit/s) — \
+             the front door is serializing producers again"
+        );
+    }
     Ok(())
+}
+
+/// One leg of the `--ingest-burst` probe: spawn a throwaway one-class
+/// fleet with `lanes` submit lanes, fire `threads` producer threads at
+/// its front door (`per_thread` 64-float submits each), and return the
+/// aggregate accepted-submit rate plus the lane count the service
+/// actually resolved (`0` = auto). Every accepted job is then received
+/// to completion — the probe doubles as a zero-drop check under
+/// contention.
+fn fleet_ingest_burst(
+    class: &str,
+    env: &Environment,
+    lanes: usize,
+    threads: usize,
+    per_thread: usize,
+) -> anyhow::Result<(f64, usize)> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let tensor = 64usize;
+    let topo = workloads::parse_topology(class)?;
+    let candidates = default_candidates(&topo);
+    let grid = BTreeMap::from([(
+        class.to_string(),
+        BTreeSet::from([PlanRouter::bucket(tensor)]),
+    )]);
+    let table = table_from_model(&grid, &candidates, env)?;
+    let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+    fleet.register(FleetSpec {
+        class: class.to_string(),
+        threshold: 0.5,
+        table,
+        env: env.clone(),
+        candidates,
+        // A huge cap + long window so the leader drains whole bursts per
+        // cycle instead of flushing per job: the probe times the submit
+        // path, not the executor.
+        policy: BatchPolicy::with_cap(1 << 20),
+        flush_after: std::time::Duration::from_micros(200),
+        observe: ObserveMode::Wall,
+        reducer: ReducerSpec::Scalar,
+        min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
+        ingest_lanes: lanes,
+    })?;
+    let entry = fleet.entry(class).expect("registered above");
+    let svc = &entry.service;
+    let n_workers = entry.n_workers;
+    let total = threads * per_thread;
+    let start = std::time::Instant::now();
+    let receivers = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    (0..per_thread)
+                        .map(|_| {
+                            let tensors: Vec<Vec<f32>> =
+                                (0..n_workers).map(|_| vec![1.0f32; tensor]).collect();
+                            svc.submit(tensors)
+                        })
+                        .collect::<Result<Vec<_>, _>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("burst producer panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })?;
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    for rx in receivers.into_iter().flatten() {
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("ingest burst: leader dropped an accepted job"))??;
+    }
+    let lanes_used = svc.ingest_lanes();
+    fleet.stop();
+    Ok((total as f64 / secs, lanes_used))
 }
 
 /// A latency quantile for humans: `-` when the histogram never recorded
@@ -1070,8 +1201,19 @@ fn cmd_score(args: &Args) -> anyhow::Result<()> {
         !snap.is_empty(),
         "telemetry snapshot {path} has no cells (serve with --telemetry-out first)"
     );
-    let rows = match args.opt("in") {
-        Some(p) => campaign::load_rows(std::path::Path::new(p))?,
+    // Zero-copy artifact read: the rows borrow straight from the file
+    // text (held alive alongside them) instead of allocating owned
+    // Strings per row — `repro score` only joins against them.
+    let artifact = match args.opt("in") {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("reading {p}: {e}"))?;
+            Some((p, text))
+        }
+        None => None,
+    };
+    let rows = match &artifact {
+        Some((p, text)) => campaign::parse_row_views(text, p)?,
         None => Vec::new(),
     };
     let env = campaign::EnvKind::parse(args.opt_or("env", "paper"))?.environment();

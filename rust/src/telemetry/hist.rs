@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::api::ApiError;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonRef};
 
 /// Number of log2 bins: `2^0` ns up to `2^63` ns (~292 years) — every
 /// representable latency lands in a bin, no overflow path.
@@ -182,10 +182,17 @@ impl HistSnapshot {
 
     /// Parse the sparse bins object written by [`Self::bins_to_json`].
     pub fn bins_from_json(v: &Json, sum_nanos: u64) -> Result<HistSnapshot, ApiError> {
+        Self::bins_from_json_ref(&v.borrowed(), sum_nanos)
+    }
+
+    /// Zero-copy twin of [`Self::bins_from_json`]: parses bin keys and
+    /// counts straight off a borrowed tree — no `String` per bin key.
+    /// The owned path delegates here, so the two cannot drift.
+    pub fn bins_from_json_ref(v: &JsonRef<'_>, sum_nanos: u64) -> Result<HistSnapshot, ApiError> {
         let bad = |what: String| ApiError::BadRequest {
             reason: format!("telemetry histogram: {what}"),
         };
-        let Json::Obj(m) = v else {
+        let JsonRef::Obj(m) = v else {
             return Err(bad("bins are not an object".into()));
         };
         let mut out = HistSnapshot {

@@ -56,8 +56,10 @@
 //! [`TelemetryCursor`] ([`Recorder::cursor`]) — per-consumer delta
 //! state, so a per-service drift monitor and a fleet-level monitor
 //! consuming the same stream never starve or re-trip one another, and
-//! [`TelemetrySnapshot::restrict_class`] slices one class's cells out
-//! of the pooled stream for per-class scoring.
+//! [`score::score_class_against_table`] scores one class's cells out of
+//! the pooled stream without cloning a restricted snapshot
+//! ([`TelemetrySnapshot::restrict_class`] remains for consumers that
+//! need an owned slice, e.g. recalibration inputs).
 //! Degenerate cells (zero/non-finite predicted or observed seconds)
 //! yield no relative error and are reported as `ScoreSummary::skipped`
 //! rather than NaN-sorting into the worst-offender slot.
@@ -70,4 +72,7 @@ pub mod score;
 pub use calibrate::{bench_rows, calibrate, recalibrated_table, Calibration};
 pub use hist::{bin_of, HistSnapshot, LatencyHist, BINS, MAX_EXACT_TOTAL};
 pub use recorder::{CellKey, CellSnapshot, Recorder, TelemetryCursor, TelemetrySnapshot, SCHEMA};
-pub use score::{score_against_table, score_cells, summarize, ScoreSummary, ScoredCell};
+pub use score::{
+    score_against_table, score_cells, score_class_against_table, summarize, PredictionRow,
+    ScoreSummary, ScoredCell,
+};

@@ -9,6 +9,8 @@
 //! side, which is what gives the calibrator (`super::calibrate`) the
 //! distinct-`n` spread the §3.4 fit needs.
 
+use std::borrow::Borrow;
+use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::fs;
@@ -17,7 +19,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::api::ApiError;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonRef};
 
 use super::hist::{saturating_total_add, HistSnapshot, LatencyHist, MAX_EXACT_TOTAL};
 
@@ -40,6 +42,71 @@ pub struct CellKey {
 impl fmt::Display for CellKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}|2^{}|{}", self.class, self.bucket, self.algo)
+    }
+}
+
+/// Borrowed view of a cell identity, so the hot-path map lookup in
+/// [`Recorder::record`] can probe the `BTreeMap<CellKey, _>` with the
+/// caller's `&str`s instead of allocating two owned `String`s per
+/// observation. `CellKey` implements `Borrow<dyn CellProbe>`, and the
+/// `Ord` on `dyn CellProbe` compares the same `(class, bucket, algo)`
+/// tuple in the same order as `CellKey`'s derived `Ord` — the
+/// `Borrow` contract the map lookup relies on (pinned by a test).
+trait CellProbe {
+    fn class(&self) -> &str;
+    fn bucket(&self) -> u32;
+    fn algo(&self) -> &str;
+}
+
+impl CellProbe for CellKey {
+    fn class(&self) -> &str {
+        &self.class
+    }
+    fn bucket(&self) -> u32 {
+        self.bucket
+    }
+    fn algo(&self) -> &str {
+        &self.algo
+    }
+}
+
+impl CellProbe for (&str, u32, &str) {
+    fn class(&self) -> &str {
+        self.0
+    }
+    fn bucket(&self) -> u32 {
+        self.1
+    }
+    fn algo(&self) -> &str {
+        self.2
+    }
+}
+
+impl<'a> Borrow<dyn CellProbe + 'a> for CellKey {
+    fn borrow(&self) -> &(dyn CellProbe + 'a) {
+        self
+    }
+}
+
+impl PartialEq for dyn CellProbe + '_ {
+    fn eq(&self, other: &Self) -> bool {
+        (self.class(), self.bucket(), self.algo())
+            == (other.class(), other.bucket(), other.algo())
+    }
+}
+
+impl Eq for dyn CellProbe + '_ {}
+
+impl PartialOrd for dyn CellProbe + '_ {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for dyn CellProbe + '_ {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        (self.class(), self.bucket(), self.algo())
+            .cmp(&(other.class(), other.bucket(), other.algo()))
     }
 }
 
@@ -76,15 +143,22 @@ impl Recorder {
         secs: f64,
     ) {
         let cell = {
+            // Borrow-first: probe with the caller's `&str`s. The key
+            // strings are allocated exactly once per cell — at first
+            // insert — not once per observation (the cell set is tiny
+            // and stable, the observation stream is the hot path).
             let mut cells = self.cells.lock().unwrap();
-            cells
-                .entry(CellKey {
-                    class: class.to_string(),
-                    bucket,
-                    algo: algo.to_string(),
-                })
-                .or_default()
-                .clone()
+            match cells.get(&(class, bucket, algo) as &dyn CellProbe) {
+                Some(cell) => cell.clone(),
+                None => cells
+                    .entry(CellKey {
+                        class: class.to_string(),
+                        bucket,
+                        algo: algo.to_string(),
+                    })
+                    .or_default()
+                    .clone(),
+            }
         };
         cell.n_workers.store(n_workers as u64, Ordering::Relaxed);
         // Saturating at the JSON-exact ceiling, like the histogram's
@@ -233,6 +307,12 @@ impl TelemetrySnapshot {
     /// splits a shared recorder's pooled delta back into per-class
     /// slices for scoring under per-class drift budgets. Exact key
     /// match (fleet classes are registered spellings, not user input).
+    ///
+    /// This clones each retained cell because it builds an owned
+    /// snapshot (callers hand it to recalibration, which outlives the
+    /// source). Per-check scoring should **not** pay that copy: use
+    /// [`super::score_class_against_table`], which filters by class
+    /// while iterating borrowed cells.
     pub fn restrict_class(&self, class: &str) -> TelemetrySnapshot {
         TelemetrySnapshot {
             cells: self
@@ -338,32 +418,41 @@ impl TelemetrySnapshot {
     }
 
     pub fn from_json(v: &Json) -> Result<TelemetrySnapshot, ApiError> {
+        TelemetrySnapshot::from_json_ref(&v.borrowed())
+    }
+
+    /// Decode from a borrowed parse ([`JsonRef`]): the string fields of
+    /// the artifact stay borrowed slices of the source text until the
+    /// moment a `CellKey` is actually built, so [`Self::load`] does not
+    /// allocate one `String` per JSON string token. [`Self::from_json`]
+    /// delegates here through [`Json::borrowed`].
+    pub fn from_json_ref(v: &JsonRef<'_>) -> Result<TelemetrySnapshot, ApiError> {
         let bad = |what: String| ApiError::BadRequest {
             reason: format!("telemetry snapshot: {what}"),
         };
         let schema = v
             .get("schema")
-            .and_then(Json::as_str)
+            .and_then(JsonRef::as_str)
             .ok_or_else(|| bad("missing schema tag".into()))?;
         if schema != SCHEMA {
             return Err(bad(format!(
                 "schema {schema:?} is not the supported {SCHEMA:?}"
             )));
         }
-        let Some(Json::Arr(cells)) = v.get("cells") else {
+        let Some(JsonRef::Arr(cells)) = v.get("cells") else {
             return Err(bad("missing cells array".into()));
         };
         let mut out = BTreeMap::new();
         for cell in cells {
             let s = |k: &str| -> Result<String, ApiError> {
                 cell.get(k)
-                    .and_then(Json::as_str)
+                    .and_then(JsonRef::as_str)
                     .map(String::from)
                     .ok_or_else(|| bad(format!("cell missing string field {k:?}")))
             };
             let u = |k: &str| -> Result<u64, ApiError> {
                 cell.get(k)
-                    .and_then(Json::as_f64)
+                    .and_then(JsonRef::as_f64)
                     .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXACT_TOTAL as f64)
                     .map(|x| x as u64)
                     .ok_or_else(|| bad(format!("cell missing JSON-exact integer field {k:?}")))
@@ -373,7 +462,7 @@ impl TelemetrySnapshot {
                 bucket: u("bucket")? as u32,
                 algo: s("algo")?,
             };
-            let hist = HistSnapshot::bins_from_json(
+            let hist = HistSnapshot::bins_from_json_ref(
                 cell.get("hist").ok_or_else(|| bad("cell missing hist".into()))?,
                 u("sum_nanos")?,
             )?;
@@ -406,10 +495,13 @@ impl TelemetrySnapshot {
             path: path.display().to_string(),
             reason: e.to_string(),
         })?;
-        let v = Json::parse(&text).map_err(|e| ApiError::BadRequest {
+        // Borrowed parse straight over the file text: escape-free JSON
+        // strings (every key and nearly every value in practice) are
+        // slices of `text`, not per-token heap copies.
+        let v = JsonRef::parse(&text).map_err(|e| ApiError::BadRequest {
             reason: format!("{}: {e}", path.display()),
         })?;
-        TelemetrySnapshot::from_json(&v)
+        TelemetrySnapshot::from_json_ref(&v)
     }
 }
 
@@ -590,6 +682,49 @@ mod tests {
         assert_eq!(eights.cells.len(), 2);
         assert!(eights.cells.keys().all(|k| k.class == "single:8"));
         assert!(snap.restrict_class("single:999").is_empty());
+    }
+
+    #[test]
+    fn cell_probe_ordering_agrees_with_the_derived_key_ordering() {
+        // The `Borrow<dyn CellProbe>` lookup in `record` is only sound
+        // if the probe's Ord is *identical* to CellKey's derived Ord
+        // (class, then bucket, then algo). Cross-check every pair of a
+        // deliberately adversarial key set, including keys where a
+        // lexicographic-on-Display ordering would disagree.
+        let keys = [
+            ("a", 2, "ring"),
+            ("a", 10, "cps"),
+            ("a", 10, "ring"),
+            ("b", 1, "cps"),
+            ("single:8", 16, "cps"),
+            ("single:80", 2, "cps"),
+        ];
+        for l in &keys {
+            for r in &keys {
+                let lk = CellKey {
+                    class: l.0.into(),
+                    bucket: l.1,
+                    algo: l.2.into(),
+                };
+                let rk = CellKey {
+                    class: r.0.into(),
+                    bucket: r.1,
+                    algo: r.2.into(),
+                };
+                let lp: &dyn CellProbe = &(l.0, l.1, l.2);
+                let rp: &dyn CellProbe = &(r.0, r.1, r.2);
+                assert_eq!(lp.cmp(rp), lk.cmp(&rk), "{lk} vs {rk}");
+                let borrowed: &dyn CellProbe = lk.borrow();
+                assert_eq!(borrowed.cmp(rp), lk.cmp(&rk), "borrow {lk} vs {rk}");
+            }
+        }
+        // And the lookup itself resolves without allocating a key.
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 16, "cps", 64, 0.001);
+        rec.record("single:8", 8, 16, "cps", 64, 0.003);
+        let snap = rec.snapshot();
+        assert_eq!(snap.cells.len(), 1, "probe hit the existing cell");
+        assert_eq!(snap.overall_hist().count(), 2);
     }
 
     #[test]

@@ -9,10 +9,63 @@
 //! fallback (typically [`crate::api::Engine::predict_bucket`] under a
 //! chosen environment) for cells the artifact never swept.
 
-use crate::campaign::CampaignRow;
+use crate::campaign::{CampaignRow, RowView, SelectionTable};
 use crate::coordinator::PlanRouter;
 
-use super::recorder::{CellKey, TelemetrySnapshot};
+use super::recorder::{CellKey, CellSnapshot, TelemetrySnapshot};
+
+/// A prediction source row, abstracted over ownership: the owned
+/// [`CampaignRow`] and the zero-copy [`RowView`] (borrowed straight from
+/// the artifact text) score identically, so `repro score` can feed the
+/// joiner without first deep-copying every row into owned `String`s.
+pub trait PredictionRow {
+    /// Topology spec string (the campaign `topo` column).
+    fn topo(&self) -> &str;
+    /// Algorithm spec display form.
+    fn algo(&self) -> &str;
+    /// Swept payload size in floats.
+    fn size(&self) -> f64;
+    /// Predicted analytic seconds, when the sweep produced one.
+    fn model_s(&self) -> Option<f64>;
+    /// Whether the row carries an error instead of a result.
+    fn failed(&self) -> bool;
+}
+
+impl PredictionRow for CampaignRow {
+    fn topo(&self) -> &str {
+        &self.topo
+    }
+    fn algo(&self) -> &str {
+        &self.algo
+    }
+    fn size(&self) -> f64 {
+        self.size
+    }
+    fn model_s(&self) -> Option<f64> {
+        self.model_s
+    }
+    fn failed(&self) -> bool {
+        self.error.is_some()
+    }
+}
+
+impl PredictionRow for RowView<'_> {
+    fn topo(&self) -> &str {
+        &self.topo
+    }
+    fn algo(&self) -> &str {
+        &self.algo
+    }
+    fn size(&self) -> f64 {
+        self.size
+    }
+    fn model_s(&self) -> Option<f64> {
+        self.model_s
+    }
+    fn failed(&self) -> bool {
+        self.error.is_some()
+    }
+}
 
 /// One joined cell: what serving observed vs what the model predicted.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,30 +123,39 @@ pub struct ScoreSummary {
 /// payload), falling back to `predict(class, bucket, algo)` for cells no
 /// row covers. Cells are returned worst-relative-error first (unmatched
 /// cells last), so the report leads with the offenders.
-pub fn score_cells(
+pub fn score_cells<R: PredictionRow>(
     snap: &TelemetrySnapshot,
-    rows: &[CampaignRow],
+    rows: &[R],
     predict: impl Fn(&str, u32, &str) -> Option<f64>,
 ) -> Vec<ScoredCell> {
-    let mut out: Vec<ScoredCell> = snap
-        .cells
-        .iter()
+    score_iter(snap.cells.iter(), rows, predict)
+}
+
+/// The joiner behind [`score_cells`] and the class-filtered
+/// [`score_class_against_table`]: takes the cells as an iterator so a
+/// class filter composes without cloning a restricted snapshot first.
+fn score_iter<'s, R: PredictionRow>(
+    cells: impl Iterator<Item = (&'s CellKey, &'s CellSnapshot)>,
+    rows: &[R],
+    predict: impl Fn(&str, u32, &str) -> Option<f64>,
+) -> Vec<ScoredCell> {
+    let mut out: Vec<ScoredCell> = cells
         .map(|(key, cell)| {
             let mean_floats = cell.mean_floats();
             let from_rows = rows
                 .iter()
                 .filter(|r| {
-                    r.error.is_none()
-                        && r.model_s.is_some()
-                        && r.algo == key.algo
-                        && r.topo.eq_ignore_ascii_case(&key.class)
-                        && PlanRouter::bucket(r.size as usize) == key.bucket
+                    !r.failed()
+                        && r.model_s().is_some()
+                        && r.algo() == key.algo
+                        && r.topo().eq_ignore_ascii_case(&key.class)
+                        && PlanRouter::bucket(r.size() as usize) == key.bucket
                 })
                 .min_by(|a, b| {
-                    let d = |r: &CampaignRow| (r.size - mean_floats).abs();
+                    let d = |r: &R| (r.size() - mean_floats).abs();
                     d(a).total_cmp(&d(b))
                 })
-                .and_then(|r| r.model_s);
+                .and_then(|r| r.model_s());
             ScoredCell {
                 key: key.clone(),
                 n_workers: cell.n_workers,
@@ -132,13 +194,36 @@ pub fn score_cells(
 /// the fleet monitor, so their trip decisions cannot diverge.
 pub fn score_against_table(
     fresh: &TelemetrySnapshot,
-    table: &crate::campaign::SelectionTable,
+    table: &SelectionTable,
 ) -> Vec<ScoredCell> {
-    score_cells(fresh, &[], |class, bucket, algo| {
+    score_cells(fresh, &[] as &[CampaignRow], table_predictor(table))
+}
+
+/// [`score_against_table`] restricted to one topology class, filtering
+/// while iterating borrowed cells — the fleet monitor's per-class check
+/// path, which used to deep-clone a [`TelemetrySnapshot::restrict_class`]
+/// slice per class per check just to throw it away after scoring.
+pub fn score_class_against_table(
+    fresh: &TelemetrySnapshot,
+    class: &str,
+    table: &SelectionTable,
+) -> Vec<ScoredCell> {
+    score_iter(
+        fresh.cells.iter().filter(|(k, _)| k.class == class),
+        &[] as &[CampaignRow],
+        table_predictor(table),
+    )
+}
+
+/// The one definition of "the table's own prediction for a cell" shared
+/// by both table-scoring entry points (winner match + finite-positive
+/// stored seconds, nearest-bucket clamp as routing).
+fn table_predictor(table: &SelectionTable) -> impl Fn(&str, u32, &str) -> Option<f64> + '_ {
+    move |class, bucket, algo| {
         let choice = table.lookup(class, PlanRouter::bucket_size(bucket) as usize)?;
         (choice.algo == algo && choice.seconds.is_finite() && choice.seconds > 0.0)
             .then_some(choice.seconds)
-    })
+    }
 }
 
 /// Reduce scored cells to the headline accuracy numbers.
@@ -294,7 +379,7 @@ mod tests {
         for algo in ["a-zero", "b-nan", "d-fine", "e-none"] {
             rec.record("single:8", 8, 20, algo, 1_000_000, 0.030);
         }
-        let scored = score_cells(&rec.snapshot(), &[], |_, _, algo| match algo {
+        let scored = score_cells(&rec.snapshot(), &[] as &[CampaignRow], |_, _, algo| match algo {
             "a-zero" => Some(0.0),
             "b-nan" => Some(f64::NAN),
             "d-fine" => Some(0.020),
@@ -309,11 +394,41 @@ mod tests {
 
     #[test]
     fn empty_inputs_are_safe() {
-        let cells = score_cells(&TelemetrySnapshot::default(), &[], |_, _, _| None);
+        let cells =
+            score_cells(&TelemetrySnapshot::default(), &[] as &[CampaignRow], |_, _, _| None);
         assert!(cells.is_empty());
         let s = summarize(&cells);
         assert_eq!(s.matched, 0);
         assert_eq!(s.mean_abs_rel_err, 0.0);
         assert!(s.worst.is_none());
+    }
+
+    #[test]
+    fn class_scoring_equals_scoring_the_restricted_clone() {
+        // The fleet monitor's clone-free path must be byte-for-byte the
+        // old restrict_class-then-score path — same cells, same order,
+        // same predictions — and exact-match on class (no case folding:
+        // fleet classes are registered spellings).
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 20, "cps", 1_000_000, 0.030);
+        rec.record("single:8", 8, 16, "ring", 65_536, 0.002);
+        rec.record("single:4", 4, 16, "cps", 65_536, 0.001);
+        let snap = rec.snapshot();
+        let table = crate::campaign::table_from_choices(
+            crate::campaign::Metric::Model,
+            &[
+                ("single:8", 20, "cps", 0.020, f64::INFINITY),
+                ("single:8", 16, "ring", 0.004, f64::INFINITY),
+                ("single:4", 16, "cps", 0.002, f64::INFINITY),
+            ],
+        );
+        let direct = score_class_against_table(&snap, "single:8", &table);
+        let cloned = score_against_table(&snap.restrict_class("single:8"), &table);
+        assert_eq!(direct, cloned);
+        assert_eq!(direct.len(), 2);
+        assert!(direct.iter().all(|c| c.key.class == "single:8"));
+        assert!(direct.iter().all(|c| c.predicted_s.is_some()));
+        assert!(score_class_against_table(&snap, "SINGLE:8", &table).is_empty());
+        assert!(score_class_against_table(&snap, "single:999", &table).is_empty());
     }
 }

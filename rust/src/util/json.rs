@@ -4,7 +4,20 @@
 //! `artifacts/manifest.json`, experiment dumps, and the fit toolkit's
 //! input/output. Parsing is recursive-descent over bytes with a depth
 //! limit; serialization is canonical (object keys kept in insertion order).
+//!
+//! Two parse targets share the one grammar implementation:
+//!
+//! * [`Json`] — fully owned (`String` keys, `BTreeMap` objects), for
+//!   config-sized documents and anything mutated after parsing.
+//! * [`JsonRef`] — **zero-copy** (`Cow<'_, str>` strings borrowed from
+//!   the input wherever the text holds no escape, objects as
+//!   document-order pair vectors), in the spirit of serde_json_bytes'
+//!   value-over-shared-bytes: row-per-line artifact readers (campaign
+//!   memo resume, telemetry snapshots) parse each line without
+//!   allocating a `String` per key or per value. `Json::parse` is now a
+//!   thin wrapper that parses borrowed and deep-copies once.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -37,17 +50,24 @@ const MAX_DEPTH: usize = 128;
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, ParseError> {
-        let mut p = Parser {
-            bytes: text.as_bytes(),
-            pos: 0,
-        };
-        p.skip_ws();
-        let v = p.value(0)?;
-        p.skip_ws();
-        if p.pos != p.bytes.len() {
-            return Err(p.err("trailing content"));
+        JsonRef::parse(text).map(JsonRef::into_owned)
+    }
+
+    /// A borrowed [`JsonRef`] view of this tree (the bridge that lets
+    /// one `from_json_ref`-style reader serve both parse targets).
+    pub fn borrowed(&self) -> JsonRef<'_> {
+        match self {
+            Json::Null => JsonRef::Null,
+            Json::Bool(b) => JsonRef::Bool(*b),
+            Json::Num(x) => JsonRef::Num(*x),
+            Json::Str(s) => JsonRef::Str(Cow::Borrowed(s)),
+            Json::Arr(a) => JsonRef::Arr(a.iter().map(Json::borrowed).collect()),
+            Json::Obj(m) => JsonRef::Obj(
+                m.iter()
+                    .map(|(k, v)| (Cow::Borrowed(k.as_str()), v.borrowed()))
+                    .collect(),
+            ),
         }
-        Ok(v)
     }
 
     // ---- accessors -------------------------------------------------------
@@ -105,6 +125,98 @@ impl Json {
     }
 }
 
+/// A borrowed JSON value over the input text: strings are
+/// `Cow::Borrowed` slices of the source wherever the literal holds no
+/// escape sequence (owned only when unescaping forced a copy), and
+/// objects keep their pairs in document order. [`JsonRef::get`] scans
+/// pairs in **reverse**, so duplicate keys resolve last-wins — exactly
+/// the overwrite semantics the owned `BTreeMap` parse always had.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonRef<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Cow<'a, str>),
+    Arr(Vec<JsonRef<'a>>),
+    Obj(Vec<(Cow<'a, str>, JsonRef<'a>)>),
+}
+
+impl<'a> JsonRef<'a> {
+    /// Parse `text` without copying escape-free strings out of it.
+    pub fn parse(text: &'a str) -> Result<JsonRef<'a>, ParseError> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing content"));
+        }
+        Ok(v)
+    }
+
+    // ---- accessors (mirror `Json`'s) -------------------------------------
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonRef::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 && x.fract() == 0.0 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonRef::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonRef<'a>]> {
+        match self {
+            JsonRef::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&JsonRef<'a>> {
+        match self {
+            // Reverse: later duplicates shadow earlier ones (BTreeMap
+            // insert-overwrite parity).
+            JsonRef::Obj(m) => m.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Deep-copy into the owned representation (one allocation pass —
+    /// the only one a zero-copy reader ever pays, and only if asked).
+    pub fn into_owned(self) -> Json {
+        match self {
+            JsonRef::Null => Json::Null,
+            JsonRef::Bool(b) => Json::Bool(b),
+            JsonRef::Num(x) => Json::Num(x),
+            JsonRef::Str(s) => Json::Str(s.into_owned()),
+            JsonRef::Arr(a) => Json::Arr(a.into_iter().map(JsonRef::into_owned).collect()),
+            JsonRef::Obj(m) => Json::Obj(
+                m.into_iter()
+                    .map(|(k, v)| (k.into_owned(), v.into_owned()))
+                    .collect(),
+            ),
+        }
+    }
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -143,7 +255,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, ParseError> {
+    fn literal(&mut self, lit: &str, v: JsonRef<'a>) -> Result<JsonRef<'a>, ParseError> {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             Ok(v)
@@ -152,15 +264,15 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self, depth: usize) -> Result<Json, ParseError> {
+    fn value(&mut self, depth: usize) -> Result<JsonRef<'a>, ParseError> {
         if depth > MAX_DEPTH {
             return Err(self.err("max nesting depth exceeded"));
         }
         match self.peek() {
-            Some(b'n') => self.literal("null", Json::Null),
-            Some(b't') => self.literal("true", Json::Bool(true)),
-            Some(b'f') => self.literal("false", Json::Bool(false)),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'n') => self.literal("null", JsonRef::Null),
+            Some(b't') => self.literal("true", JsonRef::Bool(true)),
+            Some(b'f') => self.literal("false", JsonRef::Bool(false)),
+            Some(b'"') => Ok(JsonRef::Str(self.string()?)),
             Some(b'[') => self.array(depth),
             Some(b'{') => self.object(depth),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
@@ -168,13 +280,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self, depth: usize) -> Result<Json, ParseError> {
+    fn array(&mut self, depth: usize) -> Result<JsonRef<'a>, ParseError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
-            return Ok(Json::Arr(out));
+            return Ok(JsonRef::Arr(out));
         }
         loop {
             self.skip_ws();
@@ -182,7 +294,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(out)),
+                Some(b']') => return Ok(JsonRef::Arr(out)),
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or ']'"));
@@ -191,13 +303,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self, depth: usize) -> Result<Json, ParseError> {
+    fn object(&mut self, depth: usize) -> Result<JsonRef<'a>, ParseError> {
         self.expect(b'{')?;
-        let mut out = BTreeMap::new();
+        let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
-            return Ok(Json::Obj(out));
+            return Ok(JsonRef::Obj(out));
         }
         loop {
             self.skip_ws();
@@ -206,11 +318,12 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.skip_ws();
             let val = self.value(depth + 1)?;
-            out.insert(key, val);
+            // Document order; duplicates resolve last-wins in `get`.
+            out.push((key, val));
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(out)),
+                Some(b'}') => return Ok(JsonRef::Obj(out)),
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or '}'"));
@@ -219,13 +332,36 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn string(&mut self) -> Result<String, ParseError> {
+    fn string(&mut self) -> Result<Cow<'a, str>, ParseError> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        let start = self.pos;
+        // Fast path: scan to the closing quote; no escape seen means the
+        // literal IS the text — borrow it, zero allocation. Multibyte
+        // UTF-8 passes through untouched (validated once at the slice).
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break, // escape: fall into the owned path
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(_) => self.pos += 1,
+            }
+        }
+        // Slow path: seed with the escape-free prefix, then decode
+        // escape by escape into an owned buffer.
+        let mut out = String::from(
+            std::str::from_utf8(&self.bytes[start..self.pos])
+                .map_err(|_| self.err("invalid utf-8"))?,
+        );
         loop {
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(out),
+                Some(b'"') => return Ok(Cow::Owned(out)),
                 Some(b'\\') => match self.bump() {
                     Some(b'"') => out.push('"'),
                     Some(b'\\') => out.push('\\'),
@@ -292,7 +428,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> Result<Json, ParseError> {
+    fn number(&mut self) -> Result<JsonRef<'a>, ParseError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -317,7 +453,7 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
-            .map(Json::Num)
+            .map(JsonRef::Num)
             .map_err(|_| self.err("bad number"))
     }
 }
@@ -449,6 +585,58 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let out = v.to_string();
         assert_eq!(Json::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn borrowed_parse_borrows_escape_free_strings() {
+        let src = r#"{"key":"single:8|2^12|cps","algo":"ring"}"#;
+        let v = JsonRef::parse(src).unwrap();
+        match v.get("key").unwrap() {
+            JsonRef::Str(Cow::Borrowed(s)) => assert_eq!(*s, "single:8|2^12|cps"),
+            other => panic!("expected a borrowed string, got {other:?}"),
+        }
+        // An escaped string forces the one owned copy — and only there.
+        let v = JsonRef::parse(r#"{"a":"x\ny","b":"plain"}"#).unwrap();
+        assert!(matches!(v.get("a").unwrap(), JsonRef::Str(Cow::Owned(_))));
+        assert!(matches!(v.get("b").unwrap(), JsonRef::Str(Cow::Borrowed(_))));
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn borrowed_parse_handles_unicode_and_escaped_prefix() {
+        // Multibyte UTF-8 stays borrowed; an escape mid-string keeps the
+        // escape-free prefix intact in the owned copy.
+        let v = JsonRef::parse("\"héllo 😀\"").unwrap();
+        assert!(matches!(&v, JsonRef::Str(Cow::Borrowed(s)) if *s == "héllo 😀"));
+        let v = JsonRef::parse(r#""prefix héllo\tsuffix""#).unwrap();
+        assert_eq!(v.as_str(), Some("prefix héllo\tsuffix"));
+    }
+
+    #[test]
+    fn borrowed_get_is_last_wins_like_the_owned_parse() {
+        let src = r#"{"a":1,"b":2,"a":3}"#;
+        let borrowed = JsonRef::parse(src).unwrap();
+        assert_eq!(borrowed.get("a").unwrap().as_f64(), Some(3.0));
+        let owned = Json::parse(src).unwrap();
+        assert_eq!(owned.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(borrowed.into_owned(), owned);
+    }
+
+    #[test]
+    fn into_owned_equals_owned_parse_and_borrowed_bridges_back() {
+        let src = r#"{"entries":[{"file":"a.hlo.txt","k":2}],"x":-0.25,"s":"a\nb"}"#;
+        let owned = Json::parse(src).unwrap();
+        assert_eq!(JsonRef::parse(src).unwrap().into_owned(), owned);
+        // Json::borrowed round-trips through the borrowed view.
+        assert_eq!(owned.borrowed().into_owned(), owned);
+        assert_eq!(owned.borrowed().get("x").unwrap().as_f64(), Some(-0.25));
+    }
+
+    #[test]
+    fn borrowed_parse_rejects_the_same_garbage() {
+        for bad in ["", "{", "[1,]", "1 2", "\"unterminated", "nul", "\"a\\q\""] {
+            assert!(JsonRef::parse(bad).is_err(), "{bad:?} should fail");
+        }
     }
 
     #[test]

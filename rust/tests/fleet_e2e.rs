@@ -69,6 +69,7 @@ fn spec(class: &str, buckets: &[u32], pricing: ModelParams, threshold: f64) -> F
         observe: ObserveMode::Sim, // deterministic observed seconds
         reducer: ReducerSpec::Scalar,
         min_split_margin: 1.25,
+        ingest_lanes: 0,
     }
 }
 

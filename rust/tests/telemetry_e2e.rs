@@ -141,13 +141,17 @@ fn score_detects_drift_and_calibration_reroutes_the_incast_bucket() {
     // the congested fabric) vs predicted (blind model). The incast-heavy
     // big-n big-bucket cell is the worst offender by far; the
     // incast-free small-n cells score close.
-    let scored = telemetry::score_cells(&snap, &[], |class, bucket, algo| {
-        let topo = parse_topology(class).ok()?;
-        let spec = AlgoSpec::parse(algo).ok()?;
-        Engine::new(topo, stale_env.clone())
-            .predict_bucket(&spec, bucket)
-            .ok()
-    });
+    let scored = telemetry::score_cells(
+        &snap,
+        &[] as &[genmodel::campaign::CampaignRow],
+        |class, bucket, algo| {
+            let topo = parse_topology(class).ok()?;
+            let spec = AlgoSpec::parse(algo).ok()?;
+            Engine::new(topo, stale_env.clone())
+                .predict_bucket(&spec, bucket)
+                .ok()
+        },
+    );
     let summary = telemetry::summarize(&scored);
     assert_eq!(summary.matched, 12, "every cell got a prediction");
     assert!(

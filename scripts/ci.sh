@@ -130,4 +130,18 @@ step cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 32 --te
 step cargo run --release -p genmodel --quiet -- trace --in target/trace_smoke.json \
     --check --chrome target/trace_smoke_chrome.json
 
+# 11. Ingest contention smoke: 8 producer threads hammer one class's
+#     front door through the fleet, once with auto-sized sharded lanes
+#     and once with the pre-sharding single queue.
+#     --expect-ingest-speedup fails the run unless the sharded front
+#     door beats the single-lane baseline; ingest_submits_per_s /
+#     ingest_single_lane_submits_per_s / ingest_lane_count merge into
+#     BENCH_campaign.json so the submit-throughput trajectory is tracked
+#     alongside the hotpath bench's ingest_push_* / fleet_submit_*
+#     series (benches/hotpath.rs).
+step cargo run --release -p genmodel --quiet -- fleet \
+    --classes 'single:4' --jobs 1 --waves 1 --observe sim --scalar \
+    --ingest-burst 8 --ingest-burst-jobs 64 --expect-ingest-speedup \
+    --bench-out BENCH_campaign.json
+
 exit $fail
