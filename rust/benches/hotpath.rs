@@ -146,6 +146,7 @@ fn main() {
                 reducer: ReducerSpec::Scalar,
                 min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
                 ingest_lanes: lanes,
+                slo: None,
             })
             .unwrap();
         let svc = &fleet.entry(class).unwrap().service;

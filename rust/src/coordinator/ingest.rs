@@ -52,15 +52,85 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use crate::telemetry::hist::{HistSnapshot, LatencyHist};
 
 /// Pad each lane to its own cache line so two producers hammering
 /// adjacent lanes don't false-share (same idiom as the telemetry
 /// histogram bins).
 #[repr(align(64))]
 struct CachePadded<T>(T);
+
+/// Lane-plane health counters, shared between the lanes (which record)
+/// and the service metrics (which render). All lock-free atomics off
+/// the hot path's uncontended stride: the high-water mark is one
+/// `fetch_max` per push, the doorbell counters tick only when the
+/// consumer actually parks, and the drain histogram records once per
+/// sweep, not per item.
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    /// Highest `pending` count ever observed right after a push — how
+    /// deep the front door backed up at its worst.
+    depth_hwm: AtomicU64,
+    /// Times the consumer parked on the doorbell (idle periods).
+    sleeps: AtomicU64,
+    /// Times a producer rang the bell to wake a parked consumer.
+    wakes: AtomicU64,
+    /// Non-empty drain sweeps.
+    drains: AtomicU64,
+    /// Total items collected across all sweeps.
+    drained_items: AtomicU64,
+    /// Log2 histogram of per-sweep batch sizes. The bins hold **item
+    /// counts, not nanoseconds** (`record_nanos(n)` abuses the log2
+    /// binning; read quantiles back via [`IngestStatsSnapshot::drain_quantile`]).
+    drain_hist: LatencyHist,
+}
+
+impl IngestStats {
+    /// Plain-data copy of the counters.
+    pub fn snapshot(&self) -> IngestStatsSnapshot {
+        IngestStatsSnapshot {
+            depth_hwm: self.depth_hwm.load(Ordering::Relaxed),
+            sleeps: self.sleeps.load(Ordering::Relaxed),
+            wakes: self.wakes.load(Ordering::Relaxed),
+            drains: self.drains.load(Ordering::Relaxed),
+            drained_items: self.drained_items.load(Ordering::Relaxed),
+            drain_hist: self.drain_hist.snapshot(),
+        }
+    }
+}
+
+/// Plain-data copy of [`IngestStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IngestStatsSnapshot {
+    pub depth_hwm: u64,
+    pub sleeps: u64,
+    pub wakes: u64,
+    pub drains: u64,
+    pub drained_items: u64,
+    pub drain_hist: HistSnapshot,
+}
+
+impl IngestStatsSnapshot {
+    /// Mean items per non-empty drain sweep (0 when never drained).
+    pub fn mean_drain(&self) -> f64 {
+        if self.drains == 0 {
+            0.0
+        } else {
+            self.drained_items as f64 / self.drains as f64
+        }
+    }
+
+    /// A drain-batch-size quantile in **items** (`None` when no sweep
+    /// has run): undoes the seconds scaling [`HistSnapshot::quantile`]
+    /// applies, since the bins here hold item counts.
+    pub fn drain_quantile(&self, q: f64) -> Option<f64> {
+        Some(self.drain_hist.quantile(q)? * 1e9)
+    }
+}
 
 /// Typed rejection: the lanes are closed (service stopping/stopped) or
 /// the target lane is poisoned. Callers map this to their own stopped
@@ -97,6 +167,9 @@ pub struct IngestLanes<T> {
     door: Mutex<()>,
     bell: Condvar,
     sleeping: AtomicBool,
+    /// Health counters, shared out via [`Self::stats_handle`] so the
+    /// service metrics render them without reaching into the lanes.
+    stats: Arc<IngestStats>,
 }
 
 thread_local! {
@@ -120,12 +193,23 @@ impl<T> IngestLanes<T> {
             door: Mutex::new(()),
             bell: Condvar::new(),
             sleeping: AtomicBool::new(false),
+            stats: Arc::new(IngestStats::default()),
         }
     }
 
     /// Number of lanes.
     pub fn lane_count(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Shared handle to the lane-plane health counters.
+    pub fn stats_handle(&self) -> Arc<IngestStats> {
+        self.stats.clone()
+    }
+
+    /// Snapshot of the lane-plane health counters.
+    pub fn stats(&self) -> IngestStatsSnapshot {
+        self.stats.snapshot()
     }
 
     /// The lane the calling thread hashes to. Stable for the lifetime
@@ -162,12 +246,14 @@ impl<T> IngestLanes<T> {
                 return Err(IngestClosed);
             }
             q.push_back(item);
-            self.pending.fetch_add(1, Ordering::SeqCst);
+            let depth = self.pending.fetch_add(1, Ordering::SeqCst) + 1;
+            self.stats.depth_hwm.fetch_max(depth as u64, Ordering::Relaxed);
         }
         // Ring the bell only if the consumer is (or may be) parked.
         // SeqCst pairs with the consumer's sleeping-store / pending-load.
         if self.sleeping.load(Ordering::SeqCst) {
             let _door = self.door.lock().unwrap_or_else(|e| e.into_inner());
+            self.stats.wakes.fetch_add(1, Ordering::Relaxed);
             self.bell.notify_all();
         }
         Ok(())
@@ -199,6 +285,9 @@ impl<T> IngestLanes<T> {
         }
         if n > 0 {
             self.pending.fetch_sub(n, Ordering::SeqCst);
+            self.stats.drains.fetch_add(1, Ordering::Relaxed);
+            self.stats.drained_items.fetch_add(n as u64, Ordering::Relaxed);
+            self.stats.drain_hist.record_nanos(n as u64); // bins = items
         }
         n
     }
@@ -236,6 +325,7 @@ impl<T> IngestLanes<T> {
                 self.sleeping.store(false, Ordering::SeqCst);
                 continue;
             }
+            self.stats.sleeps.fetch_add(1, Ordering::Relaxed);
             let _door = match deadline {
                 None => self.bell.wait(door).unwrap_or_else(|e| e.into_inner()),
                 Some(d) => {
@@ -370,6 +460,51 @@ mod tests {
             lanes.close();
             assert_eq!(waiter.join().unwrap(), IngestWait::Closed);
         });
+    }
+
+    #[test]
+    fn stats_track_depth_sleeps_wakes_and_drain_sizes() {
+        let lanes = IngestLanes::new(2);
+        // 5 pushes with no drain: the high-water mark is the full depth.
+        for i in 0..5u32 {
+            lanes.push_to((i % 2) as usize, i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(lanes.drain_into(&mut out), 5);
+        // Second, smaller burst.
+        lanes.push_to(0, 99).unwrap();
+        assert_eq!(lanes.drain_into(&mut out), 1);
+        let s = lanes.stats();
+        assert_eq!(s.depth_hwm, 5);
+        assert_eq!(s.drains, 2);
+        assert_eq!(s.drained_items, 6);
+        assert!((s.mean_drain() - 3.0).abs() < 1e-9);
+        // Drain-size quantiles come back in items: the max sweep was 5
+        // items (bin 2), the min 1 (bin 0); midpoints are within ×√2.
+        let p = s.drain_quantile(1.0).unwrap();
+        assert!(p > 3.9 && p < 5.7, "{p}");
+        // Empty drains record nothing.
+        assert_eq!(lanes.drain_into(&mut out), 0);
+        assert_eq!(lanes.stats().drains, 2);
+        // A parked consumer woken by a push ticks both doorbell counters.
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| lanes.wait(None));
+            std::thread::sleep(Duration::from_millis(10));
+            lanes.push_to(0, 1).unwrap();
+            assert_eq!(waiter.join().unwrap(), IngestWait::Ready);
+        });
+        let s = lanes.stats();
+        assert!(s.sleeps >= 1, "consumer parked at least once");
+        assert!(s.wakes >= 1, "producer rang the bell");
+    }
+
+    #[test]
+    fn empty_stats_report_zero_not_nonsense() {
+        let lanes = IngestLanes::<u8>::new(1);
+        let s = lanes.stats();
+        assert_eq!(s.depth_hwm, 0);
+        assert_eq!(s.mean_drain(), 0.0);
+        assert_eq!(s.drain_quantile(0.95), None);
     }
 
     #[test]

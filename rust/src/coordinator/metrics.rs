@@ -13,11 +13,13 @@
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::telemetry::{HistSnapshot, LatencyHist};
 use crate::trace::{Term, TermAttribution};
 
 use super::batcher::BatchRule;
+use super::ingest::{IngestStats, IngestStatsSnapshot};
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -39,10 +41,32 @@ pub struct Metrics {
     pub batches_split_at_bucket: AtomicU64,
     pub batches_oversized: AtomicU64,
     pub batches_drained: AtomicU64,
-    /// Observed per-batch execution latency (wall-clock, or simulated
-    /// under `ObserveMode::Sim`) — the service-wide distribution behind
-    /// the per-cell telemetry recorder.
-    pub latency: LatencyHist,
+    /// Observed per-batch **execution** latency (wall-clock, or
+    /// simulated under `ObserveMode::Sim`) — the service-wide
+    /// distribution behind the per-cell telemetry recorder. Execution
+    /// only: lane wait, flush-window wait, and batch position are in
+    /// [`Self::e2e_latency`] and the per-stage histograms below.
+    pub exec_latency: LatencyHist,
+    /// True end-to-end job latency: submit → result delivered. This is
+    /// what clients actually wait; `exec_latency` under-reports it by
+    /// every pre-exec stage (the bug the `serve_latency_p95_s` bench key
+    /// inherited until it was re-pointed here).
+    pub e2e_latency: LatencyHist,
+    /// Per-job lifecycle stages (see `service::JobStages`): time from
+    /// submit to the leader's lane drain…
+    pub stage_queued: LatencyHist,
+    /// …from lane drain to the batch closing (flush window + planning)…
+    pub stage_drained: LatencyHist,
+    /// …and from batch close to execution start (routing + fusing).
+    pub stage_batched: LatencyHist,
+    /// SLO burn-rate trips (non-tripped → tripped transitions of the
+    /// service's `SloTracker`; 0 when no SLO is configured).
+    pub slo_trips: AtomicU64,
+    /// Ingest-lane health counters, shared with the service's
+    /// `IngestLanes` (depth high-water mark, doorbell sleeps/wakes,
+    /// drain-batch sizes). A default-constructed `Metrics` holds an
+    /// unwired all-zero instance.
+    pub ingest: Arc<IngestStats>,
     /// Drift autopilot: scoring passes the monitor ran.
     pub drift_checks: AtomicU64,
     /// Drift autopilot: successful hot swaps of the selection table.
@@ -81,7 +105,13 @@ pub struct MetricsSnapshot {
     pub batches_split_at_bucket: u64,
     pub batches_oversized: u64,
     pub batches_drained: u64,
-    pub latency: HistSnapshot,
+    pub exec_latency: HistSnapshot,
+    pub e2e_latency: HistSnapshot,
+    pub stage_queued: HistSnapshot,
+    pub stage_drained: HistSnapshot,
+    pub stage_batched: HistSnapshot,
+    pub slo_trips: u64,
+    pub ingest: IngestStatsSnapshot,
     pub drift_checks: u64,
     pub drift_swaps: u64,
     pub drift_evictions: u64,
@@ -163,7 +193,13 @@ impl Metrics {
             batches_split_at_bucket,
             batches_oversized,
             batches_drained,
-            latency: self.latency.snapshot(),
+            exec_latency: self.exec_latency.snapshot(),
+            e2e_latency: self.e2e_latency.snapshot(),
+            stage_queued: self.stage_queued.snapshot(),
+            stage_drained: self.stage_drained.snapshot(),
+            stage_batched: self.stage_batched.snapshot(),
+            slo_trips: self.slo_trips.load(Ordering::Relaxed),
+            ingest: self.ingest.snapshot(),
             drift_checks: self.drift_checks.load(Ordering::Relaxed),
             drift_swaps: self.drift_swaps.load(Ordering::Relaxed),
             drift_evictions: self.drift_evictions.load(Ordering::Relaxed),
@@ -305,21 +341,98 @@ impl MetricsSnapshot {
             let _ = writeln!(out, "allreduce_batches_by_rule_total{{rule=\"{rule}\"}} {count}");
         }
 
+        // Latency summaries: the exec family keeps its original name
+        // (dashboards track it as a series); e2e is what clients wait.
+        let mut summary = |name: &str, help: &str, hist: &HistSnapshot| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for (q, v) in [("0.5", hist.p50()), ("0.95", hist.p95()), ("0.99", hist.p99())] {
+                if let Some(v) = v {
+                    let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+                }
+            }
+            let _ = writeln!(out, "{name}_count {}", hist.count());
+        };
+        summary(
+            "allreduce_latency_seconds",
+            "Per-batch execution latency quantiles (exec stage only).",
+            &self.exec_latency,
+        );
+        summary(
+            "allreduce_e2e_latency_seconds",
+            "Per-job end-to-end latency quantiles (submit to result).",
+            &self.e2e_latency,
+        );
+
+        // Per-stage lifecycle quantiles under one labelled family.
         let _ = writeln!(
             out,
-            "# HELP allreduce_latency_seconds Per-batch execution latency quantiles."
+            "# HELP allreduce_stage_seconds Per-job lifecycle stage duration quantiles \
+             (queued = submit to lane drain, drained = drain to batch close, \
+             batched = batch close to exec start)."
         );
-        let _ = writeln!(out, "# TYPE allreduce_latency_seconds summary");
-        for (q, v) in [
-            ("0.5", self.latency.p50()),
-            ("0.95", self.latency.p95()),
-            ("0.99", self.latency.p99()),
+        let _ = writeln!(out, "# TYPE allreduce_stage_seconds summary");
+        for (stage, hist) in [
+            ("queued", &self.stage_queued),
+            ("drained", &self.stage_drained),
+            ("batched", &self.stage_batched),
         ] {
-            if let Some(v) = v {
-                let _ = writeln!(out, "allreduce_latency_seconds{{quantile=\"{q}\"}} {v}");
+            for (q, v) in [("0.5", hist.p50()), ("0.95", hist.p95()), ("0.99", hist.p99())] {
+                if let Some(v) = v {
+                    let _ = writeln!(
+                        out,
+                        "allreduce_stage_seconds{{stage=\"{stage}\",quantile=\"{q}\"}} {v}"
+                    );
+                }
+            }
+            let _ = writeln!(
+                out,
+                "allreduce_stage_seconds_count{{stage=\"{stage}\"}} {}",
+                hist.count()
+            );
+        }
+
+        // SLO watchdog + ingest-lane health.
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_slo_trips_total SLO burn-rate trips (sustained e2e-latency burns)."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_slo_trips_total counter");
+        let _ = writeln!(out, "allreduce_slo_trips_total {}", self.slo_trips);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_ingest_depth_hwm Deepest ingest-lane backlog ever observed."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_ingest_depth_hwm gauge");
+        let _ = writeln!(out, "allreduce_ingest_depth_hwm {}", self.ingest.depth_hwm);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_ingest_sleeps_total Times the leader parked on the ingest doorbell."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_ingest_sleeps_total counter");
+        let _ = writeln!(out, "allreduce_ingest_sleeps_total {}", self.ingest.sleeps);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_ingest_wakes_total Times a producer rang the doorbell."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_ingest_wakes_total counter");
+        let _ = writeln!(out, "allreduce_ingest_wakes_total {}", self.ingest.wakes);
+
+        let _ = writeln!(
+            out,
+            "# HELP allreduce_ingest_drain_jobs Jobs collected per non-empty drain sweep."
+        );
+        let _ = writeln!(out, "# TYPE allreduce_ingest_drain_jobs summary");
+        for q in ["0.5", "0.95", "0.99"] {
+            let quant: f64 = q.parse().unwrap();
+            if let Some(v) = self.ingest.drain_quantile(quant) {
+                let _ = writeln!(out, "allreduce_ingest_drain_jobs{{quantile=\"{q}\"}} {v}");
             }
         }
-        let _ = writeln!(out, "allreduce_latency_seconds_count {}", self.latency.count());
+        let _ = writeln!(out, "allreduce_ingest_drain_jobs_count {}", self.ingest.drains);
 
         let _ = writeln!(
             out,
@@ -375,7 +488,10 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.jobs_per_batch(), 0.0);
         assert!(s.rules_consistent());
-        assert_eq!(s.latency.count(), 0);
+        assert_eq!(s.exec_latency.count(), 0);
+        assert_eq!(s.e2e_latency.count(), 0);
+        assert_eq!(s.slo_trips, 0);
+        assert_eq!(s.ingest.depth_hwm, 0);
     }
 
     #[test]
@@ -426,14 +542,26 @@ mod tests {
     }
 
     #[test]
-    fn latency_histogram_feeds_the_snapshot() {
+    fn latency_histograms_feed_the_snapshot() {
         let m = Metrics::default();
-        m.latency.record_secs(0.001);
-        m.latency.record_secs(0.001);
-        m.latency.record_secs(0.1);
+        m.exec_latency.record_secs(0.001);
+        m.exec_latency.record_secs(0.001);
+        m.exec_latency.record_secs(0.1);
         let s = m.snapshot();
-        assert_eq!(s.latency.count(), 3);
-        assert!(s.latency.p50().unwrap() < s.latency.p99().unwrap());
+        assert_eq!(s.exec_latency.count(), 3);
+        assert!(s.exec_latency.p50().unwrap() < s.exec_latency.p99().unwrap());
+        // e2e and stage hists are independent series: exec records alone
+        // must not leak into them.
+        assert_eq!(s.e2e_latency.count(), 0);
+        m.e2e_latency.record_secs(0.2);
+        m.stage_queued.record_secs(0.05);
+        m.stage_drained.record_secs(0.01);
+        m.stage_batched.record_secs(0.001);
+        let s = m.snapshot();
+        assert_eq!(s.e2e_latency.count(), 1);
+        assert_eq!(s.stage_queued.count(), 1);
+        assert_eq!(s.stage_drained.count(), 1);
+        assert_eq!(s.stage_batched.count(), 1);
     }
 
     #[test]
@@ -459,7 +587,10 @@ mod tests {
         let m = Metrics::default();
         m.add(&m.jobs_submitted, 7);
         m.record_batch(&BatchRule::Drained);
-        m.latency.record_secs(0.002);
+        m.exec_latency.record_secs(0.002);
+        m.e2e_latency.record_secs(0.004);
+        m.stage_queued.record_secs(0.001);
+        m.add(&m.slo_trips, 2);
         m.set_drift_term(Term::Incast);
         m.record_attribution(&TermAttribution {
             incast_s: 1.0,
@@ -470,10 +601,24 @@ mod tests {
         assert!(text.contains("allreduce_batches_by_rule_total{rule=\"drained\"} 1"));
         assert!(text.contains("allreduce_latency_seconds{quantile=\"0.95\"}"));
         assert!(text.contains("allreduce_latency_seconds_count 1"));
+        assert!(text.contains("allreduce_e2e_latency_seconds{quantile=\"0.95\"}"));
+        assert!(text.contains("allreduce_e2e_latency_seconds_count 1"));
+        assert!(text.contains("allreduce_stage_seconds{stage=\"queued\",quantile=\"0.5\"}"));
+        assert!(text.contains("allreduce_stage_seconds_count{stage=\"queued\"} 1"));
+        assert!(text.contains("allreduce_stage_seconds_count{stage=\"drained\"} 0"));
+        assert!(text.contains("allreduce_slo_trips_total 2"));
+        assert!(text.contains("allreduce_ingest_depth_hwm 0"));
+        assert!(text.contains("allreduce_ingest_sleeps_total 0"));
+        assert!(text.contains("allreduce_ingest_wakes_total 0"));
+        assert!(text.contains("allreduce_ingest_drain_jobs_count 0"));
         assert!(text.contains("allreduce_drift_term 4"));
         assert!(text.contains("allreduce_attr_seconds_total{term=\"incast\"} 1"));
         // Every exposition family declares its TYPE.
         assert!(text.contains("# TYPE allreduce_latency_seconds summary"));
+        assert!(text.contains("# TYPE allreduce_e2e_latency_seconds summary"));
+        assert!(text.contains("# TYPE allreduce_stage_seconds summary"));
+        assert!(text.contains("# TYPE allreduce_slo_trips_total counter"));
+        assert!(text.contains("# TYPE allreduce_ingest_depth_hwm gauge"));
     }
 
     #[test]
@@ -481,5 +626,10 @@ mod tests {
         let text = Metrics::default().snapshot().render_prometheus();
         assert!(!text.contains("allreduce_latency_seconds{quantile"));
         assert!(text.contains("allreduce_latency_seconds_count 0"));
+        assert!(!text.contains("allreduce_e2e_latency_seconds{quantile"));
+        assert!(!text.contains("allreduce_stage_seconds{stage"));
+        assert!(!text.contains("allreduce_ingest_drain_jobs{quantile"));
+        assert!(text.contains("allreduce_e2e_latency_seconds_count 0"));
+        assert!(text.contains("allreduce_stage_seconds_count{stage=\"batched\"} 0"));
     }
 }

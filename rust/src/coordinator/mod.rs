@@ -34,8 +34,10 @@
 //!   and shared as `Arc<RoutedPlan>` on the hot path;
 //! * [`metrics`] — atomic counters exposed for the CLI and benches,
 //!   including per-[`batcher::BatchRule`] split/fuse counts (summing to
-//!   `batches_flushed` — the snapshot checks the invariant) and the
-//!   service-wide per-batch latency histogram.
+//!   `batches_flushed` — the snapshot checks the invariant), the
+//!   execution/e2e latency histograms with their per-stage lifecycle
+//!   decomposition, the shared ingest-lane gauges, and the SLO trip
+//!   counter (see the observability guide below).
 //!
 //! The serving loop is also a *measurement* loop: each executed batch's
 //! observed seconds (wall-clock, or deterministic flow-simulated under
@@ -82,6 +84,56 @@
 //! evicted, consumers re-derived together, epochs reported, zero
 //! dropped jobs.
 //!
+//! # Observability guide
+//!
+//! Every job is stamped at five points of its life — submit
+//! (`Job::t_submit`), lane drain (after each [`IngestLanes`] drain
+//! sweep), batch close (one stamp per flush cycle, after the batch
+//! plan), execution start, and execution end — decomposing its latency
+//! into **queued → drained → batched → executed**. The decomposition
+//! rides every [`JobResult`] as [`service::JobStages`] (whose `e2e_ns`
+//! is the *exact* structural sum of the four stages — pinned by
+//! rust/tests/prop_lifecycle.rs), and every exported series traces back
+//! to one of those stamp sites:
+//!
+//! * `allreduce_latency_seconds` ([`Metrics::exec_latency`]) — the
+//!   batch's observed execution seconds, recorded when the executor
+//!   returns. The family name predates the decomposition and stays
+//!   pinned to the exec stage so existing dashboards keep their
+//!   meaning; the client-visible tail is the e2e family below.
+//! * `allreduce_e2e_latency_seconds` ([`Metrics::e2e_latency`]) — the
+//!   per-job submit → respond total, recorded at respond time.
+//! * `allreduce_stage_seconds{stage="queued"|"drained"|"batched"}`
+//!   ([`Metrics::stage_queued`] / [`Metrics::stage_drained`] /
+//!   [`Metrics::stage_batched`]) — the pre-execution stages. The same
+//!   durations also land in the shared [`crate::telemetry::Recorder`]
+//!   under sentinel algorithm keys `stage:*`, which
+//!   [`crate::telemetry::CellKey::is_stage`] keeps out of every
+//!   batch-latency aggregate the scoring/calibration loop reads.
+//! * `allreduce_slo_trips_total` ([`Metrics::slo_trips`]) — burn-rate
+//!   trips of the per-class [`crate::telemetry::SloTracker`] configured
+//!   via [`service::ServiceConfig`]'s `slo` ([`crate::fleet::FleetSpec`]
+//!   / `repro fleet --slo class=secs` upstream); each trip also emits
+//!   one [`crate::trace::SpanKind::SloTrip`] span.
+//! * `allreduce_ingest_depth_hwm`, `allreduce_ingest_sleeps_total`,
+//!   `allreduce_ingest_wakes_total`, `allreduce_ingest_drain_jobs`
+//!   ([`ingest::IngestStats`], shared into [`Metrics::ingest`]) — the
+//!   lane-depth high-water mark, doorbell park/ring counters, and the
+//!   drain-batch-size histogram, all instrumented inside
+//!   [`IngestLanes`] itself.
+//! * Trace spans `job_queued` / `job_drained` / `job_done`
+//!   ([`crate::trace::SpanKind::JobQueued`] and friends) — the same
+//!   stamps re-emitted as a per-job timeline for `repro trace
+//!   --chrome`, with `job_done`'s duration equal to the job's e2e.
+//!   `repro trace --check` (via
+//!   [`crate::trace::TraceSnapshot::incomplete_jobs`]) gates on every
+//!   queued span having its done span — on a zero-drop trace an
+//!   incomplete chain is a lost job, not ring pressure.
+//!
+//! `repro status` renders all of the above — coordinator counters,
+//! lifecycle tails, lane gauges, fleet sweep, trace health, SLO burn
+//! state — in one snapshot, with `--check` exit gates for CI.
+//!
 //! Threads + channels stand in for an async runtime (tokio is not in the
 //! vendored dependency closure; the control flow is identical).
 
@@ -99,7 +151,7 @@ pub use batcher::{
 };
 pub use drift::{DriftConfig, DriftMonitor, DEFAULT_LINK_BETA};
 pub use handle::{TableHandle, TableView};
-pub use ingest::{IngestClosed, IngestLanes, IngestWait};
+pub use ingest::{IngestClosed, IngestLanes, IngestStats, IngestStatsSnapshot, IngestWait};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{nearest_bucket, PlanRouter, RoutedPlan, SelectionRules};
-pub use service::{AllReduceService, JobResult, ObserveMode, ServiceConfig};
+pub use service::{AllReduceService, JobResult, JobStages, ObserveMode, ServiceConfig};

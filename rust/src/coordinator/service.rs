@@ -38,7 +38,7 @@ use crate::model::cost::{CostModel, ModelKind};
 use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
 use crate::sim::{simulate_plan, SimConfig};
-use crate::telemetry::Recorder;
+use crate::telemetry::{Recorder, SloPolicy, SloSnapshot, SloTracker};
 use crate::topo::Topology;
 use crate::trace::{Span, SpanKind, TermAttribution, TraceRecorder};
 
@@ -75,6 +75,55 @@ pub struct JobResult {
     /// observed this same epoch — the leader reads one table view per
     /// flush cycle.
     pub epoch: u64,
+    /// Where this job's end-to-end latency went, stage by stage.
+    pub stages: JobStages,
+}
+
+/// One job's lifecycle decomposition: where the time between `submit`
+/// and the result landing went. The first three stages are wall-clock
+/// stamps taken by the submit path and the leader; the exec stage is
+/// the batch's observed seconds (flow-simulated under
+/// [`ObserveMode::Sim`], wall otherwise). **By construction the e2e
+/// latency is the exact sum of the four stages** — the decomposition
+/// can never leak time into an unlabeled gap, and
+/// `rust/tests/prop_lifecycle.rs` pins the identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct JobStages {
+    /// Submit → the leader's lane-drain sweep collected the job.
+    pub queued_ns: u64,
+    /// Lane drain → the batch closed (flush-window wait + planning).
+    pub drained_ns: u64,
+    /// Batch close → execution start (routing + fusing).
+    pub batched_ns: u64,
+    /// The batch's observed execution seconds, in nanoseconds.
+    pub exec_ns: u64,
+}
+
+impl JobStages {
+    /// End-to-end nanoseconds: the exact sum of the four stages.
+    pub fn e2e_ns(&self) -> u64 {
+        self.queued_ns + self.drained_ns + self.batched_ns + self.exec_ns
+    }
+
+    pub fn e2e_secs(&self) -> f64 {
+        self.e2e_ns() as f64 * 1e-9
+    }
+
+    pub fn queued_secs(&self) -> f64 {
+        self.queued_ns as f64 * 1e-9
+    }
+
+    pub fn drained_secs(&self) -> f64 {
+        self.drained_ns as f64 * 1e-9
+    }
+
+    pub fn batched_secs(&self) -> f64 {
+        self.batched_ns as f64 * 1e-9
+    }
+
+    pub fn exec_secs(&self) -> f64 {
+        self.exec_ns as f64 * 1e-9
+    }
 }
 
 /// Where a batch's *observed* seconds come from.
@@ -96,6 +145,10 @@ struct Job {
     /// One tensor per worker.
     tensors: Vec<Vec<f32>>,
     respond: Sender<Result<JobResult, ApiError>>,
+    /// Lifecycle stamps: when the client submitted, and when the
+    /// leader's drain sweep collected the job off its lane.
+    t_submit: Instant,
+    t_drained: Option<Instant>,
 }
 
 #[derive(Clone)]
@@ -140,6 +193,12 @@ pub struct ServiceConfig {
     /// contention-bench baseline. Producers hash to a lane by thread
     /// id, so producers on distinct lanes never block each other.
     pub ingest_lanes: usize,
+    /// Per-class latency objective + burn-rate windows over per-job e2e
+    /// latency ([`crate::telemetry::SloTracker`]). `None`: no SLO
+    /// monitoring. A trip bumps the `slo_trips` metric and emits an
+    /// `slo_trip` trace span; current state is readable via
+    /// [`AllReduceService::slo_snapshot`].
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for ServiceConfig {
@@ -156,6 +215,7 @@ impl Default for ServiceConfig {
             drift: None,
             trace: None,
             ingest_lanes: 0,
+            slo: None,
         }
     }
 }
@@ -233,6 +293,9 @@ pub struct AllReduceService {
     handle: Option<Arc<TableHandle>>,
     /// Flight recorder + this service's interned class id, when tracing.
     trace: Option<(Arc<TraceRecorder>, u32)>,
+    /// Burn-rate tracker over per-job e2e latency, when an SLO was
+    /// configured. Shared with the leader (which observes every job).
+    slo: Option<Arc<Mutex<SloTracker>>>,
     n_workers: usize,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -285,7 +348,6 @@ impl AllReduceService {
             .trace
             .as_ref()
             .map(|t| (t.clone(), t.intern(&cfg.class)));
-        let metrics = Arc::new(Metrics::default());
         let mut router = PlanRouter::new(topo, env)
             .with_default_algo(cfg.algo.clone())
             .with_selection(cfg.selection.clone());
@@ -301,6 +363,17 @@ impl AllReduceService {
             n => n,
         };
         let ingest: Arc<IngestLanes<Job>> = Arc::new(IngestLanes::new(lanes));
+        // The metrics snapshot carries the lanes' health counters: share
+        // the lanes' stats block instead of the default unwired zeros.
+        let metrics = Arc::new(Metrics {
+            ingest: ingest.stats_handle(),
+            ..Metrics::default()
+        });
+        let slo = cfg
+            .slo
+            .clone()
+            .map(|p| Arc::new(Mutex::new(SloTracker::new(p))));
+        let leader_slo = slo.clone();
         let leader_ingest = ingest.clone();
         let m = metrics.clone();
         let leader = std::thread::Builder::new()
@@ -321,7 +394,7 @@ impl AllReduceService {
                     m.add(&m.reducer_fallbacks, 1);
                     Reducer::Scalar
                 });
-                leader_loop(leader_ingest, router, reducer, cfg, m, leader_handle)
+                leader_loop(leader_ingest, router, reducer, cfg, m, leader_handle, leader_slo)
             })
             .expect("spawn leader");
         AllReduceService {
@@ -330,6 +403,7 @@ impl AllReduceService {
             metrics,
             handle,
             trace,
+            slo,
             n_workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
@@ -356,6 +430,15 @@ impl AllReduceService {
     /// push takes effect no later than the next flush cycle.
     pub fn table_handle(&self) -> Option<Arc<TableHandle>> {
         self.handle.clone()
+    }
+
+    /// The SLO tracker's current state (`None` when no SLO policy was
+    /// configured). Burn rates inside are `None` before the first
+    /// observation — callers render `-`, not a fabricated 0.
+    pub fn slo_snapshot(&self) -> Option<SloSnapshot> {
+        self.slo
+            .as_ref()
+            .map(|t| t.lock().unwrap_or_else(|e| e.into_inner()).snapshot())
     }
 
     /// Submit one AllReduce job (one equal-length tensor per worker).
@@ -395,6 +478,8 @@ impl AllReduceService {
                 id,
                 tensors,
                 respond: rtx,
+                t_submit: Instant::now(),
+                t_drained: None,
             })
             .map_err(|_| ApiError::ServiceStopped)?;
         self.metrics.add(&self.metrics.jobs_submitted, 1);
@@ -449,6 +534,16 @@ impl Drop for AllReduceService {
     }
 }
 
+/// Stamp the lane-drain instant on every job a drain sweep just
+/// appended to `queue` (the `queued` stage ends here; `drained` begins).
+fn stamp_drained(queue: &mut [Job], from: usize) {
+    let now = Instant::now();
+    for job in &mut queue[from..] {
+        job.t_drained = Some(now);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn leader_loop(
     ingest: Arc<IngestLanes<Job>>,
     router: PlanRouter,
@@ -456,6 +551,7 @@ fn leader_loop(
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
     handle: Option<Arc<TableHandle>>,
+    slo: Option<Arc<Mutex<SloTracker>>>,
 ) {
     // The per-cycle table view: ONE read per flush cycle, so the batcher
     // split points, the time-aware flush window, and (via the router,
@@ -492,6 +588,7 @@ fn leader_loop(
             match ingest.wait(None) {
                 IngestWait::Ready => {
                     ingest.drain_into(&mut queue);
+                    stamp_drained(&mut queue, 0);
                 }
                 IngestWait::Closed => {
                     // Shutdown: sweep until a sweep comes back empty —
@@ -500,6 +597,7 @@ fn leader_loop(
                     if ingest.drain_into(&mut queue) == 0 {
                         break;
                     }
+                    stamp_drained(&mut queue, 0);
                 }
                 IngestWait::TimedOut => {}
             }
@@ -522,6 +620,7 @@ fn leader_loop(
                 IngestWait::Ready => {
                     let start = queue.len();
                     ingest.drain_into(&mut queue);
+                    stamp_drained(&mut queue, start);
                     queued_floats += queue[start..]
                         .iter()
                         .map(|j| j.tensors[0].len())
@@ -568,6 +667,9 @@ fn leader_loop(
             })
             .collect();
         let batches = plan_batches(&meta, &policy);
+        // One batch-close stamp per flush cycle: the `drained` stage ends
+        // for every job in the cycle when its batches are planned.
+        let batch_close = Instant::now();
         let mut jobs: std::collections::HashMap<u64, Job> =
             queue.drain(..).map(|j| (j.id, j)).collect();
         let epoch = view.as_ref().map_or(0, |v| v.epoch);
@@ -587,6 +689,8 @@ fn leader_loop(
                 &metrics,
                 epoch,
                 trace_class,
+                batch_close,
+                slo.as_deref(),
             );
         }
         // Drift autopilot: between cycles — never mid-batch — so a table
@@ -613,6 +717,8 @@ fn run_batch(
     metrics: &Arc<Metrics>,
     epoch: u64,
     trace_class: u32,
+    batch_close: Instant,
+    slo: Option<&Mutex<SloTracker>>,
 ) {
     let offsets = fuse_offsets(&batch.jobs);
     let total: usize = batch.fused_floats();
@@ -684,7 +790,7 @@ fn run_batch(
                 Some(sim) => sim.total,
                 None => elapsed.as_secs_f64(),
             };
-            metrics.latency.record_secs(observed_secs);
+            metrics.exec_latency.record_secs(observed_secs);
             if let Some(tr) = tracing {
                 // Attribution: price the routed plan with GenModel and
                 // join each phase's predicted terms against what the
@@ -740,10 +846,89 @@ fn run_batch(
                 );
             }
             // All workers hold the same result; return worker 0's view.
+            // Per job: decompose the lifecycle (the batch's exec seconds
+            // are shared; queued/drained differ per job), feed the stage
+            // and e2e histograms + the shared recorder's stage cells,
+            // emit the job's lifecycle spans, and let the SLO tracker
+            // judge the e2e latency — all before the result is sent.
             let result = &out.outputs[0];
+            let exec_ns = (observed_secs.max(0.0) * 1e9).round() as u64;
+            let batched_ns = t0.saturating_duration_since(batch_close).as_nanos() as u64;
+            let bucket = PlanRouter::bucket(total);
             for &(id, off, len) in &offsets {
                 let Some(job) = jobs.remove(&id) else { continue };
                 metrics.add(&metrics.jobs_completed, 1);
+                let stages = JobStages {
+                    queued_ns: job.t_drained.map_or(0, |d| {
+                        d.saturating_duration_since(job.t_submit).as_nanos() as u64
+                    }),
+                    drained_ns: job.t_drained.map_or(0, |d| {
+                        batch_close.saturating_duration_since(d).as_nanos() as u64
+                    }),
+                    batched_ns,
+                    exec_ns,
+                };
+                metrics.e2e_latency.record_secs(stages.e2e_secs());
+                metrics.stage_queued.record_secs(stages.queued_secs());
+                metrics.stage_drained.record_secs(stages.drained_secs());
+                metrics.stage_batched.record_secs(stages.batched_secs());
+                if let Some(recorder) = &cfg.telemetry {
+                    // Stage cells ride the same (class, bucket) key as the
+                    // batch cell under sentinel "stage:*" algos —
+                    // CellKey::is_stage keeps them out of model scoring.
+                    for (stage, secs) in [
+                        ("stage:queued", stages.queued_secs()),
+                        ("stage:drained", stages.drained_secs()),
+                        ("stage:batched", stages.batched_secs()),
+                    ] {
+                        recorder.record(&cfg.class, n_workers, bucket, stage, len, secs);
+                    }
+                }
+                if let Some(tr) = tracing {
+                    // The job's timeline on the trace clock, anchored so
+                    // it ends now: queued → drained(+batched) → done.
+                    let base = tr.now_ns().saturating_sub(stages.e2e_ns());
+                    let mut sp = Span::new(SpanKind::JobQueued);
+                    sp.class = trace_class;
+                    sp.job = id;
+                    sp.floats = len as u64;
+                    sp.epoch = epoch;
+                    sp.ts_ns = base;
+                    sp.dur_ns = stages.queued_ns;
+                    tr.record(&sp);
+                    let mut sp = Span::new(SpanKind::JobDrained);
+                    sp.class = trace_class;
+                    sp.job = id;
+                    sp.floats = len as u64;
+                    sp.epoch = epoch;
+                    sp.ts_ns = base + stages.queued_ns;
+                    sp.dur_ns = stages.drained_ns + stages.batched_ns;
+                    tr.record(&sp);
+                    let mut sp = Span::new(SpanKind::JobDone);
+                    sp.class = trace_class;
+                    sp.algo = algo_id;
+                    sp.job = id;
+                    sp.floats = len as u64;
+                    sp.epoch = epoch;
+                    sp.ts_ns = base;
+                    sp.dur_ns = stages.e2e_ns();
+                    tr.record(&sp);
+                }
+                if let Some(slo) = slo {
+                    let mut tracker = slo.lock().unwrap_or_else(|e| e.into_inner());
+                    if tracker.observe(stages.e2e_secs()) {
+                        metrics.add(&metrics.slo_trips, 1);
+                        if let Some(tr) = tracing {
+                            let mut sp = Span::new(SpanKind::SloTrip);
+                            sp.class = trace_class;
+                            sp.job = id;
+                            sp.floats = tracker.trips();
+                            sp.dur_ns = stages.e2e_ns();
+                            sp.ts_ns = tr.now_ns();
+                            tr.record(&sp);
+                        }
+                    }
+                }
                 let _ = job.respond.send(Ok(JobResult {
                     reduced: result[off..off + len].to_vec(),
                     batch_jobs: batch.jobs.len(),
@@ -752,6 +937,7 @@ fn run_batch(
                     rule: batch.rule,
                     observed_secs,
                     epoch,
+                    stages,
                 }));
             }
         }
@@ -1236,8 +1422,25 @@ mod tests {
         let svc = make_service(3, 1 << 20);
         let res = svc.allreduce(tensors(3, 512, 1)).unwrap();
         assert!(res.observed_secs > 0.0, "wall clock observed");
+        // The lifecycle decomposition sums exactly to the reported e2e
+        // and the exec stage is the batch's observed seconds.
+        assert_eq!(
+            res.stages.queued_ns
+                + res.stages.drained_ns
+                + res.stages.batched_ns
+                + res.stages.exec_ns,
+            res.stages.e2e_ns()
+        );
+        assert_eq!(
+            res.stages.exec_ns,
+            (res.observed_secs * 1e9).round() as u64
+        );
         let m = svc.metrics.snapshot();
-        assert_eq!(m.latency.count(), 1);
+        assert_eq!(m.exec_latency.count(), 1);
+        assert_eq!(m.e2e_latency.count(), 1);
+        assert_eq!(m.stage_queued.count(), 1);
+        assert_eq!(m.stage_drained.count(), 1);
+        assert_eq!(m.stage_batched.count(), 1);
         assert!(m.rules_consistent(), "per-rule counters sum to flushes");
     }
 
@@ -1264,7 +1467,14 @@ mod tests {
         let snap = recorder.snapshot();
         // Class defaulted to the rack's spec spelling; cells keyed by
         // (class, bucket, algo) with the fused payload accumulated.
-        assert_eq!(snap.cells.len(), 2, "{snap:?}");
+        // 2 batch cells (cps at two buckets) + the per-stage sentinel
+        // cells (3 stages × 2 buckets) the lifecycle decomposition adds.
+        assert_eq!(snap.cells.len(), 8, "{snap:?}");
+        assert_eq!(
+            snap.cells.keys().filter(|k| !k.is_stage()).count(),
+            2,
+            "{snap:?}"
+        );
         let small = &snap.cells[&crate::telemetry::CellKey {
             class: "single:4".into(),
             bucket: PlanRouter::bucket(2000),
@@ -1300,6 +1510,21 @@ mod tests {
         assert_eq!(snap.of_kind(SpanKind::JobEnqueue).count(), 1);
         assert_eq!(snap.of_kind(SpanKind::BatchFlush).count(), 1);
         assert_eq!(snap.attributed_execs(), 1);
+        // The lifecycle decomposition: one complete stage chain per job.
+        assert_eq!(snap.of_kind(SpanKind::JobQueued).count(), 1);
+        assert_eq!(snap.of_kind(SpanKind::JobDrained).count(), 1);
+        assert_eq!(snap.of_kind(SpanKind::JobDone).count(), 1);
+        let queued = snap.of_kind(SpanKind::JobQueued).next().unwrap();
+        let drained = snap.of_kind(SpanKind::JobDrained).next().unwrap();
+        let done = snap.of_kind(SpanKind::JobDone).next().unwrap();
+        // Stages tile the job's e2e window: queued starts where done
+        // starts, drained follows queued, the sum is done's duration.
+        assert_eq!(queued.span.ts_ns, done.span.ts_ns);
+        assert_eq!(drained.span.ts_ns, queued.span.ts_ns + queued.span.dur_ns);
+        assert!(
+            queued.span.dur_ns + drained.span.dur_ns <= done.span.dur_ns,
+            "stage durations overflow the e2e span"
+        );
         let exec = snap.of_kind(SpanKind::BatchExec).next().unwrap();
         let attr = exec.attribution().unwrap();
         assert!(attr.explained_s() > 0.0, "{attr:?}");
@@ -1369,5 +1594,72 @@ mod tests {
         let plan = crate::plan::cps::allreduce(4);
         let want = simulate_plan(&plan, 4096.0, &topo, &env, &SimConfig::new(&topo)).total;
         assert!((a - want).abs() < 1e-12, "{a} vs {want}");
+    }
+
+    #[test]
+    fn impossible_slo_trips_once_and_surfaces_everywhere() {
+        use crate::trace::TraceRecorder;
+        // An objective no real job can meet (0 seconds) with a 1-job
+        // window: the first completed job trips the tracker, sustained
+        // violations do NOT re-trip (hysteresis), and the trip shows up
+        // in the metric, the trace, and the snapshot accessor.
+        let trace = Arc::new(TraceRecorder::new());
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                policy: BatchPolicy::with_cap(1),
+                flush_after: Duration::from_millis(1),
+                slo: Some(SloPolicy {
+                    objective_secs: 0.0,
+                    fast_window: 1,
+                    slow_window: 1,
+                    budget: 1.0,
+                }),
+                ..ServiceConfig::default()
+            }
+            .with_trace(trace.clone()),
+        );
+        for i in 0..3 {
+            svc.allreduce(tensors(2, 64, i)).unwrap();
+        }
+        svc.stop();
+        let slo = svc.slo_snapshot().expect("slo configured");
+        assert_eq!(slo.trips, 1, "{slo:?}");
+        assert!(slo.tripped);
+        assert_eq!(slo.observed, 3);
+        assert_eq!(slo.violations, 3);
+        assert_eq!(slo.fast_burn, Some(1.0));
+        assert_eq!(svc.metrics.snapshot().slo_trips, 1);
+        let snap = trace.snapshot();
+        assert_eq!(snap.of_kind(SpanKind::SloTrip).count(), 1);
+        let trip = snap.of_kind(SpanKind::SloTrip).next().unwrap();
+        assert_eq!(trip.span.floats, 1, "lifetime trip count rides floats");
+        assert!(trip.span.dur_ns > 0, "violating e2e latency rides dur_ns");
+    }
+
+    #[test]
+    fn generous_slo_never_trips() {
+        let svc = AllReduceService::start(
+            single_switch(2),
+            Environment::paper(),
+            ReducerSpec::Scalar,
+            ServiceConfig {
+                slo: Some(SloPolicy::new(3600.0)),
+                ..ServiceConfig::default()
+            },
+        );
+        for i in 0..4 {
+            svc.allreduce(tensors(2, 64, i)).unwrap();
+        }
+        svc.stop();
+        let slo = svc.slo_snapshot().unwrap();
+        assert_eq!((slo.trips, slo.violations), (0, 0), "{slo:?}");
+        assert!(!slo.tripped);
+        assert_eq!(svc.metrics.snapshot().slo_trips, 0);
+        // No SLO configured → no snapshot, not a zeroed one.
+        let plain = make_service(2, 1000);
+        assert!(plain.slo_snapshot().is_none());
     }
 }

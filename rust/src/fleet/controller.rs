@@ -57,6 +57,10 @@ pub struct FleetSpec {
     /// (the pre-sharding serialized front door — the contention
     /// baseline `repro fleet --ingest-burst` compares against).
     pub ingest_lanes: usize,
+    /// Per-class e2e-latency SLO ([`ServiceConfig::slo`]); `None`: no
+    /// burn-rate monitoring for this class. Trips surface in the fleet
+    /// report's `slo burn` column and the `slo_trips` bench key.
+    pub slo: Option<crate::telemetry::SloPolicy>,
 }
 
 /// One registered class: its running service, live table handle, and
@@ -139,6 +143,7 @@ impl FleetController {
             flush_after: spec.flush_after,
             observe: spec.observe,
             ingest_lanes: spec.ingest_lanes,
+            slo: spec.slo.clone(),
             ..ServiceConfig::default()
         }
         .with_selection_table(&spec.table, &spec.class, spec.min_split_margin)?
@@ -234,6 +239,7 @@ mod tests {
             reducer: ReducerSpec::Scalar,
             min_split_margin: 1.25,
             ingest_lanes: 0,
+            slo: None,
         }
     }
 

@@ -58,7 +58,9 @@
 //!
 //! Surfaced as `repro fleet` (spawn from `--classes spec[,spec...]` or
 //! a `fleet/v1` config file; one report sweeping per-class drift state,
-//! epoch, swap/eviction counts, and p95 latency; `--bench-out` merges
+//! epoch, swap/eviction counts, exec/queue p95 latency, and SLO burn
+//! state — `--slo class=secs` arms a per-class e2e objective whose
+//! burn-rate trips land in the `slo burn` column; `--bench-out` merges
 //! `fleet_*` keys).
 
 pub mod config;

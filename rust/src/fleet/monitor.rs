@@ -366,6 +366,7 @@ mod tests {
             reducer: ReducerSpec::Scalar,
             min_split_margin: 1.25,
             ingest_lanes: 0,
+            slo: None,
         }
     }
 

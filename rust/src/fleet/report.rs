@@ -24,10 +24,18 @@ pub struct ClassReport {
     /// Worst finite |rel err| of the latest check that scored this
     /// class (`None`: never scored a matched cell).
     pub worst_abs_rel_err: Option<f64>,
-    /// Per-class p95 batch latency (observed seconds); `None` when the
-    /// class never served a batch — the report prints `-` instead of a
-    /// fabricated 0-second tail.
+    /// Per-class p95 batch *execution* latency (observed seconds);
+    /// `None` when the class never served a batch — the report prints
+    /// `-` instead of a fabricated 0-second tail.
     pub p95_s: Option<f64>,
+    /// Per-class p95 queued-stage wait (submit → lane drain, seconds);
+    /// `None` when no job has completed its lifecycle yet.
+    pub queue_p95: Option<f64>,
+    /// Fast-window SLO burn rate (violation rate ÷ budget); `None`
+    /// when the class has no SLO configured or no burn observed yet.
+    /// ≥ 1.0 means the class is burning error budget faster than its
+    /// objective allows.
+    pub slo_burn: Option<f64>,
     /// Router plans evicted by swaps this class's leader observed.
     pub evictions: u64,
 }
@@ -70,7 +78,9 @@ impl FleetReport {
                         .last_for(&entry.class)
                         .filter(|c| c.matched > 0)
                         .map(|c| c.worst_abs_rel_err),
-                    p95_s: m.latency.p95(),
+                    p95_s: m.exec_latency.p95(),
+                    queue_p95: m.stage_queued.p95(),
+                    slo_burn: entry.service.slo_snapshot().and_then(|s| s.fast_burn),
                     evictions: m.drift_evictions,
                 }
             })
@@ -101,7 +111,7 @@ impl FleetReport {
             "fleet",
             &[
                 "class", "n", "epoch", "jobs", "batches", "trips", "worst err", "p95 (s)",
-                "evicted",
+                "queue p95", "slo burn", "evicted",
             ],
         );
         for c in &self.classes {
@@ -117,6 +127,12 @@ impl FleetReport {
                     .unwrap_or_else(|| "-".into()),
                 c.p95_s
                     .map(|p| format!("{p:.2e}"))
+                    .unwrap_or_else(|| "-".into()),
+                c.queue_p95
+                    .map(|p| format!("{p:.2e}"))
+                    .unwrap_or_else(|| "-".into()),
+                c.slo_burn
+                    .map(|b| format!("{b:.2}"))
                     .unwrap_or_else(|| "-".into()),
                 c.evictions.to_string(),
             ]);
@@ -206,6 +222,7 @@ mod tests {
                     reducer: ReducerSpec::Scalar,
                     min_split_margin: 1.25,
                     ingest_lanes: 0,
+                    slo: None,
                 })
                 .unwrap();
         }
@@ -237,6 +254,14 @@ mod tests {
             report.worst_p95_s().unwrap() > 0.0,
             "sim clock recorded latencies"
         );
+        for c in &report.classes {
+            assert!(
+                c.queue_p95.is_some(),
+                "{}: completed jobs carry a queued-stage tail",
+                c.class
+            );
+            assert_eq!(c.slo_burn, None, "no SLO configured for {}", c.class);
+        }
         let text = report.render();
         assert!(text.contains("single:4") && text.contains("single:6"), "{text}");
         assert!(text.contains("0 dropped job(s)"), "{text}");
@@ -278,6 +303,8 @@ mod tests {
         let report = FleetReport::collect(&fleet);
         for c in &report.classes {
             assert_eq!(c.p95_s, None, "{} never served a batch", c.class);
+            assert_eq!(c.queue_p95, None, "{} never finished a job", c.class);
+            assert_eq!(c.slo_burn, None, "{} has no SLO", c.class);
         }
         assert_eq!(report.worst_p95_s(), None);
         let text = report.render();

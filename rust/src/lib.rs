@@ -25,7 +25,9 @@
 //!   buffers; numerics verified against an exact oracle.
 //! * [`coordinator`] — the L3 service: job queue, size-bucketing batcher,
 //!   plan cache/router (optionally driven by a campaign selection table),
-//!   metrics.
+//!   metrics with the per-job queued → drained → batched → executed
+//!   lifecycle decomposition and SLO burn-rate monitoring (`repro
+//!   status` renders the whole observability surface in one snapshot).
 //! * [`campaign`] — parallel (topology × size × algorithm) scenario
 //!   sweeps producing JSONL artifacts and the [`campaign::SelectionTable`]
 //!   that precomputes the best algorithm per (topology class, size

@@ -29,6 +29,10 @@
 //! * `trace`     — inspect a flight-recorder artifact (or record one via
 //!                 a small traced serve smoke): per-kind event counts,
 //!                 the GenModel term-attribution rollup, Chrome export.
+//! * `status`    — one health snapshot of the whole serving plane: a
+//!                 deterministic traced fleet smoke rendered as
+//!                 coordinator lifecycle tails + fleet sweep + trace
+//!                 health + SLO burn state, with `--check` exit gates.
 //! * `calibrate` — refit GenModel parameters (§3.4) from served
 //!                 telemetry and emit a recalibrated selection table.
 //! * `algos`     — list the algorithm registry (and what applies where).
@@ -96,7 +100,7 @@ USAGE: repro <subcommand> [options]
              [--trace-out trace.json] [--ingest-lanes 0]
              [--ingest-burst 0] [--ingest-burst-jobs 64]
              [--expect-fit] [--expect-swap c1,c2] [--expect-hold c1,c2]
-             [--expect-ingest-speedup]
+             [--expect-ingest-speedup] [--slo 'class=secs,...']
              (N topology-class coordinators behind ONE telemetry plane; a
               class spec is class[@threshold][!stale] — !stale starts that
               class from a blind δ=ε=0 table; --congest scales the serving
@@ -112,6 +116,9 @@ USAGE: repro <subcommand> [options]
               once sharded and once single-lane, recording
               ingest_submits_per_s / ingest_single_lane_submits_per_s /
               ingest_lane_count under --bench-out;
+              --slo class=secs[,class=secs]: per-class e2e-latency
+              objective — burn-rate windows over served jobs, trips in
+              the report's 'slo burn' column and the trace;
               --expect-* turn the run's claims into exit-code assertions)
   campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
@@ -130,7 +137,17 @@ USAGE: repro <subcommand> [options]
               the α/wire/mem/incast attribution rollup; without --in, runs a
               small traced serve smoke first; --chrome exports Chrome
               trace-event JSON for chrome://tracing; --check exits non-zero
-              unless the trace has ≥ 1 attributed exec span and 0 drops)
+              unless the trace has ≥ 1 attributed exec span, 0 drops, and a
+              complete queued→done lifecycle for every traced job)
+  status     [--jobs 8] [--tensor 65536] [--check]
+             [--bench-out BENCH_campaign.json]
+             (one health snapshot of the whole serving plane: a
+              deterministic two-class traced fleet smoke rendered as
+              coordinator lifecycle tails, fleet sweep, trace health, and
+              SLO burn state; --check turns the snapshot into exit gates —
+              zero drops, complete job lifecycles, ≥ 1 attributed exec,
+              no SLO trips; --bench-out merges e2e_p95_s /
+              queue_wait_p95_s / slo_trips into the CI bench record)
   calibrate  --telemetry hist.json [--beta 6.4e-9] [--algos a1,a2]
              [--out selection_calibrated.json]
              (refit (α, 2β+γ, δ, ε, w_t) from cps-served cells — ≥ 4 distinct
@@ -213,6 +230,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("campaign") => cmd_campaign(args),
         Some("score") => cmd_score(args),
         Some("trace") => cmd_trace(args),
+        Some("status") => cmd_status(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("algos") => cmd_algos(args),
         Some("reproduce") => cmd_reproduce(args),
@@ -559,10 +577,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.floats_reduced as f64 / wall / 1e6
     );
     println!(
-        "  batch latency    : p50 {} s  p95 {} s  p99 {} s",
-        quantile_or_dash(m.latency.p50()),
-        quantile_or_dash(m.latency.p95()),
-        quantile_or_dash(m.latency.p99())
+        "  exec latency     : p50 {} s  p95 {} s  p99 {} s",
+        quantile_or_dash(m.exec_latency.p50()),
+        quantile_or_dash(m.exec_latency.p95()),
+        quantile_or_dash(m.exec_latency.p99())
+    );
+    println!(
+        "  e2e latency      : p50 {} s  p95 {} s  p99 {} s \
+         (queued p95 {} s, drained p95 {} s, batched p95 {} s)",
+        quantile_or_dash(m.e2e_latency.p50()),
+        quantile_or_dash(m.e2e_latency.p95()),
+        quantile_or_dash(m.e2e_latency.p99()),
+        quantile_or_dash(m.stage_queued.p95()),
+        quantile_or_dash(m.stage_drained.p95()),
+        quantile_or_dash(m.stage_batched.p95())
     );
     if drift {
         println!(
@@ -605,10 +633,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ("serve_batches_flushed".to_string(), Json::num(m.batches_flushed as f64)),
             ("serve_wall_secs".to_string(), Json::num(wall)),
         ];
-        // An idle run has no latency histogram; omit the key rather than
-        // fabricate a 0-second p95.
-        if let Some(p95) = m.latency.p95() {
+        // An idle run has no latency histograms; omit the keys rather
+        // than fabricate 0-second tails. serve_latency_p95_s is the
+        // *end-to-end* tail a client sees (submit → respond);
+        // serve_exec_p95_s isolates the executor's share of it.
+        if let Some(p95) = m.e2e_latency.p95() {
             entries.push(("serve_latency_p95_s".to_string(), Json::num(p95)));
+        }
+        if let Some(p95) = m.exec_latency.p95() {
+            entries.push(("serve_exec_p95_s".to_string(), Json::num(p95)));
         }
         if let Some(tsnap) = &tsnap {
             entries.push(("trace_events".to_string(), Json::num(tsnap.events.len() as f64)));
@@ -700,6 +733,32 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
          got {min_split_margin}"
     );
     let ingest_lanes: usize = args.opt_parse_or("ingest-lanes", 0)?;
+    // --slo class=secs[,class=secs]: per-class e2e-latency objectives.
+    // Parsed into a map up front so a typo'd class name fails loudly
+    // (below, against the registered classes) instead of silently
+    // monitoring nothing.
+    let slo_by_class: BTreeMap<String, f64> = match args.opt("slo") {
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|pair| {
+                let (class, secs) = pair.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("--slo entries are class=secs, got {pair:?}")
+                })?;
+                let secs: f64 = secs
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--slo {pair:?}: {e}"))?;
+                anyhow::ensure!(
+                    secs.is_finite() && secs > 0.0,
+                    "--slo {pair:?}: the objective is e2e seconds and must be positive"
+                );
+                Ok((class.trim().to_string(), secs))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        None => BTreeMap::new(),
+    };
     // Fleet scoring compares observed seconds against model predictions,
     // so the default clock is the flow-simulated one: wall seconds of the
     // in-process scalar executor measure this host, not the modeled fabric.
@@ -739,6 +798,12 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         ..base
     });
 
+    for class in slo_by_class.keys() {
+        anyhow::ensure!(
+            config.classes.iter().any(|c| &c.class == class),
+            "--slo names class {class:?}, which is not in the fleet's class list"
+        );
+    }
     let stale_n = config.classes.iter().filter(|c| c.stale).count();
     let mut fleet = FleetController::new(beta);
     // One shared flight recorder across every class's service plus the
@@ -784,6 +849,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             reducer: reducer.clone(),
             min_split_margin,
             ingest_lanes,
+            slo: slo_by_class
+                .get(&cs.class)
+                .map(|&secs| genmodel::telemetry::SloPolicy::new(secs)),
         })?;
     }
     println!(
@@ -999,6 +1067,7 @@ fn fleet_ingest_burst(
         reducer: ReducerSpec::Scalar,
         min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
         ingest_lanes: lanes,
+        slo: None,
     })?;
     let entry = fleet.entry(class).expect("registered above");
     let svc = &entry.service;
@@ -1404,7 +1473,231 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
             execs >= 1,
             "--check: no executed batch carries a term attribution"
         );
-        println!("check: ok ({execs} attributed exec span(s), 0 dropped)");
+        // Lifecycle completeness: on a zero-drop trace, every job that
+        // entered the queue must also have retired — a queued span with
+        // no matching done span is a lost job, not ring pressure.
+        let incomplete = snap.incomplete_jobs();
+        anyhow::ensure!(
+            incomplete.is_empty(),
+            "--check: {} job(s) have a queued span but no done span \
+             (first: class {} job {}) — the service lost work",
+            incomplete.len(),
+            incomplete[0].0,
+            incomplete[0].1
+        );
+        let done = snap.of_kind(SpanKind::JobDone).count();
+        println!(
+            "check: ok ({execs} attributed exec span(s), \
+             {done} complete job lifecycle(s), 0 dropped)"
+        );
+    }
+    Ok(())
+}
+
+/// `repro status` — one health snapshot of the whole serving plane.
+///
+/// Runs a deterministic smoke — a two-class fleet on the Sim clock with
+/// the scalar reducer, one shared flight recorder, and a (generous)
+/// per-class SLO — then renders every observability surface this crate
+/// exports in one place: coordinator counters with the per-stage
+/// lifecycle tails, ingest-lane gauges, the fleet sweep, trace health,
+/// and SLO burn state. `--check` turns the snapshot into exit-code
+/// gates; `--bench-out` merges the e2e/queue-wait tails and SLO trip
+/// count into the CI bench record.
+fn cmd_status(args: &Args) -> anyhow::Result<()> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let jobs = args.opt_parse_or::<usize>("jobs", 8)?.max(1);
+    let tensor: usize = args.opt_parse_or("tensor", 1 << 16)?;
+    anyhow::ensure!(tensor > 0, "--tensor is a float count and must be positive");
+    let check = args.flag("check");
+    let bench_out = args.opt("bench-out").map(String::from);
+
+    // The smoke fleet: deterministic (Sim clock, seeded payloads), SLO'd
+    // with an objective no healthy run can miss — the point is proving
+    // the burn-rate plumbing end to end, not fabricating an outage.
+    let slo_objective_s = 3600.0;
+    let classes = ["single:4", "single:6"];
+    let env = Environment::uniform(ModelParams::cpu_testbed());
+    let trace = std::sync::Arc::new(TraceRecorder::new());
+    let mut fleet = FleetController::new(DEFAULT_LINK_BETA);
+    fleet.set_trace(trace.clone());
+    for class in classes {
+        let topo = workloads::parse_topology(class)?;
+        let candidates = default_candidates(&topo);
+        let grid = BTreeMap::from([(
+            class.to_string(),
+            BTreeSet::from([PlanRouter::bucket(tensor)]),
+        )]);
+        let table = table_from_model(&grid, &candidates, &env)?;
+        fleet.register(FleetSpec {
+            class: class.to_string(),
+            threshold: 0.5,
+            table,
+            env: env.clone(),
+            candidates,
+            policy: BatchPolicy::with_cap(1),
+            flush_after: std::time::Duration::from_millis(1),
+            observe: ObserveMode::Sim,
+            reducer: ReducerSpec::Scalar,
+            min_split_margin: DEFAULT_MIN_SPLIT_MARGIN,
+            slo: Some(genmodel::telemetry::SloPolicy::new(slo_objective_s)),
+            ingest_lanes: 0,
+        })?;
+    }
+    println!(
+        "status: {}-class smoke fleet (sim clock, scalar reducer, traced, \
+         SLO {slo_objective_s:.0}s), {jobs} job(s)/class of {tensor} floats",
+        classes.len()
+    );
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for class in classes {
+        let entry = fleet.entry(class).expect("registered above");
+        for _ in 0..jobs {
+            let tensors: Vec<Vec<f32>> =
+                (0..entry.n_workers).map(|_| rng.f32_vec(tensor)).collect();
+            pending.push(entry.service.submit(tensors)?);
+        }
+    }
+    for rx in pending {
+        rx.recv().map_err(|_| anyhow::anyhow!("leader dropped"))??;
+    }
+    fleet.check();
+
+    // Coordinator section: per-class counters, the queued → drained →
+    // batched → executed decomposition, and the ingest-lane gauges.
+    println!("\ncoordinator:");
+    let mut total_slo_trips = 0u64;
+    let mut worst_e2e_p95: Option<f64> = None;
+    let mut worst_queue_p95: Option<f64> = None;
+    let max_of = |acc: &mut Option<f64>, v: Option<f64>| {
+        if let Some(v) = v {
+            *acc = Some(acc.map_or(v, |a: f64| a.max(v)));
+        }
+    };
+    for (class, entry) in fleet.entries() {
+        let m = entry.service.metrics.snapshot();
+        total_slo_trips += m.slo_trips;
+        max_of(&mut worst_e2e_p95, m.e2e_latency.p95());
+        max_of(&mut worst_queue_p95, m.stage_queued.p95());
+        println!(
+            "  {class:<10} {} job(s) / {} batch(es), {} dropped; e2e p95 {} s \
+             (queued {} | drained {} | batched {} | exec {})",
+            m.jobs_completed,
+            m.batches_flushed,
+            m.jobs_submitted.saturating_sub(m.jobs_completed),
+            quantile_or_dash(m.e2e_latency.p95()),
+            quantile_or_dash(m.stage_queued.p95()),
+            quantile_or_dash(m.stage_drained.p95()),
+            quantile_or_dash(m.stage_batched.p95()),
+            quantile_or_dash(m.exec_latency.p95()),
+        );
+        println!(
+            "  {:<10} lanes: {} lane(s), depth hwm {}, {} sleep(s) / {} wake(s), \
+             {} drain(s), mean drain {:.1} job(s)",
+            "",
+            entry.service.ingest_lanes(),
+            m.ingest.depth_hwm,
+            m.ingest.sleeps,
+            m.ingest.wakes,
+            m.ingest.drains,
+            m.ingest.mean_drain(),
+        );
+    }
+
+    println!("\nfleet:");
+    let report = FleetReport::collect(&fleet);
+    print!("{}", report.render());
+
+    let tsnap = trace.snapshot();
+    let execs = tsnap.attributed_execs();
+    let done = tsnap.of_kind(SpanKind::JobDone).count();
+    let incomplete = tsnap.incomplete_jobs();
+    println!(
+        "\ntrace: {} event(s), {} dropped, {execs} attributed exec(s), \
+         {done} complete job lifecycle(s), {} incomplete",
+        tsnap.events.len(),
+        tsnap.dropped,
+        incomplete.len()
+    );
+
+    println!("\nslo:");
+    for (class, entry) in fleet.entries() {
+        let Some(s) = entry.service.slo_snapshot() else {
+            println!("  {class:<10} (no objective configured)");
+            continue;
+        };
+        let burn = |b: Option<f64>| {
+            b.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "  {class:<10} objective {:.0}s, {} observed, {} violation(s), \
+             {} trip(s){}, fast burn {}, slow burn {}",
+            s.objective_secs,
+            s.observed,
+            s.violations,
+            s.trips,
+            if s.tripped { " [TRIPPED]" } else { "" },
+            burn(s.fast_burn),
+            burn(s.slow_burn),
+        );
+    }
+    fleet.stop();
+
+    if let Some(bench_out) = &bench_out {
+        use genmodel::util::json::Json;
+        let mut entries = vec![(
+            "slo_trips".to_string(),
+            Json::num(total_slo_trips as f64),
+        )];
+        // The smoke always serves, so these tails exist on a healthy
+        // run; omitting them on a wedged one is what --check is for.
+        if let Some(p95) = worst_e2e_p95 {
+            entries.push(("e2e_p95_s".to_string(), Json::num(p95)));
+        }
+        if let Some(p95) = worst_queue_p95 {
+            entries.push(("queue_wait_p95_s".to_string(), Json::num(p95)));
+        }
+        merge_bench_json(bench_out, entries)?;
+        println!("\nbench record → {bench_out}");
+    }
+
+    if check {
+        anyhow::ensure!(
+            report.dropped_jobs() == 0,
+            "status --check: {} job(s) dropped across the smoke fleet",
+            report.dropped_jobs()
+        );
+        anyhow::ensure!(
+            tsnap.dropped == 0,
+            "status --check: {} trace event(s) dropped (ring too small for the smoke)",
+            tsnap.dropped
+        );
+        anyhow::ensure!(
+            execs >= 1,
+            "status --check: no executed batch carries a term attribution"
+        );
+        anyhow::ensure!(
+            incomplete.is_empty(),
+            "status --check: {} job(s) have a queued span but no done span",
+            incomplete.len()
+        );
+        let submitted = classes.len() * jobs;
+        anyhow::ensure!(
+            done == submitted,
+            "status --check: {done} complete lifecycle(s) traced for {submitted} submitted job(s)"
+        );
+        anyhow::ensure!(
+            total_slo_trips == 0,
+            "status --check: {total_slo_trips} SLO trip(s) against a {slo_objective_s:.0}s \
+             objective — the smoke cannot legitimately miss it"
+        );
+        anyhow::ensure!(
+            worst_e2e_p95.is_some() && worst_queue_p95.is_some(),
+            "status --check: lifecycle histograms never recorded"
+        );
+        println!("\ncheck: ok (0 drops, {done} complete lifecycle(s), {execs} attributed \
+                  exec(s), 0 SLO trips)");
     }
     Ok(())
 }

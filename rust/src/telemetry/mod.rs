@@ -22,6 +22,11 @@
 //!   joins recorder snapshots against campaign predictions and reports
 //!   per-cell relative error, worst offenders first — model drift made
 //!   visible instead of silently routing stale winners.
+//! * [`slo`] — multi-window SLO burn-rate tracking over per-job e2e
+//!   latency (submit → done, not just execution): a per-class objective
+//!   plus fast/slow violation windows, tripping once per sustained burn
+//!   — the health signal `repro status`, the fleet report's `slo_burn`
+//!   column, and the `allreduce_slo_*` Prometheus series all read.
 //! * [`calibrate`] — the **§3.4 fitting toolkit, online** (`repro
 //!   calibrate`): recorded `(n, s, time)` CPS samples become
 //!   [`crate::model::fit::BenchRow`]s, the fit re-recovers
@@ -68,10 +73,12 @@ pub mod calibrate;
 pub mod hist;
 pub mod recorder;
 pub mod score;
+pub mod slo;
 
 pub use calibrate::{bench_rows, calibrate, recalibrated_table, Calibration};
 pub use hist::{bin_of, HistSnapshot, LatencyHist, BINS, MAX_EXACT_TOTAL};
 pub use recorder::{CellKey, CellSnapshot, Recorder, TelemetryCursor, TelemetrySnapshot, SCHEMA};
+pub use slo::{SloPolicy, SloSnapshot, SloTracker};
 pub use score::{
     score_against_table, score_cells, score_class_against_table, summarize, PredictionRow,
     ScoreSummary, ScoredCell,

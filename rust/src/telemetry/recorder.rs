@@ -39,6 +39,21 @@ pub struct CellKey {
     pub algo: String,
 }
 
+impl CellKey {
+    /// Whether this cell holds a per-job lifecycle **stage** series
+    /// (`algo` is a `stage:*` sentinel — `stage:queued` / `stage:drained`
+    /// / `stage:batched`, fed by the coordinator's job decomposition)
+    /// rather than a served algorithm's batch observations. Stage cells
+    /// share the recorder so one artifact carries both, but they are not
+    /// model-comparable: scoring and [`TelemetrySnapshot::overall_hist`]
+    /// skip them (no campaign prediction exists under a stage key, and
+    /// queue-wait seconds folded into a batch-latency distribution would
+    /// corrupt it).
+    pub fn is_stage(&self) -> bool {
+        self.algo.starts_with("stage:")
+    }
+}
+
 impl fmt::Display for CellKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}|2^{}|{}", self.class, self.bucket, self.algo)
@@ -324,11 +339,16 @@ impl TelemetrySnapshot {
         }
     }
 
-    /// Every cell's histogram folded into one service-wide distribution.
+    /// Every batch cell's histogram folded into one service-wide
+    /// execution-latency distribution. Lifecycle stage cells
+    /// ([`CellKey::is_stage`]) are excluded — queue-wait seconds are not
+    /// batch latencies.
     pub fn overall_hist(&self) -> HistSnapshot {
         let mut out = HistSnapshot::default();
-        for cell in self.cells.values() {
-            out.merge(&cell.hist);
+        for (key, cell) in &self.cells {
+            if !key.is_stage() {
+                out.merge(&cell.hist);
+            }
         }
         out
     }
@@ -673,6 +693,23 @@ mod tests {
         rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
         assert_eq!(cursor.peek().1.overall_hist().count(), 1);
         assert_eq!(cursor.peek().1.overall_hist().count(), 1, "still fresh");
+    }
+
+    #[test]
+    fn stage_cells_are_flagged_and_kept_out_of_the_overall_hist() {
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 16, "cps", 65_536, 0.002);
+        rec.record("single:8", 8, 16, "stage:queued", 65_536, 5.0);
+        rec.record("single:8", 8, 16, "stage:drained", 65_536, 5.0);
+        let snap = rec.snapshot();
+        assert_eq!(snap.cells.len(), 3);
+        let stages: Vec<bool> = snap.cells.keys().map(CellKey::is_stage).collect();
+        assert_eq!(stages.iter().filter(|s| **s).count(), 2);
+        // The 5-second queue waits must not pollute the batch-latency
+        // distribution: overall_hist sees only the 2 ms execution.
+        let overall = snap.overall_hist();
+        assert_eq!(overall.count(), 1);
+        assert!(overall.p99().unwrap() < 1.0, "{:?}", overall.p99());
     }
 
     #[test]

@@ -140,6 +140,10 @@ fn score_iter<'s, R: PredictionRow>(
     predict: impl Fn(&str, u32, &str) -> Option<f64>,
 ) -> Vec<ScoredCell> {
     let mut out: Vec<ScoredCell> = cells
+        // Lifecycle stage cells carry queue-wait seconds, not batch
+        // latencies — no campaign prediction exists under a stage key,
+        // and an "unmatched" row per stage would only pad the report.
+        .filter(|(key, _)| !key.is_stage())
         .map(|(key, cell)| {
             let mean_floats = cell.mean_floats();
             let from_rows = rows
@@ -390,6 +394,20 @@ mod tests {
         let s = summarize(&scored);
         assert_eq!((s.cells, s.matched, s.skipped), (4, 1, 2));
         assert!(s.worst.as_deref().unwrap().contains("d-fine"), "{:?}", s.worst);
+    }
+
+    #[test]
+    fn stage_cells_never_enter_the_scoring_join() {
+        let rec = Recorder::new();
+        rec.record("single:8", 8, 20, "cps", 1_000_000, 0.030);
+        rec.record("single:8", 8, 20, "stage:queued", 1_000_000, 4.0);
+        rec.record("single:8", 8, 20, "stage:drained", 1_000_000, 4.0);
+        let rows = vec![row("single:8", "cps", 1e6, 0.020)];
+        let cells = score_cells(&rec.snapshot(), &rows, |_, _, _| None);
+        assert_eq!(cells.len(), 1, "only the batch cell is scored");
+        assert_eq!(cells[0].key.algo, "cps");
+        let s = summarize(&cells);
+        assert_eq!((s.cells, s.matched, s.skipped), (1, 1, 0));
     }
 
     #[test]

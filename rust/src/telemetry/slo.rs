@@ -1,0 +1,323 @@
+//! Per-class SLO burn-rate tracking over end-to-end job latency.
+//!
+//! A latency objective alone is a bad pager: one slow job out of a
+//! thousand is noise, while a sustained 20% violation rate silently
+//! exhausts an error budget. The standard fix is **multi-window
+//! burn-rate alerting**: measure the violation fraction over a fast
+//! window (catches acute regressions quickly) *and* a slow window
+//! (proves the burn is sustained, not a blip), and trip only when both
+//! exceed the error budget. [`SloTracker`] implements exactly that over
+//! the coordinator's per-job e2e latencies (`JobResult.stages.e2e_secs`):
+//! the service observes every completed job, the tracker trips on the
+//! non-tripped → tripped transition (hysteresis: it must fall back under
+//! budget on the fast window before it can trip again), and trips
+//! surface as `slo_trip` trace spans, the `allreduce_slo_trips_total`
+//! Prometheus counter, and the fleet report's `slo_burn` column.
+//!
+//! Windows are job-count-based, not wall-time-based, on purpose: the
+//! serving harnesses here run under `ObserveMode::Sim` where wall time
+//! is meaningless, and a count window makes the trip condition exactly
+//! reproducible in tests (`rust/tests/prop_lifecycle.rs` pins it).
+
+use std::collections::VecDeque;
+
+/// One class's latency objective plus the burn-rate windows watching it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloPolicy {
+    /// The latency objective in seconds: a job whose e2e latency exceeds
+    /// this violates the SLO.
+    pub objective_secs: f64,
+    /// Jobs in the fast window (acute burn detection). Must be ≥ 1.
+    pub fast_window: usize,
+    /// Jobs in the slow window (sustained burn confirmation). Clamped up
+    /// to at least `fast_window`.
+    pub slow_window: usize,
+    /// Error budget: the violation fraction allowed before the burn rate
+    /// reads 1.0 (e.g. 0.1 = 10% of jobs may miss the objective).
+    pub budget: f64,
+}
+
+/// Default fast window: trips can fire within 16 served jobs.
+pub const DEFAULT_FAST_WINDOW: usize = 16;
+/// Default slow window: sustained burn is judged over 128 jobs.
+pub const DEFAULT_SLOW_WINDOW: usize = 128;
+/// Default error budget: 10% of jobs may miss the objective.
+pub const DEFAULT_SLO_BUDGET: f64 = 0.1;
+
+impl SloPolicy {
+    /// The default windows/budget around one latency objective.
+    pub fn new(objective_secs: f64) -> SloPolicy {
+        SloPolicy {
+            objective_secs,
+            fast_window: DEFAULT_FAST_WINDOW,
+            slow_window: DEFAULT_SLOW_WINDOW,
+            budget: DEFAULT_SLO_BUDGET,
+        }
+    }
+}
+
+/// Rolling violation window: a bounded deque of hit/miss booleans plus a
+/// running violation count (O(1) per observation).
+#[derive(Debug, Clone, Default)]
+struct BurnWindow {
+    seen: VecDeque<bool>,
+    violations: usize,
+    cap: usize,
+}
+
+impl BurnWindow {
+    fn new(cap: usize) -> BurnWindow {
+        BurnWindow {
+            seen: VecDeque::with_capacity(cap),
+            violations: 0,
+            cap,
+        }
+    }
+
+    fn observe(&mut self, violated: bool) {
+        if self.seen.len() == self.cap {
+            if self.seen.pop_front() == Some(true) {
+                self.violations -= 1;
+            }
+        }
+        self.seen.push_back(violated);
+        if violated {
+            self.violations += 1;
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.seen.len() == self.cap
+    }
+
+    /// Violation fraction over the window; `None` before any observation.
+    fn fraction(&self) -> Option<f64> {
+        if self.seen.is_empty() {
+            None
+        } else {
+            Some(self.violations as f64 / self.seen.len() as f64)
+        }
+    }
+}
+
+/// Multi-window burn-rate tracker over one class's e2e job latencies
+/// (see module docs for the alerting model).
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    policy: SloPolicy,
+    fast: BurnWindow,
+    slow: BurnWindow,
+    observed: u64,
+    violations: u64,
+    trips: u64,
+    tripped: bool,
+}
+
+impl SloTracker {
+    pub fn new(policy: SloPolicy) -> SloTracker {
+        let fast = policy.fast_window.max(1);
+        let slow = policy.slow_window.max(fast);
+        SloTracker {
+            fast: BurnWindow::new(fast),
+            slow: BurnWindow::new(slow),
+            policy,
+            observed: 0,
+            violations: 0,
+            trips: 0,
+            tripped: false,
+        }
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Feed one completed job's e2e latency. Returns `true` exactly when
+    /// this observation transitions the tracker into the tripped state —
+    /// the caller emits one `slo_trip` span per transition, not per
+    /// violating job.
+    pub fn observe(&mut self, e2e_secs: f64) -> bool {
+        let violated = !(e2e_secs <= self.policy.objective_secs);
+        self.observed += 1;
+        if violated {
+            self.violations += 1;
+        }
+        self.fast.observe(violated);
+        self.slow.observe(violated);
+        // Trip: the fast window is full of evidence and BOTH windows burn
+        // at ≥ 1× the budget. (The slow window need not be full — early
+        // in a run its shorter history is all the history there is.)
+        let burning = self.fast.full()
+            && self.fast_burn().is_some_and(|b| b >= 1.0)
+            && self.slow_burn().is_some_and(|b| b >= 1.0);
+        if burning && !self.tripped {
+            self.tripped = true;
+            self.trips += 1;
+            return true;
+        }
+        // Hysteresis: re-arm only once the fast window cools back under
+        // budget, so a sustained burn counts one trip, not one per job.
+        if self.tripped && self.fast_burn().is_some_and(|b| b < 1.0) {
+            self.tripped = false;
+        }
+        false
+    }
+
+    /// Violation fraction over the fast window divided by the budget
+    /// (1.0 = burning exactly at budget); `None` before any observation.
+    pub fn fast_burn(&self) -> Option<f64> {
+        Some(self.fast.fraction()? / self.policy.budget.max(f64::MIN_POSITIVE))
+    }
+
+    /// Burn rate over the slow window; `None` before any observation.
+    pub fn slow_burn(&self) -> Option<f64> {
+        Some(self.slow.fraction()? / self.policy.budget.max(f64::MIN_POSITIVE))
+    }
+
+    /// Lifetime trips (non-tripped → tripped transitions).
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Currently in the tripped state (burning over budget).
+    pub fn is_tripped(&self) -> bool {
+        self.tripped
+    }
+
+    /// Lifetime observations fed to the tracker.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Lifetime objective violations (independent of windows).
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// One coherent copy of the tracker's state — what `repro status`
+    /// and the fleet report render without holding the service's lock.
+    pub fn snapshot(&self) -> SloSnapshot {
+        SloSnapshot {
+            objective_secs: self.policy.objective_secs,
+            observed: self.observed,
+            violations: self.violations,
+            trips: self.trips,
+            tripped: self.tripped,
+            fast_burn: self.fast_burn(),
+            slow_burn: self.slow_burn(),
+        }
+    }
+}
+
+/// Point-in-time view of a [`SloTracker`] (see [`SloTracker::snapshot`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSnapshot {
+    pub objective_secs: f64,
+    pub observed: u64,
+    pub violations: u64,
+    pub trips: u64,
+    pub tripped: bool,
+    /// Burn rates are `None` until the first observation — render `-`.
+    pub fast_burn: Option<f64>,
+    pub slow_burn: Option<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(objective: f64) -> SloPolicy {
+        SloPolicy {
+            objective_secs: objective,
+            fast_window: 4,
+            slow_window: 16,
+            budget: 0.5,
+        }
+    }
+
+    #[test]
+    fn trips_once_the_fast_window_fills_with_violations() {
+        let mut t = SloTracker::new(policy(1e-3));
+        // Three violations: fast window (cap 4) not full yet — no trip.
+        for _ in 0..3 {
+            assert!(!t.observe(2e-3));
+        }
+        assert_eq!(t.trips(), 0);
+        // Fourth violation fills the window at 100% burn → one trip.
+        assert!(t.observe(2e-3));
+        assert_eq!(t.trips(), 1);
+        assert!(t.is_tripped());
+        // Sustained burn does NOT re-trip.
+        for _ in 0..8 {
+            assert!(!t.observe(2e-3));
+        }
+        assert_eq!(t.trips(), 1);
+    }
+
+    #[test]
+    fn honest_latencies_never_trip() {
+        let mut t = SloTracker::new(policy(1e-3));
+        for _ in 0..256 {
+            assert!(!t.observe(0.5e-3));
+        }
+        assert_eq!(t.trips(), 0);
+        assert_eq!(t.fast_burn(), Some(0.0));
+        assert_eq!(t.slow_burn(), Some(0.0));
+        assert_eq!(t.violations(), 0);
+        assert_eq!(t.observed(), 256);
+    }
+
+    #[test]
+    fn recovery_rearms_the_tracker() {
+        let mut t = SloTracker::new(policy(1e-3));
+        for _ in 0..4 {
+            t.observe(2e-3);
+        }
+        assert_eq!(t.trips(), 1);
+        // Cool down: fast window refills with hits, burn < 1.
+        for _ in 0..4 {
+            t.observe(0.1e-3);
+        }
+        assert!(!t.is_tripped());
+        // Second burst: the slow window still carries the first burst's
+        // violations, so it stays ≥ budget; a fresh fast-window burn
+        // trips again.
+        let mut tripped_again = false;
+        for _ in 0..4 {
+            tripped_again |= t.observe(2e-3);
+        }
+        assert!(tripped_again);
+        assert_eq!(t.trips(), 2);
+    }
+
+    #[test]
+    fn burn_is_none_before_any_observation() {
+        let t = SloTracker::new(policy(1e-3));
+        assert_eq!(t.fast_burn(), None);
+        assert_eq!(t.slow_burn(), None);
+        assert!(!t.is_tripped());
+    }
+
+    #[test]
+    fn nan_latency_counts_as_a_violation() {
+        // A NaN e2e cannot prove the objective was met; treating it as a
+        // hit would let a broken clock mask a real burn.
+        let mut t = SloTracker::new(policy(1e-3));
+        for _ in 0..4 {
+            t.observe(f64::NAN);
+        }
+        assert_eq!(t.trips(), 1);
+    }
+
+    #[test]
+    fn degenerate_windows_clamp_sane() {
+        let mut t = SloTracker::new(SloPolicy {
+            objective_secs: 1e-3,
+            fast_window: 0,
+            slow_window: 0,
+            budget: 0.5,
+        });
+        assert!(t.observe(2e-3)); // cap clamps to 1: instant full window
+        assert_eq!(t.trips(), 1);
+    }
+}

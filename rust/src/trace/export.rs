@@ -50,6 +50,30 @@ impl TraceSnapshot {
             .count()
     }
 
+    /// Jobs with a broken lifecycle chain: a `job_queued` span with no
+    /// matching `job_done` for the same `(class, job)` — the job entered
+    /// the per-job decomposition but its completion was never recorded.
+    /// Returns the offending `(class id, job id)` pairs, sorted. The
+    /// leader emits a job's whole chain atomically at respond time, so a
+    /// non-empty answer on a zero-drop trace means lost jobs, not ring
+    /// wraparound — `repro trace --check` fails on it. (With drops > 0
+    /// the chain may be legitimately torn; the gate already tolerates
+    /// nothing on the smoke's sized ring.)
+    pub fn incomplete_jobs(&self) -> Vec<(u32, u64)> {
+        let done: std::collections::HashSet<(u32, u64)> = self
+            .of_kind(SpanKind::JobDone)
+            .map(|e| (e.span.class, e.span.job))
+            .collect();
+        let mut missing: Vec<(u32, u64)> = self
+            .of_kind(SpanKind::JobQueued)
+            .map(|e| (e.span.class, e.span.job))
+            .filter(|k| !done.contains(k))
+            .collect();
+        missing.sort_unstable();
+        missing.dedup();
+        missing
+    }
+
     /// Fraction of executed seconds the model did *not* explain:
     /// `Σ|unexplained| / Σ observed` over `BatchExec` events (0 when no
     /// executions were traced). The bench JSON tracks this as
@@ -376,6 +400,33 @@ mod tests {
         assert!(TraceSnapshot::from_jsonl(&stripped).is_err());
         // Empty document.
         assert!(TraceSnapshot::from_jsonl("").is_err());
+    }
+
+    #[test]
+    fn incomplete_jobs_flags_queued_without_done() {
+        let mut snap = TraceSnapshot {
+            strings: vec!["".into(), "single:4".into()],
+            ..TraceSnapshot::default()
+        };
+        let ev = |seq: u64, kind: SpanKind, job: u64| {
+            let mut s = Span::new(kind);
+            s.class = 1;
+            s.job = job;
+            SpanEvent { seq, span: s }
+        };
+        // Job 1: complete chain. Job 2: queued, never done.
+        snap.events = vec![
+            ev(1, SpanKind::JobQueued, 1),
+            ev(2, SpanKind::JobQueued, 2),
+            ev(3, SpanKind::JobDrained, 1),
+            ev(4, SpanKind::JobDone, 1),
+        ];
+        assert_eq!(snap.incomplete_jobs(), vec![(1, 2)]);
+        // Completing job 2 clears the check; an empty trace is trivially
+        // complete.
+        snap.events.push(ev(5, SpanKind::JobDone, 2));
+        assert!(snap.incomplete_jobs().is_empty());
+        assert!(TraceSnapshot::default().incomplete_jobs().is_empty());
     }
 
     #[test]

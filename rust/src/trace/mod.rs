@@ -38,6 +38,38 @@
 //! `DriftSwap`/`FleetTrip` attributing the observed-vs-predicted gap to
 //! the term that ate it (§3's incast and memory measurements are exactly
 //! the two terms a classic-model table cannot have priced).
+//!
+//! # Observability guide (every span kind → its emitting site)
+//!
+//! All emitters live in `crate::coordinator::service`'s leader loop
+//! unless noted; that module's own observability guide maps the metric
+//! families the same way.
+//!
+//! * `job_enqueue` — a client submit accepted into the ingest lanes.
+//! * `batch_flush` — the batcher closed a batch (the closing
+//!   [`crate::coordinator::BatchRule`] rides the span).
+//! * `batch_exec` — one executed batch; duration = observed seconds,
+//!   with the α/wire/mem/incast [`TermAttribution`] attached.
+//! * `phase` — per-phase slice of an executed plan, under `batch_exec`.
+//! * `epoch_observe` — the leader's once-per-cycle table-epoch probe.
+//! * `drift_check` / `drift_swap` / `drift_eviction` — the in-service
+//!   drift autopilot (`crate::coordinator::drift`): score, hot-swap,
+//!   plan-cache eviction.
+//! * `fleet_trip` / `fleet_fit` / `fleet_push` — the fleet monitor
+//!   (`crate::fleet`): a class's budget tripping, the pooled §3.4
+//!   refit, a recalibrated table pushed to a rack.
+//! * `job_queued` / `job_drained` / `job_done` — the per-job lifecycle
+//!   decomposition (queued → drained → batched → executed), emitted
+//!   together at respond time so the chain is atomic: `job_queued`
+//!   opens the job's timeline, `job_drained` begins exactly where
+//!   queued ends (its duration spans the drained + batched stages), and
+//!   `job_done` covers the whole e2e. `repro trace --chrome` renders
+//!   them as nested `"X"` spans per job;
+//!   [`TraceSnapshot::incomplete_jobs`] (backing `repro trace --check`
+//!   and `repro status --check`) flags any queued-without-done chain.
+//! * `slo_trip` — the per-class SLO burn-rate monitor
+//!   ([`crate::telemetry::SloTracker`]) tripping; the lifetime trip
+//!   count rides `floats`, the violating e2e seconds ride the duration.
 
 pub mod attr;
 pub mod export;

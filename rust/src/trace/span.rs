@@ -13,7 +13,8 @@ use super::attr::TermAttribution;
 pub const WORDS: usize = 12;
 
 /// What one trace event describes. Kinds 1–5 are the serving lifecycle;
-/// 6–8 the per-service drift autopilot; 9–11 the fleet control plane.
+/// 6–8 the per-service drift autopilot; 9–11 the fleet control plane;
+/// 12–15 the per-job lifecycle decomposition and SLO watchdog.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum SpanKind {
@@ -43,10 +44,23 @@ pub enum SpanKind {
     FleetFit = 10,
     /// A recalibrated table was pushed through a class's handle.
     FleetPush = 11,
+    /// One job's queued stage: submit → lane drain (`job` = job id,
+    /// `ts_ns` = submit on the trace clock, `dur_ns` = lane wait).
+    JobQueued = 12,
+    /// One job's drained stage: lane drain → execution start (`dur_ns`
+    /// spans the flush-window wait plus batch close; `ts_ns` follows the
+    /// job's [`Self::JobQueued`] span).
+    JobDrained = 13,
+    /// One job's whole life: submit → result delivered (`dur_ns` = e2e,
+    /// `floats` = the job's tensor floats, `epoch` = serving epoch).
+    JobDone = 14,
+    /// An SLO burn-rate tracker tripped (`floats` = lifetime trip count,
+    /// `dur_ns` = the violating e2e latency).
+    SloTrip = 15,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 15] = [
         SpanKind::JobEnqueue,
         SpanKind::BatchFlush,
         SpanKind::BatchExec,
@@ -58,6 +72,10 @@ impl SpanKind {
         SpanKind::FleetTrip,
         SpanKind::FleetFit,
         SpanKind::FleetPush,
+        SpanKind::JobQueued,
+        SpanKind::JobDrained,
+        SpanKind::JobDone,
+        SpanKind::SloTrip,
     ];
 
     pub fn code(self) -> u8 {
@@ -82,6 +100,10 @@ impl SpanKind {
             SpanKind::FleetTrip => "fleet_trip",
             SpanKind::FleetFit => "fleet_fit",
             SpanKind::FleetPush => "fleet_push",
+            SpanKind::JobQueued => "job_queued",
+            SpanKind::JobDrained => "job_drained",
+            SpanKind::JobDone => "job_done",
+            SpanKind::SloTrip => "slo_trip",
         }
     }
 
@@ -101,7 +123,14 @@ impl SpanKind {
     /// Kinds with a real duration (Chrome `"X"` spans; the rest are
     /// zero-length markers).
     pub fn has_duration(self) -> bool {
-        matches!(self, SpanKind::BatchExec | SpanKind::Phase)
+        matches!(
+            self,
+            SpanKind::BatchExec
+                | SpanKind::Phase
+                | SpanKind::JobQueued
+                | SpanKind::JobDrained
+                | SpanKind::JobDone
+        )
     }
 }
 

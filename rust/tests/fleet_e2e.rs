@@ -70,6 +70,7 @@ fn spec(class: &str, buckets: &[u32], pricing: ModelParams, threshold: f64) -> F
         reducer: ReducerSpec::Scalar,
         min_split_margin: 1.25,
         ingest_lanes: 0,
+        slo: None,
     }
 }
 

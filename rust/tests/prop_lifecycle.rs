@@ -1,0 +1,205 @@
+//! Property-style pins for the job lifecycle decomposition
+//! (`queued → drained → batched → executed`) and the SLO burn-rate
+//! monitor built on top of it.
+//!
+//! The claims, stated as tests: every job's stage durations sum
+//! *exactly* to its reported e2e (the identity is structural, not
+//! approximate); the traced stage chain is monotone per job — queued
+//! opens the timeline, drained begins where queued ends, and the chain
+//! fits inside the done span; under 8 concurrent producers on the wall
+//! clock the decomposition stays within clock-read skew of the e2e the
+//! submitter actually measured; and the SLO tracker trips exactly when
+//! injected latency crosses the objective (impossible objective → one
+//! trip with hysteresis; generous objective → zero, the honest control).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use genmodel::coordinator::{AllReduceService, BatchPolicy, ObserveMode, ServiceConfig};
+use genmodel::model::params::Environment;
+use genmodel::runtime::ReducerSpec;
+use genmodel::telemetry::SloPolicy;
+use genmodel::topo::builders::single_switch;
+use genmodel::trace::{SpanKind, TraceRecorder};
+
+const WORKERS: usize = 4;
+
+fn service(cfg: ServiceConfig) -> AllReduceService {
+    AllReduceService::start(
+        single_switch(WORKERS),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        cfg,
+    )
+}
+
+fn tensors(len: usize) -> Vec<Vec<f32>> {
+    (0..WORKERS).map(|_| vec![1.0f32; len]).collect()
+}
+
+/// Sim clock, traced: the structural identity per result, then the same
+/// story retold by the trace — per job, monotone and self-consistent.
+#[test]
+fn every_job_reports_a_monotone_stage_chain_summing_to_its_e2e() {
+    const JOBS: usize = 16;
+    let trace = Arc::new(TraceRecorder::new());
+    let svc = service(
+        ServiceConfig {
+            observe: ObserveMode::Sim,
+            policy: BatchPolicy::with_cap(4),
+            flush_after: Duration::from_micros(200),
+            ..ServiceConfig::default()
+        }
+        .with_trace(trace.clone()),
+    );
+    let handles: Vec<_> = (0..JOBS)
+        .map(|_| svc.submit(tensors(512)))
+        .collect::<Result<_, _>>()
+        .unwrap();
+    for h in handles {
+        let res = h.recv().unwrap().unwrap();
+        let st = &res.stages;
+        assert_eq!(
+            st.e2e_ns(),
+            st.queued_ns + st.drained_ns + st.batched_ns + st.exec_ns,
+            "e2e is the exact structural sum of its stages"
+        );
+        assert!(st.exec_ns > 0, "the sim clock prices every batch > 0");
+    }
+    svc.stop();
+    let snap = trace.snapshot();
+    assert_eq!(snap.dropped, 0, "the smoke must fit the ring");
+    assert!(
+        snap.incomplete_jobs().is_empty(),
+        "every queued job retired"
+    );
+    let done: HashMap<u64, u64> = snap
+        .of_kind(SpanKind::JobDone)
+        .map(|e| (e.span.job, e.span.dur_ns))
+        .collect();
+    assert_eq!(done.len(), JOBS, "one done span per job");
+    let queued: HashMap<u64, (u64, u64)> = snap
+        .of_kind(SpanKind::JobQueued)
+        .map(|e| (e.span.job, (e.span.ts_ns, e.span.dur_ns)))
+        .collect();
+    assert_eq!(queued.len(), JOBS, "one queued span per job");
+    for dr in snap.of_kind(SpanKind::JobDrained) {
+        let (q_ts, q_dur) = queued[&dr.span.job];
+        assert_eq!(
+            dr.span.ts_ns,
+            q_ts + q_dur,
+            "job {}: drained begins exactly where queued ends",
+            dr.span.job
+        );
+        assert!(
+            dr.span.ts_ns + dr.span.dur_ns <= q_ts + done[&dr.span.job],
+            "job {}: the stage chain fits inside its done span",
+            dr.span.job
+        );
+    }
+}
+
+/// Wall clock, 8 producers hammering 4 lanes: every stage stamp lies
+/// inside the submitter's own submit → recv window, so the reported e2e
+/// can exceed the measured wall e2e only by clock-read skew.
+#[test]
+fn stage_sums_track_wall_e2e_under_8_concurrent_producers() {
+    const PRODUCERS: usize = 8;
+    const PER_PRODUCER: usize = 32;
+    let svc = service(ServiceConfig {
+        observe: ObserveMode::Wall,
+        policy: BatchPolicy::with_cap(1 << 20),
+        flush_after: Duration::from_micros(200),
+        ingest_lanes: 4,
+        ..ServiceConfig::default()
+    });
+    let checked = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|_| {
+                let svc = &svc;
+                s.spawn(move || {
+                    for _ in 0..PER_PRODUCER {
+                        let t0 = std::time::Instant::now();
+                        let rx = svc.submit(tensors(256)).unwrap();
+                        let res = rx.recv().unwrap().unwrap();
+                        let wall = t0.elapsed().as_secs_f64();
+                        let st = &res.stages;
+                        assert_eq!(
+                            st.e2e_ns(),
+                            st.queued_ns + st.drained_ns + st.batched_ns + st.exec_ns
+                        );
+                        let e2e = st.e2e_secs();
+                        assert!(e2e > 0.0, "a served job took time");
+                        assert!(
+                            e2e <= wall + 0.010,
+                            "decomposed e2e {e2e}s exceeds the measured \
+                             submit→recv wall {wall}s by more than clock skew"
+                        );
+                    }
+                    PER_PRODUCER
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("producer panicked"))
+            .sum::<usize>()
+    });
+    assert_eq!(checked, PRODUCERS * PER_PRODUCER);
+    svc.stop();
+}
+
+/// Injected violation: a 0-second objective every Sim-priced job must
+/// miss. The tracker trips exactly once (hysteresis holds it tripped
+/// instead of re-tripping per job) and the trip surfaces in metrics.
+#[test]
+fn slo_trips_exactly_when_injected_latency_crosses_the_objective() {
+    const JOBS: u64 = 6;
+    let svc = service(ServiceConfig {
+        observe: ObserveMode::Sim,
+        policy: BatchPolicy::with_cap(1),
+        flush_after: Duration::from_micros(100),
+        slo: Some(SloPolicy {
+            objective_secs: 0.0,
+            fast_window: 2,
+            slow_window: 2,
+            budget: 1.0,
+        }),
+        ..ServiceConfig::default()
+    });
+    for _ in 0..JOBS {
+        svc.submit(tensors(512)).unwrap().recv().unwrap().unwrap();
+    }
+    let snap = svc.slo_snapshot().expect("slo was configured");
+    assert_eq!(snap.observed, JOBS);
+    assert_eq!(snap.violations, JOBS, "no job beats a 0-second objective");
+    assert_eq!(snap.trips, 1, "hysteresis: one trip, not one per job");
+    assert!(snap.tripped);
+    assert_eq!(svc.metrics.snapshot().slo_trips, 1);
+    svc.stop();
+}
+
+/// The honest control: a generous objective no smoke can miss records
+/// observations but neither violations nor trips.
+#[test]
+fn generous_slo_never_trips_the_honest_control() {
+    const JOBS: u64 = 6;
+    let svc = service(ServiceConfig {
+        observe: ObserveMode::Sim,
+        policy: BatchPolicy::with_cap(1),
+        flush_after: Duration::from_micros(100),
+        slo: Some(SloPolicy::new(3600.0)),
+        ..ServiceConfig::default()
+    });
+    for _ in 0..JOBS {
+        svc.submit(tensors(512)).unwrap().recv().unwrap().unwrap();
+    }
+    let snap = svc.slo_snapshot().expect("slo was configured");
+    assert_eq!(snap.observed, JOBS);
+    assert_eq!(snap.violations, 0);
+    assert_eq!(snap.trips, 0);
+    assert!(!snap.tripped);
+    assert_eq!(svc.metrics.snapshot().slo_trips, 0);
+    svc.stop();
+}

@@ -118,8 +118,17 @@ fn score_detects_drift_and_calibration_reroutes_the_incast_bucket() {
     let recorder = Arc::new(Recorder::new());
     serve_workload(&recorder);
     let snap = recorder.snapshot();
-    assert_eq!(snap.cells.len(), 12, "6 classes × 2 buckets: {snap:?}");
-    for cell in snap.cells.values() {
+    // The lifecycle decomposition records three `stage:*` sentinel cells
+    // alongside every batch cell; `CellKey::is_stage` keeps them out of
+    // everything the scoring/calibration loop below consumes.
+    let batch_cells: Vec<_> = snap.cells.iter().filter(|(k, _)| !k.is_stage()).collect();
+    assert_eq!(batch_cells.len(), 12, "6 classes × 2 buckets: {snap:?}");
+    assert_eq!(
+        snap.cells.len(),
+        12 * 4,
+        "each batch cell carries its 3 stage sentinels"
+    );
+    for (_, cell) in &batch_cells {
         assert_eq!(cell.batches(), 1);
     }
 
@@ -243,8 +252,9 @@ fn recorded_buckets_match_router_buckets() {
     svc.allreduce(tensors(4, 3000, 1)).unwrap();
     svc.stop();
     let snap = recorder.snapshot();
-    assert_eq!(snap.cells.len(), 1);
-    let key = snap.cells.keys().next().unwrap();
+    let batch_keys: Vec<_> = snap.cells.keys().filter(|k| !k.is_stage()).collect();
+    assert_eq!(batch_keys.len(), 1, "{snap:?}");
+    let key = batch_keys[0];
     assert_eq!(key.bucket, PlanRouter::bucket(3000));
     assert_eq!(key.algo, "ring");
     assert_eq!(key.class, "single:4");

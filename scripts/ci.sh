@@ -144,4 +144,30 @@ step cargo run --release -p genmodel --quiet -- fleet \
     --ingest-burst 8 --ingest-burst-jobs 64 --expect-ingest-speedup \
     --bench-out BENCH_campaign.json
 
+# 12. Serving-plane observability gate. The serve smoke's Prometheus
+#     exposition (--metrics-text prints it last, after the human
+#     counter table) is scraped to a file and schema-validated by
+#     scripts/promlint.py: every sample needs an announced HELP/TYPE,
+#     values must parse, no duplicate series, and the lifecycle-stage /
+#     e2e / ingest / SLO families introduced by the queue-time
+#     decomposition must be present by name. `repro status --check`
+#     then renders the unified coordinator + fleet + trace + SLO
+#     snapshot and gates on zero drops, a complete queued→done lifecycle
+#     per job, ≥ 1 attributed exec span, and zero SLO trips, merging
+#     e2e_p95_s / queue_wait_p95_s / slo_trips into BENCH_campaign.json.
+step bash -c 'cargo run --release -p genmodel --quiet -- serve --servers 4 --jobs 16 \
+    --tensor 2048 --scalar --metrics-text > target/metrics_smoke.prom'
+if command -v python3 >/dev/null 2>&1; then
+    step python3 scripts/promlint.py target/metrics_smoke.prom \
+        --require allreduce_latency_seconds \
+        --require allreduce_e2e_latency_seconds \
+        --require allreduce_stage_seconds \
+        --require allreduce_slo_trips_total \
+        --require allreduce_ingest_depth_hwm \
+        --require allreduce_ingest_drain_jobs
+else
+    echo "ci.sh: WARNING: python3 not found — skipping promlint" >&2
+fi
+step cargo run --release -p genmodel --quiet -- status --check --bench-out BENCH_campaign.json
+
 exit $fail

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Strict-enough linter for the Prometheus text exposition `repro serve
+--metrics-text` emits (scripts/ci.sh step 12).
+
+The scraped file may carry a human-readable preamble (the serve smoke's
+counter table); linting starts at the first `# HELP` line and everything
+from there on must be valid exposition:
+
+  * every sample belongs to a family announced by `# HELP` + `# TYPE`
+    (summary samples may use the family name with a `quantile` label or
+    the `_count` / `_sum` suffixes);
+  * `# TYPE` is one of counter / gauge / summary / histogram / untyped;
+  * sample values parse as floats;
+  * no (name, labels) series appears twice.
+
+`--require FAMILY` (repeatable) additionally fails the lint unless that
+family was announced — the CI pin that a rename of an exported metric
+family cannot slip through silently.
+
+Exit code 0 and a one-line summary on success; 1 with one message per
+violation otherwise. stdlib only.
+"""
+
+import re
+import sys
+
+TYPES = {"counter", "gauge", "summary", "histogram", "untyped"}
+
+HELP_RE = re.compile(r"^# HELP ([a-zA-Z_:][a-zA-Z0-9_:]*) (.+)$")
+TYPE_RE = re.compile(r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) ([a-z]+)$")
+SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"\\]*"'
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="[^"\\]*")*\})?'
+    r" (\S+)$"
+)
+
+
+def family_of(name, types):
+    """The announced family a sample name belongs to, or None."""
+    if name in types:
+        return name
+    # Summary/histogram synthetic series: name_count, name_sum,
+    # name_bucket hang off the announced base name.
+    for suffix in ("_count", "_sum", "_bucket"):
+        if name.endswith(suffix) and name[: -len(suffix)] in types:
+            return name[: -len(suffix)]
+    return None
+
+
+def lint(lines, required):
+    errors = []
+    helps = {}
+    types = {}
+    seen_series = set()
+    samples = 0
+    started = False
+    for lineno, raw in enumerate(lines, 1):
+        line = raw.rstrip("\n")
+        if not started:
+            if HELP_RE.match(line):
+                started = True
+            else:
+                continue  # human preamble before the exposition block
+        if not line.strip():
+            continue
+        m = HELP_RE.match(line)
+        if m:
+            name = m.group(1)
+            if name in helps:
+                errors.append(f"line {lineno}: duplicate HELP for {name}")
+            helps[name] = m.group(2)
+            continue
+        m = TYPE_RE.match(line)
+        if m:
+            name, kind = m.groups()
+            if kind not in TYPES:
+                errors.append(f"line {lineno}: TYPE {name} has unknown kind {kind!r}")
+            if name in types:
+                errors.append(f"line {lineno}: duplicate TYPE for {name}")
+            if name not in helps:
+                errors.append(f"line {lineno}: TYPE {name} precedes its HELP")
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment: legal, carries no samples
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {lineno}: unparsable sample line {line!r}")
+            continue
+        name, labels, value = m.groups()
+        samples += 1
+        fam = family_of(name, types)
+        if fam is None:
+            errors.append(f"line {lineno}: sample {name} has no announced TYPE")
+        try:
+            float(value)
+        except ValueError:
+            errors.append(f"line {lineno}: sample {name} value {value!r} is not a float")
+        series = (name, labels or "")
+        if series in seen_series:
+            errors.append(f"line {lineno}: duplicate series {name}{labels or ''}")
+        seen_series.add(series)
+    if not started:
+        errors.append("no exposition block found (no `# HELP` line)")
+    for fam in required:
+        if fam not in types:
+            errors.append(f"required family {fam} was never announced")
+    return errors, len(types), samples
+
+
+def main(argv):
+    required = []
+    paths = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--require":
+            fam = next(it, None)
+            if fam is None:
+                sys.exit("promlint: --require needs a family name")
+            required.append(fam)
+        else:
+            paths.append(arg)
+    if len(paths) != 1:
+        sys.exit("usage: promlint.py [--require FAMILY]... <exposition.prom>")
+    with open(paths[0], encoding="utf-8") as f:
+        lines = f.readlines()
+    errors, families, samples = lint(lines, required)
+    for e in errors:
+        print(f"promlint: {paths[0]}: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"promlint: {paths[0]}: ok ({families} families, {samples} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
