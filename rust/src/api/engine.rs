@@ -1,4 +1,4 @@
-//! The `Engine` facade: one object tying a topology + parameter
+//! The `Engine` facade: one object tying a fabric + parameter
 //! environment to the algorithm registry and the three evaluation
 //! backends.
 //!
@@ -24,7 +24,7 @@ use crate::plan::validate::{validate, Goal};
 use crate::plan::Plan;
 use crate::runtime::ReducerSpec;
 use crate::sim::{simulate_plan, SimConfig};
-use crate::topo::Topology;
+use crate::topo::Fabric;
 use crate::util::rng::Rng;
 
 use super::error::ApiError;
@@ -36,10 +36,10 @@ use super::spec::{applicable_specs, AlgoSpec};
 /// fast, not OOM the host.
 const EXEC_FLOAT_BUDGET: f64 = 1.5e9;
 
-/// Facade over (topology, environment, registry, backends).
+/// Facade over (fabric, environment, registry, backends).
 #[derive(Clone)]
 pub struct Engine {
-    topo: Topology,
+    fabric: Fabric,
     env: Environment,
     kind: ModelKind,
     reducer: ReducerSpec,
@@ -48,9 +48,10 @@ pub struct Engine {
 
 impl Engine {
     /// Engine with the GenModel predictor and the scalar reducer.
-    pub fn new(topo: Topology, env: Environment) -> Engine {
+    /// Accepts a `Topology`, a `MeshFabric`, or a `Fabric`.
+    pub fn new(fabric: impl Into<Fabric>, env: Environment) -> Engine {
         Engine {
-            topo,
+            fabric: fabric.into(),
             env,
             kind: ModelKind::GenModel,
             reducer: ReducerSpec::Scalar,
@@ -76,29 +77,29 @@ impl Engine {
         self
     }
 
-    pub fn topo(&self) -> &Topology {
-        &self.topo
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 
     pub fn env(&self) -> &Environment {
         &self.env
     }
 
-    /// Parse an algorithm string and check it applies to this topology.
+    /// Parse an algorithm string and check it applies to this fabric.
     pub fn parse_algo(&self, spec: &str) -> Result<AlgoSpec, ApiError> {
         let algo = AlgoSpec::parse(spec)?;
-        algo.applicable(&self.topo)?;
+        algo.applicable(&self.fabric)?;
         Ok(algo)
     }
 
-    /// Every registered algorithm applicable to this topology.
+    /// Every registered algorithm applicable to this fabric.
     pub fn algorithms(&self) -> Vec<AlgoSpec> {
-        applicable_specs(&self.topo)
+        applicable_specs(&self.fabric)
     }
 
     /// Build (and validate) the plan for `spec` at payload `s` floats.
     pub fn plan(&self, spec: &AlgoSpec, s: f64) -> Result<Plan, ApiError> {
-        spec.build(&self.topo, &self.env, s)
+        spec.build(&self.fabric, &self.env, s)
     }
 
     /// Analytic (GenModel) seconds of `spec` at the representative
@@ -138,8 +139,8 @@ impl Engine {
     ) -> Result<Vec<Evaluation>, ApiError> {
         // Build without the registry's own validation pass — the stats
         // pass below validates exactly once.
-        spec.applicable(&self.topo)?;
-        let plan = (spec.source().build)(spec, &self.topo, &self.env, s);
+        spec.applicable(&self.fabric)?;
+        let plan = (spec.source().build)(spec, self.fabric.view(), &self.env, s);
         self.compare_plan(&spec.to_string(), &plan, s, backends)
     }
 
@@ -205,12 +206,18 @@ impl Engine {
         };
         match backend {
             Backend::Analytic => {
-                let cost = CostModel::new(&self.topo, &self.env, self.kind).plan_cost(plan, s);
+                let cost = CostModel::new(&self.fabric, &self.env, self.kind).plan_cost(plan, s);
                 ev.seconds = cost.total();
                 ev.terms = Some(cost);
             }
             Backend::Simulated => {
-                let r = simulate_plan(plan, s, &self.topo, &self.env, &SimConfig::new(&self.topo));
+                let r = simulate_plan(
+                    plan,
+                    s,
+                    &self.fabric,
+                    &self.env,
+                    &SimConfig::new(&self.fabric),
+                );
                 ev.seconds = r.total;
                 ev.sim = Some(r);
             }
@@ -347,12 +354,69 @@ mod tests {
     }
 
     #[test]
+    fn mesh_engine_runs_wafer_and_genall_on_all_backends() {
+        use crate::topo::builders::mesh;
+        let e = Engine::new(mesh(4, 4).unwrap(), Environment::paper());
+        for name in ["wafer", "genall"] {
+            let algo = e.parse_algo(name).unwrap();
+            let a = e.evaluate(&algo, 1e6, Backend::Analytic).unwrap();
+            let s = e.evaluate(&algo, 1e6, Backend::Simulated).unwrap();
+            assert!(a.seconds > 0.0, "{name} analytic");
+            assert!(s.seconds > 0.0, "{name} sim");
+            let ex = e.evaluate(&algo, 4096.0, Backend::Executed).unwrap();
+            assert!(ex.exec.unwrap().verified, "{name} exec");
+        }
+        // The tree-only generator is a typed mismatch here.
+        assert!(matches!(
+            e.parse_algo("gentree"),
+            Err(ApiError::AlgoTopoMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn wafer_beats_every_tree_algorithm_on_the_large_mesh_bucket() {
+        // The acceptance scenario: on MESH4x4 at 2^27 floats the incast
+        // (ε, w_t = 3 wafer links) and start-up (α × phase count) terms
+        // make the dimension-ordered wafer plan the GenModel winner over
+        // every tree-logical baseline; the simulator agrees on the
+        // ordering against the two closest contenders.
+        use crate::topo::builders::mesh;
+        let e = Engine::new(mesh(4, 4).unwrap(), Environment::paper());
+        let s = (1u64 << 27) as f64;
+        let wafer = e.parse_algo("wafer").unwrap();
+        let wafer_pred = e.evaluate(&wafer, s, Backend::Analytic).unwrap().seconds;
+        for algo in e.algorithms() {
+            if algo == wafer {
+                continue;
+            }
+            let pred = e.evaluate(&algo, s, Backend::Analytic).unwrap().seconds;
+            assert!(
+                wafer_pred < pred,
+                "wafer {wafer_pred} !< {algo} {pred} at 2^27"
+            );
+        }
+        let wafer_sim = e.evaluate(&wafer, s, Backend::Simulated).unwrap().seconds;
+        for name in ["ring", "cps"] {
+            let algo = e.parse_algo(name).unwrap();
+            let sim = e.evaluate(&algo, s, Backend::Simulated).unwrap().seconds;
+            assert!(wafer_sim < sim, "sim: wafer {wafer_sim} !< {name} {sim}");
+        }
+        // Small payloads invert: CPS's two α-rounds beat wafer's twelve,
+        // so the selection table has a real winner flip on this fabric.
+        let cps = e.parse_algo("cps").unwrap();
+        let small_wafer = e.evaluate(&wafer, 1e4, Backend::Analytic).unwrap().seconds;
+        let small_cps = e.evaluate(&cps, 1e4, Backend::Analytic).unwrap().seconds;
+        assert!(small_cps < small_wafer);
+    }
+
+    #[test]
     fn gentree_selection_consistency() {
         // The facade's gentree plan equals the direct generator output.
         let e = engine(9);
         let algo = e.parse_algo("gentree").unwrap();
         let via_api = e.plan(&algo, 1e6).unwrap();
-        let direct = crate::gentree::generate(e.topo(), e.env(), 1e6).plan;
+        let tree = e.fabric().as_tree().expect("engine built from a tree");
+        let direct = crate::gentree::generate(tree, e.env(), 1e6).plan;
         assert_eq!(via_api, direct);
     }
 }

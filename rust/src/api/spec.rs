@@ -14,8 +14,8 @@ use std::str::FromStr;
 use crate::gentree;
 use crate::model::params::Environment;
 use crate::plan::validate::{validate, Goal};
-use crate::plan::{acps, cps, hcps, reduce_broadcast, rhd, ring, Plan};
-use crate::topo::Topology;
+use crate::plan::{acps, cps, genall, hcps, reduce_broadcast, rhd, ring, wafer, Plan};
+use crate::topo::{FabricFamily, FabricRef};
 
 use super::error::ApiError;
 
@@ -40,6 +40,14 @@ pub enum AlgoSpec {
     ReduceBroadcast,
     /// Asymmetric CPS with the balanced one-block-per-server owner map.
     Acps,
+    /// Wafer-style bandwidth-optimal mesh reduce-scatter/all-gather
+    /// (arXiv 2404.15888): per-row line/ring reduce-scatter of column
+    /// chunk groups, then per-column reduce-scatter — mesh/torus only.
+    Wafer,
+    /// Kolmakov's generalized allreduce (arXiv 2004.09362): mixed-radix
+    /// digit exchange over the prime factorization of n — native
+    /// non-power-of-two, any fabric.
+    GenAll,
 }
 
 impl AlgoSpec {
@@ -53,6 +61,8 @@ impl AlgoSpec {
             AlgoSpec::Hcps { .. } => "hcps",
             AlgoSpec::ReduceBroadcast => "reduce-broadcast",
             AlgoSpec::Acps => "acps",
+            AlgoSpec::Wafer => "wafer",
+            AlgoSpec::GenAll => "genall",
         }
     }
 
@@ -79,19 +89,28 @@ impl AlgoSpec {
         })
     }
 
-    /// Check whether this algorithm can run on `topo`.
-    pub fn applicable(&self, topo: &Topology) -> Result<(), ApiError> {
-        (self.source().applicable)(self, topo).map_err(|reason| ApiError::AlgoTopoMismatch {
-            algo: self.to_string(),
-            topo: topo.name.clone(),
-            reason,
+    /// Check whether this algorithm can run on `fabric`.
+    pub fn applicable<'a>(&self, fabric: impl Into<FabricRef<'a>>) -> Result<(), ApiError> {
+        let fabric = fabric.into();
+        (self.source().applicable)(self, fabric).map_err(|reason| {
+            ApiError::AlgoTopoMismatch {
+                algo: self.to_string(),
+                topo: fabric.name().to_string(),
+                reason,
+            }
         })
     }
 
-    /// Build (and validate) the plan for payload size `s` on `topo`.
-    pub fn build(&self, topo: &Topology, env: &Environment, s: f64) -> Result<Plan, ApiError> {
-        self.applicable(topo)?;
-        let plan = (self.source().build)(self, topo, env, s);
+    /// Build (and validate) the plan for payload size `s` on `fabric`.
+    pub fn build<'a>(
+        &self,
+        fabric: impl Into<FabricRef<'a>>,
+        env: &Environment,
+        s: f64,
+    ) -> Result<Plan, ApiError> {
+        let fabric = fabric.into();
+        self.applicable(fabric)?;
+        let plan = (self.source().build)(self, fabric, env, s);
         validate(&plan, Goal::AllReduce).map_err(|e| ApiError::InvalidPlan {
             algo: self.to_string(),
             source: e,
@@ -120,6 +139,8 @@ impl fmt::Display for AlgoSpec {
             }
             AlgoSpec::ReduceBroadcast => write!(f, "reduce-broadcast"),
             AlgoSpec::Acps => write!(f, "acps"),
+            AlgoSpec::Wafer => write!(f, "wafer"),
+            AlgoSpec::GenAll => write!(f, "genall"),
         }
     }
 }
@@ -133,8 +154,8 @@ impl FromStr for AlgoSpec {
 }
 
 /// One registered algorithm family: how to parse it, whether it applies
-/// to a topology, how to build its plan, and which instances to use when
-/// enumerating algorithms for a topology.
+/// to a fabric, how to build its plan, and which instances to use when
+/// enumerating algorithms for a fabric.
 pub struct PlanSource {
     /// Family key (also [`AlgoSpec::family`]).
     pub family: &'static str,
@@ -142,17 +163,20 @@ pub struct PlanSource {
     pub template: &'static str,
     /// One-line description for `repro algos`.
     pub synopsis: &'static str,
+    /// Fabric families this algorithm runs on, for the `repro algos`
+    /// compatibility column (e.g. `"tree, mesh, torus"`).
+    pub fabrics: &'static str,
     /// Member of the paper's Table 7 baseline set.
     pub baseline: bool,
     /// Parse a (lowercased, trimmed) algorithm string of this family.
     pub parse: fn(&str) -> Option<AlgoSpec>,
-    /// `Err(reason)` when the spec cannot run on the topology.
-    pub applicable: fn(&AlgoSpec, &Topology) -> Result<(), String>,
+    /// `Err(reason)` when the spec cannot run on the fabric.
+    pub applicable: fn(&AlgoSpec, FabricRef<'_>) -> Result<(), String>,
     /// Build the plan. Only called after `applicable` passed.
-    pub build: fn(&AlgoSpec, &Topology, &Environment, f64) -> Plan,
-    /// Default instances to evaluate on a topology (may be empty, e.g.
-    /// HCPS on a prime server count).
-    pub defaults: fn(&Topology) -> Vec<AlgoSpec>,
+    pub build: fn(&AlgoSpec, FabricRef<'_>, &Environment, f64) -> Plan,
+    /// Default instances to evaluate on a fabric (may be empty, e.g.
+    /// HCPS on a prime server count, or wafer on a tree).
+    pub defaults: fn(FabricRef<'_>) -> Vec<AlgoSpec>,
 }
 
 /// The algorithm registry, in presentation order. GenTree first (the
@@ -163,30 +187,36 @@ pub fn registry() -> &'static [PlanSource] {
     REGISTRY.get_or_init(build_registry)
 }
 
-/// Specs of every registered family applicable to `topo`, in registry
+/// Specs of every registered family applicable to `fabric`, in registry
 /// order — the "what can I run here" enumeration.
-pub fn applicable_specs(topo: &Topology) -> Vec<AlgoSpec> {
+pub fn applicable_specs<'a>(fabric: impl Into<FabricRef<'a>>) -> Vec<AlgoSpec> {
+    let fabric = fabric.into();
     registry()
         .iter()
-        .flat_map(|src| (src.defaults)(topo))
-        .filter(|spec| spec.applicable(topo).is_ok())
+        .flat_map(|src| (src.defaults)(fabric))
+        .filter(|spec| spec.applicable(fabric).is_ok())
         .collect()
 }
 
-/// Built plans of the Table 7 baseline families applicable to `topo`
+/// Built plans of the Table 7 baseline families applicable to `fabric`
 /// (RHD only on power-of-two n, as in the paper), in registry order.
 ///
 /// Inapplicability is expected and filtered; a *build* failure of an
 /// applicable baseline is a plan-builder regression and panics rather
 /// than silently shrinking the baseline set under the benches.
-pub fn baseline_plans(topo: &Topology, env: &Environment, s: f64) -> Vec<Plan> {
+pub fn baseline_plans<'a>(
+    fabric: impl Into<FabricRef<'a>>,
+    env: &Environment,
+    s: f64,
+) -> Vec<Plan> {
+    let fabric = fabric.into();
     registry()
         .iter()
         .filter(|src| src.baseline)
-        .flat_map(|src| (src.defaults)(topo))
-        .filter(|spec| spec.applicable(topo).is_ok())
+        .flat_map(|src| (src.defaults)(fabric))
+        .filter(|spec| spec.applicable(fabric).is_ok())
         .map(|spec| {
-            spec.build(topo, env, s)
+            spec.build(fabric, env, s)
                 .unwrap_or_else(|e| panic!("baseline {spec} failed to build: {e}"))
         })
         .collect()
@@ -198,37 +228,42 @@ fn build_registry() -> Vec<PlanSource> {
         family: "gentree",
         template: "gentree|gentree-star",
         synopsis: "paper's generated plan (star = no data rearrangement)",
+        fabrics: "tree",
         baseline: false,
         parse: |s| match s {
             "gentree" => Some(AlgoSpec::GenTree { rearrange: true }),
             "gentree-star" | "gentree*" => Some(AlgoSpec::GenTree { rearrange: false }),
             _ => None,
         },
-        applicable: |_, topo| {
-            if topo.n_servers() >= 1 {
-                Ok(())
-            } else {
-                Err("topology has no servers".into())
-            }
+        applicable: |_, fabric| match fabric.as_tree() {
+            Some(topo) if topo.n_servers() >= 1 => Ok(()),
+            Some(_) => Err("topology has no servers".into()),
+            None => Err(format!(
+                "GenTree requires a rooted-tree fabric, got a {} fabric",
+                fabric.family()
+            )),
         },
-        build: |spec, topo, env, s| {
+        build: |spec, fabric, env, s| {
+            let topo = fabric.as_tree().expect("applicable() gated on tree");
             gentree::generate_with(topo, env, s, &gentree_config(spec)).plan
         },
-        defaults: |_| {
-            vec![
+        defaults: |fabric| match fabric.family() {
+            FabricFamily::Tree => vec![
                 AlgoSpec::GenTree { rearrange: true },
                 AlgoSpec::GenTree { rearrange: false },
-            ]
+            ],
+            _ => vec![],
         },
     },
     PlanSource {
         family: "rhd",
         template: "rhd",
         synopsis: "recursive halving-doubling (power-of-two n)",
+        fabrics: "tree, mesh, torus",
         baseline: true,
         parse: |s| (s == "rhd").then_some(AlgoSpec::Rhd),
-        applicable: |_, topo| {
-            let n = topo.n_servers();
+        applicable: |_, fabric| {
+            let n = fabric.n_servers();
             if n < 2 {
                 Err("needs at least 2 servers".into())
             } else if !n.is_power_of_two() {
@@ -240,44 +275,47 @@ fn build_registry() -> Vec<PlanSource> {
                 Ok(())
             }
         },
-        build: |_, topo, _, _| rhd::allreduce(topo.n_servers()),
+        build: |_, fabric, _, _| rhd::allreduce(fabric.n_servers()),
         defaults: |_| vec![AlgoSpec::Rhd],
     },
     PlanSource {
         family: "ring",
         template: "ring",
         synopsis: "ring AllReduce (NCCL-style)",
+        fabrics: "tree, mesh, torus",
         baseline: true,
         parse: |s| (s == "ring").then_some(AlgoSpec::Ring),
-        applicable: |_, topo| min_servers(topo, 2),
-        build: |_, topo, _, _| ring::allreduce(topo.n_servers()),
+        applicable: |_, fabric| min_servers(fabric, 2),
+        build: |_, fabric, _, _| ring::allreduce(fabric.n_servers()),
         defaults: |_| vec![AlgoSpec::Ring],
     },
     PlanSource {
         family: "cps",
         template: "cps",
         synopsis: "co-located parameter server",
+        fabrics: "tree, mesh, torus",
         baseline: true,
         parse: |s| (s == "cps").then_some(AlgoSpec::Cps),
-        applicable: |_, topo| min_servers(topo, 2),
-        build: |_, topo, _, _| cps::allreduce(topo.n_servers()),
+        applicable: |_, fabric| min_servers(fabric, 2),
+        build: |_, fabric, _, _| cps::allreduce(fabric.n_servers()),
         defaults: |_| vec![AlgoSpec::Cps],
     },
     PlanSource {
         family: "hcps",
         template: "hcps:AxB[xC]",
         synopsis: "hierarchical CPS over group factors (product = n)",
+        fabrics: "tree, mesh, torus",
         baseline: false,
         parse: |s| {
             let fs = s.strip_prefix("hcps:")?;
             let factors: Vec<usize> = fs.split('x').map(|x| x.parse().ok()).collect::<Option<_>>()?;
             (!factors.is_empty()).then_some(AlgoSpec::Hcps { factors })
         },
-        applicable: |spec, topo| {
+        applicable: |spec, fabric| {
             let AlgoSpec::Hcps { factors } = spec else {
                 return Err("not an hcps spec".into());
             };
-            let n = topo.n_servers();
+            let n = fabric.n_servers();
             if factors.iter().any(|&f| f < 2) {
                 Err(format!("every factor must be ≥ 2, got {factors:?}"))
             } else if factors.iter().product::<usize>() != n {
@@ -293,7 +331,7 @@ fn build_registry() -> Vec<PlanSource> {
             let AlgoSpec::Hcps { factors } = spec else { unreachable!() };
             hcps::allreduce(factors)
         },
-        defaults: |topo| match balanced_split(topo.n_servers()) {
+        defaults: |fabric| match balanced_split(fabric.n_servers()) {
             Some(factors) => vec![AlgoSpec::Hcps { factors }],
             None => vec![],
         },
@@ -302,28 +340,64 @@ fn build_registry() -> Vec<PlanSource> {
         family: "reduce-broadcast",
         template: "reduce-broadcast",
         synopsis: "reduce to one root, then broadcast",
+        fabrics: "tree, mesh, torus",
         baseline: false,
         parse: |s| {
             matches!(s, "reduce-broadcast" | "reducebroadcast" | "rb")
                 .then_some(AlgoSpec::ReduceBroadcast)
         },
-        applicable: |_, topo| min_servers(topo, 2),
-        build: |_, topo, _, _| reduce_broadcast::allreduce(topo.n_servers()),
+        applicable: |_, fabric| min_servers(fabric, 2),
+        build: |_, fabric, _, _| reduce_broadcast::allreduce(fabric.n_servers()),
         defaults: |_| vec![AlgoSpec::ReduceBroadcast],
     },
     PlanSource {
         family: "acps",
         template: "acps",
         synopsis: "asymmetric CPS (balanced owner map)",
+        fabrics: "tree, mesh, torus",
         baseline: false,
         parse: |s| (s == "acps").then_some(AlgoSpec::Acps),
-        applicable: |_, topo| min_servers(topo, 2),
-        build: |_, topo, _, _| {
-            let n = topo.n_servers();
+        applicable: |_, fabric| min_servers(fabric, 2),
+        build: |_, fabric, _, _| {
+            let n = fabric.n_servers();
             let owners: Vec<usize> = (0..n).collect();
             acps::allreduce_with_owners(n, &owners)
         },
         defaults: |_| vec![AlgoSpec::Acps],
+    },
+    PlanSource {
+        family: "wafer",
+        template: "wafer",
+        synopsis: "wafer-style bandwidth-optimal mesh reduce-scatter/all-gather",
+        fabrics: "mesh, torus",
+        baseline: false,
+        parse: |s| (s == "wafer").then_some(AlgoSpec::Wafer),
+        applicable: |_, fabric| match fabric.as_mesh() {
+            Some(_) => Ok(()),
+            None => Err(format!(
+                "the wafer-style plan requires a mesh or torus fabric, got a {} fabric",
+                fabric.family()
+            )),
+        },
+        build: |_, fabric, _, _| {
+            let m = fabric.as_mesh().expect("applicable() gated on mesh");
+            wafer::allreduce(m)
+        },
+        defaults: |fabric| match fabric.family() {
+            FabricFamily::Mesh | FabricFamily::Torus => vec![AlgoSpec::Wafer],
+            FabricFamily::Tree => vec![],
+        },
+    },
+    PlanSource {
+        family: "genall",
+        template: "genall",
+        synopsis: "generalized allreduce over the prime factorization of n",
+        fabrics: "tree, mesh, torus",
+        baseline: false,
+        parse: |s| (s == "genall").then_some(AlgoSpec::GenAll),
+        applicable: |_, fabric| min_servers(fabric, 2),
+        build: |_, fabric, _, _| genall::allreduce(fabric.n_servers()),
+        defaults: |_| vec![AlgoSpec::GenAll],
     },
     ]
 }
@@ -339,11 +413,14 @@ pub fn gentree_config(spec: &AlgoSpec) -> gentree::GenTreeConfig {
     }
 }
 
-fn min_servers(topo: &Topology, min: usize) -> Result<(), String> {
-    if topo.n_servers() >= min {
+fn min_servers(fabric: FabricRef<'_>, min: usize) -> Result<(), String> {
+    if fabric.n_servers() >= min {
         Ok(())
     } else {
-        Err(format!("needs at least {min} servers, topology has {}", topo.n_servers()))
+        Err(format!(
+            "needs at least {min} servers, fabric has {}",
+            fabric.n_servers()
+        ))
     }
 }
 
@@ -380,6 +457,8 @@ mod tests {
             "hcps:2x3x4",
             "reduce-broadcast",
             "acps",
+            "wafer",
+            "genall",
         ] {
             let spec = AlgoSpec::parse(s).unwrap();
             assert_eq!(spec.to_string(), s);
@@ -444,6 +523,47 @@ mod tests {
         let env = Environment::paper();
         assert_eq!(baseline_plans(&single_switch(24), &env, 1e8).len(), 2);
         assert_eq!(baseline_plans(&single_switch(32), &env, 1e8).len(), 3);
+    }
+
+    #[test]
+    fn fabric_family_gating() {
+        use crate::topo::builders::{mesh, torus};
+        let m = mesh(4, 4).unwrap();
+        let t = torus(3, 3).unwrap();
+        let tree = single_switch(16);
+        // Wafer runs on mesh and torus, never on a tree.
+        assert!(AlgoSpec::Wafer.applicable(&m).is_ok());
+        assert!(AlgoSpec::Wafer.applicable(&t).is_ok());
+        match AlgoSpec::Wafer.applicable(&tree) {
+            Err(ApiError::AlgoTopoMismatch { topo, reason, .. }) => {
+                assert_eq!(topo, "SS16");
+                assert!(reason.contains("tree fabric"), "{reason}");
+            }
+            other => panic!("expected AlgoTopoMismatch, got {other:?}"),
+        }
+        // GenTree is tree-only; the mismatch names the fabric family.
+        match AlgoSpec::GenTree { rearrange: true }.applicable(&m) {
+            Err(ApiError::AlgoTopoMismatch { topo, reason, .. }) => {
+                assert_eq!(topo, "MESH4x4");
+                assert!(reason.contains("mesh fabric"), "{reason}");
+            }
+            other => panic!("expected AlgoTopoMismatch, got {other:?}"),
+        }
+        // Logical tree baselines stay runnable on the mesh, so campaigns
+        // can let the new plans dethrone them.
+        assert!(AlgoSpec::Cps.applicable(&m).is_ok());
+        assert!(AlgoSpec::Ring.applicable(&m).is_ok());
+        assert!(AlgoSpec::GenAll.applicable(&m).is_ok());
+        assert!(AlgoSpec::GenAll.applicable(&tree).is_ok());
+        // Enumeration: wafer + genall present on the mesh, gentree absent.
+        let specs = applicable_specs(&m);
+        assert!(specs.contains(&AlgoSpec::Wafer));
+        assert!(specs.contains(&AlgoSpec::GenAll));
+        assert!(!specs.iter().any(|s| s.family() == "gentree"));
+        // Every registry row names its supported fabric families.
+        for src in registry() {
+            assert!(!src.fabrics.is_empty(), "{} has no fabrics", src.family);
+        }
     }
 
     #[test]

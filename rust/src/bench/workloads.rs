@@ -4,7 +4,7 @@
 use crate::api::{self, ApiError};
 use crate::model::params::Environment;
 use crate::plan::Plan;
-use crate::topo::{builders, Topology};
+use crate::topo::{builders, Fabric, Topology};
 
 /// The six evaluation topologies of Fig. 11 / Table 7, by paper name.
 pub fn paper_topology(name: &str) -> Option<Topology> {
@@ -19,24 +19,58 @@ pub fn paper_topology(name: &str) -> Option<Topology> {
     }
 }
 
-/// Parse extended topology specs: paper names plus `single:N`, `sym:M,K`,
-/// `gpu:M,G`, `asy:a+b+…/c+d+…`, `cdc:a+b/c+d`.
+/// Parse extended topology specs into a [`Fabric`]: paper names plus
+/// `single:N`, `sym:M,K`, `gpu:M,G`, `asy:a+b+…/c+d+…`, `cdc:a+b/c+d`,
+/// and the grid fabrics `mesh:RxC` / `torus:RxC` (also accepted as the
+/// bare names `MESH4x4` / `TORUS4x4`, case-insensitive).
 ///
-/// Malformed specs (wrong arity, empty sides, non-numeric counts) are
-/// typed [`ApiError::BadTopology`] errors naming the offending spec —
-/// never a silent `None`.
-pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
+/// Malformed specs (wrong arity, empty sides, non-numeric counts, grid
+/// dimensions below 2x2) are typed [`ApiError::BadTopology`] errors
+/// naming the offending spec — never a silent `None`.
+pub fn parse_topology(spec: &str) -> Result<Fabric, ApiError> {
     let bad = |reason: String| ApiError::BadTopology {
         spec: spec.to_string(),
         reason,
     };
     if let Some(t) = paper_topology(spec) {
-        return Ok(t);
+        return Ok(t.into());
     }
-    let (kind, rest) = spec.split_once(':').ok_or_else(|| {
+    // `RxC` grid dimensions for mesh/torus, re-attributing builder
+    // errors to the spec the user actually typed.
+    let grid = |dims: &str, wrap: bool| -> Result<Fabric, ApiError> {
+        let (r, c) = dims
+            .split_once('x')
+            .ok_or_else(|| bad(format!("expected RxC grid dimensions, got {dims:?}")))?;
+        let dim = |x: &str| {
+            x.trim()
+                .parse::<usize>()
+                .map_err(|_| bad(format!("non-numeric grid dimension {x:?}")))
+        };
+        let m = if wrap {
+            builders::torus(dim(r)?, dim(c)?)
+        } else {
+            builders::mesh(dim(r)?, dim(c)?)
+        };
+        m.map(Fabric::from).map_err(|e| match e {
+            ApiError::BadTopology { reason, .. } => bad(reason),
+            other => other,
+        })
+    };
+    let lower = spec.to_ascii_lowercase();
+    if !lower.contains(':') {
+        for (prefix, wrap) in [("mesh", false), ("torus", true)] {
+            if let Some(dims) = lower.strip_prefix(prefix) {
+                if dims.contains('x') {
+                    return grid(dims, wrap);
+                }
+            }
+        }
+    }
+    let (kind, rest) = lower.split_once(':').ok_or_else(|| {
         bad(
-            "expected a paper name (ss24 ss32 sym384 sym512 asy384 cdc384) or \
-             kind:params (single:N sym:M,K gpu:M,G asy:a+b/c+d cdc:a+b/c+d)"
+            "expected a paper name (ss24 ss32 sym384 sym512 asy384 cdc384), a grid \
+             name (MESH4x4 TORUS4x4), or kind:params (single:N sym:M,K gpu:M,G \
+             asy:a+b/c+d cdc:a+b/c+d mesh:RxC torus:RxC)"
                 .into(),
         )
     })?;
@@ -61,7 +95,7 @@ pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
             if n < 2 {
                 return Err(bad(format!("single needs ≥ 2 servers, got {n}")));
             }
-            Ok(builders::single_switch(n))
+            Ok(builders::single_switch(n).into())
         }
         "sym" => {
             let v = nums(rest, "sym parameter list")?;
@@ -74,7 +108,7 @@ pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
             if v[0] == 0 || v[1] == 0 {
                 return Err(bad("sym factors must be positive".into()));
             }
-            Ok(builders::symmetric(v[0], v[1]))
+            Ok(builders::symmetric(v[0], v[1]).into())
         }
         "gpu" => {
             let v = nums(rest, "gpu parameter list")?;
@@ -87,7 +121,7 @@ pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
             if v[0] == 0 || v[1] == 0 {
                 return Err(bad("gpu factors must be positive".into()));
             }
-            Ok(builders::gpu_pod(v[0], v[1]))
+            Ok(builders::gpu_pod(v[0], v[1]).into())
         }
         "asy" => {
             let (a, b) = rest
@@ -98,7 +132,7 @@ pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
             if big.iter().chain(&small).sum::<usize>() == 0 {
                 return Err(bad("asy topology has no servers".into()));
             }
-            Ok(builders::asymmetric(&big, &small))
+            Ok(builders::asymmetric(&big, &small).into())
         }
         "cdc" => {
             let (a, b) = rest
@@ -109,10 +143,12 @@ pub fn parse_topology(spec: &str) -> Result<Topology, ApiError> {
             if dc0.iter().chain(&dc1).sum::<usize>() == 0 {
                 return Err(bad("cdc topology has no servers".into()));
             }
-            Ok(builders::cross_dc(&dc0, &dc1))
+            Ok(builders::cross_dc(&dc0, &dc1).into())
         }
+        "mesh" => grid(rest, false),
+        "torus" => grid(rest, true),
         other => Err(bad(format!(
-            "unknown topology kind {other:?} (known: single, sym, gpu, asy, cdc)"
+            "unknown topology kind {other:?} (known: single, sym, gpu, asy, cdc, mesh, torus)"
         ))),
     }
 }
@@ -161,6 +197,18 @@ mod tests {
     }
 
     #[test]
+    fn grid_specs() {
+        let m = parse_topology("mesh:4x4").unwrap();
+        assert_eq!(m.n_servers(), 16);
+        assert_eq!(m.name(), "MESH4x4");
+        assert_eq!(parse_topology("torus:3x5").unwrap().n_servers(), 15);
+        // Bare paper-style names, case-insensitive.
+        assert_eq!(parse_topology("MESH4x4").unwrap().name(), "MESH4x4");
+        assert_eq!(parse_topology("torus4X4").unwrap().name(), "TORUS4x4");
+        assert!(parse_topology("mesh:2x2").unwrap().as_mesh().is_some());
+    }
+
+    #[test]
     fn malformed_specs_are_typed_errors_naming_the_spec() {
         for spec in [
             "bogus:1",     // unknown kind
@@ -173,6 +221,10 @@ mod tests {
             "single:1",    // too few servers
             "sym:0,4",     // zero factor
             "asy:a+4/2",   // non-numeric count
+            "mesh:4",      // missing xC
+            "mesh:1x4",    // dimension below 2
+            "torus:0x3",   // zero dimension
+            "mesh:axb",    // non-numeric dimension
             "nonsense",    // neither paper name nor kind:params
         ] {
             match parse_topology(spec) {

@@ -158,15 +158,35 @@ impl ScenarioGrid {
         }
     }
 
+    /// The beyond-tree CI sweep: mesh and torus grids next to a
+    /// same-size single-switch control, every applicable algorithm
+    /// (including the wafer-style and generalized-allreduce plans), a
+    /// three-point ladder spanning the latency- and bandwidth-dominated
+    /// regimes so the wafer/tree winner flip lands inside the sweep.
+    pub fn mesh_smoke() -> ScenarioGrid {
+        ScenarioGrid {
+            name: "mesh-smoke".into(),
+            topos: ["mesh:4x4", "torus:4x4", "single:16"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            sizes: vec![1e4, 1e6, 1.34e8],
+            algos: Vec::new(),
+            env: EnvKind::Paper,
+            exec_spot_cap: 0.0,
+        }
+    }
+
     /// Resolve a named preset.
     pub fn named(name: &str) -> Result<ScenarioGrid, ApiError> {
         match name.trim().to_ascii_lowercase().as_str() {
             "fig11" => Ok(ScenarioGrid::fig11()),
             "smoke" => Ok(ScenarioGrid::smoke()),
             "gpu-smoke" | "gpu_smoke" => Ok(ScenarioGrid::gpu_smoke()),
+            "mesh-smoke" | "mesh_smoke" => Ok(ScenarioGrid::mesh_smoke()),
             _ => Err(ApiError::BadRequest {
                 reason: format!(
-                    "unknown campaign grid {name:?} (known: fig11, smoke, gpu-smoke)"
+                    "unknown campaign grid {name:?} (known: fig11, smoke, gpu-smoke, mesh-smoke)"
                 ),
             }),
         }
@@ -257,7 +277,7 @@ impl ScenarioGrid {
                 for algo in &algos {
                     let sc = Scenario {
                         topo: topo_spec.clone(),
-                        topo_name: topo.name.clone(),
+                        topo_name: topo.name().to_string(),
                         n_servers: topo.n_servers(),
                         algo: algo.clone(),
                         size,
@@ -432,6 +452,33 @@ mod tests {
         let mut no_exec = grid.clone();
         no_exec.exec_spot_cap = 0.0;
         assert_ne!(no_exec.fingerprint(), grid.fingerprint());
+    }
+
+    #[test]
+    fn mesh_smoke_covers_grid_fabrics_and_both_new_algos() {
+        let grid = ScenarioGrid::mesh_smoke();
+        assert_eq!(ScenarioGrid::named("mesh_smoke").unwrap().fingerprint(), grid.fingerprint());
+        let scenarios = grid.expand().unwrap();
+        assert!(
+            (30..=120).contains(&scenarios.len()),
+            "mesh-smoke should stay CI-sized, got {}",
+            scenarios.len()
+        );
+        // Both grid fabrics get the wafer plan; every topology (tree
+        // control included) gets the generalized allreduce.
+        for topo in ["mesh:4x4", "torus:4x4"] {
+            assert!(scenarios.iter().any(|s| s.topo == topo && s.algo == AlgoSpec::Wafer));
+            // No tree-logical GenTree rows sneak onto grid fabrics.
+            assert!(scenarios
+                .iter()
+                .filter(|s| s.topo == topo)
+                .all(|s| !matches!(s.algo, AlgoSpec::GenTree { .. })));
+        }
+        for topo in ["mesh:4x4", "torus:4x4", "single:16"] {
+            assert!(scenarios.iter().any(|s| s.topo == topo && s.algo == AlgoSpec::GenAll));
+        }
+        // The control rack never runs the mesh-only wafer plan.
+        assert!(!scenarios.iter().any(|s| s.topo == "single:16" && s.algo == AlgoSpec::Wafer));
     }
 
     #[test]

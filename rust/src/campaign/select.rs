@@ -442,8 +442,8 @@ pub fn table_from_model(
                         hash: format!("{:016x}", crate::util::rng::fnv1a(key.as_bytes())),
                         key,
                         topo: class.clone(),
-                        topo_name: engine.topo().name.clone(),
-                        n_servers: engine.topo().n_servers(),
+                        topo_name: engine.fabric().name().to_string(),
+                        n_servers: engine.fabric().n_servers(),
                         algo: algo.to_string(),
                         size,
                         env: "calibrated".into(),

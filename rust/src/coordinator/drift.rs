@@ -309,7 +309,7 @@ pub(crate) fn attribute_worst<'a>(
     let bd = term_breakdown(
         &routed.plan,
         worst.mean_floats,
-        router.topo(),
+        router.fabric(),
         router.env(),
     );
     let attr = TermAttribution::deviation(&bd, predicted, worst.observed_mean_s);

@@ -33,7 +33,7 @@ use crate::gentree::{self, Selection};
 use crate::model::params::Environment;
 use crate::plan::validate::{validate, Goal};
 use crate::plan::Plan;
-use crate::topo::Topology;
+use crate::topo::Fabric;
 
 use super::handle::{TableHandle, TableView};
 
@@ -66,7 +66,7 @@ pub fn nearest_bucket<T>(rules: &BTreeMap<u32, T>, bucket: u32) -> Option<&T> {
 }
 
 pub struct PlanRouter {
-    topo: Topology,
+    fabric: Fabric,
     env: Environment,
     default_algo: AlgoSpec,
     /// Per-bucket winners; empty = always route `default_algo`.
@@ -79,9 +79,9 @@ pub struct PlanRouter {
 }
 
 impl PlanRouter {
-    pub fn new(topo: Topology, env: Environment) -> Self {
+    pub fn new(fabric: impl Into<Fabric>, env: Environment) -> Self {
         PlanRouter {
-            topo,
+            fabric: fabric.into(),
             env,
             default_algo: AlgoSpec::GenTree { rearrange: true },
             selection: SelectionRules::new(),
@@ -113,8 +113,8 @@ impl PlanRouter {
         self
     }
 
-    pub fn topo(&self) -> &Topology {
-        &self.topo
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 
     /// The parameter environment plans are generated (and, under
@@ -208,7 +208,7 @@ impl PlanRouter {
 
     fn build(&self, algo: &AlgoSpec, bucket: u32) -> Result<RoutedPlan, ApiError> {
         let s = Self::bucket_size(bucket);
-        algo.applicable(&self.topo)?;
+        algo.applicable(&self.fabric)?;
         // GenTree runs the generator directly because the router also
         // wants the per-switch selections; the config mapping is the
         // registry's own (`api::gentree_config`), so router-served and
@@ -217,11 +217,17 @@ impl PlanRouter {
         // validation below is the single validation pass.
         let (plan, selections) = match algo {
             AlgoSpec::GenTree { .. } => {
-                let out =
-                    gentree::generate_with(&self.topo, &self.env, s, &api::gentree_config(algo));
+                let tree = self
+                    .fabric
+                    .as_tree()
+                    .expect("applicable() gates GenTree to tree fabrics");
+                let out = gentree::generate_with(tree, &self.env, s, &api::gentree_config(algo));
                 (out.plan, out.selections)
             }
-            other => ((other.source().build)(other, &self.topo, &self.env, s), Vec::new()),
+            other => (
+                (other.source().build)(other, self.fabric.view(), &self.env, s),
+                Vec::new(),
+            ),
         };
         validate(&plan, Goal::AllReduce).map_err(|e| ApiError::InvalidPlan {
             algo: algo.to_string(),
@@ -393,6 +399,27 @@ mod tests {
         assert_eq!(r.plan_for(1000).unwrap().algo, AlgoSpec::Cps);
         assert_eq!(r.plan_for(1 << 20).unwrap().algo, AlgoSpec::Acps);
         assert_eq!(r.cached_plans(), 2);
+    }
+
+    #[test]
+    fn mesh_fabric_routes_wafer_and_rejects_gentree() {
+        use crate::topo::builders::mesh;
+        let mut rules = SelectionRules::new();
+        rules.insert(10, AlgoSpec::GenAll);
+        rules.insert(24, AlgoSpec::Wafer);
+        let r = PlanRouter::new(mesh(4, 4).unwrap(), Environment::paper()).with_selection(rules);
+        assert_eq!(r.plan_for(2048).unwrap().algo, AlgoSpec::GenAll);
+        let big = r.plan_for(1 << 27).unwrap();
+        assert_eq!(big.algo, AlgoSpec::Wafer);
+        assert_eq!(big.plan.n_servers, 16);
+        // The default tree-logical GenTree cannot run on a mesh: a
+        // typed mismatch naming the fabric family, never a panic.
+        match r.route(&AlgoSpec::GenTree { rearrange: true }, 4096) {
+            Err(ApiError::AlgoTopoMismatch { reason, .. }) => {
+                assert!(reason.contains("mesh"), "{reason}");
+            }
+            other => panic!("expected AlgoTopoMismatch, got {other:?}"),
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::model::params::Environment;
 use crate::runtime::{Reducer, ReducerSpec};
 use crate::sim::{simulate_plan, SimConfig};
 use crate::telemetry::{Recorder, SloPolicy, SloSnapshot, SloTracker};
-use crate::topo::Topology;
+use crate::topo::Fabric;
 use crate::trace::{Span, SpanKind, TermAttribution, TraceRecorder};
 
 use super::batcher::{
@@ -302,16 +302,17 @@ pub struct AllReduceService {
 
 impl AllReduceService {
     pub fn start(
-        topo: Topology,
+        fabric: impl Into<Fabric>,
         env: Environment,
         reducer: ReducerSpec,
         mut cfg: ServiceConfig,
     ) -> AllReduceService {
-        let n_workers = topo.n_servers();
+        let fabric = fabric.into();
+        let n_workers = fabric.n_servers();
         if cfg.class.is_empty() {
-            // The single-switch spec spelling — the default class a
-            // campaign would sweep this rack under.
-            cfg.class = format!("single:{n_workers}");
+            // The fabric's canonical campaign spec spelling — the
+            // default class a campaign would sweep this deployment under.
+            cfg.class = fabric.default_class();
         }
         // Wrap the configured table in the epoch-versioned handle all
         // three consumers share. with_selection_table already validated
@@ -348,7 +349,7 @@ impl AllReduceService {
             .trace
             .as_ref()
             .map(|t| (t.clone(), t.intern(&cfg.class)));
-        let mut router = PlanRouter::new(topo, env)
+        let mut router = PlanRouter::new(fabric, env)
             .with_default_algo(cfg.algo.clone())
             .with_selection(cfg.selection.clone());
         if let Some(h) = &handle {
@@ -722,7 +723,7 @@ fn run_batch(
 ) {
     let offsets = fuse_offsets(&batch.jobs);
     let total: usize = batch.fused_floats();
-    let n_workers = router.topo().n_servers();
+    let n_workers = router.fabric().n_servers();
     // Route first: a routing failure (misconfigured default algo, or a
     // selection rule naming an algorithm this topology rejects) fails the
     // whole batch with the typed error — never a panic — before any fuse
@@ -775,12 +776,12 @@ fn run_batch(
             let sim_result = match cfg.observe {
                 ObserveMode::Wall => None,
                 ObserveMode::Sim => {
-                    let topo = router.topo();
-                    let cfg_sim = SimConfig::new(topo);
+                    let fabric = router.fabric();
+                    let cfg_sim = SimConfig::new(fabric);
                     Some(simulate_plan(
                         &routed.plan,
                         total as f64,
-                        topo,
+                        fabric,
                         router.env(),
                         &cfg_sim,
                     ))
@@ -796,7 +797,7 @@ fn run_batch(
                 // join each phase's predicted terms against what the
                 // phase actually took (simulated clock per phase under
                 // Sim; in-process wall time per phase under Wall).
-                let model = CostModel::new(router.topo(), router.env(), ModelKind::GenModel);
+                let model = CostModel::new(router.fabric(), router.env(), ModelKind::GenModel);
                 let terms = model.phase_terms(&routed.plan, total as f64);
                 let bd = model.plan_cost(&routed.plan, total as f64);
                 let attr = TermAttribution::from_breakdown(&bd, observed_secs);

@@ -12,7 +12,7 @@
 use std::collections::BTreeSet;
 
 use crate::api::{applicable_specs, AlgoSpec, ApiError};
-use crate::topo::Topology;
+use crate::topo::FabricRef;
 use crate::util::json::Json;
 
 /// Schema tag of the fleet config file format.
@@ -178,8 +178,8 @@ impl FleetConfig {
 /// near-everything to GenTree, the recorder would hold no CPS-served
 /// cells, and the fleet's pooled fit could never fire — the operator
 /// can still override per-fleet with `--algos`.
-pub fn default_candidates(topo: &Topology) -> Vec<AlgoSpec> {
-    applicable_specs(topo)
+pub fn default_candidates<'a>(fabric: impl Into<FabricRef<'a>>) -> Vec<AlgoSpec> {
+    applicable_specs(fabric)
         .into_iter()
         .filter(|a| matches!(a.family(), "cps" | "ring" | "hcps"))
         .collect()

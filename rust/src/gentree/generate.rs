@@ -230,8 +230,8 @@ fn expand_with_rearrangement(
             let servers = topo.servers_under(ch);
             let w_t = env
                 .link_params(topo.link_class(crate::topo::LinkId {
-                    node: ch,
-                    dir: crate::topo::Dir::Up,
+                    from: ch,
+                    to: sw,
                 }))
                 .w_t;
             let k = servers

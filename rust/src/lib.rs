@@ -12,11 +12,15 @@
 //! * [`model`] — GenModel: the `(α, β, γ, δ, ε, w_t)` time-cost model,
 //!   closed-form expressions (paper Tables 1–2), cost evaluation of
 //!   arbitrary plans, and the parameter-fitting toolkit (§3.4).
-//! * [`topo`] — tree-like physical topologies (single-switch, symmetric /
-//!   asymmetric hierarchical, cross-DC, fat-tree reduction).
-//! * [`plan`] — the AllReduce plan IR plus every baseline plan builder:
+//! * [`topo`] — physical fabrics behind one [`topo::Fabric`] abstraction:
+//!   the paper's rooted-tree topologies (single-switch, symmetric /
+//!   asymmetric hierarchical, cross-DC, fat-tree reduction) plus 2-D
+//!   mesh / torus grids, each exposing the same server-set, link-class,
+//!   and path queries to the model, simulator, and planner.
+//! * [`plan`] — the AllReduce plan IR plus every plan builder:
 //!   Reduce-Broadcast, Co-located PS, Ring, RHD, Hierarchical CPS,
-//!   Asymmetric CPS.
+//!   Asymmetric CPS, the wafer-style mesh schedule, and the generalized
+//!   mixed-radix exchange.
 //! * [`gentree`] — the paper's plan-generation heuristic (Algorithms 1–2).
 //! * [`sim`] — incast-aware event-driven flow-level network simulator (§5.3).
 //! * [`runtime`] — PJRT runtime: loads the AOT HLO artifacts and exposes a

@@ -58,7 +58,7 @@ use genmodel::plan::cps;
 use genmodel::runtime::ReducerSpec;
 use genmodel::sim::{simulate_plan, SimConfig};
 use genmodel::telemetry::{self, Recorder, TelemetrySnapshot};
-use genmodel::topo::Topology;
+use genmodel::topo::Fabric;
 use genmodel::trace::{SpanKind, Term, TermAttribution, TraceRecorder, TraceSnapshot};
 use genmodel::util::cli::Args;
 use genmodel::util::rng::Rng;
@@ -73,7 +73,8 @@ USAGE: repro <subcommand> [options]
   plan       --topo <spec> [--size 1e8] [--no-rearrange]
   simulate   --topo <spec> --algo <algo> [--size 1e8]
   run        [--servers 8] [--size 100000] [--algo gentree] [--scalar]
-  serve      [--servers 8] [--jobs 64] [--tensor 4096] [--algo gentree] [--scalar]
+  serve      [--servers 8 | --topo <spec>] [--jobs 64] [--tensor 4096]
+             [--algo gentree] [--scalar]
              [--selection table.json] [--class <topo-class>]
              [--min-split-margin 1.25] [--bench-out BENCH_campaign.json]
              [--telemetry-out hist.json] [--observe wall|sim]
@@ -120,11 +121,12 @@ USAGE: repro <subcommand> [options]
               objective — burn-rate windows over served jobs, trips in
               the report's 'slo burn' column and the trace;
               --expect-* turn the run's claims into exit-code assertions)
-  campaign   run    [--grid fig11|smoke|gpu-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
+  campaign   run    [--grid fig11|smoke|gpu-smoke|mesh-smoke] [--topos s1,s2] [--sizes 1e6,1e8]
                     [--algos a1,a2] [--env paper|gpu] [--threads 4]
                     [--out campaign_<grid>.jsonl] [--bench-out BENCH_campaign.json]
   campaign   report --in campaign.jsonl
   campaign   select --in campaign.jsonl [--out selection.json] [--by model|sim]
+                    [--bench-out BENCH_campaign.json] [--bench-prefix select]
   score      --telemetry hist.json [--in campaign.jsonl] [--env paper|gpu]
              [--bench-out BENCH_campaign.json] [--by-term]
              (campaign rows predict matching cells; the analytic engine under
@@ -156,9 +158,11 @@ USAGE: repro <subcommand> [options]
   reproduce  [--table 3|4|5|6|7] [--fig 3|4|8|9|10] [--all]
 
   <spec>: ss24 ss32 sym384 sym512 asy384 cdc384 | single:N sym:M,K gpu:M,G
-          asy:a+b/c+d cdc:a+b/c+d
+          asy:a+b/c+d cdc:a+b/c+d | mesh:RxC torus:RxC (grids; bare MESH4x4
+          and TORUS4x4 also parse)
   <algo>: any registered algorithm (see `repro algos`), e.g. gentree
           gentree-star cps ring rhd hcps:AxB[xC] reduce-broadcast acps
+          wafer genall
   `--backend exec` defaults --size to 1e6 (real buffers are allocated).
 ";
 
@@ -187,7 +191,7 @@ fn main() {
     std::process::exit(code);
 }
 
-fn topo_arg(args: &Args) -> anyhow::Result<Topology> {
+fn topo_arg(args: &Args) -> anyhow::Result<Fabric> {
     let spec = args
         .opt("topo")
         .ok_or_else(|| anyhow::anyhow!("--topo required (e.g. --topo ss24)"))?;
@@ -205,13 +209,13 @@ fn size_arg(args: &Args, default: f64) -> anyhow::Result<f64> {
 
 /// The engine for a topology: GenModel predictor, auto (PJRT-or-scalar)
 /// reducer unless `--scalar`.
-fn engine_for(args: &Args, topo: Topology) -> Engine {
+fn engine_for(args: &Args, fabric: impl Into<Fabric>) -> Engine {
     let reducer = if args.flag("scalar") {
         ReducerSpec::Scalar
     } else {
         ReducerSpec::Auto
     };
-    Engine::new(topo, Environment::paper()).with_reducer(reducer)
+    Engine::new(fabric, Environment::paper()).with_reducer(reducer)
 }
 
 fn dispatch(args: &Args) -> anyhow::Result<()> {
@@ -328,7 +332,7 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
     println!(
         "plan {} on {} (S = {s:.3e} floats)",
         gen.plan_name,
-        engine.topo().name
+        engine.fabric().name()
     );
     println!("  phases            : {}", gen.stats.phases);
     println!("  simulator (actual): {actual:.4} s");
@@ -351,14 +355,23 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> anyhow::Result<()> {
-    let topo = topo_arg(args)?;
+    let fabric = topo_arg(args)?;
+    let Some(topo) = fabric.as_tree() else {
+        anyhow::bail!(
+            "`repro plan` shows GenTree's per-switch selections, and GenTree \
+             generates over rooted trees only — {} is a {} fabric. Price it \
+             with `repro predict --algo wafer|genall` instead.",
+            fabric.name(),
+            fabric.family()
+        );
+    };
     let s = size_arg(args, 1e8)?;
     let env = Environment::paper();
     let cfg = genmodel::gentree::GenTreeConfig {
         allow_rearrangement: !args.flag("no-rearrange"),
         ..Default::default()
     };
-    let out = genmodel::gentree::generate_with(&topo, &env, s, &cfg);
+    let out = genmodel::gentree::generate_with(topo, &env, s, &cfg);
     println!(
         "GenTree plan for {} at S = {s:.3e}: {} phases, {} transfers",
         topo.name,
@@ -388,7 +401,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     println!(
         "simulated {} on {} (S = {s:.3e})",
         ev.plan_name,
-        engine.topo().name
+        engine.fabric().name()
     );
     let r = ev.sim.as_ref().expect("simulated backend has sim report");
     println!("  modelled time : {:.4} s", r.total);
@@ -418,7 +431,6 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let servers: usize = args.opt_parse_or("servers", 8)?;
     let jobs: usize = args.opt_parse_or("jobs", 64)?;
     let tensor: usize = args.opt_parse_or("tensor", 4096)?;
     let algo = AlgoSpec::parse(args.opt_or("algo", "gentree"))?;
@@ -427,8 +439,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         ReducerSpec::Auto
     };
-    let topo = genmodel::topo::builders::single_switch(servers);
-    algo.applicable(&topo)?;
+    // --topo serves an arbitrary fabric (any `parse_topology` spec, e.g.
+    // mesh:4x4); without it, --servers keeps the classic single-switch
+    // rack. The two are mutually exclusive — passing --servers alongside
+    // --topo leaves it unread and fails the unused-option check.
+    let fabric: Fabric = match args.opt("topo") {
+        Some(spec) => workloads::parse_topology(spec)?,
+        None => {
+            let servers: usize = args.opt_parse_or("servers", 8)?;
+            genmodel::topo::builders::single_switch(servers).into()
+        }
+    };
+    let servers = fabric.n_servers();
+    algo.applicable(&fabric)?;
     // Optional campaign selection table, wired into BOTH consumers: the
     // router routes each size bucket to its precomputed winner, and the
     // batcher stops fuses at decisive winner-change boundaries (margin ≥
@@ -475,7 +498,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let table = SelectionTable::load(std::path::Path::new(path))?;
         let classes: Vec<String> = match args.opt("class") {
             Some(c) => vec![c.to_string()],
-            None => vec![format!("single:{servers}"), format!("ss{servers}")],
+            None => {
+                let mut v = vec![fabric.default_class()];
+                if fabric.as_tree().is_some() {
+                    v.push(format!("ss{servers}"));
+                }
+                v
+            }
         };
         // Cheap presence probe first (the table's own class resolution,
         // no algo parsing); the single rules_for parse — and any
@@ -527,7 +556,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         false
     };
-    let svc = AllReduceService::start(topo, Environment::paper(), spec, cfg);
+    let svc = AllReduceService::start(fabric, Environment::paper(), spec, cfg);
     let waves = args.opt_parse_or::<usize>("waves", 1)?.max(1);
     println!(
         "coordinator up: {servers} workers; submitting {jobs} jobs of {tensor} floats{}",
@@ -1168,6 +1197,32 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
                     );
                 }
             }
+            // CI record: how many campaign rows fed the table and how
+            // many cells a fabric-aware algorithm (wafer / genall) won —
+            // the tentpole's "the grid plans actually win somewhere"
+            // evidence. --bench-prefix namespaces the keys so a mesh
+            // select can land next to the tree campaign's record.
+            if let Some(bench_out) = args.opt("bench-out") {
+                use genmodel::util::json::Json;
+                let prefix = args.opt_or("bench-prefix", "select");
+                let flips = table
+                    .classes()
+                    .flat_map(|(_, cells)| cells)
+                    .filter(|(_, choice)| {
+                        AlgoSpec::parse(&choice.algo)
+                            .map(|a| matches!(a.family(), "wafer" | "genall"))
+                            .unwrap_or(false)
+                    })
+                    .count();
+                merge_bench_json(
+                    bench_out,
+                    vec![
+                        (format!("{prefix}_scenarios"), Json::num(rows.len() as f64)),
+                        (format!("{prefix}_winner_flips"), Json::num(flips as f64)),
+                    ],
+                )?;
+                println!("bench record → {bench_out}");
+            }
             Ok(())
         }
         other => anyhow::bail!("unknown campaign action {other:?} (known: run, report, select)"),
@@ -1328,7 +1383,7 @@ fn cmd_score(args: &Args) -> anyhow::Result<()> {
             let Ok(routed) = router.route(&spec, c.mean_floats.max(1.0) as usize) else {
                 continue;
             };
-            let bd = term_breakdown(&routed.plan, c.mean_floats, router.topo(), router.env());
+            let bd = term_breakdown(&routed.plan, c.mean_floats, router.fabric(), router.env());
             let attr = TermAttribution::deviation(&bd, predicted, c.observed_mean_s);
             attributed += 1;
             println!(
@@ -1753,16 +1808,17 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
 fn cmd_algos(args: &Args) -> anyhow::Result<()> {
     println!("registered algorithms:");
     for src in genmodel::api::registry() {
-        println!("  {:<18} {}", src.template, src.synopsis);
+        println!("  {:<18} {:<12} {}", src.template, src.fabrics, src.synopsis);
     }
     if let Some(spec) = args.opt("topo") {
-        let topo = workloads::parse_topology(spec)?;
+        let fabric = workloads::parse_topology(spec)?;
         println!(
-            "\napplicable on {} ({} servers):",
-            topo.name,
-            topo.n_servers()
+            "\napplicable on {} ({} fabric, {} servers):",
+            fabric.name(),
+            fabric.family(),
+            fabric.n_servers()
         );
-        for algo in genmodel::api::applicable_specs(&topo) {
+        for algo in genmodel::api::applicable_specs(&fabric) {
             println!("  {algo}");
         }
     }

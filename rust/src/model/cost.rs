@@ -1,4 +1,5 @@
-//! GenModel evaluation of an arbitrary plan on an arbitrary tree topology.
+//! GenModel evaluation of an arbitrary plan on an arbitrary fabric
+//! (rooted tree or wafer-style mesh/torus).
 //!
 //! This is the *predictor* (Eq. 11): per phase it charges
 //! `α + B·β′ + C·γ + D·δ` where the communication part takes the
@@ -22,7 +23,7 @@
 use std::collections::BTreeMap;
 
 use crate::plan::ir::{Mode, Plan};
-use crate::topo::{LinkId, NodeId, Topology};
+use crate::topo::{FabricRef, LinkId, NodeId};
 
 use super::params::Environment;
 
@@ -81,26 +82,32 @@ pub enum ModelKind {
 }
 
 pub struct CostModel<'a> {
-    pub topo: &'a Topology,
+    pub fabric: FabricRef<'a>,
     pub env: &'a Environment,
-    /// Plan server index -> topology server NodeId.
+    /// Plan server index -> fabric server NodeId.
     pub mapping: Vec<NodeId>,
     pub kind: ModelKind,
 }
 
 impl<'a> CostModel<'a> {
-    /// Default mapping: plan index k = k-th server of the topology.
-    pub fn new(topo: &'a Topology, env: &'a Environment, kind: ModelKind) -> Self {
+    /// Default mapping: plan index k = k-th server of the fabric.
+    /// Accepts `&Topology`, `&MeshFabric`, `&Fabric`, or a `FabricRef`.
+    pub fn new(
+        fabric: impl Into<FabricRef<'a>>,
+        env: &'a Environment,
+        kind: ModelKind,
+    ) -> Self {
+        let fabric = fabric.into();
         CostModel {
-            topo,
+            fabric,
             env,
-            mapping: topo.servers().to_vec(),
+            mapping: fabric.servers().to_vec(),
             kind,
         }
     }
 
     pub fn with_mapping(mut self, mapping: Vec<NodeId>) -> Self {
-        assert!(mapping.iter().all(|m| self.topo.server_index(*m).is_some()));
+        assert!(mapping.iter().all(|m| self.fabric.server_index(*m).is_some()));
         self.mapping = mapping;
         self
     }
@@ -176,7 +183,7 @@ impl<'a> CostModel<'a> {
         let mut alpha_phase: f64 = 0.0;
         for (&(src, dst), &vol) in &flows {
             let path = self
-                .topo
+                .fabric
                 .path_links(self.mapping[src], self.mapping[dst]);
             let mut path_alpha: f64 = 0.0;
             for link in path {
@@ -185,7 +192,7 @@ impl<'a> CostModel<'a> {
                 // Per-hop latency: one α per link class, but a round's α is
                 // dominated by the max-latency hop chain.
                 path_alpha = path_alpha
-                    .max(self.env.link_params(self.topo.link_class(link)).alpha);
+                    .max(self.env.link_params(self.fabric.link_class(link)).alpha);
             }
             alpha_phase = alpha_phase.max(path_alpha);
         }
@@ -193,7 +200,7 @@ impl<'a> CostModel<'a> {
         let mut beta_time: f64 = 0.0;
         let mut full_time: f64 = 0.0;
         for (link, &vol) in &link_volume {
-            let p = self.env.link_params(self.topo.link_class(*link));
+            let p = self.env.link_params(self.fabric.link_class(*link));
             let w = link_flows[link] + 1;
             let eps = if self.kind == ModelKind::GenModel {
                 w.saturating_sub(p.w_t)

@@ -17,6 +17,12 @@ pub enum LinkClass {
     RootSw,
     /// The inter-datacenter WAN link ("Cross DC" row).
     CrossDc,
+    /// Wafer-style mesh/torus inter-node link: short on-substrate traces
+    /// with no switch buffering between them, so the incast tolerance is
+    /// far below a datacenter switch's (w_t = 3: the physical fan-in of a
+    /// mesh interior node minus one) and the excess-flow slope ε is steep
+    /// — multi-hop transit traffic collapses quickly (paper §3.2 regime).
+    Wafer,
 }
 
 /// Saturation for the incast excess `max(w − w_t, 0)`: the linear pause-
@@ -146,6 +152,17 @@ pub fn paper_table5(class: LinkClass) -> LinkParams {
             epsilon: 1.22e-10,
             w_t: 9,
         },
+        // Wafer mesh link: same 10 Gbps-class wire β as the CPU testbed
+        // (one neighbor trace ≈ one NIC stream) but an unbuffered
+        // receiver: only the node's own physical neighbors fit before
+        // back-pressure (w_t = 3), and each excess flow costs a full
+        // extra serialization quantum (ε ≈ 0.1 β per flow).
+        LinkClass::Wafer => LinkParams {
+            alpha: 6.58e-3,
+            beta: 6.40e-9,
+            epsilon: 6.00e-10,
+            w_t: 3,
+        },
     }
 }
 
@@ -238,6 +255,14 @@ impl Environment {
                     w_t: 9,
                 },
                 LinkClass::CrossDc => paper_table5(LinkClass::CrossDc),
+                // Wafer-style die-to-die links at GPU-era speeds: NVLink-
+                // grade wire, same low unbuffered incast tolerance.
+                LinkClass::Wafer => LinkParams {
+                    alpha: 2.0e-5,
+                    beta: 6.4e-9 / 20.0,
+                    epsilon: 3.0e-11,
+                    w_t: 3,
+                },
             }
         }
         Environment {
@@ -305,6 +330,12 @@ mod tests {
         assert_eq!(srv.gamma, 6.00e-10);
         assert_eq!(srv.delta, 1.87e-10);
         assert_eq!(srv.w_t, 7);
+        // The wafer extension row: same wire speed as the CPU testbed,
+        // unbuffered receiver (low w_t, steep ε).
+        let wafer = paper_table5(LinkClass::Wafer);
+        assert_eq!(wafer.beta, 6.40e-9);
+        assert_eq!(wafer.w_t, 3);
+        assert!(wafer.epsilon > paper_table5(LinkClass::MiddleSw).epsilon);
     }
 
     #[test]
@@ -353,6 +384,7 @@ mod tests {
             LinkClass::MiddleSw,
             LinkClass::RootSw,
             LinkClass::CrossDc,
+            LinkClass::Wafer,
         ] {
             assert_eq!(env.flat(class), p);
             assert_eq!(env.link_params(class).alpha, p.alpha);

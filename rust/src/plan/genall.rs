@@ -1,0 +1,132 @@
+//! Generalized allreduce for arbitrary server counts (arXiv 2004.09362).
+//!
+//! Kolmakov's construction factors `n = f_0 · f_1 · … · f_{k−1}` into
+//! prime factors (ascending) and runs one reduce-scatter phase per
+//! factor. Writing each server index `p` in the mixed-radix system
+//! induced by the factors, stage `s` exchanges data among the `f_s`
+//! servers that agree with `p` on every *other* digit: `p` sends to each
+//! such peer `q` the blocks whose stage-`s` digit matches `q`'s. After
+//! stage `s`, server `p` holds (partials of) exactly the blocks agreeing
+//! with `p` on digits `0..=s`, so after all `k` stages block `p` is fully
+//! reduced at server `p` — a reduce-scatter in `k = Ω(n)` phases with
+//! the bandwidth-optimal `(n−1)/n · S` volume per server.
+//!
+//! For `n = 2^k` this is exactly recursive halving-doubling; for other
+//! `n` it generalizes RHD without the pre/post folding steps that
+//! power-of-two-only schemes need. Every phase is an all-to-all within
+//! disjoint groups of size `f_s`, so on a single switch the fan-in is
+//! `f_s − 1` — GenModel's incast and memory terms grow with the largest
+//! prime factor, which is why the schedule prefers ascending factors.
+//!
+//! The AllGather half mirrors the reduce-scatter
+//! ([`Plan::mirror_allgather`]) for `2k` phases total.
+
+use super::ir::{Mode, Phase, Plan};
+
+/// Full AllReduce: the mixed-radix reduce-scatter plus its mirror.
+pub fn allreduce(n: usize) -> Plan {
+    reduce_scatter(n).into_allreduce()
+}
+
+/// The mixed-radix digit-exchange reduce-scatter: one phase per prime
+/// factor of `n`, `n` blocks, block `p` finishing at server `p`.
+pub fn reduce_scatter(n: usize) -> Plan {
+    assert!(n >= 2, "generalized allreduce needs at least 2 servers");
+    let factors = prime_factors(n);
+    let mut plan = Plan::new(format!("genall-{n}"), n, n);
+    // g = product of factors consumed so far; a server holds block b
+    // entering stage s iff b % g == p % g.
+    let mut g = 1usize;
+    for &f in &factors {
+        let mut phase = Phase::new();
+        for p in 0..n {
+            let dp = (p / g) % f;
+            for dq in 0..f {
+                if dq == dp {
+                    continue;
+                }
+                let q = p - dp * g + dq * g;
+                for b in 0..n {
+                    if b % g == p % g && (b / g) % f == dq {
+                        phase.push(p, q, b, Mode::Move);
+                    }
+                }
+            }
+        }
+        plan.push_phase(phase);
+        g *= f;
+    }
+    plan
+}
+
+/// Prime factorization by trial division, ascending.
+pub fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 2usize;
+    while d * d <= n {
+        while n % d == 0 {
+            out.push(d);
+            n /= d;
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+
+    #[test]
+    fn prime_factors_ascending() {
+        assert_eq!(prime_factors(2), vec![2]);
+        assert_eq!(prime_factors(12), vec![2, 2, 3]);
+        assert_eq!(prime_factors(15), vec![3, 5]);
+        assert_eq!(prime_factors(16), vec![2, 2, 2, 2]);
+        assert_eq!(prime_factors(17), vec![17]);
+    }
+
+    #[test]
+    fn reduce_scatter_validates_for_mixed_sizes() {
+        for n in [2usize, 4, 6, 12, 15, 16, 18] {
+            let plan = reduce_scatter(n);
+            assert_eq!(plan.phases.len(), prime_factors(n).len(), "n={n}");
+            validate(&plan, Goal::ReduceScatter).unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn allreduce_validates_and_mirrors() {
+        for n in [6usize, 15, 16] {
+            let plan = allreduce(n);
+            assert_eq!(plan.phases.len(), 2 * prime_factors(n).len());
+            validate(&plan, Goal::AllReduce).unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn power_of_two_matches_rhd_shape() {
+        // n = 16: four factor-2 stages, 8 phases after mirroring — the
+        // same phase count and per-phase volume as recursive
+        // halving-doubling.
+        let plan = allreduce(16);
+        assert_eq!(plan.phases.len(), 8);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        // Pairwise exchange stages: communication fan-in stays 1.
+        assert_eq!(stats.max_comm_fanin, 1);
+    }
+
+    #[test]
+    fn prime_count_degenerates_to_single_all_to_all() {
+        let plan = reduce_scatter(5);
+        assert_eq!(plan.phases.len(), 1);
+        let stats = validate(&plan, Goal::ReduceScatter).unwrap();
+        // One all-to-all among all 5 servers: every block's owner
+        // receives from the 4 peers in one phase.
+        assert_eq!(stats.max_comm_fanin, 4);
+    }
+}

@@ -10,18 +10,24 @@
 //! * `sim` replays a plan on the flow-level network simulator;
 //! * `exec` runs a plan on real `f32` buffers through the PJRT reducer.
 //!
+//! Most builders are *logical* (any fabric with enough servers); the
+//! [`wafer`] mesh/torus schedule and [`genall`] mixed-radix exchange are
+//! the fabric-aware additions beyond the paper's tree baselines.
+//!
 //! Callers normally reach these builders through the `api` registry
 //! (`api::AlgoSpec` → plan) rather than calling them directly; the
 //! registry adds per-algorithm applicability checks and validation.
 
 pub mod acps;
 pub mod cps;
+pub mod genall;
 pub mod hcps;
 pub mod ir;
 pub mod reduce_broadcast;
 pub mod rhd;
 pub mod ring;
 pub mod validate;
+pub mod wafer;
 
 pub use ir::{BlockId, Mode, Phase, Plan, ServerIdx, Transfer};
 pub use validate::{validate, PlanStats, ValidateError};

@@ -1,0 +1,185 @@
+//! Wafer-style bandwidth-optimal mesh/torus AllReduce (arXiv 2404.15888).
+//!
+//! Dimension-ordered two-stage reduce-scatter on an `r × c` mesh with
+//! `n = r·c` blocks, block `(i, j)` owned by node `(i, j)`:
+//!
+//! 1. **Row stage** (`c − 1` phases): every row independently
+//!    reduce-scatters `c` *column groups* — group `j` is the `r` blocks of
+//!    column `j`, `S/c` floats — so node `(R, j)` ends holding row `R`'s
+//!    partial of all of column `j`'s blocks.
+//! 2. **Column stage** (`r − 1` phases): every column independently
+//!    reduce-scatters its `r` single-block chunks, completing block
+//!    `(i, j)` at its owner.
+//!
+//! Each dimension uses the classic two-direction *line* schedule on open
+//! meshes (chunk `j`'s left contributions chain rightward, right
+//! contributions chain leftward; each directed link carries at most one
+//! chunk per phase), and the *ring* reduce-scatter schedule on wrapped
+//! torus dimensions of extent ≥ 3. Either way every link carries one
+//! flow per phase (`w = 2 ≤ w_t`), which is exactly what makes this plan
+//! bandwidth-optimal on wafer fabrics where GenModel's incast term
+//! punishes the multi-hop pile-ups of tree-logical plans (paper §3.2).
+//!
+//! The AllGather half is the mirrored reduce-scatter
+//! ([`Plan::mirror_allgather`]), for `2(r − 1 + c − 1)` phases total.
+
+use crate::topo::MeshFabric;
+
+use super::ir::{Mode, Phase, Plan};
+
+/// Full AllReduce: the two-stage reduce-scatter plus its mirror.
+pub fn allreduce(m: &MeshFabric) -> Plan {
+    reduce_scatter(m).into_allreduce()
+}
+
+/// The two-stage dimension-ordered reduce-scatter.
+pub fn reduce_scatter(m: &MeshFabric) -> Plan {
+    let (r, c) = (m.rows(), m.cols());
+    let n = r * c;
+    let mut plan = Plan::new(format!("wafer-{}x{}", r, c), n, n);
+    let idx = |row: usize, col: usize| row * c + col;
+
+    // Row stage: group j = column j's blocks {i·c + j}, S/c floats.
+    let row_sched = dim_schedule(c, m.wraps());
+    for step in &row_sched {
+        let mut phase = Phase::new();
+        for row in 0..r {
+            for &(src, dst, j) in step {
+                for i in 0..r {
+                    phase.push(idx(row, src), idx(row, dst), i * c + j, Mode::Move);
+                }
+            }
+        }
+        plan.push_phase(phase);
+    }
+
+    // Column stage: chunk i of column j = the single block i·c + j.
+    let col_sched = dim_schedule(r, m.wraps());
+    for step in &col_sched {
+        let mut phase = Phase::new();
+        for col in 0..c {
+            for &(src, dst, i) in step {
+                phase.push(idx(src, col), idx(dst, col), i * c + col, Mode::Move);
+            }
+        }
+        plan.push_phase(phase);
+    }
+    plan
+}
+
+/// Per-step `(src_pos, dst_pos, chunk)` transfers of a reduce-scatter
+/// along one dimension of `len` positions, chunk `j` finishing at
+/// position `j` in `len − 1` steps with at most one chunk per directed
+/// link per step. Wrapped dimensions of extent ≥ 3 use the ring
+/// schedule (wrap links exist there); otherwise the two-direction line
+/// schedule.
+fn dim_schedule(len: usize, wrap: bool) -> Vec<Vec<(usize, usize, usize)>> {
+    let mut steps = vec![Vec::new(); len - 1];
+    if wrap && len >= 3 {
+        // Ring: at step t, position p forwards chunk (p − 1 − t) mod len
+        // to p + 1; chunk j's chain is j+1 → j+2 → … → j.
+        for (t, step) in steps.iter_mut().enumerate() {
+            for p in 0..len {
+                let chunk = (p + len - 1 - t % len) % len;
+                step.push((p, (p + 1) % len, chunk));
+            }
+        }
+    } else {
+        for j in 0..len {
+            // Contributions left of j chain rightward: hop i → i+1 at
+            // step (len−1−j) + i, finishing at j on the last step.
+            for i in 0..j {
+                steps[len - 1 - j + i].push((i, i + 1, j));
+            }
+            // Contributions right of j chain leftward.
+            for i in 0..len - 1 - j {
+                steps[j + i].push((len - 1 - i, len - 2 - i, j));
+            }
+        }
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::validate::{validate, Goal};
+    use crate::topo::builders::{mesh, torus};
+
+    #[test]
+    fn line_schedule_shape() {
+        let s = dim_schedule(4, false);
+        assert_eq!(s.len(), 3);
+        for (t, step) in s.iter().enumerate() {
+            // One chunk per directed link per step.
+            let mut links: Vec<(usize, usize)> =
+                step.iter().map(|&(a, b, _)| (a, b)).collect();
+            links.sort_unstable();
+            let before = links.len();
+            links.dedup();
+            assert_eq!(links.len(), before, "step {t} reuses a link");
+        }
+    }
+
+    #[test]
+    fn ring_schedule_uses_every_forward_link_each_step() {
+        let s = dim_schedule(4, true);
+        assert_eq!(s.len(), 3);
+        for step in &s {
+            assert_eq!(step.len(), 4); // every position forwards one chunk
+        }
+    }
+
+    #[test]
+    fn mesh_reduce_scatter_validates() {
+        for (r, c) in [(2, 2), (2, 3), (3, 4), (4, 4)] {
+            let m = mesh(r, c).unwrap();
+            let plan = reduce_scatter(&m);
+            assert_eq!(plan.phases.len(), (r - 1) + (c - 1));
+            let stats = validate(&plan, Goal::ReduceScatter)
+                .unwrap_or_else(|e| panic!("mesh {r}x{c}: {e}"));
+            // Neighbor-only schedule: nothing exceeds fan-in 2 (the two
+            // line directions meeting at a chunk's owner).
+            assert!(stats.max_comm_fanin <= 2, "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn torus_allreduce_validates() {
+        for (r, c) in [(3, 3), (4, 4), (2, 4), (3, 5)] {
+            let t = torus(r, c).unwrap();
+            let plan = allreduce(&t);
+            assert_eq!(plan.phases.len(), 2 * ((r - 1) + (c - 1)));
+            validate(&plan, Goal::AllReduce).unwrap_or_else(|e| panic!("torus {r}x{c}: {e}"));
+        }
+    }
+
+    #[test]
+    fn allreduce_moves_the_bandwidth_optimal_volume() {
+        // Reduce-scatter half: each row phase moves groups of r blocks,
+        // column phases single blocks; total received block-units per
+        // node stay O(n) — the (n−1)/n·S optimum times the two stages.
+        let m = mesh(4, 4).unwrap();
+        let plan = allreduce(&m);
+        let stats = validate(&plan, Goal::AllReduce).unwrap();
+        assert_eq!(stats.phases, 12);
+        // Every node both sends and receives (no idle hot-spot server).
+        assert!(stats.sent_blocks.iter().all(|&b| b > 0));
+        assert!(stats.recv_blocks.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn transfers_stay_on_physical_neighbor_links() {
+        // Every transfer of the wafer plan is between mesh-adjacent
+        // nodes, so each flow occupies exactly one physical link.
+        for m in [mesh(3, 4).unwrap(), torus(4, 4).unwrap()] {
+            let plan = allreduce(&m);
+            for phase in &plan.phases {
+                for t in &phase.transfers {
+                    let path = m.path_links(t.src, t.dst);
+                    assert_eq!(path.len(), 1, "{} -> {} on {}", t.src, t.dst, m.name());
+                }
+            }
+        }
+    }
+}

@@ -1,4 +1,4 @@
-//! Event-driven phase simulation of a plan on a topology.
+//! Event-driven phase simulation of a plan on a fabric (tree or mesh).
 //!
 //! Per phase: build one flow per (src, dst) pair (transfers between the
 //! same endpoints coalesce — they share one RDMA QP in practice), then run
@@ -14,13 +14,13 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::model::params::Environment;
 use crate::plan::ir::{Mode, Plan};
-use crate::topo::{LinkId, NodeId, Topology};
+use crate::topo::{FabricRef, LinkId, NodeId};
 
 use super::flow::{max_min_rates, Flow, LinkCap};
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    /// Plan server index -> topology server NodeId.
+    /// Plan server index -> fabric server NodeId.
     pub mapping: Vec<NodeId>,
     /// Stop an event loop after this many completions-events (guard
     /// against pathological plans; generous default).
@@ -28,9 +28,9 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    pub fn new(topo: &Topology) -> Self {
+    pub fn new<'a>(fabric: impl Into<FabricRef<'a>>) -> Self {
         SimConfig {
-            mapping: topo.servers().to_vec(),
+            mapping: fabric.into().servers().to_vec(),
             max_events: 1_000_000,
         }
     }
@@ -52,22 +52,23 @@ pub struct SimResult {
     pub pause_units: f64,
 }
 
-/// Simulate `plan` moving `s` floats on `topo` under `env`.
-pub fn simulate_plan(
+/// Simulate `plan` moving `s` floats on `fabric` under `env`.
+pub fn simulate_plan<'a>(
     plan: &Plan,
     s: f64,
-    topo: &Topology,
+    fabric: impl Into<FabricRef<'a>>,
     env: &Environment,
     cfg: &SimConfig,
 ) -> SimResult {
+    let fabric = fabric.into();
     assert!(plan.n_servers <= cfg.mapping.len());
     let bs = plan.block_size_f(s);
     let mut out = SimResult::default();
 
     // Static per-link capacities.
     let mut caps: HashMap<LinkId, LinkCap> = HashMap::new();
-    for l in topo.all_links() {
-        let p = env.link_params(topo.link_class(l));
+    for l in fabric.all_links() {
+        let p = env.link_params(fabric.link_class(l));
         caps.insert(
             l,
             LinkCap {
@@ -93,10 +94,10 @@ pub fn simulate_plan(
             let mut keys: Vec<(usize, usize)> = vol.keys().copied().collect();
             keys.sort_unstable();
             for (src, dst) in keys {
-                let path = topo.path_links(cfg.mapping[src], cfg.mapping[dst]);
+                let path = fabric.path_links(cfg.mapping[src], cfg.mapping[dst]);
                 let hop_alpha = path
                     .iter()
-                    .map(|l| env.link_params(topo.link_class(*l)).alpha)
+                    .map(|l| env.link_params(fabric.link_class(*l)).alpha)
                     .fold(0.0f64, f64::max);
                 alpha_phase = alpha_phase.max(hop_alpha);
                 flows.push(Flow {

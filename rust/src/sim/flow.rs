@@ -129,12 +129,14 @@ pub fn max_min_rates(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topo::{Dir, LinkId};
+    use crate::topo::LinkId;
 
     fn link(n: usize) -> LinkId {
+        // A synthetic uplink from node n; the allocator treats LinkIds as
+        // opaque keys, so any distinct edge works.
         LinkId {
-            node: n,
-            dir: Dir::Up,
+            from: n,
+            to: n + 1000,
         }
     }
 

@@ -5,7 +5,7 @@
 use crate::model::cost::{CostBreakdown, CostModel, ModelKind};
 use crate::model::params::Environment;
 use crate::plan::Plan;
-use crate::topo::Topology;
+use crate::topo::FabricRef;
 
 use super::engine::{simulate_plan, SimConfig, SimResult};
 
@@ -29,11 +29,17 @@ impl AccuracyRow {
 }
 
 /// Compute a Fig. 8 row for one plan.
-pub fn accuracy_row(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> AccuracyRow {
-    let cfg = SimConfig::new(topo);
-    let actual = simulate_plan(plan, s, topo, env, &cfg).total;
-    let genmodel = CostModel::new(topo, env, ModelKind::GenModel).plan_total(plan, s);
-    let classic = CostModel::new(topo, env, ModelKind::Classic).plan_total(plan, s);
+pub fn accuracy_row<'a>(
+    plan: &Plan,
+    s: f64,
+    fabric: impl Into<FabricRef<'a>>,
+    env: &Environment,
+) -> AccuracyRow {
+    let fabric = fabric.into();
+    let cfg = SimConfig::new(fabric);
+    let actual = simulate_plan(plan, s, fabric, env, &cfg).total;
+    let genmodel = CostModel::new(fabric, env, ModelKind::GenModel).plan_total(plan, s);
+    let classic = CostModel::new(fabric, env, ModelKind::Classic).plan_total(plan, s);
     AccuracyRow {
         plan_name: plan.name.clone(),
         actual,
@@ -51,9 +57,15 @@ pub struct BreakdownRow {
     pub total: f64,
 }
 
-pub fn breakdown_row(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> BreakdownRow {
-    let cfg = SimConfig::new(topo);
-    let r: SimResult = simulate_plan(plan, s, topo, env, &cfg);
+pub fn breakdown_row<'a>(
+    plan: &Plan,
+    s: f64,
+    fabric: impl Into<FabricRef<'a>>,
+    env: &Environment,
+) -> BreakdownRow {
+    let fabric = fabric.into();
+    let cfg = SimConfig::new(fabric);
+    let r: SimResult = simulate_plan(plan, s, fabric, env, &cfg);
     BreakdownRow {
         plan_name: plan.name.clone(),
         communication: r.communication,
@@ -63,8 +75,13 @@ pub fn breakdown_row(plan: &Plan, s: f64, topo: &Topology, env: &Environment) ->
 }
 
 /// Fig. 10 row: GenModel's five-term decomposition.
-pub fn term_breakdown(plan: &Plan, s: f64, topo: &Topology, env: &Environment) -> CostBreakdown {
-    CostModel::new(topo, env, ModelKind::GenModel).plan_cost(plan, s)
+pub fn term_breakdown<'a>(
+    plan: &Plan,
+    s: f64,
+    fabric: impl Into<FabricRef<'a>>,
+    env: &Environment,
+) -> CostBreakdown {
+    CostModel::new(fabric, env, ModelKind::GenModel).plan_cost(plan, s)
 }
 
 #[cfg(test)]

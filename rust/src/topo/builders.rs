@@ -1,6 +1,8 @@
-//! Constructors for the paper's evaluation topologies (Figures 6 & 11).
+//! Constructors for the paper's evaluation topologies (Figures 6 & 11)
+//! plus the wafer-style mesh/torus fabrics.
 
-use super::{NodeId, NodeKind, Topology};
+use super::{MeshFabric, NodeId, NodeKind, Topology};
+use crate::api::ApiError;
 use crate::model::params::LinkClass;
 
 /// SS-n: n servers under one switch (Fig. 11 "Single-switch").
@@ -15,6 +17,7 @@ pub fn single_switch(n_servers: usize) -> Topology {
         classes.push(LinkClass::Server);
     }
     Topology::from_parents(&format!("SS{n_servers}"), parents, kinds, classes)
+        .expect("builder-generated tree is well-formed")
 }
 
 /// SYM-(m·k): root switch, `m` middle switches, `k` servers per middle
@@ -53,6 +56,7 @@ fn asymmetric_named(name: &str, sizes: &[usize]) -> Topology {
         }
     }
     Topology::from_parents(name, parents, kinds, classes)
+        .expect("builder-generated tree is well-formed")
 }
 
 /// CDC: two data centers joined by one low-bandwidth high-latency link
@@ -82,6 +86,7 @@ pub fn cross_dc(dc0: &[usize], dc1: &[usize]) -> Topology {
         }
     }
     Topology::from_parents(&format!("CDC{total}"), parents, kinds, classes)
+        .expect("builder-generated tree is well-formed")
 }
 
 /// One pod of a fat-tree, reduced to a tree: a random aggregation switch as
@@ -120,6 +125,19 @@ pub fn gpu_pod(n_machines: usize, gpus_per: usize) -> Topology {
         kinds,
         classes,
     )
+    .expect("builder-generated tree is well-formed")
+}
+
+/// MESH{r}x{c}: an open `rows × cols` wafer-style mesh — every node a
+/// server, 4-neighbor `LinkClass::Wafer` links, no wraparound.
+pub fn mesh(rows: usize, cols: usize) -> Result<MeshFabric, ApiError> {
+    MeshFabric::new(rows, cols, false)
+}
+
+/// TORUS{r}x{c}: a `rows × cols` torus — the mesh plus wrap links along
+/// every dimension of extent ≥ 3.
+pub fn torus(rows: usize, cols: usize) -> Result<MeshFabric, ApiError> {
+    MeshFabric::new(rows, cols, true)
 }
 
 #[cfg(test)]
@@ -142,5 +160,13 @@ mod tests {
         assert_eq!(single_switch(24).name, "SS24");
         assert_eq!(symmetric(16, 32).name, "SYM512");
         assert_eq!(cross_dc(&[32; 8], &[16; 8]).name, "CDC384");
+    }
+
+    #[test]
+    fn mesh_and_torus_builders() {
+        assert_eq!(mesh(4, 4).unwrap().n_servers(), 16);
+        assert_eq!(torus(4, 4).unwrap().name(), "TORUS4x4");
+        assert!(mesh(1, 4).is_err());
+        assert!(torus(4, 0).is_err());
     }
 }

@@ -1,0 +1,608 @@
+//! The fabric abstraction: one query surface over every topology family.
+//!
+//! A **fabric** is what the layers above the topology actually consume —
+//! a set of server nodes joined by directed, classed links:
+//!
+//! * [`FabricRef::servers`] / [`FabricRef::server_index`] — the plan
+//!   participant set and its mapping to physical node ids;
+//! * [`FabricRef::path_links`] — the routed directed-link path a
+//!   server-to-server transfer occupies (what `model::cost` charges the
+//!   per-link wire and incast terms over, and what `sim::flow` computes
+//!   max-min rates over);
+//! * [`FabricRef::link_class`] / [`FabricRef::all_links`] — per-link
+//!   `(α, β, ε, w_t)` parameter selection and the simulator's capacity
+//!   table;
+//! * [`FabricRef::fan_in`] — the physical inbound-degree bound on
+//!   GenModel's incast term at a node.
+//!
+//! Two families implement it: [`Topology`] (rooted trees, the paper's
+//! §4.2 evaluation fabrics) and [`MeshFabric`] (2D mesh / torus,
+//! wafer-style). [`Fabric`] owns one of them; [`FabricRef`] is the
+//! `Copy` borrowed view generic consumers take (`CostModel`,
+//! `simulate_plan`, the algorithm registry), so `&Topology` call sites
+//! keep working via `From` conversions.
+//!
+//! ## Why mesh fabrics stress GenModel (paper §3)
+//!
+//! On a tree, the contention GenModel prices is concentrated on uplinks:
+//! the incast surcharge ε·(w − w_t) of Eq. 10 bites at switch roots, and
+//! the memory-access term δ·(f + 1)·B (§3.3) at reduce roots. A mesh has
+//! no switches — every node is a server with physical in-degree ≤ 4, so
+//! *every* link is simultaneously a compute node's NIC and a transit hop.
+//! All-to-all-style tree algorithms (CPS) that were one-hop on a switch
+//! become multi-hop on the mesh: their flows pile onto the few links of a
+//! row/column cut, pushing per-link flow counts `w` far past the wafer
+//! link's low `w_t` (Eq. 10's excess-flows regime) while every transit
+//! server also pays the §3.3 memory term for traffic it merely forwards
+//! past. Dimension-ordered plans (wafer-style reduce-scatter, Kolmakov's
+//! generalized allreduce) keep `w` at 1–f per link, which is exactly the
+//! regime split the `mesh-smoke` campaign demonstrates.
+
+use std::fmt;
+
+use super::{LinkId, NodeId, Topology};
+use crate::api::ApiError;
+use crate::model::params::LinkClass;
+
+/// The topology family of a fabric — what algorithm applicability is
+/// gated on (e.g. GenTree requires [`FabricFamily::Tree`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricFamily {
+    /// Rooted tree: leaf servers under a switch hierarchy ([`Topology`]).
+    Tree,
+    /// 2D mesh: all nodes are servers, 4-neighbor links, open edges.
+    Mesh,
+    /// 2D torus: a mesh whose rows/columns wrap around.
+    Torus,
+}
+
+impl fmt::Display for FabricFamily {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FabricFamily::Tree => "tree",
+            FabricFamily::Mesh => "mesh",
+            FabricFamily::Torus => "torus",
+        })
+    }
+}
+
+/// A 2D mesh or torus of `rows × cols` servers (wafer-style fabric).
+///
+/// Node `(r, c)` has id `r·cols + c`; every node is a server (there are
+/// no switches), with directed links to its 4-neighbors. Torus wrap
+/// links exist only along dimensions of extent ≥ 3 (at extent 2 the
+/// "wrap" cable would duplicate the direct one). Every link carries
+/// [`LinkClass::Wafer`].
+///
+/// Routing is dimension-ordered and deterministic: a path first moves
+/// along the source's **row** to the destination column, then along that
+/// **column** to the destination row. On a torus each dimension takes
+/// the shorter way around; ties break toward increasing indices.
+#[derive(Debug, Clone)]
+pub struct MeshFabric {
+    name: String,
+    rows: usize,
+    cols: usize,
+    wrap: bool,
+    servers: Vec<NodeId>,
+}
+
+impl MeshFabric {
+    /// Build a `rows × cols` mesh (`wrap = false`) or torus
+    /// (`wrap = true`). Dimensions below 2×2 are a typed
+    /// [`ApiError::BadTopology`] naming the offending spec.
+    pub fn new(rows: usize, cols: usize, wrap: bool) -> Result<MeshFabric, ApiError> {
+        let prefix = if wrap { "TORUS" } else { "MESH" };
+        let name = format!("{prefix}{rows}x{cols}");
+        if rows < 2 || cols < 2 {
+            return Err(ApiError::BadTopology {
+                spec: name,
+                reason: format!(
+                    "{} dimensions must be at least 2x2, got {rows}x{cols}",
+                    if wrap { "torus" } else { "mesh" }
+                ),
+            });
+        }
+        Ok(MeshFabric {
+            name,
+            rows,
+            cols,
+            wrap,
+            servers: (0..rows * cols).collect(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn wraps(&self) -> bool {
+        self.wrap
+    }
+
+    /// The lowercase campaign/CLI spec string (`mesh:4x4`, `torus:4x4`)
+    /// — the topology-class key this fabric sweeps and serves under.
+    pub fn spec(&self) -> String {
+        format!(
+            "{}:{}x{}",
+            if self.wrap { "torus" } else { "mesh" },
+            self.rows,
+            self.cols
+        )
+    }
+
+    pub fn family(&self) -> FabricFamily {
+        if self.wrap {
+            FabricFamily::Torus
+        } else {
+            FabricFamily::Mesh
+        }
+    }
+
+    /// Node id of grid position `(r, c)`.
+    pub fn node(&self, r: usize, c: usize) -> NodeId {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
+    }
+
+    /// Grid position of a node id.
+    pub fn row_col(&self, id: NodeId) -> (usize, usize) {
+        (id / self.cols, id % self.cols)
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn servers(&self) -> &[NodeId] {
+        &self.servers
+    }
+
+    pub fn server_index(&self, id: NodeId) -> Option<usize> {
+        (id < self.servers.len()).then_some(id)
+    }
+
+    /// Physical out-neighbors of `id`, in a fixed deterministic order
+    /// (east, west, south, north, wrap links in the same order). The
+    /// in-neighbor set is identical (all links are paired).
+    fn neighbors(&self, id: NodeId) -> Vec<NodeId> {
+        let (r, c) = self.row_col(id);
+        let mut out = Vec::with_capacity(4);
+        if c + 1 < self.cols {
+            out.push(self.node(r, c + 1));
+        } else if self.wrap && self.cols >= 3 {
+            out.push(self.node(r, 0));
+        }
+        if c > 0 {
+            out.push(self.node(r, c - 1));
+        } else if self.wrap && self.cols >= 3 {
+            out.push(self.node(r, self.cols - 1));
+        }
+        if r + 1 < self.rows {
+            out.push(self.node(r + 1, c));
+        } else if self.wrap && self.rows >= 3 {
+            out.push(self.node(0, c));
+        }
+        if r > 0 {
+            out.push(self.node(r - 1, c));
+        } else if self.wrap && self.rows >= 3 {
+            out.push(self.node(self.rows - 1, c));
+        }
+        out
+    }
+
+    /// Inbound directed-link count at `id` (≤ 4).
+    pub fn fan_in(&self, id: NodeId) -> usize {
+        self.neighbors(id).len()
+    }
+
+    /// Every directed link, each exactly once, in node-major order.
+    pub fn all_links(&self) -> Vec<LinkId> {
+        let mut out = Vec::with_capacity(self.servers.len() * 4);
+        for &id in &self.servers {
+            for to in self.neighbors(id) {
+                out.push(LinkId { from: id, to });
+            }
+        }
+        out
+    }
+
+    /// Every mesh link is wafer-class.
+    pub fn link_class(&self, _link: LinkId) -> LinkClass {
+        LinkClass::Wafer
+    }
+
+    /// The index steps a dimension-ordered walk takes from `from` to
+    /// `to` in a dimension of extent `len` (positions visited after
+    /// `from`, in order).
+    fn dim_steps(from: usize, to: usize, len: usize, wrap: bool) -> Vec<usize> {
+        if from == to {
+            return Vec::new();
+        }
+        let forward = (to + len - from) % len;
+        let backward = len - forward;
+        let (inc, count) = if !wrap {
+            (to > from, to.abs_diff(from))
+        } else if forward <= backward {
+            (true, forward)
+        } else {
+            (false, backward)
+        };
+        let mut out = Vec::with_capacity(count);
+        let mut cur = from;
+        for _ in 0..count {
+            cur = if inc {
+                (cur + 1) % len
+            } else {
+                (cur + len - 1) % len
+            };
+            out.push(cur);
+        }
+        out
+    }
+
+    /// The directed links a message from server `a` to server `b`
+    /// occupies: dimension-ordered (row first, then column).
+    pub fn path_links(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        if a == b {
+            return Vec::new();
+        }
+        let (ra, ca) = self.row_col(a);
+        let (rb, cb) = self.row_col(b);
+        let mut out = Vec::new();
+        let mut c = ca;
+        for next in Self::dim_steps(ca, cb, self.cols, self.wrap) {
+            out.push(LinkId {
+                from: self.node(ra, c),
+                to: self.node(ra, next),
+            });
+            c = next;
+        }
+        let mut r = ra;
+        for next in Self::dim_steps(ra, rb, self.rows, self.wrap) {
+            out.push(LinkId {
+                from: self.node(r, cb),
+                to: self.node(next, cb),
+            });
+            r = next;
+        }
+        out
+    }
+}
+
+/// An owned fabric: what engines, routers, and services hold. Constructed
+/// from a [`Topology`] or [`MeshFabric`] via `From`, or parsed from a
+/// topology-class spec by `bench::workloads::parse_topology`.
+#[derive(Debug, Clone)]
+pub enum Fabric {
+    Tree(Topology),
+    Mesh(MeshFabric),
+}
+
+impl From<Topology> for Fabric {
+    fn from(t: Topology) -> Fabric {
+        Fabric::Tree(t)
+    }
+}
+
+impl From<MeshFabric> for Fabric {
+    fn from(m: MeshFabric) -> Fabric {
+        Fabric::Mesh(m)
+    }
+}
+
+impl Fabric {
+    /// The borrowed view generic consumers take.
+    pub fn view(&self) -> FabricRef<'_> {
+        match self {
+            Fabric::Tree(t) => FabricRef::Tree(t),
+            Fabric::Mesh(m) => FabricRef::Mesh(m),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        self.view().name()
+    }
+
+    pub fn family(&self) -> FabricFamily {
+        self.view().family()
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.view().n_servers()
+    }
+
+    pub fn servers(&self) -> &[NodeId] {
+        self.view().servers()
+    }
+
+    pub fn server_index(&self, id: NodeId) -> Option<usize> {
+        self.view().server_index(id)
+    }
+
+    pub fn path_links(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        self.view().path_links(a, b)
+    }
+
+    pub fn link_class(&self, link: LinkId) -> LinkClass {
+        self.view().link_class(link)
+    }
+
+    pub fn all_links(&self) -> Vec<LinkId> {
+        self.view().all_links()
+    }
+
+    pub fn fan_in(&self, id: NodeId) -> usize {
+        self.view().fan_in(id)
+    }
+
+    /// The underlying tree, for tree-only consumers (GenTree).
+    pub fn as_tree(&self) -> Option<&Topology> {
+        match self {
+            Fabric::Tree(t) => Some(t),
+            Fabric::Mesh(_) => None,
+        }
+    }
+
+    pub fn as_mesh(&self) -> Option<&MeshFabric> {
+        match self {
+            Fabric::Tree(_) => None,
+            Fabric::Mesh(m) => Some(m),
+        }
+    }
+
+    /// The default topology-class string a service serves this fabric
+    /// under when the operator names none (trees keep the historical
+    /// `single:N` spelling; meshes use their canonical spec).
+    pub fn default_class(&self) -> String {
+        match self {
+            Fabric::Tree(t) => format!("single:{}", t.n_servers()),
+            Fabric::Mesh(m) => m.spec(),
+        }
+    }
+}
+
+/// A `Copy` borrowed view of a fabric — the parameter type of every
+/// fabric-generic consumer. `&Topology`, `&MeshFabric`, and `&Fabric`
+/// all convert into it, so pre-fabric call sites compile unchanged.
+#[derive(Debug, Clone, Copy)]
+pub enum FabricRef<'a> {
+    Tree(&'a Topology),
+    Mesh(&'a MeshFabric),
+}
+
+impl<'a> From<&'a Topology> for FabricRef<'a> {
+    fn from(t: &'a Topology) -> FabricRef<'a> {
+        FabricRef::Tree(t)
+    }
+}
+
+impl<'a> From<&'a MeshFabric> for FabricRef<'a> {
+    fn from(m: &'a MeshFabric) -> FabricRef<'a> {
+        FabricRef::Mesh(m)
+    }
+}
+
+impl<'a> From<&'a Fabric> for FabricRef<'a> {
+    fn from(f: &'a Fabric) -> FabricRef<'a> {
+        f.view()
+    }
+}
+
+impl<'a> FabricRef<'a> {
+    pub fn name(&self) -> &'a str {
+        match self {
+            FabricRef::Tree(t) => &t.name,
+            FabricRef::Mesh(m) => m.name(),
+        }
+    }
+
+    pub fn family(&self) -> FabricFamily {
+        match self {
+            FabricRef::Tree(_) => FabricFamily::Tree,
+            FabricRef::Mesh(m) => m.family(),
+        }
+    }
+
+    /// All servers, in id order. Plan "server index" k refers to
+    /// `servers()[k]`.
+    pub fn servers(&self) -> &'a [NodeId] {
+        match self {
+            FabricRef::Tree(t) => t.servers(),
+            FabricRef::Mesh(m) => m.servers(),
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers().len()
+    }
+
+    /// Plan-level server index of a server node id.
+    pub fn server_index(&self, id: NodeId) -> Option<usize> {
+        match self {
+            FabricRef::Tree(t) => t.server_index(id),
+            FabricRef::Mesh(m) => m.server_index(id),
+        }
+    }
+
+    /// Directed links traversed by a message from server `a` to `b`,
+    /// under the fabric's deterministic routing.
+    pub fn path_links(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        match self {
+            FabricRef::Tree(t) => t.path_links(a, b),
+            FabricRef::Mesh(m) => m.path_links(a, b),
+        }
+    }
+
+    pub fn link_class(&self, link: LinkId) -> LinkClass {
+        match self {
+            FabricRef::Tree(t) => t.link_class(link),
+            FabricRef::Mesh(m) => m.link_class(link),
+        }
+    }
+
+    /// Every directed link of the fabric, each exactly once.
+    pub fn all_links(&self) -> Vec<LinkId> {
+        match self {
+            FabricRef::Tree(t) => t.all_links(),
+            FabricRef::Mesh(m) => m.all_links(),
+        }
+    }
+
+    /// Inbound directed-link count at a node.
+    pub fn fan_in(&self, id: NodeId) -> usize {
+        match self {
+            FabricRef::Tree(t) => t.fan_in(id),
+            FabricRef::Mesh(m) => m.fan_in(id),
+        }
+    }
+
+    pub fn as_tree(&self) -> Option<&'a Topology> {
+        match self {
+            FabricRef::Tree(t) => Some(t),
+            FabricRef::Mesh(_) => None,
+        }
+    }
+
+    pub fn as_mesh(&self) -> Option<&'a MeshFabric> {
+        match self {
+            FabricRef::Tree(_) => None,
+            FabricRef::Mesh(m) => Some(m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::builders::{mesh, single_switch, torus};
+
+    #[test]
+    fn mesh_shape_and_names() {
+        let m = mesh(4, 4).unwrap();
+        assert_eq!(m.name(), "MESH4x4");
+        assert_eq!(m.spec(), "mesh:4x4");
+        assert_eq!(m.n_servers(), 16);
+        assert_eq!(m.family(), FabricFamily::Mesh);
+        let t = torus(4, 4).unwrap();
+        assert_eq!(t.name(), "TORUS4x4");
+        assert_eq!(t.spec(), "torus:4x4");
+        assert_eq!(t.family(), FabricFamily::Torus);
+    }
+
+    #[test]
+    fn bad_mesh_dimensions_are_typed_errors() {
+        for (r, c, wrap) in [(1, 4, false), (4, 1, false), (0, 0, true), (1, 1, true)] {
+            match MeshFabric::new(r, c, wrap) {
+                Err(ApiError::BadTopology { spec, reason }) => {
+                    assert!(spec.contains(&format!("{r}x{c}")), "{spec}");
+                    assert!(reason.contains("2x2"), "{reason}");
+                }
+                Ok(m) => panic!("{}x{} accepted as {}", r, c, m.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_link_counts_match_the_grid() {
+        // Open 4x4 mesh: 2 directed links per adjacent pair —
+        // 4 rows × 3 horizontal cables + 4 cols × 3 vertical cables.
+        let m = mesh(4, 4).unwrap();
+        assert_eq!(m.all_links().len(), 2 * (4 * 3 + 4 * 3));
+        // 4x4 torus adds a wrap cable per row and column.
+        let t = torus(4, 4).unwrap();
+        assert_eq!(t.all_links().len(), 2 * (4 * 4 + 4 * 4));
+        // At extent 2 the wrap cable would duplicate the direct one, so
+        // a 2x2 torus has exactly the 2x2 mesh's links.
+        assert_eq!(
+            torus(2, 2).unwrap().all_links().len(),
+            mesh(2, 2).unwrap().all_links().len()
+        );
+        // Every directed link is unique and its endpoints adjacent.
+        let links = t.all_links();
+        let set: std::collections::BTreeSet<_> = links.iter().copied().collect();
+        assert_eq!(set.len(), links.len());
+        // Corner fan-in: 2 on the open mesh, 4 on the torus.
+        assert_eq!(m.fan_in(m.node(0, 0)), 2);
+        assert_eq!(t.fan_in(t.node(0, 0)), 4);
+    }
+
+    #[test]
+    fn mesh_routing_is_row_then_column() {
+        let m = mesh(4, 4).unwrap();
+        // (0,0) → (2,3): 3 eastward hops along row 0, 2 southward along col 3.
+        let p = m.path_links(m.node(0, 0), m.node(2, 3));
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[0], LinkId { from: m.node(0, 0), to: m.node(0, 1) });
+        assert_eq!(p[2], LinkId { from: m.node(0, 2), to: m.node(0, 3) });
+        assert_eq!(p[3], LinkId { from: m.node(0, 3), to: m.node(1, 3) });
+        assert_eq!(p[4], LinkId { from: m.node(1, 3), to: m.node(2, 3) });
+        assert!(m.path_links(5, 5).is_empty());
+        // Every hop is a physical link.
+        let all: std::collections::BTreeSet<_> = m.all_links().into_iter().collect();
+        for l in &p {
+            assert!(all.contains(l), "{l:?} is not a mesh link");
+        }
+    }
+
+    #[test]
+    fn torus_routing_takes_the_shorter_way_and_ties_go_forward() {
+        let t = torus(4, 5).unwrap();
+        // Column 0 → 4 in a 5-extent dimension: 1 wrap hop backward
+        // beats 4 forward.
+        let p = t.path_links(t.node(0, 0), t.node(0, 4));
+        assert_eq!(p, vec![LinkId { from: t.node(0, 0), to: t.node(0, 4) }]);
+        // Row 0 → 2 in a 4-extent dimension is a tie: forward wins.
+        let p = t.path_links(t.node(0, 0), t.node(2, 0));
+        assert_eq!(
+            p,
+            vec![
+                LinkId { from: t.node(0, 0), to: t.node(1, 0) },
+                LinkId { from: t.node(1, 0), to: t.node(2, 0) },
+            ]
+        );
+        // Every hop is a physical link.
+        let all: std::collections::BTreeSet<_> = t.all_links().into_iter().collect();
+        for l in t.path_links(t.node(3, 4), t.node(1, 1)) {
+            assert!(all.contains(&l), "{l:?} is not a torus link");
+        }
+    }
+
+    #[test]
+    fn fabric_ref_converts_from_every_owner() {
+        let tree = single_switch(4);
+        let as_ref: FabricRef<'_> = (&tree).into();
+        assert_eq!(as_ref.family(), FabricFamily::Tree);
+        assert_eq!(as_ref.n_servers(), 4);
+        assert!(as_ref.as_tree().is_some());
+
+        let fabric: Fabric = single_switch(4).into();
+        assert_eq!(fabric.default_class(), "single:4");
+        let as_ref: FabricRef<'_> = (&fabric).into();
+        assert_eq!(as_ref.name(), "SS4");
+
+        let fabric: Fabric = mesh(3, 3).unwrap().into();
+        assert_eq!(fabric.default_class(), "mesh:3x3");
+        assert_eq!(fabric.family(), FabricFamily::Mesh);
+        assert!(fabric.as_tree().is_none());
+        assert_eq!(fabric.view().fan_in(4), 4); // center of the 3x3
+    }
+
+    #[test]
+    fn mesh_server_indices_are_identities() {
+        let m = mesh(3, 4).unwrap();
+        for (k, &id) in m.servers().iter().enumerate() {
+            assert_eq!(k, id);
+            assert_eq!(m.server_index(id), Some(k));
+        }
+        assert_eq!(m.server_index(12), None);
+    }
+}

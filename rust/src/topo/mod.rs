@@ -1,13 +1,29 @@
-//! Tree-like physical topologies (paper §4.2, Figures 6 & 11).
+//! Physical fabrics (paper §4.2, Figures 6 & 11 — and beyond).
 //!
-//! Every topology is a rooted tree: leaves are servers, inner nodes are
-//! switches, and each non-root node has one full-duplex link to its parent.
-//! Fat-tree / leaf-spine fabrics reduce to this by picking one top-level
-//! switch as root (the paper does the same — the choice does not affect
-//! GenTree's output because only server-to-server paths matter).
+//! The upper layers (plan pricing, the flow simulator, the campaign)
+//! consume a **fabric**: a set of server nodes joined by directed links,
+//! each link carrying a [`LinkClass`] that selects its `(α, β, ε, w_t)`
+//! parameters. What they need from a fabric is exactly the query surface
+//! of [`fabric::FabricRef`]: the server set, the directed-link
+//! enumeration, per-link classes, server-to-server routed paths, and
+//! fan-in degrees. Nothing above this module assumes parents, depths, or
+//! any other tree-shaped structure.
+//!
+//! [`Topology`] is the *rooted-tree* fabric family: leaves are servers,
+//! inner nodes are switches, and each non-root node has one full-duplex
+//! link to its parent. Fat-tree / leaf-spine fabrics reduce to this by
+//! picking one top-level switch as root (the paper does the same — the
+//! choice does not affect GenTree's output because only server-to-server
+//! paths matter). [`fabric::MeshFabric`] is the *2D mesh / torus* family
+//! (wafer-style fabrics with no switches at all); [`fabric::Fabric`]
+//! is the owning sum of the families and what the serving stack holds.
 
 pub mod builders;
+pub mod fabric;
 
+pub use fabric::{Fabric, FabricFamily, FabricRef, MeshFabric};
+
+use crate::api::ApiError;
 use crate::model::params::LinkClass;
 
 pub type NodeId = usize;
@@ -18,20 +34,13 @@ pub enum NodeKind {
     Switch,
 }
 
-/// Direction of a directed channel of a full-duplex parent link.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Dir {
-    /// child -> parent
-    Up,
-    /// parent -> child
-    Down,
-}
-
-/// A directed link: the `dir` channel of `node`'s uplink to its parent.
+/// A directed link `from → to` between two adjacent fabric nodes. The two
+/// directions of a full-duplex cable are two distinct links (they carry
+/// independent traffic and are priced independently).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct LinkId {
-    pub node: NodeId,
-    pub dir: Dir,
+    pub from: NodeId,
+    pub to: NodeId,
 }
 
 #[derive(Debug, Clone)]
@@ -57,15 +66,31 @@ pub struct Topology {
 impl Topology {
     /// Build from a parent table. `parents[i]` is the parent of node `i`
     /// (the root has `None`). Node 0 need not be the root.
+    ///
+    /// Malformed inputs (length mismatches, out-of-range parents,
+    /// multiple or missing roots, serverless node sets, non-leaf servers,
+    /// parent cycles) are typed [`ApiError::BadTopology`] errors naming
+    /// the offending spec — a bad topology string can never panic the
+    /// serving path.
     pub fn from_parents(
         name: &str,
         parents: Vec<Option<NodeId>>,
         kinds: Vec<NodeKind>,
         classes: Vec<LinkClass>,
-    ) -> Self {
+    ) -> Result<Topology, ApiError> {
+        let bad = |reason: String| ApiError::BadTopology {
+            spec: name.to_string(),
+            reason,
+        };
         let n = parents.len();
-        assert_eq!(kinds.len(), n);
-        assert_eq!(classes.len(), n);
+        if kinds.len() != n || classes.len() != n {
+            return Err(bad(format!(
+                "parent/kind/class tables disagree on the node count \
+                 ({n} vs {} vs {})",
+                kinds.len(),
+                classes.len()
+            )));
+        }
         let mut nodes: Vec<Node> = (0..n)
             .map(|i| Node {
                 id: i,
@@ -80,16 +105,31 @@ impl Topology {
         for i in 0..n {
             match parents[i] {
                 Some(p) => {
-                    assert!(p < n, "parent out of range");
+                    if p >= n {
+                        return Err(bad(format!(
+                            "node {i} names parent {p}, out of range for {n} node(s)"
+                        )));
+                    }
                     nodes[p].children.push(i);
                 }
                 None => {
-                    assert!(root.is_none(), "multiple roots");
+                    if root.is_some() {
+                        return Err(bad(format!(
+                            "multiple roots (nodes {} and {i} both have no parent)",
+                            root.unwrap_or(0)
+                        )));
+                    }
                     root = Some(i);
                 }
             }
         }
-        let root = root.expect("no root");
+        let Some(root) = root else {
+            return Err(bad(if n == 0 {
+                "empty node set".into()
+            } else {
+                "no root: every node names a parent (the parent table is cyclic)".into()
+            }));
+        };
         for node in nodes.iter_mut() {
             node.name = match node.kind {
                 NodeKind::Server => format!("server{}", node.id),
@@ -97,42 +137,53 @@ impl Topology {
             };
         }
         let servers: Vec<NodeId> = (0..n).filter(|&i| kinds[i] == NodeKind::Server).collect();
-        assert!(!servers.is_empty(), "topology has no servers");
+        if servers.is_empty() {
+            return Err(bad("topology has no servers".into()));
+        }
         for &s in &servers {
-            assert!(
-                nodes[s].children.is_empty(),
-                "server {s} must be a leaf"
-            );
-        }
-        // Depth cache for LCA.
-        let mut depth = vec![0usize; n];
-        // parents form a tree; compute iteratively (nodes may be in any order).
-        fn depth_of(i: usize, parents: &[Option<usize>], depth: &mut [usize], seen: &mut [u8]) -> usize {
-            match seen[i] {
-                2 => return depth[i],
-                1 => panic!("cycle in topology at node {i}"),
-                _ => {}
+            if !nodes[s].children.is_empty() {
+                return Err(bad(format!("server {s} must be a leaf")));
             }
-            seen[i] = 1;
-            let d = match parents[i] {
-                None => 0,
-                Some(p) => 1 + depth_of(p, parents, depth, seen),
-            };
-            depth[i] = d;
-            seen[i] = 2;
-            d
         }
-        let mut seen = vec![0u8; n];
-        for i in 0..n {
-            depth_of(i, &parents, &mut depth, &mut seen);
+        // Depth cache for LCA. Parent chains are resolved iteratively
+        // (nodes may be in any order); a chain that revisits an
+        // in-progress node is a parent cycle.
+        let mut depth = vec![0usize; n];
+        let mut state = vec![0u8; n]; // 0 = unvisited, 1 = in progress, 2 = resolved
+        for start in 0..n {
+            if state[start] == 2 {
+                continue;
+            }
+            let mut chain = Vec::new();
+            let mut i = start;
+            loop {
+                match state[i] {
+                    2 => break,
+                    1 => return Err(bad(format!("cycle in topology at node {i}"))),
+                    _ => {}
+                }
+                state[i] = 1;
+                chain.push(i);
+                match parents[i] {
+                    None => break,
+                    Some(p) => i = p,
+                }
+            }
+            for &j in chain.iter().rev() {
+                depth[j] = match parents[j] {
+                    None => 0,
+                    Some(p) => depth[p] + 1,
+                };
+                state[j] = 2;
+            }
         }
-        Topology {
+        Ok(Topology {
             name: name.to_string(),
             nodes,
             root,
             servers,
             depth_cache: depth,
-        }
+        })
     }
 
     pub fn root(&self) -> NodeId {
@@ -195,14 +246,16 @@ impl Topology {
         let mut out = Vec::new();
         let mut x = a;
         while x != l {
-            out.push(LinkId { node: x, dir: Dir::Up });
-            x = self.nodes[x].parent.unwrap();
+            let p = self.nodes[x].parent.unwrap();
+            out.push(LinkId { from: x, to: p });
+            x = p;
         }
         let mut down = Vec::new();
         let mut y = b;
         while y != l {
-            down.push(LinkId { node: y, dir: Dir::Down });
-            y = self.nodes[y].parent.unwrap();
+            let p = self.nodes[y].parent.unwrap();
+            down.push(LinkId { from: p, to: y });
+            y = p;
         }
         down.reverse();
         out.extend(down);
@@ -233,21 +286,33 @@ impl Topology {
         out
     }
 
-    /// The class of every directed link (both channels share the class).
+    /// The class of a directed link: the class of the *child* endpoint of
+    /// the underlying parent cable (both channels share the class).
     pub fn link_class(&self, link: LinkId) -> LinkClass {
-        self.nodes[link.node].class
+        let child = if self.nodes[link.from].parent == Some(link.to) {
+            link.from
+        } else {
+            link.to
+        };
+        self.nodes[child].class
     }
 
-    /// All directed links in the topology.
+    /// All directed links in the topology (both channels per cable).
     pub fn all_links(&self) -> Vec<LinkId> {
         let mut out = Vec::new();
         for n in &self.nodes {
-            if n.parent.is_some() {
-                out.push(LinkId { node: n.id, dir: Dir::Up });
-                out.push(LinkId { node: n.id, dir: Dir::Down });
+            if let Some(p) = n.parent {
+                out.push(LinkId { from: n.id, to: p });
+                out.push(LinkId { from: p, to: n.id });
             }
         }
         out
+    }
+
+    /// Inbound directed-link count at `id` (the physical fan-in bound on
+    /// GenModel's incast degree at that node).
+    pub fn fan_in(&self, id: NodeId) -> usize {
+        self.nodes[id].children.len() + usize::from(self.nodes[id].parent.is_some())
     }
 }
 
@@ -265,6 +330,8 @@ mod tests {
         for &s in t.servers() {
             assert_eq!(t.node(s).parent, Some(t.root()));
         }
+        assert_eq!(t.fan_in(t.root()), 15);
+        assert_eq!(t.fan_in(t.servers()[0]), 1);
     }
 
     #[test]
@@ -273,9 +340,11 @@ mod tests {
         let s = t.servers();
         let p = t.path_links(s[0], s[3]);
         assert_eq!(p.len(), 2);
-        assert_eq!(p[0], LinkId { node: s[0], dir: Dir::Up });
-        assert_eq!(p[1], LinkId { node: s[3], dir: Dir::Down });
+        assert_eq!(p[0], LinkId { from: s[0], to: t.root() });
+        assert_eq!(p[1], LinkId { from: t.root(), to: s[3] });
         assert!(t.path_links(s[2], s[2]).is_empty());
+        // Both channels of a cable share a class.
+        assert_eq!(t.link_class(p[0]), t.link_class(p[1]));
     }
 
     #[test]
@@ -352,15 +421,87 @@ mod tests {
         assert_eq!(t.node(t.root()).children.len(), 4);
     }
 
+    fn reason_of(r: Result<Topology, ApiError>) -> String {
+        match r {
+            Err(ApiError::BadTopology { spec, reason }) => {
+                assert_eq!(spec, "bad", "error must name the offending spec");
+                reason
+            }
+            other => panic!("expected BadTopology, got {:?}", other.map(|t| t.name)),
+        }
+    }
+
     #[test]
-    #[should_panic(expected = "server")]
     fn server_with_children_rejected() {
-        // server node (id 1) with a child (id 2) must panic.
-        Topology::from_parents(
+        // server node (id 1) with a child (id 2) is a typed error.
+        let r = Topology::from_parents(
             "bad",
             vec![None, Some(0), Some(1)],
             vec![NodeKind::Switch, NodeKind::Server, NodeKind::Server],
             vec![LinkClass::RootSw, LinkClass::Server, LinkClass::Server],
         );
+        assert!(reason_of(r).contains("server"));
+    }
+
+    #[test]
+    fn cycle_is_a_typed_error_not_a_panic() {
+        // A rooted leaf beside a detached 0 → 1 → 2 → 0 parent cycle.
+        let r = Topology::from_parents(
+            "bad",
+            vec![Some(1), Some(2), Some(0), None],
+            vec![NodeKind::Switch, NodeKind::Switch, NodeKind::Switch, NodeKind::Server],
+            vec![LinkClass::RootSw; 4],
+        );
+        assert!(reason_of(r).contains("cycle"));
+        // A rooted component plus a detached 2-cycle.
+        let r = Topology::from_parents(
+            "bad",
+            vec![None, Some(0), Some(3), Some(2)],
+            vec![NodeKind::Switch, NodeKind::Server, NodeKind::Switch, NodeKind::Switch],
+            vec![LinkClass::RootSw; 4],
+        );
+        assert!(reason_of(r).contains("cycle"));
+    }
+
+    #[test]
+    fn multiple_roots_rejected() {
+        let r = Topology::from_parents(
+            "bad",
+            vec![None, None, Some(0)],
+            vec![NodeKind::Switch, NodeKind::Switch, NodeKind::Server],
+            vec![LinkClass::RootSw; 3],
+        );
+        assert!(reason_of(r).contains("multiple roots"));
+    }
+
+    #[test]
+    fn zero_server_and_empty_inputs_rejected() {
+        let r = Topology::from_parents(
+            "bad",
+            vec![None, Some(0)],
+            vec![NodeKind::Switch, NodeKind::Switch],
+            vec![LinkClass::RootSw; 2],
+        );
+        assert!(reason_of(r).contains("no servers"));
+        let r = Topology::from_parents("bad", vec![], vec![], vec![]);
+        assert!(reason_of(r).contains("empty"));
+    }
+
+    #[test]
+    fn out_of_range_parent_and_length_mismatch_rejected() {
+        let r = Topology::from_parents(
+            "bad",
+            vec![None, Some(9)],
+            vec![NodeKind::Switch, NodeKind::Server],
+            vec![LinkClass::RootSw; 2],
+        );
+        assert!(reason_of(r).contains("out of range"));
+        let r = Topology::from_parents(
+            "bad",
+            vec![None, Some(0)],
+            vec![NodeKind::Switch],
+            vec![LinkClass::RootSw; 2],
+        );
+        assert!(reason_of(r).contains("disagree"));
     }
 }

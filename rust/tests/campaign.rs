@@ -12,6 +12,7 @@ use genmodel::campaign::{
 use genmodel::coordinator::{AllReduceService, PlanRouter, ServiceConfig};
 use genmodel::model::params::Environment;
 use genmodel::runtime::ReducerSpec;
+use genmodel::bench::workloads::parse_topology;
 use genmodel::topo::builders::single_switch;
 use genmodel::util::rng::Rng;
 
@@ -194,6 +195,100 @@ fn selection_table_golden_file_roundtrip() {
     assert_eq!(rules[&10], AlgoSpec::Ring);
     assert_eq!(rules[&17], AlgoSpec::Rhd);
     let _ = fs::remove_file(&path);
+}
+
+/// Same schema pin for a grid-fabric class: the `mesh:4x4` selection
+/// table the mesh CI smoke serves with, byte-for-byte against
+/// `rust/tests/fixtures/selection_mesh4x4.json`, and its rules parsing
+/// back into the fabric-aware registry specs.
+#[test]
+fn mesh_selection_table_golden_file_roundtrip() {
+    let table = table_from_choices(
+        Metric::Model,
+        &[
+            ("mesh:4x4", 13, "cps", 1.0, 3.0),
+            ("mesh:4x4", 27, "wafer", 1.0, 2.0),
+        ],
+    );
+    let golden = include_str!("fixtures/selection_mesh4x4.json");
+    let path = tmp("mesh_golden").with_extension("json");
+    table.save(&path).unwrap();
+    let written = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        written, golden,
+        "SelectionTable serialization drifted from the checked-in fixture \
+         rust/tests/fixtures/selection_mesh4x4.json — if the schema change \
+         is intentional, update the fixture in the same commit"
+    );
+    let loaded = SelectionTable::load(&path).unwrap();
+    assert_eq!(loaded, table);
+    let rules = loaded.rules_for("mesh:4x4").unwrap();
+    assert_eq!(rules.len(), 2);
+    assert_eq!(rules[&13], AlgoSpec::Cps);
+    assert_eq!(rules[&27], AlgoSpec::Wafer);
+    let _ = fs::remove_file(&path);
+}
+
+/// The tentpole acceptance criterion, end to end at the library layer: a
+/// MESH4x4 campaign sweeps every applicable algorithm, the selection
+/// table under BOTH metrics (GenModel and the flow simulator) hands the
+/// bandwidth-dominated bucket to a fabric-aware algorithm (wafer or
+/// genall), and a coordinator serving that table on the mesh routes a
+/// live job to the table's winner.
+#[test]
+fn mesh_campaign_to_selection_to_service_end_to_end() {
+    let out = tmp("mesh_e2e");
+    let _ = fs::remove_file(&out);
+    let grid = ScenarioGrid {
+        name: "mesh_e2e".into(),
+        topos: vec!["mesh:4x4".into()],
+        sizes: vec![1e4, 1.34e8],
+        algos: Vec::new(),
+        env: genmodel::campaign::EnvKind::Paper,
+        exec_spot_cap: 0.0,
+    };
+    let summary = run_campaign(&grid, &RunConfig { threads: 2, out: out.clone() }).unwrap();
+    assert_eq!(summary.failed, 0, "the mesh sweep must price cleanly");
+    let rows = load_rows(&out).unwrap();
+    assert!(
+        rows.iter().any(|r| r.algo == "wafer") && rows.iter().any(|r| r.algo == "genall"),
+        "both fabric-aware algorithms must be swept on mesh:4x4"
+    );
+
+    for metric in [Metric::Model, Metric::Sim] {
+        let table = SelectionTable::from_rows(&rows, metric);
+        let winner = table
+            .lookup("mesh:4x4", 1.34e8 as usize)
+            .unwrap_or_else(|| panic!("no {metric} selection for the 2^27 bucket"));
+        let family = AlgoSpec::parse(&winner.algo).unwrap().family();
+        assert!(
+            matches!(family, "wafer" | "genall"),
+            "by {metric}, the bandwidth-dominated bucket must go to a \
+             fabric-aware algorithm, got {}",
+            winner.algo
+        );
+    }
+
+    let table = SelectionTable::from_rows(&rows, Metric::Model);
+    let rules = table.rules_for("mesh:4x4").unwrap();
+    let svc = AllReduceService::start(
+        parse_topology("mesh:4x4").unwrap(),
+        Environment::paper(),
+        ReducerSpec::Scalar,
+        ServiceConfig {
+            selection: rules,
+            ..ServiceConfig::default()
+        },
+    );
+    let mut rng = Rng::new(11);
+    let len = 1_000usize;
+    let tensors: Vec<Vec<f32>> = (0..16).map(|_| rng.f32_vec(len)).collect();
+    let res = svc.allreduce(tensors).unwrap();
+    let want = table
+        .lookup("mesh:4x4", len)
+        .unwrap_or_else(|| panic!("no selection for {len}"));
+    assert_eq!(res.algo, want.algo, "mesh job of {len} floats");
+    let _ = fs::remove_file(&out);
 }
 
 #[test]

@@ -1,7 +1,8 @@
 //! Property tests for the simulator's core: max-min fair rate allocation
-//! ([`genmodel::sim::flow::max_min_rates`]). The campaign subsystem
-//! treats the simulator as ground truth for algorithm selection, so its
-//! allocator invariants are pinned down here:
+//! ([`genmodel::sim::flow::max_min_rates`]), plus the fabric link sets
+//! that feed it. The campaign subsystem treats the simulator as ground
+//! truth for algorithm selection, so its allocator invariants are pinned
+//! down here:
 //!
 //! 1. rates are non-negative and never NaN;
 //! 2. no link carries more than its (incast-degraded) capacity;
@@ -10,11 +11,15 @@
 //! 4. max-min fairness: on that saturated link the flow's rate is
 //!    maximal among the link's flows (you cannot raise any flow without
 //!    lowering an equal-or-smaller one).
+//!
+//! The mesh/torus tests pin the [`MeshFabric`] link enumeration itself
+//! (pairing, cardinality, fan-in) and its dimension-ordered routing, and
+//! re-run the allocator invariants over flows on real grid link sets.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use genmodel::sim::flow::{max_min_rates, Flow, LinkCap};
-use genmodel::topo::{Dir, LinkId};
+use genmodel::topo::{LinkId, MeshFabric};
 use genmodel::util::prop;
 use genmodel::util::rng::Rng;
 
@@ -23,11 +28,9 @@ struct Case {
     caps: HashMap<LinkId, LinkCap>,
 }
 
+/// A synthetic capped link: distinct `n` → distinct directed link.
 fn link(n: usize) -> LinkId {
-    LinkId {
-        node: n,
-        dir: if n % 2 == 0 { Dir::Up } else { Dir::Down },
-    }
+    LinkId { from: n, to: n + 1 }
 }
 
 /// Random allocation problem: up to 10 capped links, up to 16 flows with
@@ -179,6 +182,209 @@ fn prop_incast_monotonicity() {
                 return Err(format!("penalty below threshold at {n_flows} flows"));
             }
             prev = c;
+        }
+        Ok(())
+    });
+}
+
+/// Random grid: 2–5 rows × 2–5 cols, mesh or torus.
+fn random_mesh(rng: &mut Rng) -> MeshFabric {
+    let rows = rng.gen_range(2, 5);
+    let cols = rng.gen_range(2, 5);
+    let wrap = rng.gen_range(0, 1) == 1;
+    MeshFabric::new(rows, cols, wrap).expect("2..=5 dims are valid")
+}
+
+/// Hop count a dimension-ordered walk takes along one dimension
+/// (wrap links only exist at extent ≥ 3 — at 2 they'd duplicate the
+/// direct cable).
+fn dim_dist(from: usize, to: usize, len: usize, wrap: bool) -> usize {
+    let direct = from.abs_diff(to);
+    if wrap && len >= 3 {
+        direct.min(len - direct)
+    } else {
+        direct
+    }
+}
+
+#[test]
+fn prop_mesh_torus_link_sets_are_paired_and_complete() {
+    prop::run("mesh-link-sets", 64, |rng| {
+        let m = random_mesh(rng);
+        let links = m.all_links();
+        let set: HashSet<LinkId> = links.iter().copied().collect();
+        if set.len() != links.len() {
+            return Err(format!("{}: duplicate links in all_links()", m.name()));
+        }
+        // Cardinality: per row, 2·(cols−1) directed links, +2 wrap links
+        // when the dimension wraps (extent ≥ 3); columns symmetric.
+        let row_dir = if m.wraps() && m.cols() >= 3 {
+            2 * m.cols()
+        } else {
+            2 * (m.cols() - 1)
+        };
+        let col_dir = if m.wraps() && m.rows() >= 3 {
+            2 * m.rows()
+        } else {
+            2 * (m.rows() - 1)
+        };
+        let expected = m.rows() * row_dir + m.cols() * col_dir;
+        if links.len() != expected {
+            return Err(format!(
+                "{}: {} directed links, expected {expected}",
+                m.name(),
+                links.len()
+            ));
+        }
+        for l in &links {
+            // Full duplex: every directed link's reverse also exists.
+            if !set.contains(&LinkId { from: l.to, to: l.from }) {
+                return Err(format!("{}: link {l:?} has no reverse", m.name()));
+            }
+            // Physical adjacency: one grid hop (possibly a wrap hop).
+            let (fr, fc) = m.row_col(l.from);
+            let (tr, tc) = m.row_col(l.to);
+            let hop = dim_dist(fr, tr, m.rows(), m.wraps())
+                + dim_dist(fc, tc, m.cols(), m.wraps());
+            if hop != 1 {
+                return Err(format!("{}: link {l:?} spans {hop} hops", m.name()));
+            }
+        }
+        // Fan-in matches the inbound directed-link count at every node.
+        for &id in m.servers() {
+            let inbound = links.iter().filter(|l| l.to == id).count();
+            if m.fan_in(id) != inbound {
+                return Err(format!(
+                    "{}: node {id} fan_in {} but {inbound} inbound links",
+                    m.name(),
+                    m.fan_in(id)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_paths_chain_over_physical_links() {
+    prop::run("mesh-paths", 64, |rng| {
+        let m = random_mesh(rng);
+        let set: HashSet<LinkId> = m.all_links().into_iter().collect();
+        for _ in 0..8 {
+            let a = rng.gen_range(0, m.n_servers() - 1);
+            let b = rng.gen_range(0, m.n_servers() - 1);
+            let path = m.path_links(a, b);
+            let (ra, ca) = m.row_col(a);
+            let (rb, cb) = m.row_col(b);
+            let expected = dim_dist(ra, rb, m.rows(), m.wraps())
+                + dim_dist(ca, cb, m.cols(), m.wraps());
+            if path.len() != expected {
+                return Err(format!(
+                    "{}: path {a}→{b} has {} hops, expected {expected}",
+                    m.name(),
+                    path.len()
+                ));
+            }
+            let mut cur = a;
+            for l in &path {
+                if l.from != cur {
+                    return Err(format!(
+                        "{}: path {a}→{b} breaks at {l:?} (expected from {cur})",
+                        m.name()
+                    ));
+                }
+                if !set.contains(l) {
+                    return Err(format!(
+                        "{}: path {a}→{b} uses non-physical link {l:?}",
+                        m.name()
+                    ));
+                }
+                cur = l.to;
+            }
+            if cur != b {
+                return Err(format!("{}: path {a}→{b} ends at {cur}", m.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_flows_respect_allocator_invariants() {
+    // The allocator invariants (capacity, work conservation, max-min
+    // fairness) re-checked over a real grid link set: random server
+    // pairs, each flow on its dimension-ordered route, every wafer link
+    // capped with an incast-prone LinkCap.
+    prop::run("mesh-flow-fairness", 48, |rng| {
+        let m = random_mesh(rng);
+        let caps: HashMap<LinkId, LinkCap> = m
+            .all_links()
+            .into_iter()
+            .map(|l| {
+                (
+                    l,
+                    LinkCap {
+                        beta: 6.4e-9 * (1.0 + rng.next_f64()),
+                        epsilon: 6.0e-10,
+                        w_t: rng.gen_range(2, 5),
+                    },
+                )
+            })
+            .collect();
+        let n_flows = rng.gen_range(2, 14);
+        let mut flows = Vec::with_capacity(n_flows);
+        while flows.len() < n_flows {
+            let a = rng.gen_range(0, m.n_servers() - 1);
+            let b = rng.gen_range(0, m.n_servers() - 1);
+            if a == b {
+                continue;
+            }
+            flows.push(Flow {
+                src: a,
+                dst: b,
+                volume: 1.0 + rng.next_f64() * 1e6,
+                path: m.path_links(a, b),
+            });
+        }
+        let case = Case { flows, caps };
+        let active: Vec<usize> = (0..case.flows.len()).collect();
+        let rates = max_min_rates(&case.flows, &active, &case.caps);
+        let link_state = capacities(&case, &active);
+        for (ai, &r) in rates.iter().enumerate() {
+            if !r.is_finite() || r < 0.0 {
+                return Err(format!("{}: flow {ai} bad rate {r}", m.name()));
+            }
+        }
+        for (l, (cap, ais)) in &link_state {
+            let used: f64 = ais.iter().map(|&ai| rates[ai]).sum();
+            if used > cap * (1.0 + 1e-6) {
+                return Err(format!(
+                    "{}: link {l:?} over capacity ({used:.6e} > {cap:.6e})",
+                    m.name()
+                ));
+            }
+        }
+        for (ai, &r) in rates.iter().enumerate() {
+            let mut bottlenecked = false;
+            for l in &case.flows[ai].path {
+                let (cap, ais) = &link_state[l];
+                let used: f64 = ais.iter().map(|&a| rates[a]).sum();
+                if used < cap * (1.0 - 1e-6) {
+                    continue;
+                }
+                let max_on_link = ais.iter().map(|&a| rates[a]).fold(0.0f64, f64::max);
+                if r >= max_on_link * (1.0 - 1e-6) {
+                    bottlenecked = true;
+                    break;
+                }
+            }
+            if !bottlenecked {
+                return Err(format!(
+                    "{}: flow {ai} (rate {r:.6e}) not bottlenecked on any \
+                     saturated link of its grid route",
+                    m.name()
+                ));
+            }
         }
         Ok(())
     });

@@ -170,4 +170,23 @@ else
 fi
 step cargo run --release -p genmodel --quiet -- status --check --bench-out BENCH_campaign.json
 
+# 13. Mesh/torus fabric smoke: the mesh-smoke grid sweeps MESH4x4,
+#     TORUS4x4, and the 16-server rack across the latency- and
+#     bandwidth-dominated sizes (wafer + genall included on the grids,
+#     gentree correctly absent there). `campaign select --bench-prefix
+#     mesh` merges mesh_scenarios / mesh_winner_flips into
+#     BENCH_campaign.json — winner_flips counts the cells a fabric-aware
+#     algorithm (wafer/genall) wins, which must be ≥ 1 for the grid
+#     fabrics to be worth serving. The serve smoke then routes live jobs
+#     on the mesh through that table via --topo mesh:4x4.
+rm -f target/campaign_mesh.jsonl
+step cargo run --release -p genmodel --quiet -- campaign run --grid mesh-smoke --threads 2 \
+    --out target/campaign_mesh.jsonl
+step cargo run --release -p genmodel --quiet -- campaign select --in target/campaign_mesh.jsonl \
+    --out target/selection_mesh.json --by model \
+    --bench-out BENCH_campaign.json --bench-prefix mesh
+step cargo run --release -p genmodel --quiet -- serve --topo mesh:4x4 --jobs 16 --tensor 2048 \
+    --scalar --selection target/selection_mesh.json --class mesh:4x4 \
+    --bench-out BENCH_campaign.json
+
 exit $fail
